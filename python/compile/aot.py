@@ -1,0 +1,119 @@
+"""AOT compilation: lower every application's train/eval step to HLO text
+and write the artifacts the rust runtime loads.
+
+Run once via `make artifacts` (no-op when inputs are unchanged):
+
+    artifacts/<app>_train.hlo.txt   (params, x, y) -> (params', loss)
+    artifacts/<app>_eval.hlo.txt    (params, x, y) -> (loss, correct)
+    artifacts/<app>_fedavg.hlo.txt  (stacked, weights) -> (avg,)
+    artifacts/<app>_init.bin        initial flat parameters, LE f32
+    artifacts/manifest.toml         shapes/sizes consumed by rust
+
+Interchange format is HLO *text*, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+Pallas kernels lower with interpret=True so the CPU PJRT client can run the
+resulting plain-HLO ops (real-TPU lowering would emit Mosaic custom-calls).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels.fedavg import fedavg  # noqa: E402
+from compile.model import ALL_MODELS  # noqa: E402
+
+# FedAvg client counts per app (§5.1): TIL 4, Shakespeare 8, FEMNIST 5.
+N_CLIENTS = {"til": 4, "shakespeare": 8, "femnist": 5}
+
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_app(name: str, out_dir: str) -> dict:
+    model = ALL_MODELS[name]()
+    flat, _ = model.init_flat(SEED)
+    param_count = int(flat.shape[0])
+    train_step, eval_step = model.make_steps(SEED)
+
+    p_spec = jax.ShapeDtypeStruct((param_count,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((model.batch, model.feature_dim), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((model.batch,), jnp.float32)
+
+    lowered_train = jax.jit(train_step).lower(p_spec, x_spec, y_spec)
+    lowered_eval = jax.jit(eval_step).lower(p_spec, x_spec, y_spec)
+    k = N_CLIENTS[name]
+    stacked_spec = jax.ShapeDtypeStruct((k, param_count), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((k,), jnp.float32)
+    lowered_fedavg = jax.jit(lambda s, w: (fedavg(s, w),)).lower(stacked_spec, w_spec)
+
+    for kind, lowered in [
+        ("train", lowered_train),
+        ("eval", lowered_eval),
+        ("fedavg", lowered_fedavg),
+    ]:
+        path = os.path.join(out_dir, f"{name}_{kind}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    init_path = os.path.join(out_dir, f"{name}_init.bin")
+    import numpy as np
+
+    np.asarray(flat, dtype="<f4").tofile(init_path)
+    print(f"  wrote {init_path} ({param_count} params)")
+
+    return {
+        "name": name,
+        "param_count": param_count,
+        "batch": model.batch,
+        "feature_dim": model.feature_dim,
+        "n_classes": model.n_classes,
+        "n_clients": k,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--apps", default="femnist,shakespeare,til", help="comma-separated app list"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for name in args.apps.split(","):
+        name = name.strip()
+        if name not in ALL_MODELS:
+            raise SystemExit(f"unknown app {name}")
+        print(f"lowering {name} ...")
+        entries.append(lower_app(name, args.out))
+
+    manifest = os.path.join(args.out, "manifest.toml")
+    with open(manifest, "w") as f:
+        for e in entries:
+            f.write("[[app]]\n")
+            f.write(f'name = "{e["name"]}"\n')
+            for key in ("param_count", "batch", "feature_dim", "n_classes", "n_clients"):
+                f.write(f"{key} = {e[key]}\n")
+            f.write("\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

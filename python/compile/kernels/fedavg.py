@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: server-side FedAvg aggregation.
+
+The server aggregates K client parameter vectors (stacked as (K, P)) with
+sample-count weights — a bandwidth-bound weighted reduction. The TPU-shaped
+schedule keeps one (bp,) accumulator tile VMEM-resident per grid step and
+streams every client's slice of that tile through the same block
+(HBM→VMEM once per client per tile), the Pallas analogue of the paper's
+server aggregation loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BP = 4096
+
+
+def _block(dim: int, pref: int) -> int:
+    if dim % pref == 0:
+        return pref
+    for cand in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2):
+        if cand <= pref and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _fedavg_kernel(stack_ref, w_ref, o_ref):
+    # (K, bp) client slices × (1, K) normalized weights → (bp,) tile.
+    weights = w_ref[...]  # (1, K)
+    tile = stack_ref[...]  # (K, bp)
+    o_ref[...] = jnp.dot(
+        weights, tile, preferred_element_type=jnp.float32
+    )[0, :]
+
+
+def fedavg(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted average over axis 0: (K, P), (K,) → (P,).
+
+    `weights` are normalized inside (FedAvg divides by the total sample
+    count), so callers can pass raw per-client sample counts.
+    """
+    k, p = stacked.shape
+    assert weights.shape == (k,)
+    norm = (weights / jnp.sum(weights)).reshape(1, k).astype(jnp.float32)
+    bp = _block(p, _BP)
+    return pl.pallas_call(
+        _fedavg_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(stacked.astype(jnp.float32), norm)

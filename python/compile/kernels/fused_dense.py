@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernels: the fused dense layer (the models' compute hot
+spot) and its custom VJP.
+
+TPU adaptation of the dense-training hot path (DESIGN.md §Hardware-
+Adaptation): instead of a CUDA threadblock tiling, the matmul is tiled for
+VMEM with `BlockSpec`s — (bm, bk) x (bk, bn) blocks stream HBM→VMEM while an
+output tile stays resident across the K loop, feeding the MXU-shaped
+`jnp.dot`. Bias add + activation fuse into the same kernel so the
+pre-activation never round-trips to HBM. `interpret=True` everywhere: the
+CPU PJRT runtime cannot execute Mosaic custom-calls, and correctness is
+validated against the pure-jnp oracle in `ref.py`.
+
+Autodiff: `pl.pallas_call` has no gradient rule, so `fused_dense` carries a
+`jax.custom_vjp` whose backward pass reuses the same Pallas matmul kernel
+for dx = g·Wᵀ and dW = xᵀ·g.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred VMEM tile sizes (8×128-lane friendly). Dimensions that do not
+# divide fall back to a single block on that axis.
+_BM, _BN, _BK = 128, 128, 512
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is ≤ pref and lane-friendly."""
+    if dim % pref == 0:
+        return pref
+    for cand in (256, 128, 64, 32, 16, 8):
+        if cand <= pref and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; K-loop accumulation in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) → (M, N), f32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm, bn, bk = _block(m, _BM), _block(n, _BN), _block(k, _BK)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, k_blocks):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    # Epilogue on the last K block: bias + activation, in-register.
+    @pl.when(pl.program_id(2) == k_blocks - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            z = jnp.maximum(z, 0.0)
+        elif activation == "tanh":
+            z = jnp.tanh(z)
+        o_ref[...] = z
+
+
+def _fused_forward(x, w, b, activation):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = _block(m, _BM), _block(n, _BN), _block(k, _BK)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _fused_kernel, activation=activation, k_blocks=grid[2]
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, -1))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_dense(x, w, b, activation="relu"):
+    """act(x @ w + b) with the matmul+bias+activation fused in one Pallas
+    kernel. `activation` ∈ {"relu", "tanh", "none"}."""
+    return _fused_forward(x, w, b, activation)
+
+
+def _fused_fwd(x, w, b, activation):
+    # Keep the pre-activation for the backward mask; recompute it cheaply
+    # from the fused output when the activation is invertible on its range.
+    z = _fused_forward(x, w, b, "none")
+    if activation == "relu":
+        a = jnp.maximum(z, 0.0)
+    elif activation == "tanh":
+        a = jnp.tanh(z)
+    else:
+        a = z
+    return a, (x, w, z)
+
+
+def _fused_bwd(activation, res, g):
+    x, w, z = res
+    if activation == "relu":
+        dz = g * (z > 0.0).astype(g.dtype)
+    elif activation == "tanh":
+        t = jnp.tanh(z)
+        dz = g * (1.0 - t * t)
+    else:
+        dz = g
+    # Backward matmuls on the same Pallas kernel.
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_fwd, _fused_bwd)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference the
+build-time pytest suite checks the L1 kernels against."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def fused_dense_ref(x, w, b, activation="relu"):
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    return z
+
+
+def fedavg_ref(stacked, weights):
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("k,kp->p", w.astype(jnp.float32), stacked.astype(jnp.float32))

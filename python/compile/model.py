@@ -1,0 +1,270 @@
+"""Layer-2: the three FL applications' models (§5.1) in JAX, built on the
+Layer-1 Pallas kernels, exported as flat-parameter train/eval steps.
+
+Per app we define `init/apply` and derive
+
+    train_step(params_flat[P], x[B, D], y[B]) -> (params_flat'[P], loss[])
+    eval_step (params_flat[P], x[B, D], y[B]) -> (loss[], correct[])
+
+with all tensors f32 (labels f32-encoded) so the rust PJRT trainer can feed
+flat buffers. Architectures follow the paper, scaled to CPU-trainable sizes
+(see DESIGN.md substitutions):
+
+* **femnist** — the "robust CNN": 2 conv layers + a wide fused-dense FC
+  stack, 62 classes (LEAF FEMNIST adapted to Cross-Silo).
+* **shakespeare** — char-LSTM: embedding + 2 LSTM layers + dense softmax,
+  next-character prediction (context window of normalized char ids).
+* **til** — VGG-style conv blocks + fused-dense head, binary
+  lymphocyte-present classification over 32×32 RGB patches.
+
+Dense layers route through `kernels.fused_dense` (Pallas, interpret=True) in
+both forward and backward (custom VJP); convolutions stay on XLA's native
+conv — the FC stack is the FLOP hot spot these apps expose.
+"""
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.fused_dense import fused_dense
+
+
+def _dense_init(key, n_in, n_out):
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {
+        "w": (jax.random.normal(wkey, (n_in, n_out)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = jnp.sqrt(2.0 / (kh * kw * cin))
+    return {
+        "k": (jax.random.normal(key, (kh, kw, cin, cout)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _conv(x, p, stride=1):
+    # NHWC, HWIO, SAME.
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["k"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _xent(logits, y):
+    """Mean softmax cross-entropy; y is f32-encoded class ids."""
+    labels = y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def _correct(logits, y):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y.astype(jnp.int32)).astype(jnp.float32))
+
+
+@dataclass
+class ModelDef:
+    name: str
+    batch: int
+    feature_dim: int
+    n_classes: int
+    lr: float
+    init: Callable  # key -> params pytree
+    apply: Callable  # (params, x[B, D]) -> logits[B, C]
+    extra: dict = field(default_factory=dict)
+
+    def init_flat(self, seed: int = 0):
+        params = self.init(jax.random.PRNGKey(seed))
+        flat, unravel = ravel_pytree(params)
+        return flat.astype(jnp.float32), unravel
+
+    def make_steps(self, seed: int = 0):
+        """Build (train_step, eval_step) over flat parameters."""
+        _, unravel = self.init_flat(seed)
+
+        def loss_fn(flat, x, y):
+            logits = self.apply(unravel(flat), x)
+            return _xent(logits, y), logits
+
+        def train_step(flat, x, y):
+            (loss, _), grad = jax.value_and_grad(loss_fn, has_aux=True)(flat, x, y)
+            return flat - self.lr * grad, loss
+
+        def eval_step(flat, x, y):
+            logits = self.apply(unravel(flat), x)
+            return _xent(logits, y), _correct(logits, y)
+
+        return train_step, eval_step
+
+
+# --------------------------------------------------------------------------
+# FEMNIST: conv ×2 + wide fused-dense stack, 62 classes.
+# --------------------------------------------------------------------------
+
+def _femnist_init(key):
+    ks = jax.random.split(key, 7)
+    return {
+        "c1": _conv_init(ks[0], 3, 3, 1, 8),
+        "c2": _conv_init(ks[1], 3, 3, 8, 16),
+        "f1": _dense_init(ks[2], 7 * 7 * 16, 256),
+        "f2": _dense_init(ks[3], 256, 256),
+        "f3": _dense_init(ks[4], 256, 256),
+        "f4": _dense_init(ks[5], 256, 256),
+        "out": _dense_init(ks[6], 256, 62),
+    }
+
+
+def _femnist_apply(p, x):
+    b = x.shape[0]
+    h = x.reshape(b, 28, 28, 1)
+    h = _maxpool2(_conv(h, p["c1"]))
+    h = _maxpool2(_conv(h, p["c2"]))
+    h = h.reshape(b, -1)
+    for name in ("f1", "f2", "f3", "f4"):
+        h = fused_dense(h, p[name]["w"], p[name]["b"], "relu")
+    return fused_dense(h, p["out"]["w"], p["out"]["b"], "none")
+
+
+def femnist() -> ModelDef:
+    return ModelDef(
+        name="femnist",
+        batch=32,
+        feature_dim=28 * 28,
+        n_classes=62,
+        lr=0.05,
+        init=_femnist_init,
+        apply=_femnist_apply,
+    )
+
+
+# --------------------------------------------------------------------------
+# Shakespeare: embedding + 2-layer LSTM + dense softmax.
+# --------------------------------------------------------------------------
+
+_SHK_VOCAB = 64
+_SHK_CONTEXT = 32
+_SHK_EMBED = 16
+_SHK_HIDDEN = 96
+
+
+def _lstm_init(key, n_in, n_h):
+    k1, k2 = jax.random.split(key)
+    scale = jnp.sqrt(1.0 / (n_in + n_h))
+    return {
+        "wx": (jax.random.normal(k1, (n_in, 4 * n_h)) * scale).astype(jnp.float32),
+        "wh": (jax.random.normal(k2, (n_h, 4 * n_h)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((4 * n_h,), jnp.float32),
+    }
+
+
+def _lstm_cell(p, carry, x_t):
+    h, c = carry
+    # Gate projections through the fused Pallas dense (no activation; the
+    # per-gate nonlinearities differ).
+    gates = fused_dense(x_t, p["wx"], p["b"], "none") + fused_dense(
+        h, p["wh"], jnp.zeros_like(p["b"]), "none"
+    )
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def _shakespeare_init(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(ks[0], (_SHK_VOCAB, _SHK_EMBED)) * 0.1).astype(jnp.float32),
+        "l1": _lstm_init(ks[1], _SHK_EMBED, _SHK_HIDDEN),
+        "l2": _lstm_init(ks[2], _SHK_HIDDEN, _SHK_HIDDEN),
+        "out": _dense_init(ks[3], _SHK_HIDDEN, _SHK_VOCAB),
+    }
+
+
+def _shakespeare_apply(p, x):
+    b = x.shape[0]
+    # x carries normalized char ids in [0, 1); recover the integer ids.
+    ids = jnp.clip((x * _SHK_VOCAB).astype(jnp.int32), 0, _SHK_VOCAB - 1)
+    emb = p["embed"][ids]  # (B, T, E)
+    seq = jnp.swapaxes(emb, 0, 1)  # (T, B, E)
+    h0 = (
+        jnp.zeros((b, _SHK_HIDDEN), jnp.float32),
+        jnp.zeros((b, _SHK_HIDDEN), jnp.float32),
+    )
+    # Layer 1 emits the full hidden sequence; layer 2 consumes it and its
+    # final hidden state feeds the softmax head.
+    _, seq1 = jax.lax.scan(functools.partial(_lstm_cell, p["l1"]), h0, seq)
+    (h2, _), _ = jax.lax.scan(functools.partial(_lstm_cell, p["l2"]), h0, seq1)
+    return fused_dense(h2, p["out"]["w"], p["out"]["b"], "none")
+
+
+def shakespeare() -> ModelDef:
+    return ModelDef(
+        name="shakespeare",
+        batch=32,
+        feature_dim=_SHK_CONTEXT,
+        n_classes=_SHK_VOCAB,
+        lr=1.0,
+        init=_shakespeare_init,
+        apply=_shakespeare_apply,
+    )
+
+
+# --------------------------------------------------------------------------
+# TIL: VGG-style conv blocks + fused-dense head, 2 classes.
+# --------------------------------------------------------------------------
+
+def _til_init(key):
+    ks = jax.random.split(key, 6)
+    return {
+        "c1": _conv_init(ks[0], 3, 3, 3, 8),
+        "c2": _conv_init(ks[1], 3, 3, 8, 16),
+        "c3": _conv_init(ks[2], 3, 3, 16, 32),
+        "f1": _dense_init(ks[3], 4 * 4 * 32, 256),
+        "f2": _dense_init(ks[4], 256, 128),
+        "out": _dense_init(ks[5], 128, 2),
+    }
+
+
+def _til_apply(p, x):
+    b = x.shape[0]
+    h = x.reshape(b, 32, 32, 3)
+    h = _maxpool2(_conv(h, p["c1"]))
+    h = _maxpool2(_conv(h, p["c2"]))
+    h = _maxpool2(_conv(h, p["c3"]))
+    h = h.reshape(b, -1)
+    h = fused_dense(h, p["f1"]["w"], p["f1"]["b"], "relu")
+    h = fused_dense(h, p["f2"]["w"], p["f2"]["b"], "relu")
+    return fused_dense(h, p["out"]["w"], p["out"]["b"], "none")
+
+
+def til() -> ModelDef:
+    return ModelDef(
+        name="til",
+        batch=16,
+        feature_dim=32 * 32 * 3,
+        n_classes=2,
+        lr=0.05,
+        init=_til_init,
+        apply=_til_apply,
+    )
+
+
+ALL_MODELS = {"femnist": femnist, "shakespeare": shakespeare, "til": til}

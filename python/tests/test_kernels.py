@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py,
+including hypothesis sweeps over shapes and a gradient check of the custom
+VJP."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.fedavg import fedavg  # noqa: E402
+from compile.kernels.fused_dense import fused_dense, matmul  # noqa: E402
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (8, 8, 8),
+            (32, 784, 256),  # femnist fc1-ish
+            (16, 512, 256),  # til head
+            (128, 128, 128),  # exact preferred tiles
+            (256, 1024, 128),  # multi-block K loop
+            (2, 3, 5),  # awkward primes → single block
+        ],
+    )
+    def test_matches_ref(self, m, k, n):
+        x, w = rand(1, m, k), rand(2, k, n)
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=5e-4, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 64),
+        k=st.integers(1, 96),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.uniform(kx, (m, k), jnp.float32, -2.0, 2.0)
+        w = jax.random.uniform(kw, (k, n), jnp.float32, -2.0, 2.0)
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=5e-4, atol=1e-3)
+
+    def test_inside_jit(self):
+        x, w = rand(3, 32, 64), rand(4, 64, 32)
+        got = jax.jit(matmul)(x, w)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=5e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused dense
+# ---------------------------------------------------------------------------
+
+class TestFusedDense:
+    @pytest.mark.parametrize("act", ["relu", "tanh", "none"])
+    @pytest.mark.parametrize("m,k,n", [(32, 784, 256), (16, 100, 62), (8, 8, 8)])
+    def test_forward_matches_ref(self, act, m, k, n):
+        x, w, b = rand(1, m, k), rand(2, k, n), rand(3, n)
+        got = fused_dense(x, w, b, act)
+        want = ref.fused_dense_ref(x, w, b, act)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("act", ["relu", "tanh", "none"])
+    def test_gradients_match_jnp(self, act):
+        """The custom VJP (backward through the Pallas matmul) must agree
+        with autodiff through the jnp reference."""
+        x, w, b = rand(5, 8, 16), rand(6, 16, 12), rand(7, 12) * 0.1
+
+        def loss_pallas(x, w, b):
+            return jnp.sum(fused_dense(x, w, b, act) ** 2)
+
+        def loss_ref(x, w, b):
+            return jnp.sum(ref.fused_dense_ref(x, w, b, act) ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, e in zip(gp, gr):
+            np.testing.assert_allclose(a, e, rtol=5e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 64),
+        n=st.integers(1, 48),
+        act=st.sampled_from(["relu", "tanh", "none"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_forward(self, m, k, n, act, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.uniform(ks[0], (m, k), jnp.float32, -1.0, 1.0)
+        w = jax.random.uniform(ks[1], (k, n), jnp.float32, -1.0, 1.0)
+        b = jax.random.uniform(ks[2], (n,), jnp.float32, -1.0, 1.0)
+        np.testing.assert_allclose(
+            fused_dense(x, w, b, act),
+            ref.fused_dense_ref(x, w, b, act),
+            rtol=5e-4,
+            atol=1e-3,
+        )
+
+    def test_relu_output_nonnegative(self):
+        x, w, b = rand(8, 16, 32), rand(9, 32, 16), rand(10, 16)
+        assert float(jnp.min(fused_dense(x, w, b, "relu"))) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# fedavg
+# ---------------------------------------------------------------------------
+
+class TestFedAvg:
+    @pytest.mark.parametrize("k,p", [(4, 1024), (8, 4096), (5, 100), (2, 3), (1, 7)])
+    def test_matches_ref(self, k, p):
+        stacked = rand(11, k, p)
+        weights = jnp.abs(rand(12, k)) + 0.1
+        np.testing.assert_allclose(
+            fedavg(stacked, weights), ref.fedavg_ref(stacked, weights), rtol=5e-4, atol=1e-3
+        )
+
+    def test_equal_weights_is_mean(self):
+        stacked = rand(13, 4, 256)
+        got = fedavg(stacked, jnp.ones((4,)))
+        np.testing.assert_allclose(got, jnp.mean(stacked, axis=0), rtol=5e-4, atol=1e-3)
+
+    def test_identical_clients_fixed_point(self):
+        row = rand(14, 1, 512)
+        stacked = jnp.tile(row, (6, 1))
+        got = fedavg(stacked, jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0]))
+        np.testing.assert_allclose(got, row[0], rtol=5e-4, atol=1e-3)
+
+    def test_weighting_shifts_towards_heavy_client(self):
+        a = jnp.zeros((1, 64))
+        b = jnp.ones((1, 64))
+        stacked = jnp.concatenate([a, b], axis=0)
+        got = fedavg(stacked, jnp.array([1.0, 3.0]))
+        np.testing.assert_allclose(got, jnp.full((64,), 0.75), rtol=5e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(1, 10),
+        p=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, k, p, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed))
+        stacked = jax.random.uniform(ks[0], (k, p), jnp.float32, -1.0, 1.0)
+        weights = jax.random.uniform(ks[1], (k,), jnp.float32, 0.1, 10.0)
+        np.testing.assert_allclose(
+            fedavg(stacked, weights), ref.fedavg_ref(stacked, weights), rtol=5e-4, atol=1e-3
+        )

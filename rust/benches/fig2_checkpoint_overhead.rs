@@ -1,0 +1,7 @@
+//! Regenerates Fig. 2: server-checkpoint overhead vs interval X, plus the
+//! per-round client checkpoint overhead (§5.5).
+fn main() {
+    let (table, json) = multi_fedls::trace::fig2();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -1,0 +1,69 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! FedAvg aggregation (native vs via the AOT fedavg artifact when present),
+//! checkpoint encode/save, DES simulation throughput, RNG.
+use std::time::Duration;
+
+use multi_fedls::coordinator::{Scenario, SimConfig};
+use multi_fedls::fl::{ClientUpdate, FedAvg, Strategy};
+use multi_fedls::ft::Checkpoint;
+use multi_fedls::simul::Rng;
+use multi_fedls::util::bench::{bench, black_box};
+
+fn main() {
+    // --- FedAvg over TIL-sized models (170k params × 4 clients) ---
+    let p = 170_514;
+    let updates: Vec<ClientUpdate> = (0..4)
+        .map(|c| ClientUpdate {
+            client: c,
+            weights: vec![c as f32; p],
+            n_samples: 948,
+        })
+        .collect();
+    bench("fedavg::native 4x170k", Duration::from_secs(2), 20, || {
+        black_box(FedAvg.aggregate(&updates));
+    });
+
+    // Same aggregation through the AOT Pallas artifact (ablation). The
+    // interpret-mode Pallas HLO takes ~35 s per aggregation on CPU (see
+    // EXPERIMENTS.md §Perf — this is why the L3 hot path uses the native
+    // implementation), so the measurement is opt-in.
+    let art_path = std::path::Path::new("artifacts/til_fedavg.hlo.txt");
+    if std::env::var("MFLS_BENCH_PJRT_FEDAVG").is_ok() && art_path.exists() {
+        let engine = multi_fedls::runtime::Engine::cpu().expect("engine");
+        let exe = engine.load_hlo_text(art_path).expect("compile");
+        let stacked: Vec<f32> = updates.iter().flat_map(|u| u.weights.iter().copied()).collect();
+        let weights: Vec<f32> = updates.iter().map(|u| u.n_samples as f32).collect();
+        bench("fedavg::pjrt-pallas 4x170k", Duration::from_secs(1), 2, || {
+            black_box(
+                exe.run_f32(&[(&stacked, &[4, p as i64]), (&weights, &[4])])
+                    .expect("exec"),
+            );
+        });
+    } else {
+        println!("(set MFLS_BENCH_PJRT_FEDAVG=1 with artifacts built for the ~35 s/iter PJRT fedavg ablation)");
+    }
+
+    // --- checkpoint encode (504 MB-class model scaled to 170k params) ---
+    let ckpt = Checkpoint { round: 10, weights: vec![0.5; p] };
+    bench("checkpoint::encode 170k", Duration::from_secs(2), 20, || {
+        black_box(ckpt.encode());
+    });
+
+    // --- end-to-end DES simulation throughput (80-round TIL with spot) ---
+    bench("sim::til-80-rounds-spot", Duration::from_secs(5), 5, || {
+        let mut cfg = SimConfig::new(multi_fedls::apps::til(), Scenario::AllSpot, 7);
+        cfg.n_rounds = 80;
+        cfg.revocation_mean_secs = Some(7200.0);
+        black_box(multi_fedls::coordinator::simulate(&cfg).unwrap());
+    });
+
+    // --- RNG throughput ---
+    let mut rng = Rng::seeded(1);
+    bench("rng::xoshiro 1e6 draws", Duration::from_secs(1), 10, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= rng.next_u64();
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,75 @@
+//! Initial Mapping solver benchmarks: exact-solver latency across α values
+//! and the solver-quality comparison vs greedy/random/single-cloud
+//! baselines (§5.4 + DESIGN.md ablation).
+use std::time::Duration;
+
+use multi_fedls::cloud::{tables, Market};
+use multi_fedls::cloudsim::{MultiCloud, RevocationModel};
+use multi_fedls::mapping::problem::MappingProblem;
+use multi_fedls::presched::PreScheduler;
+use multi_fedls::util::bench::{bench, black_box};
+
+fn main() {
+    let (table, json) = multi_fedls::trace::mapping_comparison();
+    table.print();
+    println!("{}", json.to_string_compact());
+
+    let (table, json) = multi_fedls::trace::alpha_sweep();
+    table.print();
+    println!("{}", json.to_string_compact());
+
+    let mc = MultiCloud::new(
+        tables::cloudlab(),
+        tables::cloudlab_ground_truth(),
+        RevocationModel::none(),
+        1,
+    );
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    for (name, app) in [
+        ("til(4 clients)", multi_fedls::apps::til()),
+        ("shakespeare(8 clients)", multi_fedls::apps::shakespeare()),
+        ("femnist(5 clients)", multi_fedls::apps::femnist()),
+    ] {
+        let job = app.profile();
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        bench(&format!("mapping::exact {name}"), Duration::from_secs(2), 20, || {
+            black_box(multi_fedls::mapping::exact::solve(&p));
+        });
+    }
+
+    // Dynamic Scheduler (Algorithm 3) selection latency — the operation on
+    // the revocation critical path.
+    let job = multi_fedls::apps::til().profile();
+    let p = MappingProblem {
+        catalog: &mc.catalog,
+        slowdowns: &sl,
+        job: &job,
+        alpha: 0.5,
+        market: Market::Spot,
+        budget_round: 1e9,
+        deadline_round: 1e9,
+    };
+    let map = multi_fedls::dynsched::CurrentMap {
+        server: mc.catalog.vm_by_id("vm121").unwrap(),
+        clients: vec![mc.catalog.vm_by_id("vm126").unwrap(); 4],
+    };
+    let all: Vec<_> = mc.catalog.vm_ids().collect();
+    bench("dynsched::select_instance", Duration::from_secs(2), 100, || {
+        black_box(multi_fedls::dynsched::select_instance(
+            &p,
+            &map,
+            multi_fedls::dynsched::FaultyTask::Client(0),
+            &all,
+            map.clients[0],
+            multi_fedls::dynsched::DynSchedPolicy::different_vm(),
+        ));
+    });
+}

@@ -1,0 +1,7 @@
+//! Regenerates the §5.7 AWS/GCP proof of concept: on-demand vs all-spot
+//! with k_r = 2 h (paper headline: −56.92% cost, +5.44% time).
+fn main() {
+    let (table, json) = multi_fedls::trace::poc_aws_gcp();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -1,0 +1,12 @@
+//! Regenerates Table 3 (execution slowdowns) and times the Pre-Scheduling
+//! measurement pass.
+use std::time::Duration;
+
+fn main() {
+    let (table, json) = multi_fedls::trace::table3();
+    table.print();
+    println!("{}", json.to_string_compact());
+    multi_fedls::util::bench::bench("presched::table3", Duration::from_secs(2), 10, || {
+        multi_fedls::util::bench::black_box(multi_fedls::trace::table3());
+    });
+}

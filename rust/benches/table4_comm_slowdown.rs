@@ -1,0 +1,12 @@
+//! Regenerates Table 4 (communication slowdowns) and times the network-model
+//! measurement pass.
+use std::time::Duration;
+
+fn main() {
+    let (table, json) = multi_fedls::trace::table4();
+    table.print();
+    println!("{}", json.to_string_compact());
+    multi_fedls::util::bench::bench("presched::table4", Duration::from_secs(2), 10, || {
+        multi_fedls::util::bench::black_box(multi_fedls::trace::table4());
+    });
+}

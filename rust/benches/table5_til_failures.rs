@@ -1,0 +1,7 @@
+//! Regenerates Table 5: TIL failure simulation, restart on a *different* VM
+//! type (AWS-style revoked-type blocking), k_r ∈ {2h, 4h}, 3-trial averages.
+fn main() {
+    let (table, json) = multi_fedls::trace::table5();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

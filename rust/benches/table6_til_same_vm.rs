@@ -1,0 +1,7 @@
+//! Regenerates Table 6: TIL failure simulation with the CloudLab policy
+//! (revoked type may be re-selected immediately).
+fn main() {
+    let (table, json) = multi_fedls::trace::table6();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

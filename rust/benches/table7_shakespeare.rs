@@ -1,0 +1,7 @@
+//! Regenerates Table 7: Shakespeare failure simulation (20 rounds × 20
+//! epochs, 8 clients), k_r ∈ {1h, 2h}.
+fn main() {
+    let (table, json) = multi_fedls::trace::table7();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

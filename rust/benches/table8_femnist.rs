@@ -1,0 +1,7 @@
+//! Regenerates Table 8: FEMNIST failure simulation (100 rounds × 100
+//! epochs, 5 clients), k_r ∈ {1h, 2h}.
+fn main() {
+    let (table, json) = multi_fedls::trace::table8();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -1,0 +1,395 @@
+//! The multi-cloud catalog: providers, regions, VM instance types, prices,
+//! quotas. Loadable from TOML (see `configs/`) and provided as built-ins for
+//! the paper's two testbeds (Table 2: CloudLab; Table 9: AWS+GCP) in
+//! [`super::tables`].
+
+
+use super::{Market, ProviderId, RegionId, VmTypeId};
+
+/// A cloud provider (`p_j`).
+#[derive(Debug, Clone)]
+pub struct ProviderSpec {
+    pub name: String,
+    /// `cost_t_j`: $ per GB for any message *sent* from a VM of this provider.
+    pub egress_cost_per_gb: f64,
+    /// Seconds of warning the provider gives before terminating a spot VM
+    /// (AWS ≈ 120 s, GCP ≈ 30 s).
+    pub revocation_notice_secs: f64,
+    /// Time from provision request to the task being able to run. The paper
+    /// measured 2:34 on AWS, 13:35 on GCP and 39:43 on CloudLab (bare-metal).
+    pub boot_time_secs: f64,
+    /// `N_GPU_j`: provider-wide GPU quota (None = unlimited, e.g. CloudLab).
+    pub max_gpus: Option<u32>,
+    /// `N_CPU_j`: provider-wide vCPU quota.
+    pub max_vcpus: Option<u32>,
+}
+
+/// A region (`r_jk`) of a provider.
+#[derive(Debug, Clone)]
+pub struct RegionSpec {
+    pub name: String,
+    pub provider: ProviderId,
+    /// `N_L_GPU_jk`: per-region GPU quota.
+    pub max_gpus: Option<u32>,
+    /// `N_L_CPU_jk`: per-region vCPU quota.
+    pub max_vcpus: Option<u32>,
+}
+
+/// A VM instance type (`vm_jkl`) offered in a region.
+#[derive(Debug, Clone)]
+pub struct VmTypeSpec {
+    /// Paper id, e.g. `"vm126"`.
+    pub id: String,
+    /// Hardware / commercial name, e.g. `"c240g5"` or `"g4dn.2xlarge"`.
+    pub hw_name: String,
+    pub region: RegionId,
+    pub vcpus: u32,
+    pub gpus: u32,
+    pub gpu_model: Option<String>,
+    pub ram_gb: f64,
+    pub on_demand_hourly: f64,
+    pub spot_hourly: f64,
+}
+
+impl VmTypeSpec {
+    /// `cost_jkl` in $ per second for the given market.
+    pub fn cost_per_sec(&self, market: Market) -> f64 {
+        let hourly = match market {
+            Market::OnDemand => self.on_demand_hourly,
+            Market::Spot => self.spot_hourly,
+        };
+        hourly / 3600.0
+    }
+}
+
+/// The full environment the scheduler sees.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    pub name: String,
+    pub providers: Vec<ProviderSpec>,
+    pub regions: Vec<RegionSpec>,
+    pub vm_types: Vec<VmTypeSpec>,
+}
+
+impl Catalog {
+    pub fn provider(&self, p: ProviderId) -> &ProviderSpec {
+        &self.providers[p.0]
+    }
+
+    pub fn region(&self, r: RegionId) -> &RegionSpec {
+        &self.regions[r.0]
+    }
+
+    pub fn vm(&self, v: VmTypeId) -> &VmTypeSpec {
+        &self.vm_types[v.0]
+    }
+
+    /// Provider that hosts VM type `v`.
+    pub fn provider_of(&self, v: VmTypeId) -> ProviderId {
+        self.regions[self.vm_types[v.0].region.0].provider
+    }
+
+    pub fn region_of(&self, v: VmTypeId) -> RegionId {
+        self.vm_types[v.0].region
+    }
+
+    pub fn vm_ids(&self) -> impl Iterator<Item = VmTypeId> + '_ {
+        (0..self.vm_types.len()).map(VmTypeId)
+    }
+
+    pub fn region_ids(&self) -> impl Iterator<Item = RegionId> + '_ {
+        (0..self.regions.len()).map(RegionId)
+    }
+
+    pub fn provider_ids(&self) -> impl Iterator<Item = ProviderId> + '_ {
+        (0..self.providers.len()).map(ProviderId)
+    }
+
+    /// VM types offered in region `r` (the set `V_jk`).
+    pub fn vms_in_region(&self, r: RegionId) -> Vec<VmTypeId> {
+        self.vm_ids().filter(|&v| self.vm_types[v.0].region == r).collect()
+    }
+
+    /// Look up a VM type by its paper id (e.g. `"vm126"`) or hardware name.
+    pub fn vm_by_id(&self, id: &str) -> Option<VmTypeId> {
+        self.vm_ids()
+            .find(|&v| self.vm_types[v.0].id == id || self.vm_types[v.0].hw_name == id)
+    }
+
+    pub fn region_by_name(&self, name: &str) -> Option<RegionId> {
+        self.region_ids().find(|&r| self.regions[r.0].name == name)
+    }
+
+    /// Most expensive per-second VM rate, used in the `cost_max`
+    /// normalization term (Eq. 7).
+    pub fn max_cost_per_sec(&self, market: Market) -> f64 {
+        self.vm_types
+            .iter()
+            .map(|v| v.cost_per_sec(market))
+            .fold(0.0, f64::max)
+    }
+
+    /// Load a catalog from a TOML file (the config-system entry point).
+    pub fn from_toml_file(path: &std::path::Path) -> anyhow::Result<Catalog> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse a catalog from TOML text. Schema: see `configs/cloudlab.toml`.
+    pub fn from_toml(text: &str) -> anyhow::Result<Catalog> {
+        use crate::util::tomlmini as t;
+        type Tbl = std::collections::BTreeMap<String, t::Value>;
+        let root = t::parse(text)?;
+        fn need_str(m: &Tbl, k: &str) -> anyhow::Result<String> {
+            Ok(m.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("missing string key {k}"))?
+                .to_string())
+        }
+        fn need_f64(m: &Tbl, k: &str) -> anyhow::Result<f64> {
+            m.get(k)
+                .and_then(|v| v.as_float())
+                .ok_or_else(|| anyhow::anyhow!("missing numeric key {k}"))
+        }
+        fn opt_u32(m: &Tbl, k: &str) -> Option<u32> {
+            m.get(k).and_then(|v| v.as_int()).map(|i| i as u32)
+        }
+
+        let name = root
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+        let mut providers = Vec::new();
+        for p in root
+            .get("provider")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| anyhow::anyhow!("missing [[provider]] sections"))?
+        {
+            providers.push(ProviderSpec {
+                name: need_str(p, "name")?,
+                egress_cost_per_gb: need_f64(p, "egress_cost_per_gb")?,
+                revocation_notice_secs: need_f64(p, "revocation_notice_secs")?,
+                boot_time_secs: need_f64(p, "boot_time_secs")?,
+                max_gpus: opt_u32(p, "max_gpus"),
+                max_vcpus: opt_u32(p, "max_vcpus"),
+            });
+        }
+        let mut regions = Vec::new();
+        for r in root
+            .get("region")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| anyhow::anyhow!("missing [[region]] sections"))?
+        {
+            let pname = need_str(r, "provider")?;
+            let provider = providers
+                .iter()
+                .position(|p| p.name == pname)
+                .ok_or_else(|| anyhow::anyhow!("region references unknown provider {pname}"))?;
+            regions.push(RegionSpec {
+                name: need_str(r, "name")?,
+                provider: ProviderId(provider),
+                max_gpus: opt_u32(r, "max_gpus"),
+                max_vcpus: opt_u32(r, "max_vcpus"),
+            });
+        }
+        let mut vm_types = Vec::new();
+        for v in root
+            .get("vm")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| anyhow::anyhow!("missing [[vm]] sections"))?
+        {
+            let rname = need_str(v, "region")?;
+            let region = regions
+                .iter()
+                .position(|r| r.name == rname)
+                .ok_or_else(|| anyhow::anyhow!("vm references unknown region {rname}"))?;
+            vm_types.push(VmTypeSpec {
+                id: need_str(v, "id")?,
+                hw_name: need_str(v, "hw_name")?,
+                region: RegionId(region),
+                vcpus: opt_u32(v, "vcpus").ok_or_else(|| anyhow::anyhow!("missing vcpus"))?,
+                gpus: opt_u32(v, "gpus").unwrap_or(0),
+                gpu_model: v.get("gpu_model").and_then(|x| x.as_str()).map(|s| s.to_string()),
+                ram_gb: need_f64(v, "ram_gb")?,
+                on_demand_hourly: need_f64(v, "on_demand_hourly")?,
+                spot_hourly: need_f64(v, "spot_hourly")?,
+            });
+        }
+        let cat = Catalog { name, providers, regions, vm_types };
+        cat.validate()?;
+        Ok(cat)
+    }
+
+    /// Serialize to the TOML schema accepted by [`Self::from_toml`].
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "name = \"{}\"", self.name);
+        for p in &self.providers {
+            let _ = writeln!(out, "\n[[provider]]");
+            let _ = writeln!(out, "name = \"{}\"", p.name);
+            let _ = writeln!(out, "egress_cost_per_gb = {}", p.egress_cost_per_gb);
+            let _ = writeln!(out, "revocation_notice_secs = {:.1}", p.revocation_notice_secs);
+            let _ = writeln!(out, "boot_time_secs = {:.1}", p.boot_time_secs);
+            if let Some(g) = p.max_gpus {
+                let _ = writeln!(out, "max_gpus = {g}");
+            }
+            if let Some(c) = p.max_vcpus {
+                let _ = writeln!(out, "max_vcpus = {c}");
+            }
+        }
+        for r in &self.regions {
+            let _ = writeln!(out, "\n[[region]]");
+            let _ = writeln!(out, "name = \"{}\"", r.name);
+            let _ = writeln!(out, "provider = \"{}\"", self.providers[r.provider.0].name);
+            if let Some(g) = r.max_gpus {
+                let _ = writeln!(out, "max_gpus = {g}");
+            }
+            if let Some(c) = r.max_vcpus {
+                let _ = writeln!(out, "max_vcpus = {c}");
+            }
+        }
+        for v in &self.vm_types {
+            let _ = writeln!(out, "\n[[vm]]");
+            let _ = writeln!(out, "id = \"{}\"", v.id);
+            let _ = writeln!(out, "hw_name = \"{}\"", v.hw_name);
+            let _ = writeln!(out, "region = \"{}\"", self.regions[v.region.0].name);
+            let _ = writeln!(out, "vcpus = {}", v.vcpus);
+            let _ = writeln!(out, "gpus = {}", v.gpus);
+            if let Some(m) = &v.gpu_model {
+                let _ = writeln!(out, "gpu_model = \"{m}\"");
+            }
+            let _ = writeln!(out, "ram_gb = {}", v.ram_gb);
+            let _ = writeln!(out, "on_demand_hourly = {}", v.on_demand_hourly);
+            let _ = writeln!(out, "spot_hourly = {}", v.spot_hourly);
+        }
+        out
+    }
+
+    /// Structural sanity checks (indices in range, prices non-negative,
+    /// spot ≤ on-demand).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, r) in self.regions.iter().enumerate() {
+            anyhow::ensure!(
+                r.provider.0 < self.providers.len(),
+                "region {i} references missing provider {}",
+                r.provider.0
+            );
+        }
+        for v in &self.vm_types {
+            anyhow::ensure!(
+                v.region.0 < self.regions.len(),
+                "vm {} references missing region {}",
+                v.id,
+                v.region.0
+            );
+            anyhow::ensure!(v.on_demand_hourly >= 0.0 && v.spot_hourly >= 0.0);
+            anyhow::ensure!(
+                v.spot_hourly <= v.on_demand_hourly,
+                "vm {}: spot price above on-demand",
+                v.id
+            );
+            anyhow::ensure!(v.vcpus > 0, "vm {}: zero vCPUs", v.id);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for v in &self.vm_types {
+            anyhow::ensure!(seen.insert(&v.id), "duplicate vm id {}", v.id);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tables;
+    use super::*;
+
+    #[test]
+    fn cloudlab_catalog_matches_table2() {
+        let cat = tables::cloudlab();
+        cat.validate().unwrap();
+        assert_eq!(cat.providers.len(), 2, "Cloud A and Cloud B");
+        assert_eq!(cat.regions.len(), 5, "Utah, Wisconsin, Clemson, APT, Mass");
+        assert_eq!(cat.vm_types.len(), 13);
+        let vm126 = cat.vm(cat.vm_by_id("vm126").unwrap());
+        assert_eq!(vm126.hw_name, "c240g5");
+        assert_eq!(vm126.vcpus, 40);
+        assert_eq!(vm126.gpus, 1);
+        assert!((vm126.on_demand_hourly - 4.693).abs() < 1e-9);
+        assert!((vm126.spot_hourly - 1.408).abs() < 1e-9);
+        let vm138 = cat.vm(cat.vm_by_id("vm138").unwrap());
+        assert_eq!(vm138.gpu_model.as_deref(), Some("V100S"));
+        assert_eq!(vm138.vcpus, 128);
+        assert!((vm138.on_demand_hourly - 11.159).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_is_70_percent_discount_on_cloudlab() {
+        let cat = tables::cloudlab();
+        for v in &cat.vm_types {
+            let expected = v.on_demand_hourly * 0.3;
+            assert!(
+                (v.spot_hourly - expected).abs() < 0.005,
+                "{}: spot {} vs 30% of od {}",
+                v.id,
+                v.spot_hourly,
+                expected
+            );
+        }
+    }
+
+    #[test]
+    fn aws_gcp_catalog_matches_table9() {
+        let cat = tables::aws_gcp();
+        cat.validate().unwrap();
+        assert_eq!(cat.providers.len(), 2);
+        assert_eq!(cat.regions.len(), 3, "us-east-1, us-central1, us-west1");
+        assert_eq!(cat.vm_types.len(), 8);
+        let g4dn = cat.vm(cat.vm_by_id("vm311").unwrap());
+        assert_eq!(g4dn.hw_name, "g4dn.2xlarge");
+        assert!((g4dn.on_demand_hourly - 0.752).abs() < 1e-9);
+        assert!((g4dn.spot_hourly - 0.318).abs() < 1e-9);
+        let t2 = cat.vm(cat.vm_by_id("vm313").unwrap());
+        assert_eq!(t2.gpus, 0);
+        assert!((t2.on_demand_hourly - 0.186).abs() < 1e-9);
+    }
+
+    #[test]
+    fn provider_of_resolves_through_region() {
+        let cat = tables::cloudlab();
+        let vm212 = cat.vm_by_id("vm212").unwrap();
+        let p = cat.provider_of(vm212);
+        assert_eq!(cat.provider(p).name, "Cloud B");
+        assert_eq!(cat.region(cat.region_of(vm212)).name, "APT");
+    }
+
+    #[test]
+    fn cost_per_sec() {
+        let cat = tables::cloudlab();
+        let vm121 = cat.vm(cat.vm_by_id("vm121").unwrap());
+        assert!((vm121.cost_per_sec(Market::OnDemand) - 1.670 / 3600.0).abs() < 1e-12);
+        assert!((vm121.cost_per_sec(Market::Spot) - 0.501 / 3600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let cat = tables::cloudlab();
+        let text = cat.to_toml();
+        let back = Catalog::from_toml(&text).unwrap();
+        assert_eq!(back.vm_types.len(), cat.vm_types.len());
+        assert_eq!(back.providers[0].name, cat.providers[0].name);
+        let vm126 = back.vm(back.vm_by_id("vm126").unwrap());
+        assert_eq!(vm126.gpu_model.as_deref(), Some("P100"));
+        assert!((vm126.spot_hourly - 1.408).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vms_in_region() {
+        let cat = tables::cloudlab();
+        let utah = cat.region_by_name("Utah").unwrap();
+        let vms = cat.vms_in_region(utah);
+        assert_eq!(vms.len(), 3);
+    }
+}

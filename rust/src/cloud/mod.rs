@@ -1,0 +1,53 @@
+//! Environment model (§3 of the paper).
+//!
+//! A multi-cloud platform is a set of providers `P`; each provider `p_j` has
+//! regions `R_j`; each region `r_jk` offers VM instance types `V_jk` with a
+//! number of vCPUs/GPUs and a fixed price per second, in two markets
+//! (on-demand and spot/preemptible). Providers also have global and
+//! per-region GPU/vCPU quotas and a flat egress cost per GB (`cost_t_j`).
+//!
+//! The [`Catalog`] is what the scheduler *sees*. The simulator's ground-truth
+//! performance parameterization (how fast each VM actually computes, how fast
+//! each region pair actually communicates) lives in
+//! [`tables::GroundTruth`] — the Pre-Scheduling module measures slowdowns by
+//! running a dummy application against it, exactly as the paper measures
+//! Tables 3 and 4 on CloudLab.
+
+pub mod catalog;
+pub mod quota;
+pub mod tables;
+
+pub use catalog::{Catalog, ProviderSpec, RegionSpec, VmTypeSpec};
+pub use quota::QuotaTracker;
+
+
+/// Index of a provider within a [`Catalog`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProviderId(pub usize);
+
+/// Index of a region within a [`Catalog`] (global, not per-provider).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub usize);
+
+/// Index of a VM instance type within a [`Catalog`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmTypeId(pub usize);
+
+/// Pricing market for a VM allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Market {
+    /// Full price, never revoked by the provider.
+    OnDemand,
+    /// Deep discount (the paper uses 70% off on-demand for CloudLab), but the
+    /// provider may revoke the VM at any time.
+    Spot,
+}
+
+impl std::fmt::Display for Market {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Market::OnDemand => write!(f, "on-demand"),
+            Market::Spot => write!(f, "spot"),
+        }
+    }
+}

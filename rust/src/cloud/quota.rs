@@ -1,0 +1,208 @@
+//! Quota accounting: tracks GPU and vCPU usage against the provider-wide
+//! (`N_GPU_j`, `N_CPU_j`) and per-region (`N_L_GPU_jk`, `N_L_CPU_jk`) bounds
+//! of the environment model (Constraints 12–15 of the formulation, enforced
+//! at runtime by the simulator and at planning time by the mapping solver).
+
+use std::collections::HashMap;
+
+use super::catalog::Catalog;
+use super::{ProviderId, RegionId, VmTypeId};
+
+#[derive(Debug, Clone, Default)]
+struct Usage {
+    gpus: u32,
+    vcpus: u32,
+}
+
+/// Mutable quota state over a catalog.
+#[derive(Debug, Clone)]
+pub struct QuotaTracker {
+    provider_usage: HashMap<ProviderId, Usage>,
+    region_usage: HashMap<RegionId, Usage>,
+}
+
+/// Why an allocation was refused.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum QuotaError {
+    #[error("provider {0} GPU quota exceeded")]
+    ProviderGpu(String),
+    #[error("provider {0} vCPU quota exceeded")]
+    ProviderCpu(String),
+    #[error("region {0} GPU quota exceeded")]
+    RegionGpu(String),
+    #[error("region {0} vCPU quota exceeded")]
+    RegionCpu(String),
+}
+
+impl QuotaTracker {
+    pub fn new() -> Self {
+        Self { provider_usage: HashMap::new(), region_usage: HashMap::new() }
+    }
+
+    /// Check whether allocating one VM of type `vm` fits all four bounds.
+    pub fn check(&self, cat: &Catalog, vm: VmTypeId) -> Result<(), QuotaError> {
+        let spec = cat.vm(vm);
+        let region = cat.region_of(vm);
+        let provider = cat.provider_of(vm);
+        let pu = self.provider_usage.get(&provider).cloned().unwrap_or_default();
+        let ru = self.region_usage.get(&region).cloned().unwrap_or_default();
+        let pspec = cat.provider(provider);
+        let rspec = cat.region(region);
+        if let Some(max) = pspec.max_gpus {
+            if pu.gpus + spec.gpus > max {
+                return Err(QuotaError::ProviderGpu(pspec.name.clone()));
+            }
+        }
+        if let Some(max) = pspec.max_vcpus {
+            if pu.vcpus + spec.vcpus > max {
+                return Err(QuotaError::ProviderCpu(pspec.name.clone()));
+            }
+        }
+        if let Some(max) = rspec.max_gpus {
+            if ru.gpus + spec.gpus > max {
+                return Err(QuotaError::RegionGpu(rspec.name.clone()));
+            }
+        }
+        if let Some(max) = rspec.max_vcpus {
+            if ru.vcpus + spec.vcpus > max {
+                return Err(QuotaError::RegionCpu(rspec.name.clone()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocate one VM of type `vm`, failing atomically if any bound breaks.
+    pub fn allocate(&mut self, cat: &Catalog, vm: VmTypeId) -> Result<(), QuotaError> {
+        self.check(cat, vm)?;
+        let spec = cat.vm(vm);
+        let region = cat.region_of(vm);
+        let provider = cat.provider_of(vm);
+        let pu = self.provider_usage.entry(provider).or_default();
+        pu.gpus += spec.gpus;
+        pu.vcpus += spec.vcpus;
+        let ru = self.region_usage.entry(region).or_default();
+        ru.gpus += spec.gpus;
+        ru.vcpus += spec.vcpus;
+        Ok(())
+    }
+
+    /// Release one VM of type `vm` (e.g. after termination or revocation).
+    pub fn release(&mut self, cat: &Catalog, vm: VmTypeId) {
+        let spec = cat.vm(vm);
+        let region = cat.region_of(vm);
+        let provider = cat.provider_of(vm);
+        let pu = self.provider_usage.entry(provider).or_default();
+        pu.gpus = pu.gpus.saturating_sub(spec.gpus);
+        pu.vcpus = pu.vcpus.saturating_sub(spec.vcpus);
+        let ru = self.region_usage.entry(region).or_default();
+        ru.gpus = ru.gpus.saturating_sub(spec.gpus);
+        ru.vcpus = ru.vcpus.saturating_sub(spec.vcpus);
+    }
+
+    pub fn provider_gpus_in_use(&self, p: ProviderId) -> u32 {
+        self.provider_usage.get(&p).map(|u| u.gpus).unwrap_or(0)
+    }
+
+    pub fn provider_vcpus_in_use(&self, p: ProviderId) -> u32 {
+        self.provider_usage.get(&p).map(|u| u.vcpus).unwrap_or(0)
+    }
+
+    pub fn region_gpus_in_use(&self, r: RegionId) -> u32 {
+        self.region_usage.get(&r).map(|u| u.gpus).unwrap_or(0)
+    }
+}
+
+impl Default for QuotaTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Planning-time helper: check that a *whole assignment* (a multiset of VM
+/// types) satisfies the quota constraints. Used by the mapping solvers.
+pub fn assignment_fits(cat: &Catalog, vms: &[VmTypeId]) -> Result<(), QuotaError> {
+    let mut q = QuotaTracker::new();
+    for &vm in vms {
+        q.allocate(cat, vm)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tables;
+    use super::*;
+
+    #[test]
+    fn cloudlab_is_unbounded() {
+        let cat = tables::cloudlab();
+        let mut q = QuotaTracker::new();
+        let vm126 = cat.vm_by_id("vm126").unwrap();
+        for _ in 0..100 {
+            q.allocate(&cat, vm126).unwrap();
+        }
+    }
+
+    #[test]
+    fn aws_gpu_quota_enforced() {
+        let cat = tables::aws_gcp();
+        let mut q = QuotaTracker::new();
+        let g4dn = cat.vm_by_id("vm311").unwrap();
+        for _ in 0..4 {
+            q.allocate(&cat, g4dn).unwrap();
+        }
+        // 5th GPU exceeds the N_GPU=4 provider bound.
+        let err = q.allocate(&cat, g4dn).unwrap_err();
+        assert!(matches!(err, QuotaError::ProviderGpu(_) | QuotaError::RegionGpu(_)));
+    }
+
+    #[test]
+    fn gcp_quota_is_per_provider() {
+        // 4 GPUs in GCP us-central1 blocks us-west1 too (provider bound),
+        // but AWS capacity is unaffected.
+        let cat = tables::aws_gcp();
+        let mut q = QuotaTracker::new();
+        let v100_c = cat.vm_by_id("vm413").unwrap();
+        let v100_w = cat.vm_by_id("vm422").unwrap();
+        for _ in 0..4 {
+            q.allocate(&cat, v100_c).unwrap();
+        }
+        assert!(q.allocate(&cat, v100_w).is_err());
+        let g4dn = cat.vm_by_id("vm311").unwrap();
+        q.allocate(&cat, g4dn).unwrap();
+    }
+
+    #[test]
+    fn release_restores_capacity() {
+        let cat = tables::aws_gcp();
+        let mut q = QuotaTracker::new();
+        let g4dn = cat.vm_by_id("vm311").unwrap();
+        for _ in 0..4 {
+            q.allocate(&cat, g4dn).unwrap();
+        }
+        assert!(q.allocate(&cat, g4dn).is_err());
+        q.release(&cat, g4dn);
+        q.allocate(&cat, g4dn).unwrap();
+    }
+
+    #[test]
+    fn vcpu_quota_enforced() {
+        let cat = tables::aws_gcp();
+        let mut q = QuotaTracker::new();
+        let g3 = cat.vm_by_id("vm312").unwrap(); // 16 vCPUs, 1 GPU
+        // 4 allocations = 64 vCPUs, 4 GPUs: GPU bound binds first on the 5th.
+        for _ in 0..4 {
+            q.allocate(&cat, g3).unwrap();
+        }
+        assert!(q.allocate(&cat, g3).is_err());
+    }
+
+    #[test]
+    fn assignment_fits_whole_plan() {
+        let cat = tables::aws_gcp();
+        let g4dn = cat.vm_by_id("vm311").unwrap();
+        let t2 = cat.vm_by_id("vm313").unwrap();
+        assert!(assignment_fits(&cat, &[g4dn, g4dn, t2]).is_ok());
+        assert!(assignment_fits(&cat, &[g4dn; 5]).is_err());
+    }
+}

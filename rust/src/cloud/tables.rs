@@ -1,0 +1,461 @@
+//! Built-in environments: the paper's two testbeds and their measured
+//! ground-truth performance.
+//!
+//! * [`cloudlab`] — Table 2: 13 instance types across 5 CloudLab clusters
+//!   grouped into two simulated clouds, priced with GCP's December-2022
+//!   per-vCPU / per-GB policy and a 70% spot discount.
+//! * [`aws_gcp`] — Table 9: the AWS us-east-1 + GCP us-central1/us-west1
+//!   proof-of-concept environment.
+//! * [`GroundTruth`] — the *simulator parameterization*: per-VM dummy-app
+//!   execution times (Table 3) and per-region-pair message-exchange times
+//!   (Table 4). The Pre-Scheduling module re-derives the paper's slowdowns
+//!   by running the dummy app against this ground truth, which is exactly
+//!   how the paper produced Tables 3 and 4 on the real testbed.
+//!
+//! Substitution note (see DESIGN.md): we cannot allocate CloudLab/AWS/GCP
+//! machines here, so the measured numbers published in the paper *are* the
+//! ground truth of our simulated multi-cloud.
+
+use std::collections::HashMap;
+
+use super::catalog::{Catalog, ProviderSpec, RegionSpec, VmTypeSpec};
+use super::{ProviderId, RegionId};
+
+/// Boot ("VM preparation") times measured by the paper (§5.4).
+pub const BOOT_CLOUDLAB_SECS: f64 = 39.0 * 60.0 + 43.0; // 39:43 bare-metal
+pub const BOOT_AWS_SECS: f64 = 2.0 * 60.0 + 34.0; // 2:34
+pub const BOOT_GCP_SECS: f64 = 13.0 * 60.0 + 35.0; // 13:35
+
+/// Revocation notice windows (§4.3).
+pub const NOTICE_AWS_SECS: f64 = 120.0;
+pub const NOTICE_GCP_SECS: f64 = 30.0;
+
+/// Egress price used for both CloudLab clouds (§5.4): GCP's $0.012/GB.
+pub const EGRESS_CLOUDLAB: f64 = 0.012;
+
+/// Table 2: the CloudLab testbed as two simulated clouds.
+pub fn cloudlab() -> Catalog {
+    let providers = vec![
+        ProviderSpec {
+            name: "Cloud A".into(),
+            egress_cost_per_gb: EGRESS_CLOUDLAB,
+            revocation_notice_secs: NOTICE_AWS_SECS,
+            boot_time_secs: BOOT_CLOUDLAB_SECS,
+            max_gpus: None, // CloudLab does not limit vCPUs/GPUs per user
+            max_vcpus: None,
+        },
+        ProviderSpec {
+            name: "Cloud B".into(),
+            egress_cost_per_gb: EGRESS_CLOUDLAB,
+            revocation_notice_secs: NOTICE_GCP_SECS,
+            boot_time_secs: BOOT_CLOUDLAB_SECS,
+            max_gpus: None,
+            max_vcpus: None,
+        },
+    ];
+    let regions = vec![
+        RegionSpec { name: "Utah".into(), provider: ProviderId(0), max_gpus: None, max_vcpus: None },
+        RegionSpec { name: "Wisconsin".into(), provider: ProviderId(0), max_gpus: None, max_vcpus: None },
+        RegionSpec { name: "Clemson".into(), provider: ProviderId(0), max_gpus: None, max_vcpus: None },
+        RegionSpec { name: "APT".into(), provider: ProviderId(1), max_gpus: None, max_vcpus: None },
+        RegionSpec { name: "Massachusetts".into(), provider: ProviderId(1), max_gpus: None, max_vcpus: None },
+    ];
+    // (id, hw, region, vcpus, gpus, gpu_model, ram, on_demand, spot)
+    let raw: &[(&str, &str, usize, u32, u32, Option<&str>, f64, f64, f64)] = &[
+        ("vm112", "c6525-25g", 0, 32, 0, None, 128.0, 1.670, 0.501),
+        ("vm114", "m510", 0, 16, 0, None, 64.0, 0.835, 0.250),
+        ("vm115", "xl170", 0, 20, 0, None, 64.0, 0.971, 0.291),
+        ("vm121", "c220g1", 1, 32, 0, None, 128.0, 1.670, 0.501),
+        ("vm122", "c220g2", 1, 40, 0, None, 160.0, 2.087, 0.626),
+        ("vm124", "c240g1", 1, 32, 0, None, 128.0, 1.670, 0.501),
+        ("vm126", "c240g5", 1, 40, 1, Some("P100"), 192.0, 4.693, 1.408),
+        ("vm135", "dss7500", 2, 24, 0, None, 128.0, 1.398, 0.419),
+        ("vm138", "r7525", 2, 128, 1, Some("V100S"), 512.0, 11.159, 3.348),
+        ("vm211", "c6220", 3, 32, 0, None, 64.0, 1.283, 0.385),
+        ("vm212", "r320", 3, 12, 0, None, 16.0, 0.574, 0.172),
+        ("vm221", "rs440", 4, 64, 0, None, 192.0, 2.837, 0.851),
+        ("vm222", "rs630", 4, 40, 0, None, 256.0, 2.349, 0.705),
+    ];
+    let vm_types = raw
+        .iter()
+        .map(|&(id, hw, region, vcpus, gpus, gpu_model, ram, od, spot)| VmTypeSpec {
+            id: id.into(),
+            hw_name: hw.into(),
+            region: RegionId(region),
+            vcpus,
+            gpus,
+            gpu_model: gpu_model.map(|s| s.to_string()),
+            ram_gb: ram,
+            on_demand_hourly: od,
+            spot_hourly: spot,
+        })
+        .collect();
+    Catalog { name: "cloudlab".into(), providers, regions, vm_types }
+}
+
+/// Table 9: the real two-cloud proof-of-concept environment (AWS + GCP).
+pub fn aws_gcp() -> Catalog {
+    let providers = vec![
+        ProviderSpec {
+            name: "AWS".into(),
+            egress_cost_per_gb: 0.012,
+            revocation_notice_secs: NOTICE_AWS_SECS,
+            boot_time_secs: BOOT_AWS_SECS,
+            max_gpus: Some(4), // the GPU quota the paper hit (§5.2)
+            max_vcpus: Some(128),
+        },
+        ProviderSpec {
+            name: "GCP".into(),
+            egress_cost_per_gb: 0.012,
+            revocation_notice_secs: NOTICE_GCP_SECS,
+            boot_time_secs: BOOT_GCP_SECS,
+            max_gpus: Some(4),
+            max_vcpus: Some(128),
+        },
+    ];
+    let regions = vec![
+        RegionSpec { name: "us-east-1".into(), provider: ProviderId(0), max_gpus: Some(4), max_vcpus: Some(128) },
+        RegionSpec { name: "us-central1".into(), provider: ProviderId(1), max_gpus: Some(4), max_vcpus: Some(128) },
+        RegionSpec { name: "us-west1".into(), provider: ProviderId(1), max_gpus: Some(4), max_vcpus: Some(128) },
+    ];
+    let raw: &[(&str, &str, usize, u32, u32, Option<&str>, f64, f64, f64)] = &[
+        ("vm311", "g4dn.2xlarge", 0, 8, 1, Some("T4"), 32.0, 0.752, 0.318),
+        ("vm312", "g3.4xlarge", 0, 16, 1, Some("M60"), 122.0, 1.140, 0.638),
+        ("vm313", "t2.xlarge", 0, 4, 0, None, 16.0, 0.186, 0.140),
+        ("vm411", "n1-standard-8-t4", 1, 8, 1, Some("T4"), 30.0, 0.730, 0.196),
+        ("vm413", "n1-standard-8-v100", 1, 8, 1, Some("V100"), 30.0, 2.860, 0.857),
+        ("vm414", "e2-standard-4", 1, 4, 0, None, 16.0, 0.134, 0.040),
+        ("vm422", "n1-standard-8-v100-w", 2, 8, 1, Some("V100"), 30.0, 2.860, 0.857),
+        ("vm423", "e2-standard-4-w", 2, 4, 0, None, 16.0, 0.134, 0.040),
+    ];
+    let vm_types = raw
+        .iter()
+        .map(|&(id, hw, region, vcpus, gpus, gpu_model, ram, od, spot)| VmTypeSpec {
+            id: id.into(),
+            hw_name: hw.into(),
+            region: RegionId(region),
+            vcpus,
+            gpus,
+            gpu_model: gpu_model.map(|s| s.to_string()),
+            ram_gb: ram,
+            on_demand_hourly: od,
+            spot_hourly: spot,
+        })
+        .collect();
+    Catalog { name: "aws-gcp".into(), providers, regions, vm_types }
+}
+
+/// Measured dummy-application times for one VM type (Table 3): training and
+/// test times of the first and second rounds, in seconds. The paper's
+/// slowdowns use round 2 (round 1 includes warm-up).
+#[derive(Debug, Clone, Copy)]
+pub struct DummyTimes {
+    pub train_r1: f64,
+    pub train_r2: f64,
+    pub test_r1: f64,
+    pub test_r2: f64,
+}
+
+impl DummyTimes {
+    /// Steady-state (round ≥ 2) train+test time.
+    pub fn steady(&self) -> f64 {
+        self.train_r2 + self.test_r2
+    }
+
+    /// Warm-up overhead of the first round relative to steady state.
+    pub fn warmup_extra(&self) -> f64 {
+        (self.train_r1 + self.test_r1) - self.steady()
+    }
+}
+
+/// Measured message-exchange times for one region pair (Table 4): total time
+/// to exchange the dummy job's training messages (≈2 GB) and test messages
+/// (≈1 GB), in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct CommTimes {
+    pub train: f64,
+    pub test: f64,
+}
+
+impl CommTimes {
+    pub fn total(&self) -> f64 {
+        self.train + self.test
+    }
+}
+
+/// Message volumes behind Table 4 (§5.3): "the training and test phases
+/// exchange a total of 2 GB in messages and a little more than 1 GB".
+pub const DUMMY_TRAIN_GB: f64 = 2.0;
+pub const DUMMY_TEST_GB: f64 = 1.0;
+
+/// Ground-truth performance of an environment: what the simulator uses to
+/// produce execution/communication times, and what Pre-Scheduling rediscovers.
+#[derive(Debug, Clone)]
+pub struct GroundTruth {
+    /// Dummy-app times per VM type id.
+    pub dummy: HashMap<String, DummyTimes>,
+    /// Message times per unordered region-name pair.
+    pub comm: HashMap<(String, String), CommTimes>,
+    /// Baseline VM for execution slowdowns (vm121 in the paper).
+    pub baseline_vm: String,
+    /// Baseline region pair for communication slowdowns (APT–APT).
+    pub baseline_pair: (String, String),
+}
+
+impl GroundTruth {
+    fn key(a: &str, b: &str) -> (String, String) {
+        if a <= b {
+            (a.to_string(), b.to_string())
+        } else {
+            (b.to_string(), a.to_string())
+        }
+    }
+
+    pub fn dummy_times(&self, vm_id: &str) -> DummyTimes {
+        *self
+            .dummy
+            .get(vm_id)
+            .unwrap_or_else(|| panic!("no ground-truth dummy times for {vm_id}"))
+    }
+
+    pub fn comm_times(&self, region_a: &str, region_b: &str) -> CommTimes {
+        let k = Self::key(region_a, region_b);
+        *self
+            .comm
+            .get(&k)
+            .unwrap_or_else(|| panic!("no ground-truth comm times for {k:?}"))
+    }
+
+    /// `sl_inst` for a VM type: steady-state dummy time ratio vs baseline VM.
+    pub fn exec_slowdown(&self, vm_id: &str) -> f64 {
+        self.dummy_times(vm_id).steady() / self.dummy_times(&self.baseline_vm).steady()
+    }
+
+    /// `sl_comm` for a region pair: message time ratio vs baseline pair.
+    pub fn comm_slowdown(&self, region_a: &str, region_b: &str) -> f64 {
+        let base = self
+            .comm_times(&self.baseline_pair.0, &self.baseline_pair.1)
+            .total();
+        self.comm_times(region_a, region_b).total() / base
+    }
+
+    /// Effective bandwidth for the pair in GB/s implied by the measurements
+    /// (3 GB exchanged over the measured total time). Used by the network
+    /// simulator to time arbitrary message sizes.
+    pub fn pair_gb_per_sec(&self, region_a: &str, region_b: &str) -> f64 {
+        (DUMMY_TRAIN_GB + DUMMY_TEST_GB) / self.comm_times(region_a, region_b).total()
+    }
+}
+
+/// Tables 3 and 4: the CloudLab ground truth.
+pub fn cloudlab_ground_truth() -> GroundTruth {
+    let mut dummy = HashMap::new();
+    // (vm, train_r1, train_r2, test_r1, test_r2) — Table 3 verbatim.
+    let raw: &[(&str, f64, f64, f64, f64)] = &[
+        ("vm112", 123.12, 120.93, 1.61, 1.47),
+        ("vm114", 163.16, 158.95, 4.71, 4.62),
+        ("vm115", 113.22, 110.32, 2.95, 2.86),
+        ("vm121", 119.89, 112.83, 2.30, 2.22),
+        ("vm122", 139.04, 131.74, 1.93, 1.96),
+        ("vm124", 119.05, 110.45, 2.23, 2.12),
+        ("vm126", 16.37, 4.53, 1.44, 0.62),
+        ("vm135", 128.46, 122.39, 2.79, 2.67),
+        ("vm138", 71.67, 60.14, 5.39, 5.24),
+        ("vm211", 147.79, 141.62, 4.22, 4.26),
+        ("vm212", 263.89, 256.73, 11.18, 11.13),
+        ("vm221", 94.23, 92.42, 1.26, 1.20),
+        ("vm222", 112.44, 103.59, 1.91, 1.75),
+    ];
+    for &(id, tr1, tr2, te1, te2) in raw {
+        dummy.insert(
+            id.to_string(),
+            DummyTimes { train_r1: tr1, train_r2: tr2, test_r1: te1, test_r2: te2 },
+        );
+    }
+    let mut comm = HashMap::new();
+    // Table 4 verbatim: (region a, region b, train secs, test secs).
+    let raw_comm: &[(&str, &str, f64, f64)] = &[
+        ("APT", "APT", 5.61, 3.05),
+        ("APT", "Clemson", 12.05, 5.94),
+        ("APT", "Massachusetts", 106.90, 54.51),
+        ("APT", "Utah", 4.84, 2.58),
+        ("APT", "Wisconsin", 16.19, 7.64),
+        ("Clemson", "Clemson", 5.36, 2.91),
+        ("Clemson", "Massachusetts", 75.63, 32.31),
+        ("Clemson", "Utah", 11.39, 5.34),
+        ("Clemson", "Wisconsin", 6.65, 3.53),
+        ("Massachusetts", "Massachusetts", 5.23, 2.81),
+        ("Massachusetts", "Utah", 86.08, 35.95),
+        ("Massachusetts", "Wisconsin", 138.31, 75.85),
+        ("Utah", "Utah", 2.07, 1.15),
+        ("Utah", "Wisconsin", 21.81, 10.57),
+        ("Wisconsin", "Wisconsin", 5.77, 3.08),
+    ];
+    for &(a, b, train, test) in raw_comm {
+        comm.insert(GroundTruth::key(a, b), CommTimes { train, test });
+    }
+    GroundTruth {
+        dummy,
+        comm,
+        baseline_vm: "vm121".into(),
+        baseline_pair: ("APT".into(), "APT".into()),
+    }
+}
+
+/// Ground truth for the AWS/GCP proof-of-concept environment. The paper does
+/// not republish slowdown tables for Table 9 (they come from [1]); we derive
+/// a consistent parameterization calibrated so that the paper's reported
+/// outcome holds: the Initial Mapping selects server=vm313 (t2.xlarge) and
+/// clients=vm311 (g4dn.2xlarge) all in AWS, with a 10-round TIL job taking
+/// ≈2:00:18 on on-demand VMs (§5.7).
+pub fn aws_gcp_ground_truth() -> GroundTruth {
+    let mut dummy = HashMap::new();
+    // Steady ≈ dummy-app time; g4dn (T4) is the baseline = 1.0.
+    // V100s are somewhat faster, M60 much slower, CPU-only VMs ~20x slower.
+    let raw: &[(&str, f64, f64, f64, f64)] = &[
+        ("vm311", 30.0, 24.0, 1.4, 1.0), // T4 baseline: steady 25.0
+        ("vm312", 52.0, 44.0, 2.4, 1.0), // M60: 1.8x
+        ("vm313", 505.0, 488.0, 13.0, 12.0), // CPU-only: 20x
+        ("vm411", 31.5, 25.2, 1.5, 1.05), // T4 in GCP: 1.05x
+        ("vm413", 26.0, 21.5, 1.2, 1.0), // V100: 0.9x
+        ("vm414", 505.0, 488.0, 13.0, 12.0),
+        ("vm422", 26.0, 21.5, 1.2, 1.0),
+        ("vm423", 505.0, 488.0, 13.0, 12.0),
+    ];
+    for &(id, tr1, tr2, te1, te2) in raw {
+        dummy.insert(
+            id.to_string(),
+            DummyTimes { train_r1: tr1, train_r2: tr2, test_r1: te1, test_r2: te2 },
+        );
+    }
+    let mut comm = HashMap::new();
+    let raw_comm: &[(&str, &str, f64, f64)] = &[
+        // Intra-region transfers are fast; AWS↔GCP crosses the public
+        // internet and is markedly slower (calibrated so the §5.7 all-AWS
+        // optimum holds).
+        ("us-east-1", "us-east-1", 3.3, 1.7),
+        ("us-east-1", "us-central1", 25.0, 12.0),
+        ("us-east-1", "us-west1", 33.0, 16.0),
+        ("us-central1", "us-central1", 3.3, 1.7),
+        ("us-central1", "us-west1", 10.0, 5.0),
+        ("us-west1", "us-west1", 3.3, 1.7),
+    ];
+    for &(a, b, train, test) in raw_comm {
+        comm.insert(GroundTruth::key(a, b), CommTimes { train, test });
+    }
+    GroundTruth {
+        dummy,
+        comm,
+        baseline_vm: "vm311".into(),
+        baseline_pair: ("us-east-1".into(), "us-east-1".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_slowdowns_reproduced() {
+        // The published slowdown column of Table 3, to 3 decimals.
+        let gt = cloudlab_ground_truth();
+        let expected: &[(&str, f64)] = &[
+            ("vm112", 1.064),
+            ("vm114", 1.422),
+            ("vm115", 0.984),
+            ("vm121", 1.000),
+            ("vm122", 1.162),
+            ("vm124", 0.970),
+            ("vm126", 0.045),
+            ("vm135", 1.087),
+            ("vm138", 0.568),
+            ("vm211", 1.268),
+            ("vm212", 2.328),
+            ("vm221", 0.814),
+            ("vm222", 0.916),
+        ];
+        for &(vm, sl) in expected {
+            let got = gt.exec_slowdown(vm);
+            // Paper rounding differs slightly on a couple of rows (e.g. the
+            // published 0.970 for vm124 vs the 0.978 its own Table 3 inputs
+            // imply); 1% tolerance.
+            assert!(
+                (got - sl).abs() < 0.01,
+                "{vm}: computed {got:.4} vs paper {sl}"
+            );
+        }
+    }
+
+    #[test]
+    fn table4_slowdowns_reproduced() {
+        let gt = cloudlab_ground_truth();
+        let expected: &[(&str, &str, f64)] = &[
+            ("APT", "APT", 1.000),
+            ("APT", "Clemson", 2.078),
+            ("APT", "Massachusetts", 18.641),
+            ("APT", "Utah", 0.857),
+            ("APT", "Wisconsin", 2.752),
+            ("Clemson", "Clemson", 0.954),
+            ("Clemson", "Massachusetts", 12.464),
+            ("Clemson", "Utah", 1.932),
+            ("Clemson", "Wisconsin", 1.175),
+            ("Massachusetts", "Massachusetts", 0.929),
+            ("Massachusetts", "Utah", 14.092),
+            ("Massachusetts", "Wisconsin", 24.731),
+            ("Utah", "Utah", 0.372),
+            ("Utah", "Wisconsin", 3.738),
+            ("Wisconsin", "Wisconsin", 1.022),
+        ];
+        for &(a, b, sl) in expected {
+            let got = gt.comm_slowdown(a, b);
+            assert!(
+                (got - sl).abs() < 0.01,
+                "{a}-{b}: computed {got:.4} vs paper {sl}"
+            );
+        }
+    }
+
+    #[test]
+    fn comm_lookup_is_symmetric() {
+        let gt = cloudlab_ground_truth();
+        assert_eq!(
+            gt.comm_times("Utah", "Wisconsin").total(),
+            gt.comm_times("Wisconsin", "Utah").total()
+        );
+    }
+
+    #[test]
+    fn aws_gcp_ground_truth_covers_catalog() {
+        let cat = aws_gcp();
+        let gt = aws_gcp_ground_truth();
+        for v in &cat.vm_types {
+            assert!(gt.dummy.contains_key(&v.id), "missing dummy times for {}", v.id);
+        }
+        for a in cat.region_ids() {
+            for b in cat.region_ids() {
+                let _ = gt.comm_times(&cat.region(a).name, &cat.region(b).name);
+            }
+        }
+    }
+
+    #[test]
+    fn cloudlab_ground_truth_covers_catalog() {
+        let cat = cloudlab();
+        let gt = cloudlab_ground_truth();
+        for v in &cat.vm_types {
+            assert!(gt.dummy.contains_key(&v.id));
+        }
+        for a in cat.region_ids() {
+            for b in cat.region_ids() {
+                let _ = gt.comm_times(&cat.region(a).name, &cat.region(b).name);
+            }
+        }
+    }
+
+    #[test]
+    fn warmup_positive_on_gpu_vms() {
+        let gt = cloudlab_ground_truth();
+        assert!(gt.dummy_times("vm126").warmup_extra() > 0.0);
+        assert!(gt.dummy_times("vm138").warmup_extra() > 0.0);
+    }
+}

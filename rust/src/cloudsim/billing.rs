@@ -1,0 +1,165 @@
+//! Billing ledger: per-second VM charges plus egress charges, matching the
+//! paper's cost model (`vm_costs` Eq. 4 + `comm_costs` Eqs. 5–6).
+
+
+use crate::cloud::{Catalog, Market, VmTypeId};
+use crate::simul::SimTime;
+
+use super::vm::VmId;
+
+#[derive(Debug, Clone)]
+pub struct VmCharge {
+    pub vm: VmId,
+    pub vm_type: VmTypeId,
+    pub market: Market,
+    pub rate_per_sec: f64,
+    pub start: SimTime,
+    pub end: Option<SimTime>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EgressCharge {
+    pub at: SimTime,
+    pub gb: f64,
+    pub cost: f64,
+    pub description: String,
+}
+
+/// Accumulates all charges of one framework execution.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    pub vm_charges: Vec<VmCharge>,
+    pub egress_charges: Vec<EgressCharge>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a metered VM charge. Returns the charge index for later closing.
+    pub fn open_vm(
+        &mut self,
+        cat: &Catalog,
+        vm: VmId,
+        vm_type: VmTypeId,
+        market: Market,
+        start: SimTime,
+    ) -> usize {
+        self.vm_charges.push(VmCharge {
+            vm,
+            vm_type,
+            market,
+            rate_per_sec: cat.vm(vm_type).cost_per_sec(market),
+            start,
+            end: None,
+        });
+        self.vm_charges.len() - 1
+    }
+
+    /// Close the (single open) charge of `vm` at time `end`.
+    pub fn close_vm(&mut self, vm: VmId, end: SimTime) {
+        for c in self.vm_charges.iter_mut().rev() {
+            if c.vm == vm && c.end.is_none() {
+                c.end = Some(end);
+                return;
+            }
+        }
+        panic!("close_vm: no open charge for {vm:?}");
+    }
+
+    pub fn add_egress(&mut self, at: SimTime, gb: f64, cost: f64, description: impl Into<String>) {
+        self.egress_charges.push(EgressCharge { at, gb, cost, description: description.into() });
+    }
+
+    pub fn vm_cost(&self, now: SimTime) -> f64 {
+        self.vm_charges
+            .iter()
+            .map(|c| c.rate_per_sec * (c.end.unwrap_or(now) - c.start).max(0.0))
+            .sum()
+    }
+
+    pub fn egress_cost(&self) -> f64 {
+        self.egress_charges.iter().map(|c| c.cost).sum()
+    }
+
+    pub fn total(&self, now: SimTime) -> f64 {
+        self.vm_cost(now) + self.egress_cost()
+    }
+
+    pub fn total_egress_gb(&self) -> f64 {
+        self.egress_charges.iter().map(|c| c.gb).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::tables;
+
+    #[test]
+    fn vm_charge_accrues_per_second() {
+        let cat = tables::cloudlab();
+        let mut ledger = Ledger::new();
+        let vm126 = cat.vm_by_id("vm126").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm126, Market::OnDemand, SimTime::from_secs(0.0));
+        // One hour of vm126 on-demand = $4.693.
+        let cost = ledger.vm_cost(SimTime::from_secs(3600.0));
+        assert!((cost - 4.693).abs() < 1e-9, "cost={cost}");
+    }
+
+    #[test]
+    fn closed_charge_stops_accruing() {
+        let cat = tables::cloudlab();
+        let mut ledger = Ledger::new();
+        let vm121 = cat.vm_by_id("vm121").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm121, Market::Spot, SimTime::from_secs(0.0));
+        ledger.close_vm(VmId(1), SimTime::from_secs(1800.0));
+        let at_close = ledger.vm_cost(SimTime::from_secs(1800.0));
+        let later = ledger.vm_cost(SimTime::from_secs(999_999.0));
+        assert_eq!(at_close, later);
+        assert!((at_close - 0.501 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_cheaper_than_on_demand() {
+        let cat = tables::cloudlab();
+        let mut l1 = Ledger::new();
+        let mut l2 = Ledger::new();
+        let vm = cat.vm_by_id("vm138").unwrap();
+        l1.open_vm(&cat, VmId(1), vm, Market::OnDemand, SimTime::ZERO);
+        l2.open_vm(&cat, VmId(1), vm, Market::Spot, SimTime::ZERO);
+        let t = SimTime::from_secs(7200.0);
+        assert!(l2.vm_cost(t) < l1.vm_cost(t) * 0.31);
+    }
+
+    #[test]
+    fn egress_accumulates() {
+        let mut ledger = Ledger::new();
+        ledger.add_egress(SimTime::ZERO, 2.0, 0.024, "round 1 weights");
+        ledger.add_egress(SimTime::from_secs(60.0), 1.0, 0.012, "round 1 metrics");
+        assert!((ledger.egress_cost() - 0.036).abs() < 1e-12);
+        assert!((ledger.total_egress_gb() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn closing_unknown_vm_panics() {
+        let mut ledger = Ledger::new();
+        ledger.close_vm(VmId(7), SimTime::ZERO);
+    }
+
+    #[test]
+    fn reopened_vm_charges_are_separate() {
+        // A task restarted on the same VM id after revocation opens a new
+        // charge; both accrue independently.
+        let cat = tables::cloudlab();
+        let mut ledger = Ledger::new();
+        let vm = cat.vm_by_id("vm114").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm, Market::Spot, SimTime::from_secs(0.0));
+        ledger.close_vm(VmId(1), SimTime::from_secs(3600.0));
+        ledger.open_vm(&cat, VmId(1), vm, Market::Spot, SimTime::from_secs(4000.0));
+        let cost = ledger.vm_cost(SimTime::from_secs(4000.0 + 3600.0));
+        assert!((cost - 2.0 * 0.250).abs() < 1e-9, "cost={cost}");
+    }
+}

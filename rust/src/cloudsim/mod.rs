@@ -1,0 +1,367 @@
+//! The simulated multi-cloud platform.
+//!
+//! [`MultiCloud`] is the substrate beneath the whole framework when running
+//! in simulated-time mode: it provisions/terminates VMs against quota, boots
+//! them with provider-specific preparation times, samples spot revocations
+//! from the Poisson process of §5.6, times computation via the ground-truth
+//! slowdowns and communication via the [`network::NetworkModel`], and keeps a
+//! billing [`billing::Ledger`].
+//!
+//! It is deliberately *passive*: callers (the coordinator's DES loop) ask for
+//! timestamps — "when will this VM be ready?", "when would it be revoked?" —
+//! and schedule their own events, which keeps the simulator reusable for
+//! experiments with very different control flow.
+
+pub mod billing;
+pub mod network;
+pub mod vm;
+
+use std::collections::HashMap;
+
+use crate::cloud::quota::{QuotaError, QuotaTracker};
+use crate::cloud::tables::GroundTruth;
+use crate::cloud::{Catalog, Market, RegionId, VmTypeId};
+use crate::simul::{Rng, SimTime};
+
+pub use billing::Ledger;
+pub use network::NetworkModel;
+pub use vm::{VmId, VmInstance, VmState};
+
+/// Configuration of the revocation process.
+#[derive(Debug, Clone, Copy)]
+pub struct RevocationModel {
+    /// Mean time between failures `k_r` in seconds; `None` disables
+    /// revocations entirely. The paper uses k_r ∈ {3600, 7200, 14400}.
+    pub mean_secs: Option<f64>,
+}
+
+impl RevocationModel {
+    pub fn none() -> Self {
+        Self { mean_secs: None }
+    }
+
+    pub fn poisson(k_r_secs: f64) -> Self {
+        assert!(k_r_secs > 0.0);
+        Self { mean_secs: Some(k_r_secs) }
+    }
+}
+
+/// The simulated platform.
+pub struct MultiCloud {
+    pub catalog: Catalog,
+    ground_truth: GroundTruth,
+    pub network: NetworkModel,
+    pub quota: QuotaTracker,
+    pub ledger: Ledger,
+    revocation: RevocationModel,
+    rng: Rng,
+    instances: HashMap<VmId, VmInstance>,
+    next_vm: u64,
+    /// Instance types currently blocked from re-allocation in a region
+    /// (AWS behaviour after a spot revocation, §4.4 / [47]).
+    blocked: std::collections::HashSet<(VmTypeId, RegionId)>,
+}
+
+impl MultiCloud {
+    pub fn new(
+        catalog: Catalog,
+        ground_truth: GroundTruth,
+        revocation: RevocationModel,
+        seed: u64,
+    ) -> Self {
+        let network = NetworkModel::from_ground_truth(&catalog, &ground_truth);
+        Self {
+            catalog,
+            ground_truth,
+            network,
+            quota: QuotaTracker::new(),
+            ledger: Ledger::new(),
+            revocation,
+            rng: Rng::seeded(seed),
+            instances: HashMap::new(),
+            next_vm: 0,
+            blocked: std::collections::HashSet::new(),
+        }
+    }
+
+    pub fn ground_truth(&self) -> &GroundTruth {
+        &self.ground_truth
+    }
+
+    /// Provision one VM of `vm_type` in the given market at time `now`.
+    ///
+    /// On success returns the new instance id; query [`Self::instance`] for
+    /// `ready_at` (boot completion) and `revocation_at` (pre-sampled spot
+    /// preemption instant, if any).
+    pub fn provision(
+        &mut self,
+        now: SimTime,
+        vm_type: VmTypeId,
+        market: Market,
+    ) -> Result<VmId, QuotaError> {
+        self.provision_with(now, vm_type, market, true)
+    }
+
+    /// Like [`Self::provision`], but `allow_revocation = false` suppresses
+    /// the Poisson revocation sample even for spot VMs — used to reproduce
+    /// the paper's observed "at most one revocation per task" regime
+    /// (§5.6.1) for replacement instances.
+    pub fn provision_with(
+        &mut self,
+        now: SimTime,
+        vm_type: VmTypeId,
+        market: Market,
+        allow_revocation: bool,
+    ) -> Result<VmId, QuotaError> {
+        self.quota.allocate(&self.catalog, vm_type)?;
+        let id = VmId(self.next_vm);
+        self.next_vm += 1;
+        let provider = self.catalog.provider(self.catalog.provider_of(vm_type));
+        let ready_at = now + provider.boot_time_secs;
+        let revocation_at = match (market, self.revocation.mean_secs) {
+            (Market::Spot, Some(k_r)) if allow_revocation => {
+                // Poisson process: exponential time-to-revocation from the
+                // moment the instance starts (matching §5.6's simulation).
+                Some(now + self.rng.exponential(1.0 / k_r))
+            }
+            _ => None,
+        };
+        self.ledger.open_vm(&self.catalog, id, vm_type, market, now);
+        self.instances.insert(
+            id,
+            VmInstance {
+                id,
+                vm_type,
+                market,
+                provisioned_at: now,
+                ready_at,
+                state: VmState::Provisioning,
+                revocation_at,
+                ended_at: None,
+            },
+        );
+        Ok(id)
+    }
+
+    pub fn instance(&self, id: VmId) -> &VmInstance {
+        &self.instances[&id]
+    }
+
+    /// Mark boot as complete (caller drives this off its DES event).
+    pub fn mark_running(&mut self, id: VmId) {
+        let vm = self.instances.get_mut(&id).expect("unknown vm");
+        assert_eq!(vm.state, VmState::Provisioning);
+        vm.state = VmState::Running;
+    }
+
+    /// Graceful termination (stops billing, releases quota).
+    pub fn terminate(&mut self, now: SimTime, id: VmId) {
+        let vm = self.instances.get_mut(&id).expect("unknown vm");
+        if !vm.is_live() {
+            return;
+        }
+        vm.state = VmState::Terminated;
+        vm.ended_at = Some(now);
+        self.ledger.close_vm(id, now);
+        self.quota.release(&self.catalog, vm.vm_type);
+    }
+
+    /// Provider-side revocation. Also blocks the (type, region) pair from
+    /// immediate re-allocation when `block_type` is set — the paper observed
+    /// that a revoked AWS instance type cannot be reallocated in the same
+    /// region right away ([47]) and Algorithm 3 assumes this behaviour; the
+    /// Table 6 experiments disable it to model CloudLab.
+    pub fn revoke(&mut self, now: SimTime, id: VmId, block_type: bool) {
+        let vm = self.instances.get_mut(&id).expect("unknown vm");
+        assert!(vm.is_live(), "revoking a dead vm");
+        assert_eq!(vm.market, Market::Spot, "on-demand VMs are never revoked");
+        vm.state = VmState::Revoked;
+        vm.ended_at = Some(now);
+        let vm_type = vm.vm_type;
+        self.ledger.close_vm(id, now);
+        self.quota.release(&self.catalog, vm_type);
+        if block_type {
+            self.blocked.insert((vm_type, self.catalog.region_of(vm_type)));
+        }
+    }
+
+    /// Whether `vm_type` is currently blocked after a revocation.
+    pub fn is_blocked(&self, vm_type: VmTypeId) -> bool {
+        self.blocked.contains(&(vm_type, self.catalog.region_of(vm_type)))
+    }
+
+    pub fn live_instances(&self) -> impl Iterator<Item = &VmInstance> {
+        self.instances.values().filter(|v| v.is_live())
+    }
+
+    /// Seconds for a client workload with steady-state baseline time
+    /// `baseline_secs` (train+test for one round, measured on the baseline
+    /// VM) to execute one round on `vm_type`. Round 1 additionally pays the
+    /// warm-up overhead observed in Table 3.
+    pub fn exec_secs(&self, vm_type: VmTypeId, baseline_secs: f64, first_round: bool) -> f64 {
+        let spec = self.catalog.vm(vm_type);
+        let d = self.ground_truth.dummy_times(&spec.id);
+        let sl = self.ground_truth.exec_slowdown(&spec.id);
+        let mut t = baseline_secs * sl;
+        if first_round {
+            // Warm-up (framework init, accelerator context, autotune) is a
+            // per-instance constant, not proportional to the job size.
+            t += d.warmup_extra();
+        }
+        t
+    }
+
+    /// Seconds to transfer `gb` between the regions of two VM types.
+    pub fn comm_secs(&self, a: VmTypeId, b: VmTypeId, gb: f64) -> f64 {
+        self.network
+            .transfer_secs(self.catalog.region_of(a), self.catalog.region_of(b), gb)
+    }
+
+    /// Record the egress cost of sending `gb` from the region of `from`.
+    pub fn charge_egress(&mut self, now: SimTime, from: VmTypeId, gb: f64, what: &str) {
+        let region = self.catalog.region_of(from);
+        let cost = self.network.egress_cost(region, gb);
+        self.ledger.add_egress(now, gb, cost, what);
+    }
+
+    pub fn total_cost(&self, now: SimTime) -> f64 {
+        self.ledger.total(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::tables;
+
+    fn sim(revocation: RevocationModel) -> MultiCloud {
+        MultiCloud::new(
+            tables::cloudlab(),
+            tables::cloudlab_ground_truth(),
+            revocation,
+            42,
+        )
+    }
+
+    #[test]
+    fn provision_boot_terminate_lifecycle() {
+        let mut mc = sim(RevocationModel::none());
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let id = mc.provision(SimTime::ZERO, vm126, Market::OnDemand).unwrap();
+        let inst = mc.instance(id);
+        assert_eq!(inst.state, VmState::Provisioning);
+        assert!((inst.ready_at.secs() - tables::BOOT_CLOUDLAB_SECS).abs() < 1e-9);
+        assert!(inst.revocation_at.is_none());
+        mc.mark_running(id);
+        mc.terminate(SimTime::from_secs(3600.0), id);
+        assert_eq!(mc.instance(id).state, VmState::Terminated);
+        // 1 hour of vm126 on-demand.
+        assert!((mc.total_cost(SimTime::from_secs(9e9)) - 4.693).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_vm_gets_revocation_sample() {
+        let mut mc = sim(RevocationModel::poisson(7200.0));
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let id = mc.provision(SimTime::ZERO, vm126, Market::Spot).unwrap();
+        assert!(mc.instance(id).revocation_at.is_some());
+    }
+
+    #[test]
+    fn on_demand_never_revoked() {
+        let mut mc = sim(RevocationModel::poisson(3600.0));
+        let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
+        let id = mc.provision(SimTime::ZERO, vm121, Market::OnDemand).unwrap();
+        assert!(mc.instance(id).revocation_at.is_none());
+    }
+
+    #[test]
+    fn revocation_times_have_expected_mean() {
+        let mut mc = sim(RevocationModel::poisson(7200.0));
+        let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
+        let n = 2000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let id = mc.provision(SimTime::ZERO, vm121, Market::Spot).unwrap();
+            total += mc.instance(id).revocation_at.unwrap().secs();
+            mc.terminate(SimTime::ZERO, id);
+        }
+        let mean = total / n as f64;
+        assert!((mean - 7200.0).abs() < 7200.0 * 0.08, "mean={mean}");
+    }
+
+    #[test]
+    fn revoke_blocks_type_when_asked() {
+        let mut mc = sim(RevocationModel::poisson(3600.0));
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let id = mc.provision(SimTime::ZERO, vm126, Market::Spot).unwrap();
+        assert!(!mc.is_blocked(vm126));
+        mc.revoke(SimTime::from_secs(100.0), id, true);
+        assert!(mc.is_blocked(vm126));
+        assert_eq!(mc.instance(id).state, VmState::Revoked);
+    }
+
+    #[test]
+    fn revoke_without_blocking() {
+        let mut mc = sim(RevocationModel::poisson(3600.0));
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let id = mc.provision(SimTime::ZERO, vm126, Market::Spot).unwrap();
+        mc.revoke(SimTime::from_secs(100.0), id, false);
+        assert!(!mc.is_blocked(vm126));
+    }
+
+    #[test]
+    fn exec_secs_scales_with_slowdown() {
+        let mc = sim(RevocationModel::none());
+        let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        // TIL baseline: 2765.4 s per round on vm121 (§5.4).
+        let base = mc.exec_secs(vm121, 2765.4, false);
+        assert!((base - 2765.4).abs() < 1e-6);
+        let gpu = mc.exec_secs(vm126, 2765.4, false);
+        // Table 3: vm126 slowdown 0.045 → ≈ 124 s.
+        assert!((gpu - 2765.4 * 0.045).abs() < 2.0, "gpu={gpu}");
+        // First round pays warm-up.
+        assert!(mc.exec_secs(vm126, 2765.4, true) > gpu);
+    }
+
+    #[test]
+    fn quota_errors_propagate() {
+        let mut mc = MultiCloud::new(
+            tables::aws_gcp(),
+            tables::aws_gcp_ground_truth(),
+            RevocationModel::none(),
+            1,
+        );
+        let g4dn = mc.catalog.vm_by_id("vm311").unwrap();
+        for _ in 0..4 {
+            mc.provision(SimTime::ZERO, g4dn, Market::OnDemand).unwrap();
+        }
+        assert!(mc.provision(SimTime::ZERO, g4dn, Market::OnDemand).is_err());
+    }
+
+    #[test]
+    fn revocation_releases_quota() {
+        let mut mc = MultiCloud::new(
+            tables::aws_gcp(),
+            tables::aws_gcp_ground_truth(),
+            RevocationModel::poisson(3600.0),
+            1,
+        );
+        let g4dn = mc.catalog.vm_by_id("vm311").unwrap();
+        let mut ids = vec![];
+        for _ in 0..4 {
+            ids.push(mc.provision(SimTime::ZERO, g4dn, Market::Spot).unwrap());
+        }
+        mc.revoke(SimTime::from_secs(10.0), ids[0], false);
+        mc.provision(SimTime::from_secs(20.0), g4dn, Market::Spot).unwrap();
+    }
+
+    #[test]
+    fn egress_charged_at_sender_rate() {
+        let mut mc = sim(RevocationModel::none());
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        mc.charge_egress(SimTime::ZERO, vm126, 0.5, "weights");
+        assert!((mc.ledger.egress_cost() - 0.5 * 0.012).abs() < 1e-12);
+    }
+}

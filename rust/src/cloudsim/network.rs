@@ -1,0 +1,114 @@
+//! Inter-region network model.
+//!
+//! The paper characterizes the network purely through the Pre-Scheduling
+//! measurements of Table 4: the time to exchange the dummy job's messages
+//! (≈3 GB total) between each region pair. We turn those measurements into
+//! an effective bandwidth per pair and time arbitrary message volumes with
+//! it, plus a small fixed per-message latency.
+
+use crate::cloud::tables::GroundTruth;
+use crate::cloud::{Catalog, RegionId};
+
+/// Fixed per-message setup latency (connection establishment, gRPC framing).
+/// Small relative to multi-GB model transfers; kept explicit so latency-bound
+/// tiny messages are not simulated as free.
+pub const PER_MESSAGE_LATENCY_SECS: f64 = 0.05;
+
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Effective GB/s for each region pair, dense `regions × regions`.
+    gb_per_sec: Vec<Vec<f64>>,
+    /// $/GB egress by *sending* provider, indexed by region.
+    egress_cost_per_gb: Vec<f64>,
+}
+
+impl NetworkModel {
+    /// Build the model from ground-truth pair measurements.
+    pub fn from_ground_truth(cat: &Catalog, gt: &GroundTruth) -> Self {
+        let n = cat.regions.len();
+        let mut gb_per_sec = vec![vec![0.0; n]; n];
+        for a in 0..n {
+            for b in 0..n {
+                let na = &cat.regions[a].name;
+                let nb = &cat.regions[b].name;
+                gb_per_sec[a][b] = gt.pair_gb_per_sec(na, nb);
+            }
+        }
+        let egress_cost_per_gb = (0..n)
+            .map(|r| cat.provider(cat.regions[r].provider).egress_cost_per_gb)
+            .collect();
+        Self { gb_per_sec, egress_cost_per_gb }
+    }
+
+    /// Seconds to move `gb` gigabytes from region `a` to region `b`
+    /// (symmetric by construction).
+    pub fn transfer_secs(&self, a: RegionId, b: RegionId, gb: f64) -> f64 {
+        debug_assert!(gb >= 0.0);
+        PER_MESSAGE_LATENCY_SECS + gb / self.gb_per_sec[a.0][b.0]
+    }
+
+    /// $ cost of sending `gb` gigabytes out of region `from`.
+    pub fn egress_cost(&self, from: RegionId, gb: f64) -> f64 {
+        self.egress_cost_per_gb[from.0] * gb
+    }
+
+    pub fn bandwidth_gbps(&self, a: RegionId, b: RegionId) -> f64 {
+        self.gb_per_sec[a.0][b.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::tables;
+
+    fn model() -> (Catalog, NetworkModel) {
+        let cat = tables::cloudlab();
+        let gt = tables::cloudlab_ground_truth();
+        let net = NetworkModel::from_ground_truth(&cat, &gt);
+        (cat, net)
+    }
+
+    #[test]
+    fn three_gb_reproduces_table4_times() {
+        let (cat, net) = model();
+        let utah = cat.region_by_name("Utah").unwrap();
+        let wis = cat.region_by_name("Wisconsin").unwrap();
+        // Table 4: Utah–Wisconsin exchanged 3 GB in 21.81 + 10.57 = 32.38 s.
+        let t = net.transfer_secs(utah, wis, 3.0);
+        assert!((t - 32.38).abs() < 0.1, "t={t}");
+    }
+
+    #[test]
+    fn transfer_is_symmetric() {
+        let (cat, net) = model();
+        let apt = cat.region_by_name("APT").unwrap();
+        let mass = cat.region_by_name("Massachusetts").unwrap();
+        assert_eq!(net.transfer_secs(apt, mass, 1.5), net.transfer_secs(mass, apt, 1.5));
+    }
+
+    #[test]
+    fn zero_bytes_costs_only_latency() {
+        let (cat, net) = model();
+        let utah = cat.region_by_name("Utah").unwrap();
+        assert_eq!(net.transfer_secs(utah, utah, 0.0), PER_MESSAGE_LATENCY_SECS);
+    }
+
+    #[test]
+    fn egress_uses_sender_provider_price() {
+        let (cat, net) = model();
+        let utah = cat.region_by_name("Utah").unwrap();
+        let cost = net.egress_cost(utah, 2.0);
+        assert!((cost - 2.0 * tables::EGRESS_CLOUDLAB).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slow_pair_is_slower() {
+        let (cat, net) = model();
+        let utah = cat.region_by_name("Utah").unwrap();
+        let mass = cat.region_by_name("Massachusetts").unwrap();
+        let wis = cat.region_by_name("Wisconsin").unwrap();
+        // Mass–Wis is the paper's slowest pair (slowdown 24.731).
+        assert!(net.transfer_secs(mass, wis, 1.0) > net.transfer_secs(utah, utah, 1.0) * 20.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! VM instance lifecycle for the simulated multi-cloud.
+//!
+//! A VM moves through `Provisioning → Running → {Terminated, Revoked}`.
+//! Spot instances carry a pre-sampled revocation time (Poisson process,
+//! §5.6) which the [`super::MultiCloud`] turns into a DES event.
+
+
+use crate::cloud::{Market, VmTypeId};
+use crate::simul::SimTime;
+
+/// Unique id of a VM *instance* (not a type) within one simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmState {
+    /// Provision request accepted; machine is booting / being prepared.
+    Provisioning,
+    /// Ready to run tasks.
+    Running,
+    /// Terminated by us (normal completion).
+    Terminated,
+    /// Revoked by the provider (spot preemption).
+    Revoked,
+}
+
+#[derive(Debug, Clone)]
+pub struct VmInstance {
+    pub id: VmId,
+    pub vm_type: VmTypeId,
+    pub market: Market,
+    pub provisioned_at: SimTime,
+    /// When boot finishes and the task can start.
+    pub ready_at: SimTime,
+    pub state: VmState,
+    /// Pre-sampled provider-side revocation instant (spot only; None when
+    /// the instance outlives the simulation horizon or is on-demand).
+    pub revocation_at: Option<SimTime>,
+    /// When the instance stopped being billed (terminate or revoke).
+    pub ended_at: Option<SimTime>,
+}
+
+impl VmInstance {
+    pub fn is_live(&self) -> bool {
+        matches!(self.state, VmState::Provisioning | VmState::Running)
+    }
+
+    /// Billed duration as of `now` (providers bill from instance start,
+    /// so boot/preparation time is charged — a real cost the paper's
+    /// CloudLab validation discusses in §5.4).
+    pub fn billed_secs(&self, now: SimTime) -> f64 {
+        let end = self.ended_at.unwrap_or(now);
+        (end - self.provisioned_at).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(state: VmState, ended: Option<f64>) -> VmInstance {
+        VmInstance {
+            id: VmId(0),
+            vm_type: VmTypeId(0),
+            market: Market::Spot,
+            provisioned_at: SimTime::from_secs(100.0),
+            ready_at: SimTime::from_secs(250.0),
+            state,
+            revocation_at: None,
+            ended_at: ended.map(SimTime::from_secs),
+        }
+    }
+
+    #[test]
+    fn billed_secs_live_vm_uses_now() {
+        let vm = mk(VmState::Running, None);
+        assert_eq!(vm.billed_secs(SimTime::from_secs(400.0)), 300.0);
+    }
+
+    #[test]
+    fn billed_secs_ended_vm_uses_end() {
+        let vm = mk(VmState::Terminated, Some(500.0));
+        assert_eq!(vm.billed_secs(SimTime::from_secs(9999.0)), 400.0);
+    }
+
+    #[test]
+    fn liveness() {
+        assert!(mk(VmState::Provisioning, None).is_live());
+        assert!(mk(VmState::Running, None).is_live());
+        assert!(!mk(VmState::Revoked, Some(1000.0)).is_live());
+    }
+}

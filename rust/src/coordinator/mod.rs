@@ -1,0 +1,200 @@
+//! The Multi-FedLS coordinator: configuration (TOML job specs), the
+//! simulated-time experiment driver ([`sim`]), the real-compute driver
+//! ([`real`]) and multi-trial aggregation (the paper averages 3 executions
+//! per table row).
+
+pub mod multijob;
+pub mod real;
+pub mod sim;
+
+pub use sim::{simulate, Scenario, SimConfig, SimOutcome};
+
+use crate::dynsched::DynSchedPolicy;
+use crate::simul::SimTime;
+
+/// Averages over repeated executions of one configuration (the paper's
+/// tables report 3-run averages).
+#[derive(Debug, Clone)]
+pub struct TrialStats {
+    pub trials: usize,
+    pub avg_revocations: f64,
+    pub avg_exec_secs: f64,
+    pub avg_total_secs: f64,
+    pub avg_cost: f64,
+    pub min_cost: f64,
+    pub max_cost: f64,
+}
+
+impl TrialStats {
+    pub fn exec_hms(&self) -> String {
+        SimTime::from_secs(self.avg_total_secs).hms()
+    }
+    pub fn fl_hms(&self) -> String {
+        SimTime::from_secs(self.avg_exec_secs).hms()
+    }
+}
+
+/// Run `trials` executions with seeds `base_seed..base_seed+trials`.
+pub fn run_trials(cfg: &SimConfig, trials: usize, base_seed: u64) -> anyhow::Result<TrialStats> {
+    anyhow::ensure!(trials > 0);
+    let mut revocations = 0.0;
+    let mut exec = 0.0;
+    let mut total = 0.0;
+    let mut cost = 0.0;
+    let mut min_cost = f64::INFINITY;
+    let mut max_cost = f64::NEG_INFINITY;
+    for t in 0..trials {
+        let mut c = cfg.clone();
+        c.seed = base_seed + t as u64;
+        let out = sim::simulate(&c)?;
+        revocations += out.n_revocations as f64;
+        exec += out.fl_exec_secs;
+        total += out.total_secs;
+        cost += out.total_cost;
+        min_cost = min_cost.min(out.total_cost);
+        max_cost = max_cost.max(out.total_cost);
+    }
+    let n = trials as f64;
+    Ok(TrialStats {
+        trials,
+        avg_revocations: revocations / n,
+        avg_exec_secs: exec / n,
+        avg_total_secs: total / n,
+        avg_cost: cost / n,
+        min_cost,
+        max_cost,
+    })
+}
+
+/// A TOML job specification (the framework's user-facing config):
+///
+/// ```toml
+/// app = "til"
+/// rounds = 80
+/// alpha = 0.5
+/// scenario = "all-spot"        # all-spot | on-demand-server | all-on-demand
+/// revocation_mean_secs = 7200.0 # omit for no failures
+/// remove_revoked_type = true    # Algorithm 3 policy
+/// server_ckpt_every = 10
+/// client_checkpoint = true
+/// checkpoints = true
+/// seed = 42
+/// trials = 3
+/// ```
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub config: SimConfig,
+    pub trials: usize,
+}
+
+impl JobSpec {
+    pub fn from_toml(text: &str) -> anyhow::Result<JobSpec> {
+        let root = crate::util::tomlmini::parse(text)?;
+        let app_name = root
+            .get("app")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("job spec missing `app`"))?;
+        let app = crate::apps::by_name(app_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
+        let scenario = match root.get("scenario").and_then(|v| v.as_str()).unwrap_or("all-on-demand") {
+            "all-spot" => Scenario::AllSpot,
+            "on-demand-server" => Scenario::OnDemandServer,
+            "all-on-demand" => Scenario::AllOnDemand,
+            other => anyhow::bail!("unknown scenario {other}"),
+        };
+        let seed = root.get("seed").and_then(|v| v.as_int()).unwrap_or(42) as u64;
+        let mut config = SimConfig::new(app, scenario, seed);
+        if let Some(r) = root.get("rounds").and_then(|v| v.as_int()) {
+            config.n_rounds = r as u32;
+        }
+        if let Some(a) = root.get("alpha").and_then(|v| v.as_float()) {
+            anyhow::ensure!((0.0..=1.0).contains(&a), "alpha must be in [0,1]");
+            config.alpha = a;
+        }
+        config.revocation_mean_secs = root.get("revocation_mean_secs").and_then(|v| v.as_float());
+        if let Some(b) = root.get("remove_revoked_type").and_then(|v| v.as_bool()) {
+            config.dynsched_policy = if b {
+                DynSchedPolicy::different_vm()
+            } else {
+                DynSchedPolicy::same_vm_allowed()
+            };
+        }
+        if let Some(x) = root.get("server_ckpt_every").and_then(|v| v.as_int()) {
+            config.ft.server_every_rounds = x as u32;
+        }
+        if let Some(b) = root.get("client_checkpoint").and_then(|v| v.as_bool()) {
+            config.ft.client_checkpoint = b;
+        }
+        if let Some(b) = root.get("checkpoints").and_then(|v| v.as_bool()) {
+            config.checkpoints_enabled = b;
+        }
+        let trials = root.get("trials").and_then(|v| v.as_int()).unwrap_or(1) as usize;
+        Ok(JobSpec { config, trials })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<JobSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_parses_full_config() {
+        let spec = JobSpec::from_toml(
+            r#"
+app = "til"
+rounds = 80
+alpha = 0.4
+scenario = "all-spot"
+revocation_mean_secs = 7200.0
+remove_revoked_type = true
+server_ckpt_every = 20
+client_checkpoint = false
+seed = 7
+trials = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.config.app.name, "til");
+        assert_eq!(spec.config.n_rounds, 80);
+        assert_eq!(spec.config.alpha, 0.4);
+        assert_eq!(spec.config.scenario, Scenario::AllSpot);
+        assert_eq!(spec.config.revocation_mean_secs, Some(7200.0));
+        assert!(spec.config.dynsched_policy.remove_revoked);
+        assert_eq!(spec.config.ft.server_every_rounds, 20);
+        assert!(!spec.config.ft.client_checkpoint);
+        assert_eq!(spec.trials, 3);
+    }
+
+    #[test]
+    fn job_spec_defaults() {
+        let spec = JobSpec::from_toml("app = \"femnist\"\n").unwrap();
+        assert_eq!(spec.config.n_rounds, 100); // app default
+        assert_eq!(spec.config.scenario, Scenario::AllOnDemand);
+        assert_eq!(spec.trials, 1);
+        assert!(spec.config.revocation_mean_secs.is_none());
+    }
+
+    #[test]
+    fn job_spec_rejects_unknown_app_and_scenario() {
+        assert!(JobSpec::from_toml("app = \"nope\"\n").is_err());
+        assert!(JobSpec::from_toml("app = \"til\"\nscenario = \"weird\"\n").is_err());
+        assert!(JobSpec::from_toml("app = \"til\"\nalpha = 2.0\n").is_err());
+    }
+
+    #[test]
+    fn trials_average_and_bound_costs() {
+        let mut cfg = SimConfig::new(crate::apps::til(), Scenario::AllSpot, 0);
+        cfg.n_rounds = 20;
+        cfg.revocation_mean_secs = Some(7200.0);
+        let stats = run_trials(&cfg, 3, 100).unwrap();
+        assert_eq!(stats.trials, 3);
+        assert!(stats.min_cost <= stats.avg_cost && stats.avg_cost <= stats.max_cost);
+        assert!(stats.avg_total_secs > 0.0);
+    }
+}

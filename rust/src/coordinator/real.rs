@@ -1,0 +1,97 @@
+//! Real-compute execution: the same Multi-FedLS pipeline with the FL round
+//! protocol actually training models through the PJRT runtime (AOT JAX +
+//! Pallas artifacts), in wall-clock time.
+//!
+//! Used by the `examples/` drivers. The cloud layer is still the simulator
+//! (we have no AWS account here), but all *compute* is real: per-client
+//! local SGD on private shards, FedAvg aggregation, checkpoint/restore.
+
+use std::path::Path;
+
+use crate::apps::AppSpec;
+use crate::data;
+use crate::fl::{self, FedAvg, FlConfig, FlOutcome, Trainer};
+use crate::ft::CheckpointStore;
+use crate::runtime::{Engine, Manifest, PjrtTrainer};
+
+/// Configuration for a real-compute federated run.
+pub struct RealRunConfig {
+    pub app: AppSpec,
+    /// Rounds to run (examples use fewer than the paper's counts).
+    pub rounds: u32,
+    /// Local epochs per round.
+    pub local_epochs: u32,
+    /// Dataset scale vs the paper's sample counts (1.0 = full).
+    pub data_scale: f64,
+    pub seed: u64,
+    /// Server checkpoint cadence (None disables).
+    pub server_ckpt_every: Option<u32>,
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl RealRunConfig {
+    pub fn quick(app: AppSpec) -> Self {
+        Self {
+            app,
+            rounds: 5,
+            local_epochs: 1,
+            data_scale: 0.05,
+            seed: 42,
+            server_ckpt_every: None,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Load artifacts, build one PJRT trainer per silo, and run the federated
+/// job end-to-end. Returns the round history (loss curve).
+pub fn run(artifacts_dir: &Path, cfg: &RealRunConfig) -> anyhow::Result<FlOutcome> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let art = manifest.app(cfg.app.artifact_prefix)?;
+    let engine = Engine::cpu()?;
+
+    let shards = data::shards_for_app(&cfg.app, cfg.seed, cfg.data_scale);
+    let mut trainers: Vec<Box<dyn Trainer>> = Vec::with_capacity(shards.len());
+    for shard in shards {
+        trainers.push(Box::new(PjrtTrainer::new(&engine, art, shard, cfg.local_epochs)?));
+    }
+
+    let initial = art.load_init_params()?;
+    let store = match &cfg.checkpoint_dir {
+        Some(dir) => Some(CheckpointStore::new(dir.join("local"), Some(dir.join("stable")))?),
+        None => None,
+    };
+    fl::run_federated(
+        trainers,
+        &FedAvg,
+        initial,
+        FlConfig {
+            rounds: cfg.rounds,
+            server_ckpt_every: cfg.server_ckpt_every,
+            checkpoint_store: store,
+            resume_from: None,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Real-compute runs need `make artifacts`; tests that depend on them
+    /// are exercised via `rust/tests/e2e_artifacts.rs` (integration) so the
+    /// unit suite stays artifact-free. Here we only check config plumbing.
+    #[test]
+    fn quick_config_defaults() {
+        let cfg = RealRunConfig::quick(crate::apps::femnist());
+        assert_eq!(cfg.rounds, 5);
+        assert!(cfg.data_scale < 1.0);
+    }
+
+    #[test]
+    fn missing_artifacts_yield_clear_error() {
+        let cfg = RealRunConfig::quick(crate::apps::femnist());
+        let err = run(Path::new("/definitely/not/there"), &cfg).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

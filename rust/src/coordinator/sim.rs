@@ -1,0 +1,617 @@
+//! Simulated-time execution of a whole Multi-FedLS job (§5 experiments).
+//!
+//! Drives the paper's full pipeline against the simulated multi-cloud:
+//! Pre-Scheduling → Initial Mapping → provisioning (boot/preparation time)
+//! → synchronous FL rounds → spot revocations (Poisson, §5.6) → Dynamic
+//! Scheduler replacement → checkpoint-based recovery → teardown; with
+//! per-second billing throughout. Reproduces Tables 5–8, Fig. 2 and the
+//! §5.4/§5.7 validations.
+//!
+//! The FL application itself is round-synchronous (§3): a round's duration
+//! is the makespan of its slowest client (exec + comm) plus server
+//! aggregation and checkpoint overheads; a revocation anywhere restarts the
+//! interrupted round once the replacement VM has booted (weights are re-sent
+//! by the server, clients recompute — §4.3), and a server loss additionally
+//! rolls back to the freshest checkpoint.
+
+use crate::apps::AppSpec;
+use crate::cloud::{Market, VmTypeId};
+use crate::cloudsim::{MultiCloud, RevocationModel, VmId};
+use crate::dynsched::{self, CurrentMap, DynSchedPolicy, FaultyTask};
+use crate::ft::FtConfig;
+use crate::mapping::problem::{JobProfile, MappingProblem};
+use crate::mapping::{self, Mapping};
+use crate::presched::{PreScheduler, SlowdownReport};
+use crate::simul::SimTime;
+
+/// Market scenario (§5.6): which tasks ride spot VMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// "Server and clients on spot VMs".
+    AllSpot,
+    /// "Server on an on-demand VM and clients on spot VMs".
+    OnDemandServer,
+    /// The no-revocation comparison rows ("only on-demand VMs").
+    AllOnDemand,
+}
+
+impl Scenario {
+    pub fn server_market(self) -> Market {
+        match self {
+            Scenario::AllSpot => Market::Spot,
+            _ => Market::OnDemand,
+        }
+    }
+    pub fn client_market(self) -> Market {
+        match self {
+            Scenario::AllOnDemand => Market::OnDemand,
+            _ => Market::Spot,
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            Scenario::AllSpot => "server and clients on spot VMs",
+            Scenario::OnDemandServer => "server on-demand, clients on spot",
+            Scenario::AllOnDemand => "all on-demand",
+        }
+    }
+}
+
+/// One experiment configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub app: AppSpec,
+    /// Rounds to execute (overrides `app.n_rounds`; the §5.5/§5.6 TIL runs
+    /// extend the application to ~80 rounds for longer executions).
+    pub n_rounds: u32,
+    pub alpha: f64,
+    pub scenario: Scenario,
+    /// Mean time between revocations `k_r` (None = no failures).
+    pub revocation_mean_secs: Option<f64>,
+    pub dynsched_policy: DynSchedPolicy,
+    pub ft: FtConfig,
+    /// Disable checkpointing entirely (the "without checkpoints" rows).
+    pub checkpoints_enabled: bool,
+    /// Cap on revocations per task. The paper's §5.6 runs observed "at most
+    /// one revocation per task in each execution"; Tables 5–8 reproduce that
+    /// regime with `Some(1)`. `None` = the unbounded Poisson process.
+    pub max_revocations_per_task: Option<u32>,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn new(app: AppSpec, scenario: Scenario, seed: u64) -> Self {
+        let n_rounds = app.n_rounds;
+        Self {
+            app,
+            n_rounds,
+            alpha: 0.5,
+            scenario,
+            revocation_mean_secs: None,
+            dynsched_policy: DynSchedPolicy::same_vm_allowed(),
+            ft: FtConfig::default(),
+            checkpoints_enabled: true,
+            max_revocations_per_task: None,
+            seed,
+        }
+    }
+}
+
+/// Timestamped trace entry.
+#[derive(Debug, Clone)]
+pub struct SimEvent {
+    pub at: SimTime,
+    pub what: String,
+}
+
+/// End-to-end results of one simulated Multi-FedLS execution.
+#[derive(Debug)]
+pub struct SimOutcome {
+    /// FL execution time only (first round start → last round end).
+    pub fl_exec_secs: f64,
+    /// Whole framework time (provisioning → teardown).
+    pub total_secs: f64,
+    pub total_cost: f64,
+    pub vm_cost: f64,
+    pub egress_cost: f64,
+    pub n_revocations: u32,
+    pub rounds_completed: u32,
+    /// Chosen initial mapping (VM ids per task).
+    pub initial_server: String,
+    pub initial_clients: Vec<String>,
+    pub events: Vec<SimEvent>,
+    /// Predicted (model) per-round makespan/cost from the Initial Mapping.
+    pub predicted_round_makespan: f64,
+    pub predicted_round_cost: f64,
+}
+
+struct TaskState {
+    vm_type: VmTypeId,
+    instance: VmId,
+    /// Rounds completed on this instance (warm-up applies on its first).
+    rounds_on_instance: u32,
+}
+
+/// Run one simulated Multi-FedLS execution.
+pub fn simulate(cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+    let (catalog, ground_truth) = environment_for(&cfg.app);
+    let mut mc = MultiCloud::new(
+        catalog,
+        ground_truth,
+        match cfg.revocation_mean_secs {
+            Some(k) => RevocationModel::poisson(k),
+            None => RevocationModel::none(),
+        },
+        cfg.seed,
+    );
+    let mut events = Vec::new();
+    let mut now = SimTime::ZERO;
+
+    // --- Pre-Scheduling (cached in real deployments; §4.1) ---
+    let slowdowns = PreScheduler::new(&mc).measure_defaults();
+    let job = cfg.app.profile();
+
+    // --- Initial Mapping (§4.2) ---
+    // (The problem borrows a snapshot of the catalog so the simulator can be
+    // mutated while the dynamic scheduler keeps consulting prices/slowdowns.)
+    let catalog = mc.catalog.clone();
+    let problem = MappingProblem {
+        catalog: &catalog,
+        slowdowns: &slowdowns,
+        job: &job,
+        alpha: cfg.alpha,
+        market: cfg.scenario.client_market(),
+        budget_round: f64::INFINITY,
+        deadline_round: f64::INFINITY,
+    };
+    let sol = mapping::exact::solve(&problem)
+        .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible"))?;
+    let initial: Mapping = sol.mapping.clone();
+    events.push(SimEvent {
+        at: now,
+        what: format!(
+            "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
+            mc.catalog.vm(initial.server).id,
+            initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
+            sol.eval.makespan,
+            sol.eval.total_cost
+        ),
+    });
+
+    // --- provision all tasks (boot in parallel) ---
+    let server_market = cfg.scenario.server_market();
+    let client_market = cfg.scenario.client_market();
+    let mut server = TaskState {
+        vm_type: initial.server,
+        instance: mc.provision(now, initial.server, server_market)?,
+        rounds_on_instance: 0,
+    };
+    let mut clients: Vec<TaskState> = Vec::new();
+    for &vm in &initial.clients {
+        clients.push(TaskState {
+            vm_type: vm,
+            instance: mc.provision(now, vm, client_market)?,
+            rounds_on_instance: 0,
+        });
+    }
+    let mut ready_at = mc.instance(server.instance).ready_at;
+    for c in &clients {
+        ready_at = ready_at.max(mc.instance(c.instance).ready_at);
+    }
+    now = ready_at;
+    mc.mark_running(server.instance);
+    for c in &clients {
+        mc.mark_running(c.instance);
+    }
+    events.push(SimEvent { at: now, what: "all VMs prepared; FL execution starts".into() });
+    let fl_start = now;
+
+    // Dynamic Scheduler candidate sets (I_t), per task (§4.4).
+    let all_vms: Vec<VmTypeId> = mc.catalog.vm_ids().collect();
+    let mut server_set = all_vms.clone();
+    let mut client_sets: Vec<Vec<VmTypeId>> = vec![all_vms.clone(); clients.len()];
+
+    let mut n_revocations = 0u32;
+    let mut revocations_per_task: Vec<u32> = vec![0; clients.len() + 1]; // [server, clients...]
+    let mut completed = 0u32; // fully completed rounds
+    // Freshest server-side checkpoint round (replicated → survives loss).
+    let mut server_ckpt_round = 0u32;
+    let mut safety = 0usize;
+
+    while completed < cfg.n_rounds {
+        safety += 1;
+        anyhow::ensure!(safety < 200_000, "simulation did not converge (runaway revocations)");
+        let round = completed + 1;
+
+        // Round duration with the current placement.
+        let duration = round_duration(cfg, &mc, &slowdowns, &job, &server, &clients);
+        let end = now + duration;
+
+        // Earliest spot revocation strictly before the round completes.
+        let mut hit: Option<(SimTime, FaultyTask)> = None;
+        let consider = |at: Option<SimTime>, task: FaultyTask, hit: &mut Option<(SimTime, FaultyTask)>| {
+            if let Some(t) = at {
+                if t > now && t <= end {
+                    let better = hit.map_or(true, |(bt, _)| t < bt);
+                    if better {
+                        *hit = Some((t, task));
+                    }
+                }
+            }
+        };
+        consider(mc.instance(server.instance).revocation_at, FaultyTask::Server, &mut hit);
+        for (i, c) in clients.iter().enumerate() {
+            consider(mc.instance(c.instance).revocation_at, FaultyTask::Client(i), &mut hit);
+        }
+
+        match hit {
+            None => {
+                // Round completes.
+                now = end;
+                server.rounds_on_instance += 1;
+                for c in clients.iter_mut() {
+                    c.rounds_on_instance += 1;
+                }
+                completed = round;
+                if cfg.checkpoints_enabled && round % cfg.ft.server_every_rounds == 0 {
+                    server_ckpt_round = round;
+                }
+                // Message-exchange costs (Eq. 6) for this round.
+                for c in &clients {
+                    let m = &job.msg;
+                    mc.charge_egress(now, server.vm_type, m.s_train_gb + m.s_aggreg_gb, "server msgs");
+                    mc.charge_egress(now, c.vm_type, m.c_train_gb + m.c_test_gb, "client msgs");
+                }
+            }
+            Some((t_rev, faulty)) => {
+                // Revocation interrupts the round; the round's work is lost.
+                now = t_rev;
+                n_revocations += 1;
+                let current_map = CurrentMap {
+                    server: server.vm_type,
+                    clients: clients.iter().map(|c| c.vm_type).collect(),
+                };
+                let (task_name, old_type, set): (String, VmTypeId, &mut Vec<VmTypeId>) = match faulty {
+                    FaultyTask::Server => ("server".into(), server.vm_type, &mut server_set),
+                    FaultyTask::Client(i) => {
+                        (format!("client-{i}"), clients[i].vm_type, &mut client_sets[i])
+                    }
+                };
+                // Revoke in the platform (blocks the type per policy).
+                let inst = match faulty {
+                    FaultyTask::Server => server.instance,
+                    FaultyTask::Client(i) => clients[i].instance,
+                };
+                mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
+                events.push(SimEvent {
+                    at: now,
+                    what: format!(
+                        "revocation: {task_name} on {} during round {round}",
+                        mc.catalog.vm(old_type).id
+                    ),
+                });
+
+                // Dynamic Scheduler (Algorithm 3) picks the replacement.
+                let (selection, new_set) = dynsched::select_instance(
+                    &problem,
+                    &current_map,
+                    faulty,
+                    set,
+                    old_type,
+                    cfg.dynsched_policy,
+                );
+                *set = new_set;
+                let sel = selection
+                    .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
+
+                // Provision the replacement; everyone waits for its boot
+                // (the server requires all clients each round, §4.3). When
+                // the per-task revocation cap is reached the replacement is
+                // not re-exposed to the Poisson process (§5.6.1's observed
+                // "at most one revocation per task" regime).
+                let task_idx = match faulty {
+                    FaultyTask::Server => 0,
+                    FaultyTask::Client(i) => i + 1,
+                };
+                revocations_per_task[task_idx] += 1;
+                let allow_more = cfg
+                    .max_revocations_per_task
+                    .map_or(true, |cap| revocations_per_task[task_idx] < cap);
+                let new_inst = mc.provision_with(
+                    now,
+                    sel.vm,
+                    match faulty {
+                        FaultyTask::Server => server_market,
+                        FaultyTask::Client(_) => client_market,
+                    },
+                    allow_more,
+                )?;
+                let boot_done = mc.instance(new_inst).ready_at;
+                events.push(SimEvent {
+                    at: now,
+                    what: format!(
+                        "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
+                        mc.catalog.vm(sel.vm).id,
+                        sel.value,
+                        boot_done.hms()
+                    ),
+                });
+                match faulty {
+                    FaultyTask::Server => {
+                        server = TaskState { vm_type: sel.vm, instance: new_inst, rounds_on_instance: 0 };
+                        // Recovery (§4.3): clients checkpoint every round →
+                        // freshest state is round `completed`; without client
+                        // checkpoints we fall back to the last server one.
+                        let restore = if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+                            completed
+                        } else if cfg.checkpoints_enabled {
+                            server_ckpt_round
+                        } else {
+                            0
+                        };
+                        if restore < completed {
+                            events.push(SimEvent {
+                                at: now,
+                                what: format!(
+                                    "server restore from round {restore} (lost {} rounds)",
+                                    completed - restore
+                                ),
+                            });
+                            completed = restore;
+                        }
+                    }
+                    FaultyTask::Client(i) => {
+                        clients[i] =
+                            TaskState { vm_type: sel.vm, instance: new_inst, rounds_on_instance: 0 };
+                    }
+                }
+                // Other tasks idle (and bill) until the replacement is up.
+                now = boot_done;
+                mc.mark_running(new_inst);
+            }
+        }
+    }
+
+    let fl_end = now;
+    // Teardown: terminate every live instance.
+    let live: Vec<VmId> = mc.live_instances().map(|v| v.id).collect();
+    for id in live {
+        mc.terminate(now, id);
+    }
+    events.push(SimEvent { at: now, what: "all rounds complete; VMs terminated".into() });
+
+    Ok(SimOutcome {
+        fl_exec_secs: fl_end - fl_start,
+        total_secs: now.secs(),
+        total_cost: mc.total_cost(now),
+        vm_cost: mc.ledger.vm_cost(now),
+        egress_cost: mc.ledger.egress_cost(),
+        n_revocations,
+        rounds_completed: completed,
+        initial_server: mc.catalog.vm(initial.server).id.clone(),
+        initial_clients: initial
+            .clients
+            .iter()
+            .map(|&v| mc.catalog.vm(v).id.clone())
+            .collect(),
+        events,
+        predicted_round_makespan: sol.eval.makespan,
+        predicted_round_cost: sol.eval.total_cost,
+    })
+}
+
+/// Duration of one FL round for the current placement, including first-round
+/// warm-up on fresh instances and checkpoint overheads (§5.5).
+fn round_duration(
+    cfg: &SimConfig,
+    mc: &MultiCloud,
+    slowdowns: &SlowdownReport,
+    job: &JobProfile,
+    server: &TaskState,
+    clients: &[TaskState],
+) -> f64 {
+    let round_index = clients
+        .iter()
+        .map(|c| c.rounds_on_instance)
+        .chain(std::iter::once(server.rounds_on_instance));
+    let _ = round_index;
+    let mut makespan: f64 = 0.0;
+    for (i, c) in clients.iter().enumerate() {
+        let first = c.rounds_on_instance == 0;
+        let exec = mc.exec_secs(c.vm_type, job.client_train_bl[i] + job.client_test_bl[i], first);
+        let comm = (job.train_comm_bl + job.test_comm_bl)
+            * slowdowns.sl_comm(mc.catalog.region_of(c.vm_type), mc.catalog.region_of(server.vm_type));
+        let mut t = exec + comm;
+        // Client checkpoint: save received weights locally each round.
+        if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+            t += cfg.ft.client_save_overhead_secs(cfg.app.checkpoint_gb);
+        }
+        makespan = makespan.max(t);
+    }
+    let agg = job.agg_bl * slowdowns.sl_inst(server.vm_type);
+    let mut total = makespan + agg;
+    // Server checkpoint every X rounds (local save is synchronous; the
+    // replication overlaps the next round's waiting, §5.5).
+    let next_round_number = {
+        // round index being executed = completed + 1; pass via rounds_on_instance
+        // is instance-local, so approximate with server instance age + 1.
+        server.rounds_on_instance + 1
+    };
+    if cfg.checkpoints_enabled {
+        // Constant bookkeeping overhead while server checkpointing is armed
+        // plus the periodic synchronous save (Fig. 2 calibration).
+        total += cfg.ft.server_round_overhead_secs;
+        if next_round_number % cfg.ft.server_every_rounds == 0 {
+            total += cfg.ft.save_overhead_secs(cfg.app.checkpoint_gb);
+        }
+    }
+    total
+}
+
+/// The environment each application runs on (§5.2 / §5.7).
+pub fn environment_for(app: &AppSpec) -> (crate::cloud::Catalog, crate::cloud::tables::GroundTruth) {
+    use crate::cloud::tables;
+    if app.name == "til-aws-gcp" {
+        (tables::aws_gcp(), tables::aws_gcp_ground_truth())
+    } else {
+        (tables::cloudlab(), tables::cloudlab_ground_truth())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn til_on_demand_validation_matches_section_5_4() {
+        // §5.4: model predicts 22:38 (1358 s) FL time and ~$15–16 total for
+        // the 10-round TIL run; measured 24:47. Our simulated FL-exec time
+        // must land in that window (warm-up puts us between the two).
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+        cfg.checkpoints_enabled = false;
+        let out = simulate(&cfg).unwrap();
+        assert_eq!(out.rounds_completed, 10);
+        assert_eq!(out.n_revocations, 0);
+        assert!(
+            out.fl_exec_secs > 1300.0 && out.fl_exec_secs < 1600.0,
+            "fl_exec={}",
+            out.fl_exec_secs
+        );
+        // Boot (39:43) dominates the total time on CloudLab, §5.4.
+        assert!(out.total_secs > 2383.0 + out.fl_exec_secs - 1.0);
+        // Initial mapping is the paper's (modulo the vm121/vm124 price tie).
+        assert!(out.initial_server == "vm121" || out.initial_server == "vm124");
+        assert_eq!(out.initial_clients, vec!["vm126"; 4]);
+    }
+
+    #[test]
+    fn no_revocations_without_spot() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 7);
+        cfg.revocation_mean_secs = Some(600.0); // aggressive, but no spot VMs
+        cfg.checkpoints_enabled = false;
+        let out = simulate(&cfg).unwrap();
+        assert_eq!(out.n_revocations, 0);
+    }
+
+    #[test]
+    fn spot_run_with_failures_costs_more_time() {
+        let mut base = SimConfig::new(apps::til(), Scenario::AllSpot, 1);
+        base.n_rounds = 40;
+        base.checkpoints_enabled = true;
+        let calm = simulate(&base).unwrap();
+        let mut stormy = base.clone();
+        stormy.revocation_mean_secs = Some(3600.0);
+        stormy.dynsched_policy = DynSchedPolicy::same_vm_allowed();
+        let with_failures = simulate(&stormy).unwrap();
+        assert!(with_failures.n_revocations > 0, "expected revocations at k_r=1h");
+        assert!(with_failures.total_secs > calm.total_secs);
+        assert_eq!(with_failures.rounds_completed, 40);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 99);
+        cfg.n_rounds = 30;
+        cfg.revocation_mean_secs = Some(7200.0);
+        let a = simulate(&cfg).unwrap();
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.n_revocations, b.n_revocations);
+        assert!((a.total_secs - b.total_secs).abs() < 1e-9);
+        assert!((a.total_cost - b.total_cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_vm_policy_blocks_reselection() {
+        // With remove_revoked, a revoked client on vm126 must restart on a
+        // different type (the paper observed vm138).
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 5);
+        cfg.n_rounds = 60;
+        cfg.revocation_mean_secs = Some(3600.0);
+        cfg.dynsched_policy = DynSchedPolicy::different_vm();
+        let out = simulate(&cfg).unwrap();
+        assert!(out.n_revocations > 0, "expected revocations at k_r=1h over 60 rounds");
+        // Every replacement must differ from the revoked type.
+        let mut last_revoked: Option<String> = None;
+        for e in &out.events {
+            if let Some(rest) = e.what.strip_prefix("revocation: ") {
+                // "revocation: <task> on <vm> during round N"
+                let vm = rest.split(" on ").nth(1).unwrap().split(' ').next().unwrap();
+                last_revoked = Some(vm.to_string());
+            } else if e.what.starts_with("dynamic scheduler:") {
+                let chosen = e.what.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
+                let revoked = last_revoked.take().expect("selection follows revocation");
+                assert_ne!(chosen, revoked, "reselected the revoked type: {}", e.what);
+            }
+        }
+    }
+
+    #[test]
+    fn server_loss_without_client_ckpt_rolls_back() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 2);
+        cfg.n_rounds = 50;
+        cfg.revocation_mean_secs = Some(2500.0);
+        cfg.ft.client_checkpoint = false;
+        cfg.ft.server_every_rounds = 10;
+        let out = simulate(&cfg).unwrap();
+        // Either some run lost rounds (restore event) or no server was hit;
+        // both valid — but the run must still complete all rounds.
+        assert_eq!(out.rounds_completed, 50);
+    }
+
+    #[test]
+    fn on_demand_server_scenario_never_revokes_server() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::OnDemandServer, 3);
+        cfg.n_rounds = 60;
+        cfg.revocation_mean_secs = Some(3600.0);
+        let out = simulate(&cfg).unwrap();
+        for e in &out.events {
+            assert!(
+                !e.what.contains("revocation: server"),
+                "server revoked in on-demand scenario: {}",
+                e.what
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_overhead_increases_with_frequency() {
+        // Fig. 2's shape: more frequent server checkpoints → more FL time.
+        let mk = |every: u32| {
+            let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 8);
+            cfg.n_rounds = 80;
+            cfg.ft.server_every_rounds = every;
+            cfg.ft.client_checkpoint = false;
+            simulate(&cfg).unwrap().fl_exec_secs
+        };
+        let t10 = mk(10);
+        let t40 = mk(40);
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 8);
+        cfg.n_rounds = 80;
+        cfg.checkpoints_enabled = false;
+        let t_none = simulate(&cfg).unwrap().fl_exec_secs;
+        assert!(t10 > t40, "X=10 ({t10}) should cost more than X=40 ({t40})");
+        assert!(t40 > t_none);
+        // Overhead band: paper reports 6.29%–7.55% for X in 10..40.
+        let ovh10 = (t10 - t_none) / t_none * 100.0;
+        let ovh40 = (t40 - t_none) / t_none * 100.0;
+        assert!(ovh10 > 5.5 && ovh10 < 9.5, "ovh10={ovh10}%");
+        assert!(ovh40 > 4.5 && ovh40 < ovh10, "ovh40={ovh40}%");
+    }
+
+    #[test]
+    fn aws_gcp_poc_runs_end_to_end() {
+        let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, 4);
+        cfg.checkpoints_enabled = false;
+        let out = simulate(&cfg).unwrap();
+        assert_eq!(out.initial_server, "vm313");
+        assert_eq!(out.initial_clients, vec!["vm311"; 2]);
+        // §5.7: ~2:00:18 total, ~$3.28.
+        assert!(
+            out.total_secs > 6600.0 && out.total_secs < 8000.0,
+            "total={}",
+            out.total_secs
+        );
+        assert!(out.total_cost > 2.5 && out.total_cost < 4.5, "cost={}", out.total_cost);
+    }
+}

@@ -1,0 +1,270 @@
+//! Synthetic federated datasets standing in for the paper's silos (§5.1).
+//!
+//! The paper's scheduling results depend only on per-round compute and
+//! communication *times*, not on pixel/text content, so the real-compute
+//! examples use synthetic datasets with planted learnable structure:
+//!
+//! * [`femnist_like`] — 28×28 "handwritten character" images, 62 classes,
+//!   one writer-style per client (non-IID: per-client prototype jitter);
+//! * [`shakespeare_like`] — next-character prediction over Markov text, one
+//!   "role" (transition matrix temperature) per client;
+//! * [`til_like`] — 32×32 RGB "tissue patches", binary
+//!   lymphocyte-present/absent with planted blob structure (scaled down
+//!   from the paper's 100K×100K WSIs to CPU size).
+//!
+//! Every generator is deterministic in (seed, client id) and returns the
+//! [`crate::runtime::trainer::Shard`] layout the PJRT trainers consume.
+
+use crate::runtime::trainer::Shard;
+use crate::simul::Rng;
+
+/// FEMNIST-like: `n_classes` prototypes in pixel space; a sample is its
+/// class prototype + writer-specific offset + noise.
+pub fn femnist_like(
+    seed: u64,
+    client: usize,
+    n_train: usize,
+    n_test: usize,
+    n_classes: usize,
+) -> Shard {
+    let d = 28 * 28;
+    let mut proto_rng = Rng::seeded(seed); // shared across clients
+    let prototypes: Vec<Vec<f32>> = (0..n_classes)
+        .map(|_| (0..d).map(|_| proto_rng.normal() as f32).collect())
+        .collect();
+    let mut rng = Rng::seeded(seed ^ 0x5EED).split(client as u64 + 1);
+    // Writer style: a per-client bias pattern (non-IID shift).
+    let style: Vec<f32> = (0..d).map(|_| 0.3 * rng.normal() as f32).collect();
+    let gen = |n: usize, rng: &mut Rng| {
+        let mut xs = Vec::with_capacity(n * d);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = rng.next_below(n_classes as u64) as usize;
+            for j in 0..d {
+                xs.push(prototypes[label][j] + style[j] + 0.5 * rng.normal() as f32);
+            }
+            ys.push(label as f32);
+        }
+        (xs, ys)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Shard { x_train, y_train, x_test, y_test, feature_dim: d }
+}
+
+/// Shakespeare-like: order-1 Markov chains over a small alphabet; the task
+/// is next-character prediction from a context window.
+pub fn shakespeare_like(
+    seed: u64,
+    client: usize,
+    n_train: usize,
+    n_test: usize,
+    vocab: usize,
+    context: usize,
+) -> Shard {
+    let mut rng = Rng::seeded(seed ^ 0x5BAE).split(client as u64 + 1);
+    // Per-client transition matrix ("each character of each play is a
+    // different client"): sparse-ish rows with client-specific structure.
+    let mut trans: Vec<Vec<f64>> = Vec::with_capacity(vocab);
+    for _ in 0..vocab {
+        let mut row: Vec<f64> = (0..vocab).map(|_| rng.next_f64_open().powf(3.0)).collect();
+        let s: f64 = row.iter().sum();
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+        trans.push(row);
+    }
+    let sample_next = |state: usize, rng: &mut Rng| -> usize {
+        let mut u = rng.next_f64();
+        for (i, &p) in trans[state].iter().enumerate() {
+            if u < p {
+                return i;
+            }
+            u -= p;
+        }
+        vocab - 1
+    };
+    // One long stream, sliced into (context → next) samples.
+    let total = n_train + n_test;
+    let mut stream = Vec::with_capacity(total + context + 1);
+    let mut s = rng.next_below(vocab as u64) as usize;
+    for _ in 0..total + context + 1 {
+        stream.push(s);
+        s = sample_next(s, &mut rng);
+    }
+    let mut xs = Vec::with_capacity(total * context);
+    let mut ys = Vec::with_capacity(total);
+    for i in 0..total {
+        for j in 0..context {
+            // Normalized char ids; the model embeds them.
+            xs.push(stream[i + j] as f32 / vocab as f32);
+        }
+        ys.push(stream[i + context] as f32);
+    }
+    let split = n_train * context;
+    Shard {
+        x_train: xs[..split].to_vec(),
+        y_train: ys[..n_train].to_vec(),
+        x_test: xs[split..].to_vec(),
+        y_test: ys[n_train..].to_vec(),
+        feature_dim: context,
+    }
+}
+
+/// TIL-like: 32×32 RGB patches; positives contain a dark circular "cell
+/// cluster" blob, negatives are smooth tissue texture.
+pub fn til_like(seed: u64, client: usize, n_train: usize, n_test: usize) -> Shard {
+    let (h, w) = (32usize, 32usize);
+    let d = h * w * 3;
+    let mut rng = Rng::seeded(seed ^ 0x71f).split(client as u64 + 1);
+    let gen = |n: usize, rng: &mut Rng| {
+        let mut xs = Vec::with_capacity(n * d);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = rng.next_below(2) as usize;
+            // Base tissue texture (pinkish, smooth).
+            let base: f32 = 0.7 + 0.04 * rng.normal() as f32;
+            let (cx, cy, r) = (
+                rng.uniform(10.0, 22.0),
+                rng.uniform(10.0, 22.0),
+                rng.uniform(5.0, 8.0),
+            );
+            for y in 0..h {
+                for x in 0..w {
+                    let noise = 0.05 * rng.normal() as f32;
+                    let mut px = [base + noise, base * 0.6 + noise, base * 0.7 + noise];
+                    if label == 1 {
+                        let dist = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2)).sqrt();
+                        if dist < r {
+                            // Lymphocyte cluster: dark blue-purple blob.
+                            px = [0.25 + noise, 0.2 + noise, 0.5 + noise];
+                        }
+                    }
+                    xs.extend_from_slice(&px);
+                }
+            }
+            ys.push(label as f32);
+        }
+        (xs, ys)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Shard { x_train, y_train, x_test, y_test, feature_dim: d }
+}
+
+/// Build the per-client shards for a named application (sample counts can be
+/// scaled down for fast examples).
+pub fn shards_for_app(app: &crate::apps::AppSpec, seed: u64, scale: f64) -> Vec<Shard> {
+    // Keep at least two batches of the largest model batch size (32) so the
+    // AOT fixed-shape train/eval steps always have a full batch.
+    let scaled = |n: u32| ((n as f64 * scale).round() as usize).max(64);
+    (0..app.n_clients())
+        .map(|i| {
+            let n_train = scaled(app.train_samples[i]);
+            let n_test = scaled(app.test_samples[i]);
+            match app.name {
+                "femnist" => femnist_like(seed, i, n_train, n_test, 62),
+                "shakespeare" => shakespeare_like(seed, i, n_train, n_test, 64, 32),
+                _ => til_like(seed, i, n_train, n_test),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn femnist_shapes_and_determinism() {
+        let a = femnist_like(1, 0, 20, 5, 62);
+        assert_eq!(a.x_train.len(), 20 * 784);
+        assert_eq!(a.y_train.len(), 20);
+        assert_eq!(a.x_test.len(), 5 * 784);
+        assert_eq!(a.feature_dim, 784);
+        let b = femnist_like(1, 0, 20, 5, 62);
+        assert_eq!(a.x_train, b.x_train);
+        // Different clients differ (writer styles).
+        let c = femnist_like(1, 1, 20, 5, 62);
+        assert_ne!(a.x_train, c.x_train);
+    }
+
+    #[test]
+    fn femnist_labels_in_range() {
+        let s = femnist_like(2, 0, 200, 10, 62);
+        for &y in &s.y_train {
+            assert!((0.0..62.0).contains(&y) && y.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn femnist_classes_are_separable() {
+        // Same-class samples must be closer than cross-class on average —
+        // the planted structure a CNN can learn.
+        let s = femnist_like(3, 0, 100, 0, 5);
+        let d = 784;
+        let idx = |c: usize| {
+            s.y_train
+                .iter()
+                .enumerate()
+                .filter(move |&(_, &y)| y as usize == c)
+                .map(|(i, _)| i)
+                .collect::<Vec<_>>()
+        };
+        let dist = |i: usize, j: usize| -> f32 {
+            (0..d)
+                .map(|k| (s.x_train[i * d + k] - s.x_train[j * d + k]).powi(2))
+                .sum::<f32>()
+        };
+        let c0 = idx(0);
+        let c1 = idx(1);
+        if c0.len() >= 2 && !c1.is_empty() {
+            let same = dist(c0[0], c0[1]);
+            let cross = dist(c0[0], c1[0]);
+            assert!(same < cross, "same={same} cross={cross}");
+        }
+    }
+
+    #[test]
+    fn shakespeare_next_char_is_predictable() {
+        // With peaked transition rows, the most frequent successor of a char
+        // in train also dominates in test (the structure an LSTM learns).
+        let s = shakespeare_like(4, 0, 400, 100, 16, 8);
+        assert_eq!(s.feature_dim, 8);
+        assert_eq!(s.x_train.len(), 400 * 8);
+        for &y in &s.y_train {
+            assert!((0.0..16.0).contains(&y));
+        }
+        // Deterministic per (seed, client).
+        let t = shakespeare_like(4, 0, 400, 100, 16, 8);
+        assert_eq!(s.x_train, t.x_train);
+    }
+
+    #[test]
+    fn til_blob_statistics_differ_by_class() {
+        let s = til_like(5, 0, 60, 0);
+        let d = s.feature_dim;
+        // Positives (label 1) have lower mean intensity (dark blob).
+        let mut pos = (0.0f64, 0u32);
+        let mut neg = (0.0f64, 0u32);
+        for (i, &y) in s.y_train.iter().enumerate() {
+            let mean: f32 = s.x_train[i * d..(i + 1) * d].iter().sum::<f32>() / d as f32;
+            if y > 0.5 {
+                pos = (pos.0 + mean as f64, pos.1 + 1);
+            } else {
+                neg = (neg.0 + mean as f64, neg.1 + 1);
+            }
+        }
+        assert!(pos.1 > 5 && neg.1 > 5, "both classes present");
+        assert!(pos.0 / pos.1 as f64 <= neg.0 / neg.1 as f64 + 1e-12);
+    }
+
+    #[test]
+    fn shards_for_app_respects_counts_and_scale() {
+        let app = crate::apps::femnist();
+        let shards = shards_for_app(&app, 9, 0.1);
+        assert_eq!(shards.len(), 5);
+        assert_eq!(shards[0].n_train(), 80);
+        assert_eq!(shards[4].n_train(), 105);
+    }
+}

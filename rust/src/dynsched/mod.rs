@@ -1,0 +1,377 @@
+//! Dynamic Scheduler module (§4.4): Algorithms 1–3.
+//!
+//! When the Fault Tolerance module detects a revocation (or runtime error),
+//! this module selects the replacement VM for the faulty task with a greedy
+//! heuristic: for every candidate instance it re-computes the expected round
+//! makespan (Algorithm 1) and financial cost (Algorithm 2) of the *whole*
+//! current placement with the candidate substituted in, scores the pair with
+//! the same normalized weighted objective as the Initial Mapping
+//! (`α·cost/cost_max + (1-α)·makespan/T_max`), and picks the minimum
+//! (Algorithm 3).
+//!
+//! Policy knob: the paper observed that a revoked spot type cannot be
+//! immediately re-allocated in the same AWS region ([47]), so Algorithm 3
+//! removes the revoked type from the candidate set. CloudLab allows instant
+//! re-allocation, which Table 6 exploits by keeping the revoked type; this is
+//! [`DynSchedPolicy::remove_revoked`].
+
+use crate::cloud::VmTypeId;
+use crate::mapping::problem::MappingProblem;
+
+/// Which task failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultyTask {
+    Server,
+    Client(usize),
+}
+
+/// Current placement state consulted by the re-calculation algorithms
+/// (`current_map` in the paper's pseudocode).
+#[derive(Debug, Clone)]
+pub struct CurrentMap {
+    pub server: VmTypeId,
+    pub clients: Vec<VmTypeId>,
+}
+
+/// Behaviour knobs for Algorithm 3.
+#[derive(Debug, Clone, Copy)]
+pub struct DynSchedPolicy {
+    /// Remove the revoked instance type from the candidate set (AWS
+    /// behaviour, Table 5). When false the same type may be re-selected
+    /// immediately (CloudLab behaviour, Tables 6–8).
+    pub remove_revoked: bool,
+}
+
+impl DynSchedPolicy {
+    pub fn different_vm() -> Self {
+        Self { remove_revoked: true }
+    }
+    pub fn same_vm_allowed() -> Self {
+        Self { remove_revoked: false }
+    }
+}
+
+/// Algorithm 1: Makespan Re-calculation.
+///
+/// Expected round makespan if task `t` runs on `candidate` while every other
+/// task keeps its current VM.
+pub fn recompute_makespan(
+    p: &MappingProblem,
+    map: &CurrentMap,
+    t: FaultyTask,
+    candidate: VmTypeId,
+) -> f64 {
+    let mut max_makespan = f64::NEG_INFINITY;
+    match t {
+        FaultyTask::Server => {
+            // New server instance: every client re-times against it.
+            for (i, &cvm) in map.clients.iter().enumerate() {
+                let total = p.t_exec(i, cvm) + p.t_comm(cvm, candidate) + p.t_aggreg(candidate);
+                max_makespan = max_makespan.max(total);
+            }
+        }
+        FaultyTask::Client(ct) => {
+            let server = map.server;
+            max_makespan =
+                p.t_exec(ct, candidate) + p.t_comm(candidate, server) + p.t_aggreg(server);
+            for (i, &cvm) in map.clients.iter().enumerate() {
+                if i == ct {
+                    continue;
+                }
+                let total = p.t_exec(i, cvm) + p.t_comm(cvm, server) + p.t_aggreg(server);
+                max_makespan = max_makespan.max(total);
+            }
+        }
+    }
+    max_makespan
+}
+
+/// Algorithm 2: Financial Cost Re-calculation.
+///
+/// Expected round cost (VM time at `makespan` + message exchange, Eq. 6) if
+/// task `t` runs on `candidate`.
+pub fn recompute_cost(
+    p: &MappingProblem,
+    map: &CurrentMap,
+    t: FaultyTask,
+    candidate: VmTypeId,
+    makespan: f64,
+) -> f64 {
+    let rate = |vm: VmTypeId| p.catalog.vm(vm).cost_per_sec(p.market);
+    let mut total = 0.0;
+    match t {
+        FaultyTask::Server => {
+            total += rate(candidate) * makespan;
+            for &cvm in &map.clients {
+                total += rate(cvm) * makespan + p.comm_cost(cvm, candidate);
+            }
+        }
+        FaultyTask::Client(ct) => {
+            let server = map.server;
+            total += rate(server) * makespan;
+            total += rate(candidate) * makespan + p.comm_cost(candidate, server);
+            for (i, &cvm) in map.clients.iter().enumerate() {
+                if i == ct {
+                    continue;
+                }
+                total += rate(cvm) * makespan + p.comm_cost(cvm, server);
+            }
+        }
+    }
+    total
+}
+
+/// Result of one Algorithm-3 selection.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub vm: VmTypeId,
+    pub expected_makespan: f64,
+    pub expected_cost: f64,
+    pub value: f64,
+    /// Candidates examined (for the trace / benches).
+    pub candidates_considered: usize,
+}
+
+/// Algorithm 3: Instance Selection.
+///
+/// `candidate_set` is `I_t`, the current candidate instances for the task
+/// (initially all catalog VMs; shrinks as types are removed after
+/// revocations when the policy says so). Returns the chosen VM and the new
+/// candidate set (with the revoked VM removed if the policy demands it), or
+/// None when the set is exhausted.
+pub fn select_instance(
+    p: &MappingProblem,
+    map: &CurrentMap,
+    t: FaultyTask,
+    candidate_set: &[VmTypeId],
+    revoked: VmTypeId,
+    policy: DynSchedPolicy,
+) -> (Option<Selection>, Vec<VmTypeId>) {
+    let set: Vec<VmTypeId> = if policy.remove_revoked {
+        candidate_set.iter().copied().filter(|&v| v != revoked).collect()
+    } else {
+        candidate_set.to_vec()
+    };
+    let mut best: Option<Selection> = None;
+    for &vm in &set {
+        let makespan = recompute_makespan(p, map, t, vm);
+        let cost = recompute_cost(p, map, t, vm, makespan);
+        let value = p.objective_value(cost, makespan);
+        let better = best.as_ref().map_or(true, |b| value < b.value);
+        if better {
+            best = Some(Selection {
+                vm,
+                expected_makespan: makespan,
+                expected_cost: cost,
+                value,
+                candidates_considered: set.len(),
+            });
+        }
+    }
+    (best, set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Market;
+    use crate::mapping::problem::testutil::*;
+    use crate::mapping::problem::MappingProblem;
+
+    fn setup() -> (crate::cloudsim::MultiCloud, crate::presched::SlowdownReport, crate::mapping::problem::JobProfile) {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        (mc, sl, job)
+    }
+
+    fn problem<'a>(
+        mc: &'a crate::cloudsim::MultiCloud,
+        sl: &'a crate::presched::SlowdownReport,
+        job: &'a crate::mapping::problem::JobProfile,
+    ) -> MappingProblem<'a> {
+        MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: sl,
+            job,
+            alpha: 0.5,
+            market: Market::Spot,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        }
+    }
+
+    fn til_map(mc: &crate::cloudsim::MultiCloud) -> CurrentMap {
+        CurrentMap {
+            server: mc.catalog.vm_by_id("vm121").unwrap(),
+            clients: vec![mc.catalog.vm_by_id("vm126").unwrap(); 4],
+        }
+    }
+
+    #[test]
+    fn makespan_recalc_server_candidate_matches_evaluate() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        // Replacing the server with the same VM must reproduce the standard
+        // evaluation's makespan.
+        let m = recompute_makespan(&p, &map, FaultyTask::Server, map.server);
+        let ev = p.evaluate(&crate::mapping::problem::Mapping {
+            server: map.server,
+            clients: map.clients.clone(),
+            market: Market::Spot,
+        });
+        assert!((m - ev.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_recalc_matches_evaluate() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let makespan = recompute_makespan(&p, &map, FaultyTask::Server, map.server);
+        let cost = recompute_cost(&p, &map, FaultyTask::Server, map.server, makespan);
+        let ev = p.evaluate(&crate::mapping::problem::Mapping {
+            server: map.server,
+            clients: map.clients.clone(),
+            market: Market::Spot,
+        });
+        assert!((cost - ev.total_cost).abs() < 1e-9, "{cost} vs {}", ev.total_cost);
+    }
+
+    #[test]
+    fn client_recalc_uses_current_server() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let vm138 = mc.catalog.vm_by_id("vm138").unwrap();
+        // Restarting client 0 on vm138 (slower than vm126) raises makespan
+        // to client 0's new time.
+        let m = recompute_makespan(&p, &map, FaultyTask::Client(0), vm138);
+        let expected = p.t_exec(0, vm138) + p.t_comm(vm138, map.server) + p.t_aggreg(map.server);
+        assert!((m - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_restart_choices_til() {
+        // §5.6.1 (Table 5 scenario, remove-revoked policy): "Clients start on
+        // a VM vm126 and restart on a VM vm138. The server starts on a VM
+        // vm121 and restarts in a VM vm212."
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let all: Vec<_> = mc.catalog.vm_ids().collect();
+
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let (sel, new_set) = select_instance(
+            &p,
+            &map,
+            FaultyTask::Client(0),
+            &all,
+            vm126,
+            DynSchedPolicy::different_vm(),
+        );
+        let sel = sel.unwrap();
+        assert_eq!(mc.catalog.vm(sel.vm).id, "vm138", "client restart VM");
+        assert!(!new_set.contains(&vm126));
+
+        let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
+        let (sel, _) = select_instance(
+            &p,
+            &map,
+            FaultyTask::Server,
+            &all,
+            vm121,
+            DynSchedPolicy::different_vm(),
+        );
+        let sel = sel.unwrap();
+        // The paper reports the server restarting on vm212; with the
+        // published Table 3/4 slowdowns, vm124 (vm121's same-price twin in
+        // the same region) strictly dominates vm212 on both expected cost
+        // and makespan, so Algorithm 3 selects it. We assert the choice is
+        // one of those two and that minimality holds (separate test).
+        let id = mc.catalog.vm(sel.vm).id.clone();
+        assert!(id == "vm124" || id == "vm212", "server restart VM = {id}");
+    }
+
+    #[test]
+    fn same_vm_policy_reselects_revoked_type() {
+        // Table 6: with the CloudLab policy the revoked type stays in I_t and
+        // (being optimal) is selected again.
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let all: Vec<_> = mc.catalog.vm_ids().collect();
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let (sel, new_set) = select_instance(
+            &p,
+            &map,
+            FaultyTask::Client(0),
+            &all,
+            vm126,
+            DynSchedPolicy::same_vm_allowed(),
+        );
+        assert_eq!(sel.unwrap().vm, vm126);
+        assert_eq!(new_set.len(), all.len());
+    }
+
+    #[test]
+    fn candidate_set_shrinks_across_revocations() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let mut set: Vec<_> = mc.catalog.vm_ids().collect();
+        let policy = DynSchedPolicy::different_vm();
+        let n0 = set.len();
+        // Three successive client revocations, each removing the chosen VM.
+        let mut revoked = mc.catalog.vm_by_id("vm126").unwrap();
+        for k in 1..=3 {
+            let (sel, new_set) =
+                select_instance(&p, &map, FaultyTask::Client(0), &set, revoked, policy);
+            set = new_set;
+            assert_eq!(set.len(), n0 - k);
+            revoked = sel.unwrap().vm;
+        }
+    }
+
+    #[test]
+    fn exhausted_candidate_set_returns_none() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let (sel, set) = select_instance(
+            &p,
+            &map,
+            FaultyTask::Client(0),
+            &[vm126],
+            vm126,
+            DynSchedPolicy::different_vm(),
+        );
+        assert!(sel.is_none());
+        assert!(set.is_empty());
+    }
+
+    #[test]
+    fn selection_minimizes_objective_value() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let all: Vec<_> = mc.catalog.vm_ids().collect();
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let (sel, set) = select_instance(
+            &p,
+            &map,
+            FaultyTask::Client(0),
+            &all,
+            vm126,
+            DynSchedPolicy::different_vm(),
+        );
+        let sel = sel.unwrap();
+        for &vm in &set {
+            let m = recompute_makespan(&p, &map, FaultyTask::Client(0), vm);
+            let c = recompute_cost(&p, &map, FaultyTask::Client(0), vm, m);
+            assert!(sel.value <= p.objective_value(c, m) + 1e-12);
+        }
+    }
+}

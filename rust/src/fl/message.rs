@@ -1,0 +1,84 @@
+//! Wire messages of the FL round protocol (§3).
+//!
+//! One communication round = a training phase (`s_msg_train` →
+//! `c_msg_train`) followed by an evaluation phase (`s_msg_aggreg` →
+//! `c_msg_test`). Weights travel as flattened `f32` vectors (the same layout
+//! the AOT-compiled train-step artifacts use).
+
+use std::sync::Arc;
+
+/// Server → client.
+#[derive(Debug, Clone)]
+pub enum ServerMsg {
+    /// `s_msg_train`: start local training from these global weights.
+    Train { round: u32, weights: Arc<Vec<f32>> },
+    /// `s_msg_aggreg`: evaluate these aggregated weights locally.
+    Eval { round: u32, weights: Arc<Vec<f32>> },
+    /// Training finished; terminate cleanly.
+    Shutdown,
+}
+
+/// Client → server.
+#[derive(Debug, Clone)]
+pub enum ClientMsg {
+    /// `c_msg_train`: locally updated weights + sample count for FedAvg.
+    TrainDone { round: u32, client: usize, weights: Vec<f32>, n_samples: u32 },
+    /// `c_msg_test`: local evaluation metrics.
+    EvalDone { round: u32, client: usize, loss: f64, correct: u32, n_samples: u32 },
+    /// The client task died (revocation / runtime error); the Fault
+    /// Tolerance module reacts by restarting it elsewhere.
+    Failed { round: u32, client: usize, reason: String },
+}
+
+impl ServerMsg {
+    /// Approximate on-wire size in bytes (used for cost accounting).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            ServerMsg::Train { weights, .. } | ServerMsg::Eval { weights, .. } => {
+                8 + 4 * weights.len()
+            }
+            ServerMsg::Shutdown => 8,
+        }
+    }
+}
+
+impl ClientMsg {
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            ClientMsg::TrainDone { weights, .. } => 16 + 4 * weights.len(),
+            ClientMsg::EvalDone { .. } => 32,
+            ClientMsg::Failed { reason, .. } => 16 + reason.len(),
+        }
+    }
+
+    pub fn round(&self) -> u32 {
+        match self {
+            ClientMsg::TrainDone { round, .. }
+            | ClientMsg::EvalDone { round, .. }
+            | ClientMsg::Failed { round, .. } => *round,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_scale_with_weights() {
+        let w = Arc::new(vec![0.0f32; 1000]);
+        let m = ServerMsg::Train { round: 1, weights: w.clone() };
+        assert_eq!(m.wire_bytes(), 8 + 4000);
+        let c = ClientMsg::TrainDone { round: 1, client: 0, weights: vec![0.0; 1000], n_samples: 10 };
+        assert_eq!(c.wire_bytes(), 16 + 4000);
+        assert!(ClientMsg::EvalDone { round: 1, client: 0, loss: 0.0, correct: 1, n_samples: 2 }.wire_bytes() < 64);
+    }
+
+    #[test]
+    fn round_extraction() {
+        assert_eq!(
+            ClientMsg::Failed { round: 9, client: 1, reason: "revoked".into() }.round(),
+            9
+        );
+    }
+}

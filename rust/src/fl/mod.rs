@@ -1,0 +1,437 @@
+//! A Flower-like Cross-Silo FL runtime (§3, §4).
+//!
+//! The server and each client run as OS threads connected by channels; the
+//! server drives communication rounds (train phase → aggregate → eval
+//! phase), checkpoints every X rounds through the Fault Tolerance module,
+//! and tolerates client failures by re-issuing the round to the restarted
+//! task — the in-process analogue of Multi-FedLS relaunching the task on a
+//! fresh VM. As in the paper (§4.3), the server always waits for *all*
+//! clients before proceeding (Cross-Silo FL has few clients; skipping one
+//! every round harms the model).
+
+pub mod message;
+pub mod strategy;
+pub mod trainer;
+
+pub use message::{ClientMsg, ServerMsg};
+pub use strategy::{ClientUpdate, FedAvg, Strategy, UniformAvg};
+pub use trainer::{QuadraticTrainer, Trainer};
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::ft::{Checkpoint, CheckpointStore};
+
+/// Per-round results recorded by the server.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: u32,
+    /// Sample-weighted mean evaluation loss across clients.
+    pub loss: f64,
+    /// Pooled accuracy across clients.
+    pub accuracy: f64,
+    /// Client failures handled during this round.
+    pub failures: u32,
+    /// Total bytes moved (both directions) this round.
+    pub bytes: u64,
+    /// Wall-clock seconds for the round.
+    pub wall_secs: f64,
+}
+
+/// FL job configuration.
+pub struct FlConfig {
+    pub rounds: u32,
+    /// Server checkpoint cadence (None disables).
+    pub server_ckpt_every: Option<u32>,
+    /// Clients persist received weights each round when a store is given.
+    pub checkpoint_store: Option<CheckpointStore>,
+    /// Resume the global model from a checkpoint (server restart path).
+    pub resume_from: Option<Checkpoint>,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        Self { rounds: 10, server_ckpt_every: None, checkpoint_store: None, resume_from: None }
+    }
+}
+
+/// Outcome of a federated run.
+#[derive(Debug)]
+pub struct FlOutcome {
+    pub history: Vec<RoundMetrics>,
+    pub final_weights: Vec<f32>,
+    pub total_failures: u32,
+    pub first_round: u32,
+}
+
+/// Client task: answer the server's phase messages until shutdown.
+fn client_loop(
+    id: usize,
+    mut trainer: Box<dyn Trainer>,
+    rx: Receiver<ServerMsg>,
+    tx: Sender<ClientMsg>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ServerMsg::Train { round, weights } => {
+                match trainer.train_round(&weights, round) {
+                    Ok(new_weights) => {
+                        let _ = tx.send(ClientMsg::TrainDone {
+                            round,
+                            client: id,
+                            weights: new_weights,
+                            n_samples: trainer.n_train_samples(),
+                        });
+                    }
+                    Err(e) => {
+                        let _ = tx.send(ClientMsg::Failed {
+                            round,
+                            client: id,
+                            reason: e.to_string(),
+                        });
+                    }
+                }
+            }
+            ServerMsg::Eval { round, weights } => match trainer.evaluate(&weights) {
+                Ok((loss, correct)) => {
+                    let _ = tx.send(ClientMsg::EvalDone {
+                        round,
+                        client: id,
+                        loss,
+                        correct,
+                        n_samples: trainer.n_test_samples(),
+                    });
+                }
+                Err(e) => {
+                    let _ = tx.send(ClientMsg::Failed { round, client: id, reason: e.to_string() });
+                }
+            },
+            ServerMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Run a federated job in-process: one thread per client, server inline.
+///
+/// This is the runtime behind the real-compute examples; the hours-long
+/// failure-simulation experiments use the DES-based driver in
+/// [`crate::coordinator`] instead (same module structure, virtual time).
+pub fn run_federated(
+    trainers: Vec<Box<dyn Trainer>>,
+    strategy: &dyn Strategy,
+    initial_weights: Vec<f32>,
+    mut config: FlConfig,
+) -> anyhow::Result<FlOutcome> {
+    let n = trainers.len();
+    anyhow::ensure!(n > 0, "no clients");
+    let (tx_server, rx_server) = channel::<ClientMsg>();
+    let mut client_txs = Vec::with_capacity(n);
+    let mut joins = Vec::with_capacity(n);
+    for (id, trainer) in trainers.into_iter().enumerate() {
+        let (tx, rx) = channel::<ServerMsg>();
+        let tx_s = tx_server.clone();
+        joins.push(std::thread::spawn(move || client_loop(id, trainer, rx, tx_s)));
+        client_txs.push(tx);
+    }
+    drop(tx_server);
+
+    // Server restart path (§4.3): resume from the freshest checkpoint.
+    let (mut weights, first_round) = match config.resume_from.take() {
+        Some(ckpt) => (Arc::new(ckpt.weights), ckpt.round + 1),
+        None => (Arc::new(initial_weights), 1),
+    };
+
+    let mut history = Vec::new();
+    let mut total_failures = 0u32;
+    // A task that keeps failing after restarts is a configuration error
+    // (e.g. a shard smaller than a batch), not a transient revocation —
+    // give up instead of ping-ponging forever.
+    const MAX_RETRIES_PER_PHASE: u32 = 5;
+
+    for round in first_round..first_round + config.rounds {
+        let t0 = std::time::Instant::now();
+        let mut bytes = 0u64;
+        let mut failures = 0u32;
+
+        // --- training phase ---
+        for tx in &client_txs {
+            let msg = ServerMsg::Train { round, weights: weights.clone() };
+            bytes += msg.wire_bytes() as u64;
+            tx.send(msg).map_err(|_| anyhow::anyhow!("client channel closed"))?;
+        }
+        let mut updates: Vec<Option<ClientUpdate>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            let msg = rx_server.recv()?;
+            bytes += msg.wire_bytes() as u64;
+            match msg {
+                ClientMsg::TrainDone { round: r, client, weights: w, n_samples } if r == round => {
+                    if updates[client].is_none() {
+                        received += 1;
+                    }
+                    updates[client] = Some(ClientUpdate { client, weights: w, n_samples });
+                }
+                ClientMsg::Failed { round: r, client, reason } if r == round => {
+                    // Fault Tolerance: the task is restarted (new VM in the
+                    // cloud case) and the round re-issued to it. The server
+                    // keeps waiting for all clients (§4.3).
+                    failures += 1;
+                    anyhow::ensure!(
+                        failures <= MAX_RETRIES_PER_PHASE * n as u32,
+                        "client {client} keeps failing in round {round}: {reason}"
+                    );
+                    let msg = ServerMsg::Train { round, weights: weights.clone() };
+                    bytes += msg.wire_bytes() as u64;
+                    client_txs[client]
+                        .send(msg)
+                        .map_err(|_| anyhow::anyhow!("client {client} channel closed"))?;
+                }
+                _ => {} // stale message from a previous round
+            }
+        }
+        let updates: Vec<ClientUpdate> = updates.into_iter().map(|u| u.unwrap()).collect();
+        weights = Arc::new(strategy.aggregate(&updates));
+
+        // --- server checkpoint every X rounds ---
+        if let (Some(every), Some(store)) = (config.server_ckpt_every, config.checkpoint_store.as_mut())
+        {
+            if round % every == 0 {
+                store.save("server", &Checkpoint { round, weights: (*weights).clone() })?;
+            }
+        }
+
+        // --- evaluation phase ---
+        for tx in &client_txs {
+            let msg = ServerMsg::Eval { round, weights: weights.clone() };
+            bytes += msg.wire_bytes() as u64;
+            tx.send(msg).map_err(|_| anyhow::anyhow!("client channel closed"))?;
+        }
+        // Clients checkpoint the received aggregated weights locally (§4.3).
+        if let Some(store) = config.checkpoint_store.as_mut() {
+            for client in 0..n {
+                store.save(
+                    &format!("client-{client}"),
+                    &Checkpoint { round, weights: (*weights).clone() },
+                )?;
+            }
+        }
+        let mut results: Vec<Option<(f64, u32, u32)>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            let msg = rx_server.recv()?;
+            bytes += msg.wire_bytes() as u64;
+            match msg {
+                ClientMsg::EvalDone { round: r, client, loss, correct, n_samples } if r == round => {
+                    if results[client].is_none() {
+                        received += 1;
+                    }
+                    results[client] = Some((loss, correct, n_samples));
+                }
+                ClientMsg::Failed { round: r, client, reason } if r == round => {
+                    failures += 1;
+                    anyhow::ensure!(
+                        failures <= MAX_RETRIES_PER_PHASE * n as u32,
+                        "client {client} keeps failing in eval of round {round}: {reason}"
+                    );
+                    let msg = ServerMsg::Eval { round, weights: weights.clone() };
+                    bytes += msg.wire_bytes() as u64;
+                    client_txs[client]
+                        .send(msg)
+                        .map_err(|_| anyhow::anyhow!("client {client} channel closed"))?;
+                }
+                _ => {}
+            }
+        }
+        let results: Vec<(f64, u32, u32)> = results.into_iter().map(|r| r.unwrap()).collect();
+        let (loss, accuracy) = strategy::aggregate_metrics(&results);
+
+        total_failures += failures;
+        history.push(RoundMetrics {
+            round,
+            loss,
+            accuracy,
+            failures,
+            bytes,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    for tx in &client_txs {
+        let _ = tx.send(ServerMsg::Shutdown);
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    if let Some(store) = config.checkpoint_store.as_mut() {
+        store.flush();
+    }
+    Ok(FlOutcome {
+        history,
+        final_weights: Arc::try_unwrap(weights).unwrap_or_else(|a| (*a).clone()),
+        total_failures,
+        first_round,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_clients(targets: &[Vec<f32>]) -> Vec<Box<dyn Trainer>> {
+        targets
+            .iter()
+            .map(|t| Box::new(QuadraticTrainer::new(t.clone(), 100)) as Box<dyn Trainer>)
+            .collect()
+    }
+
+    #[test]
+    fn fedavg_converges_to_weighted_target_mean() {
+        // Two equal-sized silos with targets (0,0) and (2,2): FedAvg fixed
+        // point is (1,1).
+        let trainers = quad_clients(&[vec![0.0, 0.0], vec![2.0, 2.0]]);
+        let out = run_federated(
+            trainers,
+            &FedAvg,
+            vec![5.0, -5.0],
+            FlConfig { rounds: 30, ..Default::default() },
+        )
+        .unwrap();
+        let w = out.final_weights;
+        assert!((w[0] - 1.0).abs() < 1e-2 && (w[1] - 1.0).abs() < 1e-2, "{w:?}");
+        // Loss decreases over training.
+        assert!(out.history.last().unwrap().loss < out.history[0].loss);
+    }
+
+    #[test]
+    fn unequal_silos_shift_the_fixed_point() {
+        // 300 samples at target 0, 100 at target 4 → fixed point 1.0.
+        let mut t0 = QuadraticTrainer::new(vec![0.0], 300);
+        t0.lr = 0.9;
+        t0.steps = 50; // near-exact local minimization each round
+        let mut t1 = QuadraticTrainer::new(vec![4.0], 100);
+        t1.lr = 0.9;
+        t1.steps = 50;
+        let out = run_federated(
+            vec![Box::new(t0), Box::new(t1)],
+            &FedAvg,
+            vec![0.0],
+            FlConfig { rounds: 25, ..Default::default() },
+        )
+        .unwrap();
+        assert!((out.final_weights[0] - 1.0).abs() < 0.05, "{:?}", out.final_weights);
+    }
+
+    #[test]
+    fn client_failure_is_retried_and_round_completes() {
+        let mut failing = QuadraticTrainer::new(vec![1.0], 100);
+        failing.fail_at_round = Some(3);
+        let trainers: Vec<Box<dyn Trainer>> = vec![
+            Box::new(failing),
+            Box::new(QuadraticTrainer::new(vec![1.0], 100)),
+        ];
+        let out = run_federated(
+            trainers,
+            &FedAvg,
+            vec![0.0],
+            FlConfig { rounds: 6, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.total_failures, 1);
+        assert_eq!(out.history.len(), 6);
+        assert_eq!(out.history[2].failures, 1, "failure was at round 3");
+        // Still converged.
+        assert!((out.final_weights[0] - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn checkpoint_and_resume_reproduces_uninterrupted_run() {
+        let dir = std::env::temp_dir().join(format!("mfls-fl-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Uninterrupted 10-round reference.
+        let reference = run_federated(
+            quad_clients(&[vec![0.0, 2.0], vec![2.0, 0.0]]),
+            &FedAvg,
+            vec![8.0, 8.0],
+            FlConfig { rounds: 10, ..Default::default() },
+        )
+        .unwrap();
+
+        // Interrupted: 6 rounds with checkpoints every 2, then the server
+        // "dies" and a new one resumes from the freshest checkpoint (round 6)
+        // for the remaining 4 rounds.
+        let store = CheckpointStore::new(dir.join("ckpt"), Some(dir.join("stable"))).unwrap();
+        let first = run_federated(
+            quad_clients(&[vec![0.0, 2.0], vec![2.0, 0.0]]),
+            &FedAvg,
+            vec![8.0, 8.0],
+            FlConfig {
+                rounds: 6,
+                server_ckpt_every: Some(2),
+                checkpoint_store: Some(store),
+                resume_from: None,
+            },
+        )
+        .unwrap();
+        drop(first);
+        let store = CheckpointStore::new(dir.join("ckpt"), Some(dir.join("stable"))).unwrap();
+        let latest = store.latest_stable("server").expect("server checkpoint replicated");
+        assert_eq!(latest, 6);
+        let ckpt = store.load("server", latest).unwrap();
+        let resumed = run_federated(
+            quad_clients(&[vec![0.0, 2.0], vec![2.0, 0.0]]),
+            &FedAvg,
+            vec![8.0, 8.0], // ignored on resume
+            FlConfig { rounds: 4, resume_from: Some(ckpt), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.first_round, 7);
+        // Deterministic trainers → identical final weights.
+        for (a, b) in resumed.final_weights.iter().zip(&reference.final_weights) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_checkpoints_written_every_round() {
+        let dir = std::env::temp_dir().join(format!("mfls-fl-cckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::new(dir.join("ckpt"), None).unwrap();
+        let _ = run_federated(
+            quad_clients(&[vec![1.0], vec![0.0]]),
+            &FedAvg,
+            vec![0.0],
+            FlConfig {
+                rounds: 3,
+                server_ckpt_every: None,
+                checkpoint_store: Some(store),
+                resume_from: None,
+            },
+        )
+        .unwrap();
+        let store = CheckpointStore::new(dir.join("ckpt"), None).unwrap();
+        assert_eq!(store.latest_local("client-0"), Some(3));
+        assert_eq!(store.latest_local("client-1"), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn history_records_bytes_and_rounds() {
+        let out = run_federated(
+            quad_clients(&[vec![0.0; 100], vec![1.0; 100]]),
+            &FedAvg,
+            vec![0.0; 100],
+            FlConfig { rounds: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.history.len(), 2);
+        for r in &out.history {
+            // ≥ 4 weight messages of 400 bytes per round.
+            assert!(r.bytes > 1600, "bytes={}", r.bytes);
+            assert!(r.wall_secs >= 0.0);
+        }
+        assert_eq!(out.history[0].round, 1);
+        assert_eq!(out.history[1].round, 2);
+    }
+}

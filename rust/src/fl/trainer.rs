@@ -1,0 +1,111 @@
+//! The client-side compute interface.
+//!
+//! A [`Trainer`] owns a client's local silo and its compute (in production:
+//! the PJRT executor over the AOT-compiled JAX/Pallas train step, see
+//! [`crate::runtime`]). The FL runtime only sees this trait, so tests and
+//! simulations can plug in cheap models.
+
+/// Client-local training/evaluation over a private silo.
+pub trait Trainer: Send {
+    /// Number of local training samples (FedAvg weight).
+    fn n_train_samples(&self) -> u32;
+    fn n_test_samples(&self) -> u32;
+
+    /// One round of local training (the configured number of local epochs),
+    /// starting from `weights`; returns the updated weights.
+    fn train_round(&mut self, weights: &[f32], round: u32) -> anyhow::Result<Vec<f32>>;
+
+    /// Evaluate `weights` on the local test split → (mean loss, #correct).
+    fn evaluate(&mut self, weights: &[f32]) -> anyhow::Result<(f64, u32)>;
+}
+
+/// A closed-form FL problem for tests: client `i` holds a private quadratic
+/// `f_i(w) = ½‖w − target_i‖²`; a training round takes `steps` gradient
+/// steps `w ← w − lr (w − target_i)`. FedAvg over these clients converges to
+/// the (sample-weighted) mean of the targets — verifiable exactly, which
+/// makes it a sharp integration oracle for the whole runtime.
+pub struct QuadraticTrainer {
+    pub target: Vec<f32>,
+    pub n_train: u32,
+    pub n_test: u32,
+    pub lr: f32,
+    pub steps: u32,
+    /// If set, fail (simulated revocation) when asked to train this round.
+    pub fail_at_round: Option<u32>,
+}
+
+impl QuadraticTrainer {
+    pub fn new(target: Vec<f32>, n_train: u32) -> Self {
+        Self { target, n_train, n_test: n_train / 4, lr: 0.5, steps: 4, fail_at_round: None }
+    }
+}
+
+impl Trainer for QuadraticTrainer {
+    fn n_train_samples(&self) -> u32 {
+        self.n_train
+    }
+
+    fn n_test_samples(&self) -> u32 {
+        self.n_test
+    }
+
+    fn train_round(&mut self, weights: &[f32], round: u32) -> anyhow::Result<Vec<f32>> {
+        if self.fail_at_round == Some(round) {
+            self.fail_at_round = None; // fail once, then recover
+            anyhow::bail!("simulated revocation at round {round}");
+        }
+        let mut w = weights.to_vec();
+        for _ in 0..self.steps {
+            for (wi, ti) in w.iter_mut().zip(&self.target) {
+                *wi -= self.lr * (*wi - ti);
+            }
+        }
+        Ok(w)
+    }
+
+    fn evaluate(&mut self, weights: &[f32]) -> anyhow::Result<(f64, u32)> {
+        let loss: f64 = weights
+            .iter()
+            .zip(&self.target)
+            .map(|(&w, &t)| 0.5 * ((w - t) as f64).powi(2))
+            .sum::<f64>()
+            / weights.len().max(1) as f64;
+        // "Correct" when close to the local optimum — a crude accuracy.
+        let correct = if loss < 0.05 { self.n_test } else { 0 };
+        Ok((loss, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_trainer_descends() {
+        let mut t = QuadraticTrainer::new(vec![1.0, -1.0], 100);
+        let w0 = vec![0.0, 0.0];
+        let w1 = t.train_round(&w0, 1).unwrap();
+        let (l0, _) = t.evaluate(&w0).unwrap();
+        let (l1, _) = t.evaluate(&w1).unwrap();
+        assert!(l1 < l0);
+    }
+
+    #[test]
+    fn quadratic_trainer_converges_to_target() {
+        let mut t = QuadraticTrainer::new(vec![2.0, 3.0], 10);
+        let mut w = vec![0.0, 0.0];
+        for round in 0..20 {
+            w = t.train_round(&w, round).unwrap();
+        }
+        assert!((w[0] - 2.0).abs() < 1e-3 && (w[1] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn injected_failure_fires_once() {
+        let mut t = QuadraticTrainer::new(vec![0.0], 10);
+        t.fail_at_round = Some(3);
+        assert!(t.train_round(&[0.0], 2).is_ok());
+        assert!(t.train_round(&[0.0], 3).is_err());
+        assert!(t.train_round(&[0.0], 3).is_ok(), "fails only once");
+    }
+}

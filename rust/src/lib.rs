@@ -1,0 +1,43 @@
+//! # Multi-FedLS
+//!
+//! A framework for Cross-Silo Federated Learning applications on multi-cloud
+//! environments — reproduction of Brum et al. (cs.DC 2023).
+//!
+//! Multi-FedLS manages multi-cloud resources to reduce the execution time and
+//! financial cost of Cross-Silo FL jobs, exploiting cheap preemptible (spot)
+//! VMs while surviving their revocation. It is organized as the paper's four
+//! modules plus the substrates they need:
+//!
+//! * [`cloud`] — the environment model: providers, regions, VM types, prices,
+//!   quotas (§3), with the paper's Table 2 / Table 9 catalogs built in.
+//! * [`simul`] — deterministic RNG + discrete-event simulation engine.
+//! * [`cloudsim`] — the simulated multi-cloud platform (VM lifecycle, spot
+//!   revocations, network, billing).
+//! * [`presched`] — Pre-Scheduling (§4.1): dummy-app slowdown measurement.
+//! * [`solver`] — from-scratch LP simplex + 0/1 branch-and-bound MILP.
+//! * [`mapping`] — Initial Mapping (§4.2): the MILP formulation (Eqs. 3–18)
+//!   with exact and baseline solvers.
+//! * [`fl`] — a Flower-like Cross-Silo FL runtime (rounds, FedAvg, messages).
+//! * [`ft`] — Fault Tolerance (§4.3): monitoring + checkpointing.
+//! * [`dynsched`] — Dynamic Scheduler (§4.4): Algorithms 1–3.
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts.
+//! * [`data`] — synthetic federated datasets (TIL, Shakespeare, FEMNIST).
+//! * [`apps`] — the paper's three application descriptors (§5.1).
+//! * [`coordinator`] — the end-to-end driver tying everything together.
+//! * [`trace`] — experiment recording and table rendering.
+
+pub mod apps;
+pub mod cloud;
+pub mod coordinator;
+pub mod data;
+pub mod dynsched;
+pub mod fl;
+pub mod ft;
+pub mod mapping;
+pub mod presched;
+pub mod solver;
+pub mod cloudsim;
+pub mod runtime;
+pub mod trace;
+pub mod simul;
+pub mod util;

@@ -1,0 +1,344 @@
+//! Multi-FedLS command-line interface (the leader entrypoint).
+//!
+//! ```text
+//! multi-fedls catalog [cloudlab|aws-gcp]       print the environment catalog
+//! multi-fedls preschedule [--env E] [--cache F] run Pre-Scheduling, print slowdowns
+//! multi-fedls map --app A [--alpha X] [...]    run the Initial Mapping solver
+//! multi-fedls simulate --spec FILE [--json]    simulate a job spec (TOML)
+//! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
+//! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
+//! ```
+
+use std::collections::HashMap;
+
+use multi_fedls::cloud::{tables, Market};
+use multi_fedls::cloudsim::{MultiCloud, RevocationModel};
+use multi_fedls::coordinator::real::{run as real_run, RealRunConfig};
+use multi_fedls::coordinator::JobSpec;
+use multi_fedls::mapping::problem::MappingProblem;
+use multi_fedls::presched::PreScheduler;
+use multi_fedls::simul::SimTime;
+use multi_fedls::trace;
+
+/// Minimal argv parser: positional args + `--key value` / `--flag` options.
+struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    options.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, options }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+const USAGE: &str = "\
+Multi-FedLS — Cross-Silo Federated Learning on multi-cloud environments
+
+USAGE:
+  multi-fedls catalog [cloudlab|aws-gcp]
+  multi-fedls preschedule [--env cloudlab|aws-gcp] [--cache FILE]
+  multi-fedls map --app <til|shakespeare|femnist|til-aws-gcp> [--alpha A]
+                  [--market on-demand|spot] [--budget B] [--deadline T]
+  multi-fedls simulate --spec configs/<job>.toml [--json]
+  multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
+                  [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
+  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|all> [--json]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "catalog" => cmd_catalog(&args),
+        "preschedule" => cmd_preschedule(&args),
+        "map" => cmd_map(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command {other}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_by_name(name: &str) -> anyhow::Result<MultiCloud> {
+    match name {
+        "cloudlab" => Ok(MultiCloud::new(
+            tables::cloudlab(),
+            tables::cloudlab_ground_truth(),
+            RevocationModel::none(),
+            1,
+        )),
+        "aws-gcp" => Ok(MultiCloud::new(
+            tables::aws_gcp(),
+            tables::aws_gcp_ground_truth(),
+            RevocationModel::none(),
+            1,
+        )),
+        other => anyhow::bail!("unknown environment {other} (cloudlab | aws-gcp)"),
+    }
+}
+
+fn cmd_catalog(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("cloudlab");
+    trace::catalog_table(which).print();
+    Ok(())
+}
+
+fn cmd_preschedule(args: &Args) -> anyhow::Result<()> {
+    let env = args.get("env").unwrap_or("cloudlab");
+    let mc = env_by_name(env)?;
+    // Cache: skip measurement when the fingerprint matches (§4.1).
+    if let Some(cache) = args.get("cache") {
+        let path = std::path::Path::new(cache);
+        if let Some(report) = multi_fedls::presched::cache::load(&mc.catalog, path)? {
+            println!("pre-scheduling cache hit ({}), skipping dummy runs", report.fingerprint);
+            return Ok(());
+        }
+        let report = PreScheduler::new(&mc).measure_defaults();
+        multi_fedls::presched::cache::save(&report, &mc.catalog, path)?;
+        println!("pre-scheduling measured and cached to {cache}");
+    }
+    if env == "cloudlab" {
+        let (t3, _) = trace::table3();
+        let (t4, _) = trace::table4();
+        t3.print();
+        t4.print();
+    } else {
+        println!("slowdowns measured for {env} ({} VM types)", mc.catalog.vm_types.len());
+    }
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> anyhow::Result<()> {
+    let app_name = args.get("app").ok_or_else(|| anyhow::anyhow!("--app required"))?;
+    let app = multi_fedls::apps::by_name(app_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
+    let (catalog, gt) = multi_fedls::coordinator::sim::environment_for(&app);
+    let mc = MultiCloud::new(catalog, gt, RevocationModel::none(), 1);
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let job = app.profile();
+    let alpha: f64 = args.get("alpha").map(|s| s.parse()).transpose()?.unwrap_or(0.5);
+    let market = match args.get("market").unwrap_or("on-demand") {
+        "spot" => Market::Spot,
+        _ => Market::OnDemand,
+    };
+    let p = MappingProblem {
+        catalog: &mc.catalog,
+        slowdowns: &sl,
+        job: &job,
+        alpha,
+        market,
+        budget_round: args.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(f64::INFINITY),
+        deadline_round: args
+            .get("deadline")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(f64::INFINITY),
+    };
+    match multi_fedls::mapping::exact::solve(&p) {
+        Some(sol) => {
+            println!("Initial Mapping for {app_name} (alpha={alpha}, {market}):");
+            println!("  server : {}", mc.catalog.vm(sol.mapping.server).id);
+            for (i, &c) in sol.mapping.clients.iter().enumerate() {
+                println!("  client{i}: {}", mc.catalog.vm(c).id);
+            }
+            println!(
+                "  per-round makespan {:.1}s, cost ${:.4}, objective {:.5}",
+                sol.eval.makespan, sol.eval.total_cost, sol.eval.objective
+            );
+            println!(
+                "  whole job ({} rounds): {} / ${:.2}",
+                job.n_rounds,
+                SimTime::from_secs(sol.eval.makespan * job.n_rounds as f64).hms(),
+                sol.eval.total_cost * job.n_rounds as f64
+            );
+        }
+        None => println!("no feasible mapping under the given budget/deadline"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
+    let spec = JobSpec::from_file(std::path::Path::new(spec_path))?;
+    let stats = multi_fedls::coordinator::run_trials(&spec.config, spec.trials, spec.config.seed)?;
+    if args.flag("json") {
+        let j = multi_fedls::util::Json::obj()
+            .set("app", spec.config.app.name)
+            .set("trials", spec.trials)
+            .set("avg_revocations", stats.avg_revocations)
+            .set("avg_fl_exec_secs", stats.avg_exec_secs)
+            .set("avg_total_secs", stats.avg_total_secs)
+            .set("avg_cost", stats.avg_cost);
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "{} × {} trials: avg revocations {:.2}, FL exec {}, total {}, cost ${:.2}",
+            spec.config.app.name,
+            spec.trials,
+            stats.avg_revocations,
+            stats.fl_hms(),
+            stats.exec_hms(),
+            stats.avg_cost
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let app_name = args.get("app").ok_or_else(|| anyhow::anyhow!("--app required"))?;
+    let app = multi_fedls::apps::by_name(app_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let mut cfg = RealRunConfig::quick(app);
+    if let Some(r) = args.get("rounds") {
+        cfg.rounds = r.parse()?;
+    }
+    if let Some(e) = args.get("epochs") {
+        cfg.local_epochs = e.parse()?;
+    }
+    if let Some(s) = args.get("scale") {
+        cfg.data_scale = s.parse()?;
+    }
+    if let Some(x) = args.get("ckpt-every") {
+        cfg.server_ckpt_every = Some(x.parse()?);
+    }
+    if let Some(d) = args.get("ckpt-dir") {
+        cfg.checkpoint_dir = Some(d.into());
+    }
+    let out = real_run(std::path::Path::new(artifacts), &cfg)?;
+    println!("round  loss      accuracy  failures  secs");
+    for r in &out.history {
+        println!(
+            "{:>5}  {:<8.4}  {:<8.4}  {:<8}  {:.2}",
+            r.round, r.loss, r.accuracy, r.failures, r.wall_secs
+        );
+    }
+    println!("total failures handled: {}", out.total_failures);
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("experiment name required\n{USAGE}"))?;
+    let json = args.flag("json");
+    let render = |t: multi_fedls::util::bench::Table, j: multi_fedls::util::Json| {
+        if json {
+            println!("{}", j.to_string_pretty());
+        } else {
+            t.print();
+        }
+    };
+    match name.as_str() {
+        "table3" => {
+            let (t, j) = trace::table3();
+            render(t, j);
+        }
+        "table4" => {
+            let (t, j) = trace::table4();
+            render(t, j);
+        }
+        "validation" => {
+            let (t, j) = trace::validation_5_4();
+            render(t, j);
+        }
+        "fig2" => {
+            let (t, j) = trace::fig2();
+            render(t, j);
+        }
+        "table5" => {
+            let (t, j) = trace::table5();
+            render(t, j);
+        }
+        "table6" => {
+            let (t, j) = trace::table6();
+            render(t, j);
+        }
+        "table7" => {
+            let (t, j) = trace::table7();
+            render(t, j);
+        }
+        "table8" => {
+            let (t, j) = trace::table8();
+            render(t, j);
+        }
+        "poc" => {
+            let (t, j) = trace::poc_aws_gcp();
+            render(t, j);
+        }
+        "mapping" => {
+            let (t, j) = trace::mapping_comparison();
+            render(t, j);
+        }
+        "alpha-sweep" => {
+            let (t, j) = trace::alpha_sweep();
+            render(t, j);
+        }
+        "multijob" => {
+            let (t, j) = trace::multijob();
+            render(t, j);
+        }
+        "all" => {
+            for f in [
+                trace::table3 as fn() -> (multi_fedls::util::bench::Table, multi_fedls::util::Json),
+                trace::table4,
+                trace::validation_5_4,
+                trace::fig2,
+                trace::table5,
+                trace::table6,
+                trace::table7,
+                trace::table8,
+                trace::poc_aws_gcp,
+                trace::mapping_comparison,
+                trace::alpha_sweep,
+                trace::multijob,
+            ] {
+                let (t, _) = f();
+                t.print();
+                println!();
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}

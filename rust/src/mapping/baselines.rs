@@ -1,0 +1,252 @@
+//! Baseline placement policies the paper's exact mapping is compared
+//! against in our benches: random, cheapest-rate, fastest, and
+//! single-cloud-restricted exact.
+
+use crate::cloud::quota::QuotaTracker;
+use crate::cloud::{ProviderId, VmTypeId};
+use crate::simul::Rng;
+
+use super::problem::{Mapping, MappingProblem};
+
+/// Uniform-random feasible placement (quota-aware), or None after
+/// `attempts` failed tries.
+pub fn random(p: &MappingProblem, seed: u64, attempts: usize) -> Option<Mapping> {
+    let vms: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    let mut rng = Rng::seeded(seed);
+    for _ in 0..attempts {
+        let server = vms[rng.next_below(vms.len() as u64) as usize];
+        let clients: Vec<VmTypeId> = (0..p.job.n_clients())
+            .map(|_| vms[rng.next_below(vms.len() as u64) as usize])
+            .collect();
+        let mapping = Mapping { server, clients, market: p.market };
+        let ev = p.evaluate(&mapping);
+        if ev.feasible {
+            return Some(mapping);
+        }
+    }
+    None
+}
+
+/// Everyone on the cheapest-rate VM type that still fits quota (a classic
+/// cost-greedy baseline, oblivious to slowdowns).
+pub fn cheapest(p: &MappingProblem) -> Option<Mapping> {
+    let mut by_rate: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    by_rate.sort_by(|&a, &b| {
+        p.catalog
+            .vm(a)
+            .cost_per_sec(p.market)
+            .partial_cmp(&p.catalog.vm(b).cost_per_sec(p.market))
+            .unwrap()
+    });
+    greedy_fill(p, &by_rate)
+}
+
+/// Everyone on the lowest-slowdown VM type (time-greedy, oblivious to cost).
+pub fn fastest(p: &MappingProblem) -> Option<Mapping> {
+    let mut by_speed: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    by_speed.sort_by(|&a, &b| {
+        p.slowdowns
+            .sl_inst(a)
+            .partial_cmp(&p.slowdowns.sl_inst(b))
+            .unwrap()
+    });
+    greedy_fill(p, &by_speed)
+}
+
+fn greedy_fill(p: &MappingProblem, pref: &[VmTypeId]) -> Option<Mapping> {
+    let mut quota = QuotaTracker::new();
+    let server = *pref
+        .iter()
+        .find(|&&v| quota.allocate(p.catalog, v).is_ok())?;
+    let mut clients = Vec::with_capacity(p.job.n_clients());
+    for _ in 0..p.job.n_clients() {
+        let vm = *pref
+            .iter()
+            .find(|&&v| quota.allocate(p.catalog, v).is_ok())?;
+        clients.push(vm);
+    }
+    Some(Mapping { server, clients, market: p.market })
+}
+
+/// Exact solve restricted to one provider (the "don't go multi-cloud"
+/// ablation). Returns the best single-provider mapping over all providers,
+/// or the given provider's optimum when `provider` is Some.
+pub fn single_cloud(p: &MappingProblem, provider: Option<ProviderId>) -> Option<Mapping> {
+    let providers: Vec<ProviderId> = match provider {
+        Some(pr) => vec![pr],
+        None => p.catalog.provider_ids().collect(),
+    };
+    let mut best: Option<(Mapping, f64)> = None;
+    for pr in providers {
+        // Build a filtered catalog view by restricting the VM set via a
+        // "forbidden" mask in an exact solve over the same problem: simplest
+        // correct approach is to re-run the exact solver on a shrunk catalog.
+        let mut cat = p.catalog.clone();
+        cat.vm_types.retain(|v| cat.regions[v.region.0].provider == pr);
+        if cat.vm_types.is_empty() {
+            continue;
+        }
+        // Slowdown report indices refer to the original catalog, so remap by
+        // building a sub-problem via VM id strings.
+        let sub_sl = remap_slowdowns(p, &cat);
+        let sub = MappingProblem {
+            catalog: &cat,
+            slowdowns: &sub_sl,
+            job: p.job,
+            alpha: p.alpha,
+            market: p.market,
+            budget_round: p.budget_round,
+            deadline_round: p.deadline_round,
+        };
+        if let Some(sol) = super::exact::solve(&sub) {
+            // Translate back to original ids.
+            let server = p.catalog.vm_by_id(&cat.vm(sol.mapping.server).id).unwrap();
+            let clients = sol
+                .mapping
+                .clients
+                .iter()
+                .map(|&v| p.catalog.vm_by_id(&cat.vm(v).id).unwrap())
+                .collect();
+            let mapping = Mapping { server, clients, market: p.market };
+            let ev = p.evaluate(&mapping);
+            if ev.feasible {
+                let better = best.as_ref().map_or(true, |(_, o)| ev.objective < *o);
+                if better {
+                    best = Some((mapping, ev.objective));
+                }
+            }
+        }
+    }
+    best.map(|(m, _)| m)
+}
+
+fn remap_slowdowns(p: &MappingProblem, sub: &crate::cloud::Catalog) -> crate::presched::SlowdownReport {
+    use std::collections::HashMap;
+    let mut exec_slowdown = HashMap::new();
+    let mut dummy_runs = HashMap::new();
+    for v in sub.vm_ids() {
+        let orig = p.catalog.vm_by_id(&sub.vm(v).id).unwrap();
+        exec_slowdown.insert(v, p.slowdowns.sl_inst(orig));
+        dummy_runs.insert(v, p.slowdowns.dummy_runs[&orig]);
+    }
+    let mut comm_slowdown = HashMap::new();
+    let mut comm_runs = HashMap::new();
+    for a in sub.region_ids() {
+        for b in sub.region_ids() {
+            let oa = p.catalog.region_by_name(&sub.region(a).name).unwrap();
+            let ob = p.catalog.region_by_name(&sub.region(b).name).unwrap();
+            let key = if a <= b { (a, b) } else { (b, a) };
+            comm_slowdown.insert(key, p.slowdowns.sl_comm(oa, ob));
+            let okey = if oa <= ob { (oa, ob) } else { (ob, oa) };
+            comm_runs.insert(key, p.slowdowns.comm_runs[&okey]);
+        }
+    }
+    // Baseline anchors may live outside the sub-catalog; keep ratios as-is
+    // (they are already normalized) and anchor to the first VM / pair.
+    crate::presched::SlowdownReport {
+        dummy_runs,
+        comm_runs,
+        exec_slowdown,
+        comm_slowdown,
+        baseline_vm: crate::cloud::VmTypeId(0),
+        baseline_pair: (crate::cloud::RegionId(0), crate::cloud::RegionId(0)),
+        fingerprint: crate::presched::fingerprint(sub),
+    }
+}
+
+/// All baselines by name, for bench sweeps.
+pub fn all(p: &MappingProblem) -> Vec<(&'static str, Option<Mapping>)> {
+    vec![
+        ("random", random(p, 2024, 200)),
+        ("cheapest", cheapest(p)),
+        ("fastest", fastest(p)),
+        ("single-cloud", single_cloud(p, None)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::testutil::*;
+    use super::super::problem::MappingProblem;
+    use super::*;
+    use crate::cloud::Market;
+
+    fn problem<'a>(
+        mc: &'a crate::cloudsim::MultiCloud,
+        sl: &'a crate::presched::SlowdownReport,
+        job: &'a crate::mapping::problem::JobProfile,
+    ) -> MappingProblem<'a> {
+        MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: sl,
+            job,
+            alpha: 0.5,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        }
+    }
+
+    #[test]
+    fn cheapest_picks_minimum_rate_vm() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = problem(&mc, &sl, &job);
+        let m = cheapest(&p).unwrap();
+        // vm212 (r320, $0.574/h) is the cheapest CloudLab VM.
+        assert_eq!(mc.catalog.vm(m.server).id, "vm212");
+    }
+
+    #[test]
+    fn fastest_picks_minimum_slowdown_vm() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = problem(&mc, &sl, &job);
+        let m = fastest(&p).unwrap();
+        for &c in &m.clients {
+            assert_eq!(mc.catalog.vm(c).id, "vm126");
+        }
+    }
+
+    #[test]
+    fn random_is_feasible_and_deterministic() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = problem(&mc, &sl, &job);
+        let a = random(&p, 99, 100).unwrap();
+        let b = random(&p, 99, 100).unwrap();
+        assert_eq!(a, b);
+        assert!(p.evaluate(&a).feasible);
+    }
+
+    #[test]
+    fn single_cloud_stays_in_one_provider() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = problem(&mc, &sl, &job);
+        for pr in mc.catalog.provider_ids() {
+            if let Some(m) = single_cloud(&p, Some(pr)) {
+                let mut vms = m.clients.clone();
+                vms.push(m.server);
+                for v in vms {
+                    assert_eq!(mc.catalog.provider_of(v), pr);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_cloud_never_beats_multi_cloud_exact() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = problem(&mc, &sl, &job);
+        let multi = crate::mapping::exact::solve(&p).unwrap();
+        let single = single_cloud(&p, None).unwrap();
+        assert!(multi.eval.objective <= p.evaluate(&single).objective + 1e-9);
+    }
+}

@@ -1,0 +1,414 @@
+//! Exact specialized solver for the Initial Mapping MILP.
+//!
+//! The formulation (Eqs. 3–18) couples the binary placement variables through
+//! two products: `x·y` (client/server co-placement in Constraint 16 and the
+//! comm costs) and `x·t_m` (VM cost accrues for the whole makespan). Instead
+//! of linearizing, we exploit the problem structure:
+//!
+//! 1. enumerate the server VM type `y` (|V| choices);
+//! 2. for a fixed server, each client's round time on each VM is a constant,
+//!    so the optimal `t_m` is one of the |C|·|V| distinct candidate times;
+//! 3. for a fixed (server, t_m) pair, the objective decomposes per client
+//!    into `rate_v · t_m + comm_cost(v, server)` over VMs with round time
+//!    ≤ t_m — a min-cost choice per client coupled only by the GPU/vCPU
+//!    quota constraints (12–15), solved by a small branch-and-bound with a
+//!    per-client-minimum lower bound.
+//!
+//! This is exact and fast (the paper's instances have ≤ 13 VM types and ≤ 8
+//! clients); the generic simplex+B&B route in [`super::milp`] cross-checks
+//! it on small instances.
+
+use crate::cloud::quota::QuotaTracker;
+use crate::cloud::VmTypeId;
+
+use super::problem::{Evaluation, Mapping, MappingProblem};
+
+/// Result of the Initial Mapping: the chosen placement and its evaluation.
+#[derive(Debug, Clone)]
+pub struct MappingSolution {
+    pub mapping: Mapping,
+    pub eval: Evaluation,
+    /// Nodes explored by the inner quota B&B (for benchmarking).
+    pub nodes: usize,
+}
+
+/// Solve the Initial Mapping exactly. Returns None when no placement meets
+/// the budget/deadline/quota constraints.
+pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
+    let vms: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    let n_clients = p.job.n_clients();
+    let t_max = p.t_max();
+    let cost_max = p.cost_max();
+    let mut best: Option<MappingSolution> = None;
+    let mut nodes_total = 0usize;
+
+    for &server in &vms {
+        // Server must fit quota alone.
+        let mut base_quota = QuotaTracker::new();
+        if base_quota.allocate(p.catalog, server).is_err() {
+            continue;
+        }
+        let t_agg = p.t_aggreg(server);
+        // Per client per VM: (round time, cost slope, comm cost).
+        let mut time = vec![vec![0.0; vms.len()]; n_clients];
+        let mut ccost = vec![vec![0.0; vms.len()]; n_clients];
+        for i in 0..n_clients {
+            for (vi, &v) in vms.iter().enumerate() {
+                time[i][vi] = p.t_exec(i, v) + p.t_comm(v, server) + t_agg;
+                ccost[i][vi] = p.comm_cost(v, server);
+            }
+        }
+        // Candidate makespans: all distinct client round times ≤ deadline.
+        let mut candidates: Vec<f64> = time
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|&t| t <= p.deadline_round + 1e-9)
+            .collect();
+        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+
+        let server_rate = p.catalog.vm(server).cost_per_sec(p.market);
+        for &t_m in &candidates {
+            // Feasible VM set + per-client cost under this t_m.
+            // cost_i(v) = rate_v * t_m + comm_cost(v, server)
+            let mut options: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n_clients);
+            let mut ok = true;
+            for i in 0..n_clients {
+                let mut opts: Vec<(usize, f64)> = (0..vms.len())
+                    .filter(|&vi| time[i][vi] <= t_m + 1e-9)
+                    .map(|vi| {
+                        let rate = p.catalog.vm(vms[vi]).cost_per_sec(p.market);
+                        (vi, rate * t_m + ccost[i][vi])
+                    })
+                    .collect();
+                if opts.is_empty() {
+                    ok = false;
+                    break;
+                }
+                opts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                options.push(opts);
+            }
+            if !ok {
+                continue;
+            }
+            // Quick lower bound on total cost: server + per-client minima.
+            let lb_clients: f64 = options.iter().map(|o| o[0].1).sum();
+            let lb_cost = server_rate * t_m + lb_clients;
+            if lb_cost > p.budget_round + 1e-9 {
+                // cost only grows with t_m for the same option sets; but
+                // option sets also widen — cannot break, just skip.
+                continue;
+            }
+            let lb_objective = p.alpha * lb_cost / cost_max + (1.0 - p.alpha) * t_m / t_max;
+            if let Some(b) = &best {
+                if lb_objective >= b.eval.objective - 1e-12 {
+                    continue;
+                }
+            }
+            // Min-cost client assignment under quotas (B&B).
+            let budget_clients = p.budget_round - server_rate * t_m;
+            let (assignment, nodes) =
+                min_cost_assignment(p, &vms, &options, base_quota.clone(), budget_clients);
+            nodes_total += nodes;
+            let Some((chosen, _cost)) = assignment else { continue };
+            let mapping = Mapping {
+                server,
+                clients: chosen.iter().map(|&vi| vms[vi]).collect(),
+                market: p.market,
+            };
+            let eval = p.evaluate(&mapping);
+            if !eval.feasible {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => eval.objective < b.eval.objective - 1e-12,
+            };
+            if better {
+                best = Some(MappingSolution { mapping, eval, nodes: nodes_total });
+            }
+        }
+    }
+    if let Some(b) = &mut best {
+        b.nodes = nodes_total;
+    }
+    best
+}
+
+/// Branch-and-bound: assign each client one of its (sorted-by-cost) options,
+/// respecting quotas, minimizing total cost, under a budget cutoff.
+fn min_cost_assignment(
+    p: &MappingProblem,
+    vms: &[VmTypeId],
+    options: &[Vec<(usize, f64)>],
+    quota: QuotaTracker,
+    budget: f64,
+) -> (Option<(Vec<usize>, f64)>, usize) {
+    // Suffix minima for the lower bound.
+    let n = options.len();
+    let mut suffix_min = vec![0.0; n + 1];
+    for i in (0..n).rev() {
+        suffix_min[i] = suffix_min[i + 1] + options[i][0].1;
+    }
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let mut nodes = 0usize;
+    let mut chosen = vec![usize::MAX; n];
+
+    fn rec(
+        p: &MappingProblem,
+        vms: &[VmTypeId],
+        options: &[Vec<(usize, f64)>],
+        suffix_min: &[f64],
+        budget: f64,
+        i: usize,
+        cost_so_far: f64,
+        quota: &mut QuotaTracker,
+        chosen: &mut Vec<usize>,
+        best: &mut Option<(Vec<usize>, f64)>,
+        nodes: &mut usize,
+    ) {
+        *nodes += 1;
+        if cost_so_far + suffix_min[i] > budget + 1e-9 {
+            return;
+        }
+        if let Some((_, bc)) = best {
+            if cost_so_far + suffix_min[i] >= *bc - 1e-12 {
+                return;
+            }
+        }
+        if i == options.len() {
+            *best = Some((chosen.clone(), cost_so_far));
+            return;
+        }
+        for &(vi, c) in &options[i] {
+            if quota.allocate(p.catalog, vms[vi]).is_err() {
+                continue;
+            }
+            chosen[i] = vi;
+            rec(p, vms, options, suffix_min, budget, i + 1, cost_so_far + c, quota, chosen, best, nodes);
+            chosen[i] = usize::MAX;
+            quota.release(p.catalog, vms[vi]);
+        }
+    }
+
+    let mut quota = quota;
+    rec(
+        p,
+        vms,
+        options,
+        &suffix_min,
+        budget,
+        0,
+        0.0,
+        &mut quota,
+        &mut chosen,
+        &mut best,
+        &mut nodes,
+    );
+    (best, nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::testutil::*;
+    use super::super::problem::MappingProblem;
+    use super::*;
+    use crate::cloud::{tables, Market};
+    use crate::cloudsim::{MultiCloud, RevocationModel};
+    use crate::presched::PreScheduler;
+
+    fn til_problem<'a>(
+        mc: &'a MultiCloud,
+        sl: &'a crate::presched::SlowdownReport,
+        job: &'a crate::mapping::problem::JobProfile,
+        alpha: f64,
+    ) -> MappingProblem<'a> {
+        MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: sl,
+            job,
+            alpha,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        }
+    }
+
+    #[test]
+    fn til_optimal_matches_section_5_4() {
+        // §5.4: "the optimized configuration to run the TIL application in
+        // CloudLab is composed of a VM vm121 for the server and four VMs
+        // vm126 for clients" — under the paper's balanced α.
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = til_problem(&mc, &sl, &job, 0.5);
+        let sol = solve(&p).expect("feasible");
+        let cat = &mc.catalog;
+        // vm124 (c240g1) has the same price as the paper's vm121 (c220g1)
+        // and a marginally lower measured slowdown (0.970 vs 1.000), so our
+        // exact solver may pick either; both are Wisconsin 32-vCPU $1.670/h.
+        let server_id = cat.vm(sol.mapping.server).id.clone();
+        assert!(server_id == "vm121" || server_id == "vm124", "server={server_id}");
+        for &c in &sol.mapping.clients {
+            assert_eq!(cat.vm(c).id, "vm126");
+        }
+        // Predicted per-round makespan ≈ 135.8 s → ×10 rounds ≈ 22:38.
+        let per_round = sol.eval.makespan;
+        let ten_rounds = per_round * 10.0;
+        assert!(
+            (ten_rounds - (22.0 * 60.0 + 38.0)).abs() < 60.0,
+            "10-round prediction {ten_rounds:.1}s vs paper 1358s"
+        );
+    }
+
+    #[test]
+    fn pure_makespan_alpha_picks_fastest() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = til_problem(&mc, &sl, &job, 0.0);
+        let sol = solve(&p).unwrap();
+        // All clients on the fastest VM (vm126, slowdown 0.045).
+        for &c in &sol.mapping.clients {
+            assert_eq!(mc.catalog.vm(c).id, "vm126");
+        }
+    }
+
+    #[test]
+    fn pure_cost_alpha_picks_cheap() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = til_problem(&mc, &sl, &job, 1.0);
+        let sol = solve(&p).unwrap();
+        // The cost-only optimum must not be more expensive than the
+        // balanced optimum.
+        let p_bal = til_problem(&mc, &sl, &job, 0.5);
+        let bal = solve(&p_bal).unwrap();
+        assert!(sol.eval.total_cost <= bal.eval.total_cost + 1e-9);
+    }
+
+    #[test]
+    fn deadline_constraint_respected() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let mut p = til_problem(&mc, &sl, &job, 1.0);
+        // Tight per-round deadline forces fast VMs despite α=1 (cost-only).
+        p.deadline_round = 200.0;
+        let sol = solve(&p).unwrap();
+        assert!(sol.eval.makespan <= 200.0 + 1e-6);
+        // And an impossible deadline yields None.
+        p.deadline_round = 1.0;
+        assert!(solve(&p).is_none());
+    }
+
+    #[test]
+    fn budget_constraint_respected() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let mut p = til_problem(&mc, &sl, &job, 0.0);
+        p.budget_round = 0.5; // $0.5 per round
+        if let Some(sol) = solve(&p) {
+            assert!(sol.eval.total_cost <= 0.5 + 1e-9);
+        }
+        p.budget_round = 1e-6;
+        assert!(solve(&p).is_none());
+    }
+
+    #[test]
+    fn quota_limits_gpu_client_count() {
+        // AWS/GCP: 4 GPUs per provider. 5 T4-hungry clients cannot all sit
+        // in AWS; the solver must spill or use CPU VMs, never violate quota.
+        let mc = MultiCloud::new(
+            tables::aws_gcp(),
+            tables::aws_gcp_ground_truth(),
+            RevocationModel::none(),
+            3,
+        );
+        let sl = PreScheduler::new(&mc).measure_defaults();
+        let mut app = crate::apps::til_aws_gcp();
+        app.train_samples = vec![948; 5];
+        app.test_samples = vec![522; 5];
+        let job = app.profile();
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.0,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let sol = solve(&p).expect("feasible");
+        let mut vms = sol.mapping.clients.clone();
+        vms.push(sol.mapping.server);
+        assert!(crate::cloud::quota::assignment_fits(&mc.catalog, &vms).is_ok());
+        // Per provider ≤ 4 GPUs.
+        for prov in mc.catalog.provider_ids() {
+            let gpus: u32 = vms
+                .iter()
+                .filter(|&&v| mc.catalog.provider_of(v) == prov)
+                .map(|&v| mc.catalog.vm(v).gpus)
+                .sum();
+            assert!(gpus <= 4, "provider {:?} has {gpus} GPUs", prov);
+        }
+    }
+
+    #[test]
+    fn aws_gcp_poc_selects_all_aws_like_paper() {
+        // §5.7: "Our Initial Mapping module computed the optimal setup as all
+        // tasks running in AWS, with the server in VM vm313 and the clients
+        // in VMs vm311."
+        let mc = MultiCloud::new(
+            tables::aws_gcp(),
+            tables::aws_gcp_ground_truth(),
+            RevocationModel::none(),
+            3,
+        );
+        let sl = PreScheduler::new(&mc).measure_defaults();
+        let job = crate::apps::til_aws_gcp().profile();
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let sol = solve(&p).expect("feasible");
+        assert_eq!(mc.catalog.vm(sol.mapping.server).id, "vm313");
+        for &c in &sol.mapping.clients {
+            assert_eq!(mc.catalog.vm(c).id, "vm311");
+        }
+    }
+
+    #[test]
+    fn exact_beats_or_ties_every_greedy_baseline() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let p = til_problem(&mc, &sl, &job, alpha);
+            let sol = solve(&p).unwrap();
+            for b in crate::mapping::baselines::all(&p) {
+                if let Some(bm) = b.1 {
+                    let be = p.evaluate(&bm);
+                    if be.feasible {
+                        assert!(
+                            sol.eval.objective <= be.objective + 1e-9,
+                            "alpha={alpha}: exact {} worse than {} {}",
+                            sol.eval.objective,
+                            b.0,
+                            be.objective
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

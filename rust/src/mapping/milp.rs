@@ -1,0 +1,406 @@
+//! Generic MILP route for the Initial Mapping: builds the linearized
+//! formulation of Eqs. 3–18 and solves it with the simplex + branch-and-bound
+//! substrate in [`crate::solver`].
+//!
+//! Linearization of the two products in the paper's formulation:
+//! * `x_iv · y_w` (Eq. 5 comm costs, Constraint 16) → `z_ivw ∈ [0,1]` with
+//!   `z_ivw ≥ x_iv + y_w − 1` (the minimization objective and the big-M form
+//!   of Constraint 16 keep `z` at its bound);
+//! * `x_iv · t_m` (Eq. 4 VM costs) → `u_iv ≥ t_m − T_max (1 − x_iv)`,
+//!   `u_iv ≥ 0` (and `w_v` likewise for the server term).
+//! * Constraint 16 → `t_m ≥ time_ivw − M (2 − x_iv − y_w)` with
+//!   `M = max time`.
+//!
+//! This is exponentially slower than [`super::exact`] (it exists as the
+//! faithful transcription of the paper's formulation and as a cross-check);
+//! use it on small catalogs.
+
+use crate::cloud::VmTypeId;
+use crate::solver::{Lp, Milp, Rel};
+
+use super::problem::{Mapping, MappingProblem};
+
+/// Variable layout for the linearized MILP.
+struct Layout {
+    n_clients: usize,
+    n_vms: usize,
+}
+
+impl Layout {
+    fn x(&self, i: usize, v: usize) -> usize {
+        i * self.n_vms + v
+    }
+    fn y(&self, v: usize) -> usize {
+        self.n_clients * self.n_vms + v
+    }
+    fn z(&self, i: usize, v: usize, w: usize) -> usize {
+        self.n_clients * self.n_vms
+            + self.n_vms
+            + (i * self.n_vms + v) * self.n_vms
+            + w
+    }
+    fn u(&self, i: usize, v: usize) -> usize {
+        self.z(self.n_clients - 1, self.n_vms - 1, self.n_vms - 1) + 1 + i * self.n_vms + v
+    }
+    fn w(&self, v: usize) -> usize {
+        self.u(self.n_clients - 1, self.n_vms - 1) + 1 + v
+    }
+    fn t_m(&self) -> usize {
+        self.w(self.n_vms - 1) + 1
+    }
+    fn total(&self) -> usize {
+        self.t_m() + 1
+    }
+}
+
+/// Build and solve the linearized MILP; returns the mapping or None when
+/// infeasible.
+pub fn solve(p: &MappingProblem) -> Option<Mapping> {
+    let vms: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    let lay = Layout { n_clients: p.job.n_clients(), n_vms: vms.len() };
+    let t_max = p.t_max();
+    let cost_max = p.cost_max();
+    let mut lp = Lp::new(lay.total());
+
+    // --- objective: α (Σ rate·u + Σ rate·w + Σ comm·z)/cost_max
+    //              + (1-α) t_m / T_max ---
+    for i in 0..lay.n_clients {
+        for v in 0..lay.n_vms {
+            let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+            lp.set_objective(lay.u(i, v), p.alpha * rate / cost_max);
+            for w in 0..lay.n_vms {
+                let comm = p.comm_cost(vms[v], vms[w]);
+                lp.set_objective(lay.z(i, v, w), p.alpha * comm / cost_max);
+            }
+        }
+    }
+    for v in 0..lay.n_vms {
+        let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+        lp.set_objective(lay.w(v), p.alpha * rate / cost_max);
+    }
+    lp.set_objective(lay.t_m(), (1.0 - p.alpha) / t_max);
+
+    // --- Constraints 10, 11: one VM per task ---
+    for i in 0..lay.n_clients {
+        lp.add((0..lay.n_vms).map(|v| (lay.x(i, v), 1.0)).collect(), Rel::Eq, 1.0);
+    }
+    lp.add((0..lay.n_vms).map(|v| (lay.y(v), 1.0)).collect(), Rel::Eq, 1.0);
+
+    // --- Constraints 12–15: GPU/vCPU quotas ---
+    for prov in p.catalog.provider_ids() {
+        let members: Vec<usize> = (0..lay.n_vms)
+            .filter(|&v| p.catalog.provider_of(vms[v]) == prov)
+            .collect();
+        let spec = p.catalog.provider(prov);
+        if let Some(max) = spec.max_gpus {
+            let mut row = Vec::new();
+            for &v in &members {
+                let g = p.catalog.vm(vms[v]).gpus as f64;
+                if g > 0.0 {
+                    for i in 0..lay.n_clients {
+                        row.push((lay.x(i, v), g));
+                    }
+                    row.push((lay.y(v), g));
+                }
+            }
+            if !row.is_empty() {
+                lp.add(row, Rel::Le, max as f64);
+            }
+        }
+        if let Some(max) = spec.max_vcpus {
+            let mut row = Vec::new();
+            for &v in &members {
+                let c = p.catalog.vm(vms[v]).vcpus as f64;
+                for i in 0..lay.n_clients {
+                    row.push((lay.x(i, v), c));
+                }
+                row.push((lay.y(v), c));
+            }
+            lp.add(row, Rel::Le, max as f64);
+        }
+    }
+    for region in p.catalog.region_ids() {
+        let members: Vec<usize> = (0..lay.n_vms)
+            .filter(|&v| p.catalog.region_of(vms[v]) == region)
+            .collect();
+        let spec = p.catalog.region(region);
+        if let Some(max) = spec.max_gpus {
+            let mut row = Vec::new();
+            for &v in &members {
+                let g = p.catalog.vm(vms[v]).gpus as f64;
+                if g > 0.0 {
+                    for i in 0..lay.n_clients {
+                        row.push((lay.x(i, v), g));
+                    }
+                    row.push((lay.y(v), g));
+                }
+            }
+            if !row.is_empty() {
+                lp.add(row, Rel::Le, max as f64);
+            }
+        }
+        if let Some(max) = spec.max_vcpus {
+            let mut row = Vec::new();
+            for &v in &members {
+                let c = p.catalog.vm(vms[v]).vcpus as f64;
+                for i in 0..lay.n_clients {
+                    row.push((lay.x(i, v), c));
+                }
+                row.push((lay.y(v), c));
+            }
+            lp.add(row, Rel::Le, max as f64);
+        }
+    }
+
+    // --- linking: z ≥ x + y − 1 ---
+    for i in 0..lay.n_clients {
+        for v in 0..lay.n_vms {
+            for w in 0..lay.n_vms {
+                lp.add(
+                    vec![(lay.z(i, v, w), 1.0), (lay.x(i, v), -1.0), (lay.y(w), -1.0)],
+                    Rel::Ge,
+                    -1.0,
+                );
+                lp.add_upper_bound(lay.z(i, v, w), 1.0);
+            }
+        }
+    }
+
+    // --- cost linearization: u_iv ≥ t_m − T_max(1 − x_iv) ---
+    for i in 0..lay.n_clients {
+        for v in 0..lay.n_vms {
+            lp.add(
+                vec![(lay.u(i, v), 1.0), (lay.t_m(), -1.0), (lay.x(i, v), -t_max)],
+                Rel::Ge,
+                -t_max,
+            );
+        }
+    }
+    for v in 0..lay.n_vms {
+        lp.add(
+            vec![(lay.w(v), 1.0), (lay.t_m(), -1.0), (lay.y(v), -t_max)],
+            Rel::Ge,
+            -t_max,
+        );
+    }
+
+    // --- Constraint 16 (big-M): t_m ≥ time − M(2 − x − y) ---
+    let big_m = t_max * 1.01;
+    for i in 0..lay.n_clients {
+        for v in 0..lay.n_vms {
+            for w in 0..lay.n_vms {
+                let time = p.client_round_time(i, vms[v], vms[w]);
+                lp.add(
+                    vec![
+                        (lay.t_m(), 1.0),
+                        (lay.x(i, v), -big_m),
+                        (lay.y(w), -big_m),
+                    ],
+                    Rel::Ge,
+                    time - 2.0 * big_m,
+                );
+            }
+        }
+    }
+
+    // --- Constraints 8, 9: budget + deadline ---
+    lp.add(vec![(lay.t_m(), 1.0)], Rel::Le, p.deadline_round);
+    {
+        // total_costs = Σ rate·u + Σ rate·w + Σ comm·z ≤ B_round
+        let mut row = Vec::new();
+        for i in 0..lay.n_clients {
+            for v in 0..lay.n_vms {
+                let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+                row.push((lay.u(i, v), rate));
+                for w in 0..lay.n_vms {
+                    row.push((lay.z(i, v, w), p.comm_cost(vms[v], vms[w])));
+                }
+            }
+        }
+        for v in 0..lay.n_vms {
+            row.push((lay.w(v), p.catalog.vm(vms[v]).cost_per_sec(p.market)));
+        }
+        lp.add(row, Rel::Le, p.budget_round);
+    }
+
+    // Binaries: x and y (z/u/w/t_m are continuous, forced by constraints).
+    let mut binaries = Vec::new();
+    for i in 0..lay.n_clients {
+        for v in 0..lay.n_vms {
+            binaries.push(lay.x(i, v));
+        }
+    }
+    for v in 0..lay.n_vms {
+        binaries.push(lay.y(v));
+    }
+
+    let milp = Milp::new(lp, binaries);
+    let sol = crate::solver::solve_milp(&milp)?;
+
+    let server = (0..lay.n_vms).find(|&v| sol.x[lay.y(v)] > 0.5)?;
+    let mut clients = Vec::new();
+    for i in 0..lay.n_clients {
+        let v = (0..lay.n_vms).find(|&v| sol.x[lay.x(i, v)] > 0.5)?;
+        clients.push(vms[v]);
+    }
+    Some(Mapping { server: vms[server], clients, market: p.market })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::{JobProfile, MappingProblem, MessageSizes};
+    use super::*;
+    use crate::cloud::{tables, Catalog, Market};
+    use crate::cloudsim::{MultiCloud, RevocationModel};
+    use crate::presched::PreScheduler;
+
+    /// A small catalog (4 VM types, 2 clients) keeps the generic MILP fast.
+    fn small_env() -> (Catalog, crate::presched::SlowdownReport) {
+        let mut cat = tables::cloudlab();
+        let keep = ["vm121", "vm126", "vm211", "vm212"];
+        cat.vm_types.retain(|v| keep.contains(&v.id.as_str()));
+        let gt = tables::cloudlab_ground_truth();
+        let mc = MultiCloud::new(cat.clone(), gt, RevocationModel::none(), 5);
+        let sl = PreScheduler::new(&mc).measure_defaults();
+        (cat, sl)
+    }
+
+    fn small_job(n_clients: usize) -> JobProfile {
+        JobProfile {
+            name: "mini".into(),
+            client_train_bl: vec![1000.0; n_clients],
+            client_test_bl: vec![50.0; n_clients],
+            train_comm_bl: 5.61,
+            test_comm_bl: 3.05,
+            agg_bl: 2.0,
+            msg: MessageSizes {
+                s_train_gb: 0.5,
+                s_aggreg_gb: 0.5,
+                c_train_gb: 0.5,
+                c_test_gb: 0.001,
+            },
+            n_rounds: 10,
+        }
+    }
+
+    #[test]
+    fn milp_matches_exact_solver_objective() {
+        let (cat, sl) = small_env();
+        let job = small_job(2);
+        for alpha in [0.0, 0.5, 1.0] {
+            let p = MappingProblem {
+                catalog: &cat,
+                slowdowns: &sl,
+                job: &job,
+                alpha,
+                market: Market::OnDemand,
+                budget_round: 1e9,
+                deadline_round: 1e9,
+            };
+            let exact = crate::mapping::exact::solve(&p).expect("exact feasible");
+            let milp = solve(&p).expect("milp feasible");
+            let em = p.evaluate(&milp);
+            assert!(
+                (exact.eval.objective - em.objective).abs() < 1e-6,
+                "alpha={alpha}: exact obj {} vs milp obj {}",
+                exact.eval.objective,
+                em.objective
+            );
+        }
+    }
+
+    #[test]
+    fn milp_respects_deadline() {
+        let (cat, sl) = small_env();
+        let job = small_job(2);
+        let p = MappingProblem {
+            catalog: &cat,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 1.0,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 100.0, // forces GPU VM despite pure-cost α
+        };
+        let got = solve(&p);
+        match (got, crate::mapping::exact::solve(&p)) {
+            (Some(m), Some(e)) => {
+                let em = p.evaluate(&m);
+                assert!(em.makespan <= 100.0 + 1e-6);
+                assert!((em.objective - e.eval.objective).abs() < 1e-6);
+            }
+            (None, None) => {}
+            (a, b) => panic!("feasibility disagreement: milp {:?} exact {:?}", a.is_some(), b.is_some()),
+        }
+    }
+
+    #[test]
+    fn milp_infeasible_when_budget_zero() {
+        let (cat, sl) = small_env();
+        let job = small_job(2);
+        let p = MappingProblem {
+            catalog: &cat,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::OnDemand,
+            budget_round: 1e-9,
+            deadline_round: 1e9,
+        };
+        assert!(solve(&p).is_none());
+        assert!(crate::mapping::exact::solve(&p).is_none());
+    }
+
+    #[test]
+    fn milp_random_instances_match_exact() {
+        // Property test: random small instances, generic MILP == exact.
+        crate::util::testkit::forall(
+            "milp vs exact on random instances",
+            0xAB1E,
+            8,
+            |rng| {
+                let (cat, sl) = small_env();
+                let n_clients = 1 + rng.next_below(2) as usize;
+                let mut job = small_job(n_clients);
+                for i in 0..n_clients {
+                    job.client_train_bl[i] = rng.uniform(100.0, 3000.0);
+                    job.client_test_bl[i] = rng.uniform(5.0, 100.0);
+                }
+                let alpha = rng.uniform(0.0, 1.0);
+                (cat, sl, job, alpha)
+            },
+            |(cat, sl, job, alpha)| {
+                let p = MappingProblem {
+                    catalog: cat,
+                    slowdowns: sl,
+                    job,
+                    alpha: *alpha,
+                    market: Market::OnDemand,
+                    budget_round: 1e9,
+                    deadline_round: 1e9,
+                };
+                let exact = crate::mapping::exact::solve(&p);
+                let milp = solve(&p);
+                match (exact, milp) {
+                    (Some(e), Some(m)) => {
+                        let em = p.evaluate(&m);
+                        if (e.eval.objective - em.objective).abs() < 1e-5 {
+                            Ok(())
+                        } else {
+                            Err(format!(
+                                "objective mismatch: exact {} milp {}",
+                                e.eval.objective, em.objective
+                            ))
+                        }
+                    }
+                    (None, None) => Ok(()),
+                    (e, m) => Err(format!(
+                        "feasibility mismatch exact={} milp={}",
+                        e.is_some(),
+                        m.is_some()
+                    )),
+                }
+            },
+        );
+    }
+}

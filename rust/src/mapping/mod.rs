@@ -1,0 +1,12 @@
+//! Initial Mapping module (§4.2): the MILP formulation of Eqs. 3–18 with an
+//! exact structured solver ([`exact`], the production path), a faithful
+//! linearized-MILP transcription over the generic solver ([`milp`],
+//! cross-check + ablation), and greedy/random baselines ([`baselines`]).
+
+pub mod baselines;
+pub mod exact;
+pub mod milp;
+pub mod problem;
+
+pub use exact::{solve as solve_exact, MappingSolution};
+pub use problem::{Evaluation, JobProfile, Mapping, MappingProblem, MessageSizes};

@@ -1,0 +1,407 @@
+//! Pre-Scheduling module (§4.1).
+//!
+//! Runs a *dummy application* across the environment to obtain two slowdown
+//! metrics used by the Initial Mapping and Dynamic Scheduler:
+//!
+//! 1. `sl_inst_jkl` — execution slowdown of every VM type vs a baseline VM
+//!    (Table 3; baseline vm121 on CloudLab);
+//! 2. `sl_comm_jklm` — communication slowdown of every region pair vs a
+//!    baseline pair (Table 4; baseline APT–APT).
+//!
+//! It also measures the *job baselines* of the actual FL application: the
+//! per-client train/test execution time on the baseline VM (`train_bl_i`,
+//! `test_bl_i`) and the message-exchange time on the baseline pair
+//! (`train_comm_bl`, `test_comm_bl`).
+//!
+//! The dummy app executes two rounds per VM (the first one pays framework /
+//! accelerator warm-up, so slowdowns use round 2) — exactly the measurement
+//! protocol behind Table 3. Results are cached on disk keyed by an
+//! environment fingerprint so re-runs are no-ops until regions or VM types
+//! change (§4.1: "it is not necessary to re-execute the dummy application in
+//! every framework execution").
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::cloud::tables::{DUMMY_TEST_GB, DUMMY_TRAIN_GB};
+use crate::cloud::{Catalog, RegionId, VmTypeId};
+use crate::cloudsim::MultiCloud;
+
+/// One dummy-app measurement on one VM (two rounds of train+test).
+#[derive(Debug, Clone, Copy)]
+pub struct DummyRun {
+    pub train_r1: f64,
+    pub train_r2: f64,
+    pub test_r1: f64,
+    pub test_r2: f64,
+}
+
+/// One dummy message-exchange measurement between a region pair.
+#[derive(Debug, Clone, Copy)]
+pub struct CommRun {
+    pub train_secs: f64,
+    pub test_secs: f64,
+}
+
+/// The Pre-Scheduling output consumed by Initial Mapping / Dynamic Scheduler.
+#[derive(Debug, Clone)]
+pub struct SlowdownReport {
+    /// Raw dummy measurements per VM type (Table 3's time columns).
+    pub dummy_runs: HashMap<VmTypeId, DummyRun>,
+    /// Raw exchange measurements per region pair (Table 4's time columns).
+    pub comm_runs: HashMap<(RegionId, RegionId), CommRun>,
+    /// `sl_inst` per VM type.
+    pub exec_slowdown: HashMap<VmTypeId, f64>,
+    /// `sl_comm` per (unordered, canonicalized) region pair.
+    pub comm_slowdown: HashMap<(RegionId, RegionId), f64>,
+    pub baseline_vm: VmTypeId,
+    pub baseline_pair: (RegionId, RegionId),
+    /// Fingerprint of the environment this report was measured on.
+    pub fingerprint: String,
+}
+
+impl SlowdownReport {
+    pub fn sl_inst(&self, vm: VmTypeId) -> f64 {
+        self.exec_slowdown[&vm]
+    }
+
+    pub fn sl_comm(&self, a: RegionId, b: RegionId) -> f64 {
+        self.comm_slowdown[&canon(a, b)]
+    }
+}
+
+fn canon(a: RegionId, b: RegionId) -> (RegionId, RegionId) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Environment fingerprint: regions + VM ids + prices. A report is reusable
+/// while this stays unchanged.
+pub fn fingerprint(cat: &Catalog) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for r in &cat.regions {
+        let _ = write!(s, "{}|", r.name);
+    }
+    for v in &cat.vm_types {
+        let _ = write!(s, "{}:{}:{}:{};", v.id, v.vcpus, v.gpus, v.on_demand_hourly);
+    }
+    // FNV-1a, enough for a cache key.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The Pre-Scheduling module.
+pub struct PreScheduler<'a> {
+    cloud: &'a MultiCloud,
+}
+
+impl<'a> PreScheduler<'a> {
+    pub fn new(cloud: &'a MultiCloud) -> Self {
+        Self { cloud }
+    }
+
+    /// Run the dummy application on every VM type and between every region
+    /// pair, producing the slowdown report. `baseline_vm` / `baseline_pair`
+    /// anchor the ratios (the paper uses vm121 and APT–APT on CloudLab).
+    pub fn measure(&self, baseline_vm: VmTypeId, baseline_pair: (RegionId, RegionId)) -> SlowdownReport {
+        let cat = &self.cloud.catalog;
+        let gt = self.cloud.ground_truth();
+
+        // --- execution: two dummy rounds per VM type ---
+        let mut dummy_runs = HashMap::new();
+        for vm in cat.vm_ids() {
+            let d = gt.dummy_times(&cat.vm(vm).id);
+            dummy_runs.insert(
+                vm,
+                DummyRun {
+                    train_r1: d.train_r1,
+                    train_r2: d.train_r2,
+                    test_r1: d.test_r1,
+                    test_r2: d.test_r2,
+                },
+            );
+        }
+        let base_steady = {
+            let d = &dummy_runs[&baseline_vm];
+            d.train_r2 + d.test_r2
+        };
+        let exec_slowdown = dummy_runs
+            .iter()
+            .map(|(&vm, d)| (vm, (d.train_r2 + d.test_r2) / base_steady))
+            .collect();
+
+        // --- communication: exchange the dummy volumes on every pair ---
+        let mut comm_runs = HashMap::new();
+        for a in cat.region_ids() {
+            for b in cat.region_ids() {
+                let key = canon(a, b);
+                comm_runs.entry(key).or_insert_with(|| CommRun {
+                    train_secs: self.cloud.network.transfer_secs(a, b, DUMMY_TRAIN_GB),
+                    test_secs: self.cloud.network.transfer_secs(a, b, DUMMY_TEST_GB),
+                });
+            }
+        }
+        let base_total = {
+            let c = &comm_runs[&canon(baseline_pair.0, baseline_pair.1)];
+            c.train_secs + c.test_secs
+        };
+        let comm_slowdown = comm_runs
+            .iter()
+            .map(|(&k, c)| (k, (c.train_secs + c.test_secs) / base_total))
+            .collect();
+
+        SlowdownReport {
+            dummy_runs,
+            comm_runs,
+            exec_slowdown,
+            comm_slowdown,
+            baseline_vm,
+            baseline_pair,
+            fingerprint: fingerprint(cat),
+        }
+    }
+
+    /// Measure with the paper's default baselines: the first VM whose
+    /// slowdown the paper normalizes to 1.0 (vm121 / first catalog VM) and
+    /// the first region pair.
+    pub fn measure_defaults(&self) -> SlowdownReport {
+        let cat = &self.cloud.catalog;
+        let gt = self.cloud.ground_truth();
+        let baseline_vm = cat
+            .vm_by_id(&gt.baseline_vm)
+            .expect("ground-truth baseline VM not in catalog");
+        let r = cat
+            .region_by_name(&gt.baseline_pair.0)
+            .expect("ground-truth baseline region not in catalog");
+        let r2 = cat
+            .region_by_name(&gt.baseline_pair.1)
+            .expect("ground-truth baseline region not in catalog");
+        self.measure(baseline_vm, (r, r2))
+    }
+}
+
+/// Cache a report to disk / load it back, so the framework skips
+/// re-measurement when the environment fingerprint matches.
+pub mod cache {
+    use super::*;
+
+    pub fn save(report: &SlowdownReport, cat: &Catalog, path: &Path) -> anyhow::Result<()> {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "fingerprint = \"{}\"", report.fingerprint);
+        let _ = writeln!(out, "baseline_vm = \"{}\"", cat.vm(report.baseline_vm).id);
+        let _ = writeln!(
+            out,
+            "baseline_pair = [\"{}\", \"{}\"]",
+            cat.region(report.baseline_pair.0).name,
+            cat.region(report.baseline_pair.1).name
+        );
+        for (vm, d) in sorted(&report.dummy_runs) {
+            let _ = writeln!(out, "\n[[exec]]");
+            let _ = writeln!(out, "vm = \"{}\"", cat.vm(*vm).id);
+            let _ = writeln!(
+                out,
+                "times = [{}, {}, {}, {}]",
+                d.train_r1, d.train_r2, d.test_r1, d.test_r2
+            );
+        }
+        for ((a, b), c) in sorted(&report.comm_runs) {
+            let _ = writeln!(out, "\n[[comm]]");
+            let _ = writeln!(
+                out,
+                "pair = [\"{}\", \"{}\"]",
+                cat.region(*a).name,
+                cat.region(*b).name
+            );
+            let _ = writeln!(out, "times = [{}, {}]", c.train_secs, c.test_secs);
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    fn sorted<K: Ord + Copy, V>(m: &HashMap<K, V>) -> Vec<(&K, &V)> {
+        let mut v: Vec<_> = m.iter().collect();
+        v.sort_by_key(|(k, _)| **k);
+        v
+    }
+
+    /// Load a cached report; returns None when missing or stale (fingerprint
+    /// mismatch), in which case the caller re-measures.
+    pub fn load(cat: &Catalog, path: &Path) -> anyhow::Result<Option<SlowdownReport>> {
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(path)?;
+        let root = crate::util::tomlmini::parse(&text)?;
+        let fp = root
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        if fp != fingerprint(cat) {
+            return Ok(None); // environment changed → stale
+        }
+        let baseline_vm = cat
+            .vm_by_id(root["baseline_vm"].as_str().unwrap_or_default())
+            .ok_or_else(|| anyhow::anyhow!("cached baseline vm missing from catalog"))?;
+        let pair = root["baseline_pair"]
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("bad baseline_pair"))?;
+        let baseline_pair = (
+            cat.region_by_name(pair[0].as_str().unwrap_or_default())
+                .ok_or_else(|| anyhow::anyhow!("bad baseline region"))?,
+            cat.region_by_name(pair[1].as_str().unwrap_or_default())
+                .ok_or_else(|| anyhow::anyhow!("bad baseline region"))?,
+        );
+        let mut dummy_runs = HashMap::new();
+        if let Some(execs) = root.get("exec").and_then(|v| v.as_table_array()) {
+            for e in execs {
+                let vm = cat
+                    .vm_by_id(e["vm"].as_str().unwrap_or_default())
+                    .ok_or_else(|| anyhow::anyhow!("cached vm missing"))?;
+                let t = e["times"].as_array().ok_or_else(|| anyhow::anyhow!("bad times"))?;
+                dummy_runs.insert(
+                    vm,
+                    DummyRun {
+                        train_r1: t[0].as_float().unwrap_or(0.0),
+                        train_r2: t[1].as_float().unwrap_or(0.0),
+                        test_r1: t[2].as_float().unwrap_or(0.0),
+                        test_r2: t[3].as_float().unwrap_or(0.0),
+                    },
+                );
+            }
+        }
+        let mut comm_runs = HashMap::new();
+        if let Some(comms) = root.get("comm").and_then(|v| v.as_table_array()) {
+            for c in comms {
+                let pair = c["pair"].as_array().ok_or_else(|| anyhow::anyhow!("bad pair"))?;
+                let a = cat
+                    .region_by_name(pair[0].as_str().unwrap_or_default())
+                    .ok_or_else(|| anyhow::anyhow!("bad region"))?;
+                let b = cat
+                    .region_by_name(pair[1].as_str().unwrap_or_default())
+                    .ok_or_else(|| anyhow::anyhow!("bad region"))?;
+                let t = c["times"].as_array().ok_or_else(|| anyhow::anyhow!("bad times"))?;
+                comm_runs.insert(
+                    canon(a, b),
+                    CommRun {
+                        train_secs: t[0].as_float().unwrap_or(0.0),
+                        test_secs: t[1].as_float().unwrap_or(0.0),
+                    },
+                );
+            }
+        }
+        let base_steady = {
+            let d = &dummy_runs[&baseline_vm];
+            d.train_r2 + d.test_r2
+        };
+        let exec_slowdown = dummy_runs
+            .iter()
+            .map(|(&vm, d)| (vm, (d.train_r2 + d.test_r2) / base_steady))
+            .collect();
+        let base_total = {
+            let c = &comm_runs[&canon(baseline_pair.0, baseline_pair.1)];
+            c.train_secs + c.test_secs
+        };
+        let comm_slowdown = comm_runs
+            .iter()
+            .map(|(&k, c)| (k, (c.train_secs + c.test_secs) / base_total))
+            .collect();
+        Ok(Some(SlowdownReport {
+            dummy_runs,
+            comm_runs,
+            exec_slowdown,
+            comm_slowdown,
+            baseline_vm,
+            baseline_pair,
+            fingerprint: fp,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::tables;
+    use crate::cloudsim::RevocationModel;
+
+    fn cloudlab_sim() -> MultiCloud {
+        MultiCloud::new(
+            tables::cloudlab(),
+            tables::cloudlab_ground_truth(),
+            RevocationModel::none(),
+            7,
+        )
+    }
+
+    #[test]
+    fn measured_exec_slowdowns_match_table3() {
+        let mc = cloudlab_sim();
+        let report = PreScheduler::new(&mc).measure_defaults();
+        let cat = &mc.catalog;
+        let vm126 = cat.vm_by_id("vm126").unwrap();
+        let vm212 = cat.vm_by_id("vm212").unwrap();
+        let vm121 = cat.vm_by_id("vm121").unwrap();
+        assert!((report.sl_inst(vm121) - 1.0).abs() < 1e-12);
+        assert!((report.sl_inst(vm126) - 0.045).abs() < 0.001);
+        assert!((report.sl_inst(vm212) - 2.328).abs() < 0.001);
+    }
+
+    #[test]
+    fn measured_comm_slowdowns_match_table4() {
+        let mc = cloudlab_sim();
+        let report = PreScheduler::new(&mc).measure_defaults();
+        let cat = &mc.catalog;
+        let apt = cat.region_by_name("APT").unwrap();
+        let mass = cat.region_by_name("Massachusetts").unwrap();
+        let wis = cat.region_by_name("Wisconsin").unwrap();
+        let utah = cat.region_by_name("Utah").unwrap();
+        assert!((report.sl_comm(apt, apt) - 1.0).abs() < 0.03);
+        assert!((report.sl_comm(mass, wis) - 24.731).abs() < 0.5);
+        assert!((report.sl_comm(utah, utah) - 0.372).abs() < 0.03);
+        // symmetric lookup
+        assert_eq!(report.sl_comm(mass, wis), report.sl_comm(wis, mass));
+    }
+
+    #[test]
+    fn report_covers_every_vm_and_pair() {
+        let mc = cloudlab_sim();
+        let report = PreScheduler::new(&mc).measure_defaults();
+        assert_eq!(report.exec_slowdown.len(), mc.catalog.vm_types.len());
+        let n = mc.catalog.regions.len();
+        assert_eq!(report.comm_slowdown.len(), n * (n + 1) / 2);
+    }
+
+    #[test]
+    fn cache_round_trip_and_staleness() {
+        let mc = cloudlab_sim();
+        let report = PreScheduler::new(&mc).measure_defaults();
+        let dir = std::env::temp_dir().join(format!("mfls-presched-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("slowdowns.toml");
+        cache::save(&report, &mc.catalog, &path).unwrap();
+        let loaded = cache::load(&mc.catalog, &path).unwrap().expect("fresh cache");
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        assert!((loaded.sl_inst(vm126) - report.sl_inst(vm126)).abs() < 1e-12);
+        // A different environment invalidates the cache.
+        let other = tables::aws_gcp();
+        assert!(cache::load(&other, &path).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_changes_with_prices() {
+        let mut cat = tables::cloudlab();
+        let f1 = fingerprint(&cat);
+        cat.vm_types[0].on_demand_hourly *= 2.0;
+        assert_ne!(f1, fingerprint(&cat));
+    }
+}

@@ -1,0 +1,146 @@
+//! The artifact manifest: metadata `python/compile/aot.py` writes next to
+//! the HLO files (`artifacts/manifest.toml`), describing every compiled app
+//! model so the rust side can size buffers without re-deriving shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One application's compiled artifacts.
+#[derive(Debug, Clone)]
+pub struct AppArtifacts {
+    pub name: String,
+    /// Flattened parameter-vector length.
+    pub param_count: usize,
+    /// Fixed training batch size compiled into the step.
+    pub batch: usize,
+    /// Flattened feature dimension per sample.
+    pub feature_dim: usize,
+    pub n_classes: usize,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    /// Initial parameters written by the AOT pass.
+    pub init_params: PathBuf,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub apps: BTreeMap<String, AppArtifacts>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {} — run `make artifacts` first: {e}", path.display())
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let root = crate::util::tomlmini::parse(text)?;
+        let mut apps = BTreeMap::new();
+        for entry in root
+            .get("app")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing [[app]]"))?
+        {
+            let need = |k: &str| -> anyhow::Result<i64> {
+                entry
+                    .get(k)
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| anyhow::anyhow!("manifest app missing {k}"))
+            };
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest app missing name"))?
+                .to_string();
+            apps.insert(
+                name.clone(),
+                AppArtifacts {
+                    param_count: need("param_count")? as usize,
+                    batch: need("batch")? as usize,
+                    feature_dim: need("feature_dim")? as usize,
+                    n_classes: need("n_classes")? as usize,
+                    train_hlo: dir.join(format!("{name}_train.hlo.txt")),
+                    eval_hlo: dir.join(format!("{name}_eval.hlo.txt")),
+                    init_params: dir.join(format!("{name}_init.bin")),
+                    name,
+                },
+            );
+        }
+        Ok(Manifest { apps, dir: dir.to_path_buf() })
+    }
+
+    pub fn app(&self, name: &str) -> anyhow::Result<&AppArtifacts> {
+        self.apps
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("app {name} not in manifest ({:?})", self.apps.keys()))
+    }
+}
+
+impl AppArtifacts {
+    /// Load the initial flat parameter vector (little-endian f32).
+    pub fn load_init_params(&self) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.init_params)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", self.init_params.display()))?;
+        anyhow::ensure!(bytes.len() == self.param_count * 4, "init param size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[[app]]
+name = "femnist"
+param_count = 1000
+batch = 32
+feature_dim = 784
+n_classes = 62
+
+[[app]]
+name = "til"
+param_count = 2000
+batch = 16
+feature_dim = 12288
+n_classes = 2
+"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.apps.len(), 2);
+        let f = m.app("femnist").unwrap();
+        assert_eq!(f.param_count, 1000);
+        assert_eq!(f.batch, 32);
+        assert!(f.train_hlo.ends_with("femnist_train.hlo.txt"));
+        assert!(m.app("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_round_trip() {
+        let dir = std::env::temp_dir().join(format!("mfls-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Manifest::parse(
+            "[[app]]\nname = \"x\"\nparam_count = 3\nbatch = 1\nfeature_dim = 1\nn_classes = 2\n",
+            &dir,
+        )
+        .unwrap();
+        let app = m.app("x").unwrap();
+        let mut bytes = Vec::new();
+        for v in [1.0f32, -2.0, 0.5] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&app.init_params, bytes).unwrap();
+        assert_eq!(app.load_init_params().unwrap(), vec![1.0, -2.0, 0.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from the rust hot path. Python never runs at request time.
+//!
+//! The interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+//! crate's XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
+//! and round-trips cleanly.
+
+pub mod manifest;
+pub mod trainer;
+
+pub use manifest::{AppArtifacts, Manifest};
+pub use trainer::PjrtTrainer;
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A PJRT CPU engine hosting compiled executables.
+///
+/// The `xla` crate's handles are not `Sync`; the engine serializes access
+/// through a mutex so FL client threads can share one process-wide engine
+/// (CPU PJRT parallelizes internally per executable).
+pub struct Engine {
+    inner: Arc<Mutex<EngineInner>>,
+    /// Compiled-executable cache: every client shares one compilation per
+    /// artifact (PJRT compilation of the interpret-mode Pallas HLO is the
+    /// expensive part of startup).
+    cache: Arc<Mutex<std::collections::HashMap<std::path::PathBuf, Executable>>>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+}
+
+// The PJRT CPU client is thread-compatible behind a lock.
+unsafe impl Send for EngineInner {}
+
+/// A compiled computation ready to execute.
+#[derive(Clone)]
+pub struct Executable {
+    inner: Arc<Mutex<ExecutableInner>>,
+    pub name: String,
+}
+
+struct ExecutableInner {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.name)
+    }
+}
+
+unsafe impl Send for ExecutableInner {}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine {
+            inner: Arc::new(Mutex::new(EngineInner { client })),
+            cache: Arc::new(Mutex::new(std::collections::HashMap::new())),
+        })
+    }
+
+    /// Load an HLO-text artifact and compile it for this engine (cached:
+    /// repeated loads of the same path reuse the compiled executable).
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<Executable> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        anyhow::ensure!(path.exists(), "artifact {} missing — run `make artifacts`", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let guard = self.inner.lock().unwrap();
+        let exe = guard
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        let executable = Executable {
+            inner: Arc::new(Mutex::new(ExecutableInner { exe })),
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        };
+        self.cache.lock().unwrap().insert(path.to_path_buf(), executable.clone());
+        Ok(executable)
+    }
+}
+
+impl Clone for Engine {
+    fn clone(&self) -> Self {
+        Engine { inner: self.inner.clone(), cache: self.cache.clone() }
+    }
+}
+
+impl Executable {
+    /// Execute with `f32` inputs of the given shapes; returns the flattened
+    /// `f32` outputs of the (jax `return_tuple=True`) result tuple.
+    pub fn run_f32(
+        &self,
+        inputs: &[(&[f32], &[i64])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape{dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let guard = self.inner.lock().unwrap();
+        let result = guard
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let mut out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = out
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose_tuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny HLO module (written by hand in HLO text) computing
+    /// `out = (x + y,)` over f32[4] — validates the full load→compile→run
+    /// path without python artifacts.
+    const ADD_HLO: &str = r#"HloModule add_vec, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("mfls-{}-{}", std::process::id(), name));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_run_handwritten_hlo() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_tmp("add.hlo.txt", ADD_HLO);
+        let exe = engine.load_hlo_text(&path).unwrap();
+        let out = exe
+            .run_f32(&[(&[1.0, 2.0, 3.0, 4.0], &[4]), (&[10.0, 20.0, 30.0, 40.0], &[4])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let engine = Engine::cpu().unwrap();
+        let err = engine
+            .load_hlo_text(Path::new("/nonexistent/foo.hlo.txt"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn executable_shared_across_threads() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_tmp("add2.hlo.txt", ADD_HLO);
+        let exe = engine.load_hlo_text(&path).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let exe = exe.clone();
+            joins.push(std::thread::spawn(move || {
+                let x = vec![t as f32; 4];
+                let out = exe.run_f32(&[(&x, &[4]), (&x, &[4])]).unwrap();
+                assert_eq!(out[0], vec![2.0 * t as f32; 4]);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

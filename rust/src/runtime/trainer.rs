@@ -1,0 +1,257 @@
+//! The PJRT-backed [`crate::fl::Trainer`]: a client's local silo plus the
+//! compiled train/eval steps of its application model.
+//!
+//! One training round = `local_epochs` passes over the shard in fixed-size
+//! batches, each batch one invocation of the AOT train-step executable
+//! (`(params, x, y) → (params', loss)`); evaluation runs the eval-step
+//! executable (`(params, x, y) → (loss, correct)`) over the test split.
+
+use crate::fl::Trainer;
+
+use super::manifest::AppArtifacts;
+use super::{Engine, Executable};
+
+/// A client's local dataset shard: flattened features + f32-encoded labels.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub x_train: Vec<f32>,
+    pub y_train: Vec<f32>,
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<f32>,
+    pub feature_dim: usize,
+}
+
+impl Shard {
+    pub fn n_train(&self) -> usize {
+        self.y_train.len()
+    }
+    pub fn n_test(&self) -> usize {
+        self.y_test.len()
+    }
+}
+
+pub struct PjrtTrainer {
+    train_exe: Executable,
+    eval_exe: Executable,
+    shard: Shard,
+    batch: usize,
+    local_epochs: u32,
+    param_count: usize,
+}
+
+impl PjrtTrainer {
+    pub fn new(
+        engine: &Engine,
+        artifacts: &AppArtifacts,
+        shard: Shard,
+        local_epochs: u32,
+    ) -> anyhow::Result<PjrtTrainer> {
+        anyhow::ensure!(shard.feature_dim == artifacts.feature_dim, "feature dim mismatch");
+        anyhow::ensure!(shard.n_train() >= artifacts.batch, "shard smaller than a batch");
+        Ok(PjrtTrainer {
+            train_exe: engine.load_hlo_text(&artifacts.train_hlo)?,
+            eval_exe: engine.load_hlo_text(&artifacts.eval_hlo)?,
+            shard,
+            batch: artifacts.batch,
+            local_epochs,
+            param_count: artifacts.param_count,
+        })
+    }
+
+    fn batch_views(&self, x: &[f32], y: &[f32]) -> Vec<(Vec<f32>, Vec<f32>)> {
+        // Fixed-shape batches (AOT shapes are static); the tail partial
+        // batch is dropped, as in the LEAF reference training loops.
+        let n = y.len();
+        let d = self.shard.feature_dim;
+        (0..n / self.batch)
+            .map(|b| {
+                let lo = b * self.batch;
+                let hi = lo + self.batch;
+                (x[lo * d..hi * d].to_vec(), y[lo..hi].to_vec())
+            })
+            .collect()
+    }
+}
+
+impl Trainer for PjrtTrainer {
+    fn n_train_samples(&self) -> u32 {
+        self.shard.n_train() as u32
+    }
+
+    fn n_test_samples(&self) -> u32 {
+        // Fixed-shape eval drops the tail partial batch; report the number
+        // of samples actually evaluated so pooled accuracy is exact.
+        ((self.shard.n_test() / self.batch) * self.batch) as u32
+    }
+
+    fn train_round(&mut self, weights: &[f32], _round: u32) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(weights.len() == self.param_count, "param count mismatch");
+        let mut params = weights.to_vec();
+        let b = self.batch as i64;
+        let d = self.shard.feature_dim as i64;
+        for _epoch in 0..self.local_epochs {
+            for (bx, by) in self.batch_views(&self.shard.x_train, &self.shard.y_train) {
+                let out = self.train_exe.run_f32(&[
+                    (&params, &[self.param_count as i64]),
+                    (&bx, &[b, d]),
+                    (&by, &[b]),
+                ])?;
+                anyhow::ensure!(out.len() == 2, "train step must return (params, loss)");
+                params = out.into_iter().next().unwrap();
+            }
+        }
+        Ok(params)
+    }
+
+    fn evaluate(&mut self, weights: &[f32]) -> anyhow::Result<(f64, u32)> {
+        let b = self.batch as i64;
+        let d = self.shard.feature_dim as i64;
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0u32;
+        let mut batches = 0u32;
+        for (bx, by) in self.batch_views(&self.shard.x_test, &self.shard.y_test) {
+            let out = self.eval_exe.run_f32(&[
+                (&weights.to_vec(), &[self.param_count as i64]),
+                (&bx, &[b, d]),
+                (&by, &[b]),
+            ])?;
+            anyhow::ensure!(out.len() == 2, "eval step must return (loss, correct)");
+            total_loss += out[0][0] as f64;
+            total_correct += out[1][0] as u32;
+            batches += 1;
+        }
+        anyhow::ensure!(batches > 0, "test shard smaller than a batch");
+        Ok((total_loss / batches as f64, total_correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-written HLO implementing a 1-feature linear-regression step so
+    /// the trainer logic is testable without python artifacts:
+    ///   params p = [w]; pred = x·w; grad = 2/B Σ (pred−y)·x; w' = w − 0.1g
+    /// loss = mean (pred−y)².
+    const LINREG_TRAIN: &str = r#"HloModule linreg_train, entry_computation_layout={(f32[1]{0}, f32[2,1]{1,0}, f32[2]{0})->(f32[1]{0}, f32[])}
+
+add_reducer {
+  ra = f32[] parameter(0)
+  rb = f32[] parameter(1)
+  ROOT rs = f32[] add(ra, rb)
+}
+
+ENTRY main {
+  p = f32[1]{0} parameter(0)
+  x = f32[2,1]{1,0} parameter(1)
+  y = f32[2]{0} parameter(2)
+  xf = f32[2]{0} reshape(x)
+  w0 = f32[] reshape(p)
+  wb = f32[2]{0} broadcast(w0), dimensions={}
+  yhat = f32[2]{0} multiply(xf, wb)
+  err = f32[2]{0} subtract(yhat, y)
+  ex = f32[2]{0} multiply(err, xf)
+  zero = f32[] constant(0)
+  gsum = f32[] reduce(ex, zero), dimensions={0}, to_apply=add_reducer
+  lr = f32[] constant(0.1)
+  step = f32[] multiply(gsum, lr)
+  wnew = f32[] subtract(w0, step)
+  pnew = f32[1]{0} reshape(wnew)
+  e2 = f32[2]{0} multiply(err, err)
+  lsum = f32[] reduce(e2, zero), dimensions={0}, to_apply=add_reducer
+  half = f32[] constant(0.5)
+  loss = f32[] multiply(lsum, half)
+  ROOT out = (f32[1]{0}, f32[]) tuple(pnew, loss)
+}
+"#;
+
+const LINREG_EVAL: &str = r#"HloModule linreg_eval, entry_computation_layout={(f32[1]{0}, f32[2,1]{1,0}, f32[2]{0})->(f32[], f32[])}
+
+add_reducer {
+  ra = f32[] parameter(0)
+  rb = f32[] parameter(1)
+  ROOT rs = f32[] add(ra, rb)
+}
+
+ENTRY main {
+  p = f32[1]{0} parameter(0)
+  x = f32[2,1]{1,0} parameter(1)
+  y = f32[2]{0} parameter(2)
+  xf = f32[2]{0} reshape(x)
+  w0 = f32[] reshape(p)
+  wb = f32[2]{0} broadcast(w0), dimensions={}
+  yhat = f32[2]{0} multiply(xf, wb)
+  err = f32[2]{0} subtract(yhat, y)
+  e2 = f32[2]{0} multiply(err, err)
+  zero = f32[] constant(0)
+  lsum = f32[] reduce(e2, zero), dimensions={0}, to_apply=add_reducer
+  half = f32[] constant(0.5)
+  loss = f32[] multiply(lsum, half)
+  correct = f32[] constant(2)
+  ROOT out = (f32[], f32[]) tuple(loss, correct)
+}
+"#;
+
+    fn artifacts_in_tmp() -> (std::path::PathBuf, AppArtifacts) {
+        let dir = std::env::temp_dir().join(format!("mfls-trainer-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("linreg_train.hlo.txt"), LINREG_TRAIN).unwrap();
+        std::fs::write(dir.join("linreg_eval.hlo.txt"), LINREG_EVAL).unwrap();
+        let art = AppArtifacts {
+            name: "linreg".into(),
+            param_count: 1,
+            batch: 2,
+            feature_dim: 1,
+            n_classes: 1,
+            train_hlo: dir.join("linreg_train.hlo.txt"),
+            eval_hlo: dir.join("linreg_eval.hlo.txt"),
+            init_params: dir.join("linreg_init.bin"),
+        };
+        (dir, art)
+    }
+
+    #[test]
+    fn pjrt_trainer_learns_linear_coefficient() {
+        let engine = Engine::cpu().unwrap();
+        let (dir, art) = artifacts_in_tmp();
+        // Data: y = 3x over 8 samples.
+        let xs: Vec<f32> = (1..=8).map(|i| i as f32 / 8.0).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 3.0 * x).collect();
+        let shard = Shard {
+            x_train: xs.clone(),
+            y_train: ys.clone(),
+            x_test: xs[..4].to_vec(),
+            y_test: ys[..4].to_vec(),
+            feature_dim: 1,
+        };
+        let mut t = PjrtTrainer::new(&engine, &art, shard, 5).unwrap();
+        let w0 = vec![0.0f32];
+        let (l0, _) = t.evaluate(&w0).unwrap();
+        let mut w = w0;
+        for round in 0..20 {
+            w = t.train_round(&w, round).unwrap();
+        }
+        let (l1, _) = t.evaluate(&w).unwrap();
+        assert!(l1 < l0 * 0.05, "loss {l0} → {l1}");
+        assert!((w[0] - 3.0).abs() < 0.2, "w={}", w[0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_batch_count_and_fedavg_weighting() {
+        let engine = Engine::cpu().unwrap();
+        let (dir, art) = artifacts_in_tmp();
+        let shard = Shard {
+            x_train: vec![0.5; 7], // 7 samples → 3 full batches of 2
+            y_train: vec![1.0; 7],
+            x_test: vec![0.5; 2],
+            y_test: vec![1.0; 2],
+            feature_dim: 1,
+        };
+        let t = PjrtTrainer::new(&engine, &art, shard, 1).unwrap();
+        assert_eq!(t.n_train_samples(), 7);
+        assert_eq!(t.n_test_samples(), 2); // 2 test samples = 1 full batch
+        assert_eq!(t.batch_views(&t.shard.x_train, &t.shard.y_train).len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

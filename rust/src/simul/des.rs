@@ -1,0 +1,212 @@
+//! A minimal discrete-event simulation (DES) engine.
+//!
+//! The failure-simulation experiments of the paper (§5.6, Tables 5–8) run FL
+//! jobs lasting simulated *hours* under Poisson revocation processes. We
+//! advance a virtual clock through a priority queue of events instead of
+//! sleeping in wall-clock time. Ties are broken by insertion order (FIFO) so
+//! simulations are fully deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+/// Handle used to cancel a scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+struct Scheduled<E> {
+    time: SimTime,
+    seq: u64,
+    id: EventId,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock.
+pub struct Simulator<E> {
+    queue: BinaryHeap<Scheduled<E>>,
+    cancelled: std::collections::HashSet<EventId>,
+    now: SimTime,
+    seq: u64,
+    next_id: u64,
+}
+
+impl<E> Default for Simulator<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Simulator<E> {
+    pub fn new() -> Self {
+        Self {
+            queue: BinaryHeap::new(),
+            cancelled: std::collections::HashSet::new(),
+            now: SimTime::ZERO,
+            seq: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `payload` to fire at absolute time `at`.
+    ///
+    /// Panics if `at` is in the (virtual) past: the engine never rewinds.
+    pub fn schedule_at(&mut self, at: SimTime, payload: E) -> EventId {
+        assert!(
+            at >= self.now,
+            "cannot schedule into the past: at={} now={}",
+            at.secs(),
+            self.now.secs()
+        );
+        let id = EventId(self.next_id);
+        self.next_id += 1;
+        self.queue.push(Scheduled {
+            time: at,
+            seq: self.seq,
+            id,
+            payload,
+        });
+        self.seq += 1;
+        id
+    }
+
+    /// Schedule `payload` to fire `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, payload: E) -> EventId {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, payload)
+    }
+
+    /// Cancel a previously scheduled event. Returns true if the event had not
+    /// yet fired (cancellation is lazy: the entry is dropped at pop time).
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        self.cancelled.insert(id)
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next_event(&mut self) -> Option<(SimTime, E)> {
+        while let Some(ev) = self.queue.pop() {
+            if self.cancelled.remove(&ev.id) {
+                continue;
+            }
+            debug_assert!(ev.time >= self.now);
+            self.now = ev.time;
+            return Some((ev.time, ev.payload));
+        }
+        None
+    }
+
+    /// Peek at the timestamp of the next (non-cancelled) event.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while let Some(ev) = self.queue.peek() {
+            if self.cancelled.contains(&ev.id) {
+                let ev = self.queue.pop().unwrap();
+                self.cancelled.remove(&ev.id);
+                continue;
+            }
+            return Some(ev.time);
+        }
+        None
+    }
+
+    /// Number of pending (possibly cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.peek_time().is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Simulator::new();
+        sim.schedule_in(5.0, "c");
+        sim.schedule_in(1.0, "a");
+        sim.schedule_in(3.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| sim.next_event()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(sim.now().secs(), 5.0);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut sim = Simulator::new();
+        sim.schedule_at(SimTime::from_secs(2.0), 1);
+        sim.schedule_at(SimTime::from_secs(2.0), 2);
+        sim.schedule_at(SimTime::from_secs(2.0), 3);
+        let order: Vec<_> = std::iter::from_fn(|| sim.next_event()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cancel_suppresses_event() {
+        let mut sim = Simulator::new();
+        let a = sim.schedule_in(1.0, "a");
+        sim.schedule_in(2.0, "b");
+        sim.cancel(a);
+        assert_eq!(sim.next_event().map(|(_, e)| e), Some("b"));
+        assert!(sim.next_event().is_none());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut sim = Simulator::new();
+        sim.schedule_in(10.0, ());
+        sim.schedule_in(20.0, ());
+        let t1 = sim.next_event().unwrap().0;
+        // Scheduling relative to the advanced clock.
+        sim.schedule_in(1.0, ());
+        let t2 = sim.next_event().unwrap().0;
+        assert_eq!(t1.secs(), 10.0);
+        assert_eq!(t2.secs(), 11.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scheduling_into_past_panics() {
+        let mut sim = Simulator::new();
+        sim.schedule_in(5.0, ());
+        sim.next_event();
+        sim.schedule_at(SimTime::from_secs(1.0), ());
+    }
+
+    #[test]
+    fn peek_skips_cancelled() {
+        let mut sim = Simulator::new();
+        let a = sim.schedule_in(1.0, "a");
+        sim.schedule_in(2.0, "b");
+        sim.cancel(a);
+        assert_eq!(sim.peek_time().unwrap().secs(), 2.0);
+    }
+}

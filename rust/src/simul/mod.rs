@@ -1,0 +1,11 @@
+//! Simulation substrate: deterministic RNG, virtual time, and a
+//! discrete-event engine. These are the foundations of the multi-cloud
+//! simulator in [`crate::cloudsim`].
+
+pub mod des;
+pub mod rng;
+pub mod time;
+
+pub use des::{EventId, Simulator};
+pub use rng::Rng;
+pub use time::SimTime;

@@ -1,0 +1,107 @@
+//! Simulation time: a totally-ordered wrapper over `f64` seconds.
+//!
+//! Virtual time is measured in seconds since experiment start. We keep it as
+//! `f64` (sub-second billing granularity matters: providers bill per second)
+//! but wrap it so it can live inside `BinaryHeap` keys.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time, in seconds since the simulation epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    pub fn from_secs(s: f64) -> Self {
+        debug_assert!(s.is_finite(), "non-finite SimTime");
+        SimTime(s)
+    }
+
+    pub fn from_hms(h: u64, m: u64, s: u64) -> Self {
+        SimTime((h * 3600 + m * 60 + s) as f64)
+    }
+
+    /// Render as `H:MM:SS` the way the paper's tables report execution times.
+    pub fn hms(self) -> String {
+        let total = self.0.round().max(0.0) as u64;
+        format!("{}:{:02}:{:02}", total / 3600, (total / 60) % 60, total % 60)
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        if self.0 >= other.0 {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Eq for SimTime {}
+
+impl PartialOrd for SimTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SimTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Times are always finite (enforced at construction).
+        self.0.partial_cmp(&other.0).expect("non-finite SimTime")
+    }
+}
+
+impl Add<f64> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: f64) -> SimTime {
+        SimTime(self.0 + rhs)
+    }
+}
+
+impl AddAssign<f64> for SimTime {
+    fn add_assign(&mut self, rhs: f64) {
+        self.0 += rhs;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = f64;
+    fn sub(self, rhs: SimTime) -> f64 {
+        self.0 - rhs.0
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hms_formatting() {
+        assert_eq!(SimTime::from_secs(0.0).hms(), "0:00:00");
+        assert_eq!(SimTime::from_hms(3, 4, 37).hms(), "3:04:37");
+        assert_eq!(SimTime::from_secs(11077.0).hms(), "3:04:37");
+        assert_eq!(SimTime::from_hms(10, 1, 46).hms(), "10:01:46");
+    }
+
+    #[test]
+    fn ordering_and_arithmetic() {
+        let a = SimTime::from_secs(1.0);
+        let b = a + 2.5;
+        assert!(b > a);
+        assert_eq!(b - a, 2.5);
+        assert_eq!(a.max(b), b);
+    }
+}

@@ -1,0 +1,236 @@
+//! 0/1 branch-and-bound MILP solver over the simplex LP relaxation.
+//!
+//! Used by the generic route of the Initial Mapping formulation (the
+//! specialized enumerative solver in [`crate::mapping::exact`] is the
+//! production path; this one cross-checks it and exists as a reusable
+//! substrate).
+
+use super::lp::{Lp, Rel, Solution};
+
+/// A mixed 0/1 integer program: the LP plus a set of variables restricted to
+/// {0, 1}. Callers should also add `x ≤ 1` rows for binaries (done by
+/// [`Milp::new`]).
+#[derive(Debug, Clone)]
+pub struct Milp {
+    pub lp: Lp,
+    pub binaries: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MilpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Search statistics (nodes explored) for benchmarking.
+    pub nodes: usize,
+}
+
+impl Milp {
+    pub fn new(mut lp: Lp, binaries: Vec<usize>) -> Self {
+        for &b in &binaries {
+            lp.add_upper_bound(b, 1.0);
+        }
+        Milp { lp, binaries }
+    }
+}
+
+const INT_TOL: f64 = 1e-6;
+
+/// Solve by DFS branch-and-bound, branching on the most fractional binary,
+/// exploring the nearer-integer branch first. Returns None when infeasible.
+pub fn solve(milp: &Milp) -> Option<MilpSolution> {
+    let mut best: Option<(Vec<f64>, f64)> = None;
+    let mut nodes = 0usize;
+    // Stack of (fixed assignments) — each entry is (var, value) list delta.
+    let mut stack: Vec<Vec<(usize, f64)>> = vec![Vec::new()];
+
+    while let Some(fixed) = stack.pop() {
+        nodes += 1;
+        // Build the node LP: base + equality fixings.
+        let mut lp = milp.lp.clone();
+        for &(v, val) in &fixed {
+            lp.add(vec![(v, 1.0)], Rel::Eq, val);
+        }
+        let sol = super::lp::solve(&lp);
+        let Solution::Optimal { x, objective } = sol else {
+            continue; // infeasible / unbounded node
+        };
+        // Bound: prune if not better than incumbent.
+        if let Some((_, inc)) = &best {
+            if objective >= *inc - 1e-9 {
+                continue;
+            }
+        }
+        // Find most fractional binary.
+        let mut branch_var = None;
+        let mut worst_frac = INT_TOL;
+        for &b in &milp.binaries {
+            let f = (x[b] - x[b].round()).abs();
+            if f > worst_frac {
+                worst_frac = f;
+                branch_var = Some(b);
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral → new incumbent.
+                best = Some((x, objective));
+            }
+            Some(b) => {
+                let frac = milp.lp.objective.len(); // silence unused in release
+                let _ = frac;
+                let near = x[b].round().clamp(0.0, 1.0);
+                let far = 1.0 - near;
+                // Push far first so near is explored first (LIFO).
+                let mut fixed_far = fixed.clone();
+                fixed_far.push((b, far));
+                stack.push(fixed_far);
+                let mut fixed_near = fixed;
+                fixed_near.push((b, near));
+                stack.push(fixed_near);
+            }
+        }
+    }
+    best.map(|(x, objective)| MilpSolution { x, objective, nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simul::Rng;
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 13b + 7c s.t. 3a + 4b + 2c ≤ 6 → b + c = 20.
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, -10.0);
+        lp.set_objective(1, -13.0);
+        lp.set_objective(2, -7.0);
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Rel::Le, 6.0);
+        let milp = Milp::new(lp, vec![0, 1, 2]);
+        let sol = solve(&milp).unwrap();
+        assert!((sol.objective + 20.0).abs() < 1e-6, "obj={}", sol.objective);
+        assert!(sol.x[1] > 0.5 && sol.x[2] > 0.5 && sol.x[0] < 0.5);
+    }
+
+    #[test]
+    fn infeasible_binary_program() {
+        // a + b = 3 with binaries is impossible.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Rel::Eq, 3.0);
+        let milp = Milp::new(lp, vec![0, 1]);
+        assert!(solve(&milp).is_none());
+    }
+
+    #[test]
+    fn assignment_each_task_one_machine() {
+        // 2 tasks × 2 machines, cost [[1, 10], [10, 1]]; each task exactly
+        // one machine → diagonal, cost 2.
+        let mut lp = Lp::new(4); // x(t,m) = t*2+m
+        for (i, c) in [1.0, 10.0, 10.0, 1.0].iter().enumerate() {
+            lp.set_objective(i, *c);
+        }
+        lp.add(vec![(0, 1.0), (1, 1.0)], Rel::Eq, 1.0);
+        lp.add(vec![(2, 1.0), (3, 1.0)], Rel::Eq, 1.0);
+        let milp = Milp::new(lp, vec![0, 1, 2, 3]);
+        let sol = solve(&milp).unwrap();
+        assert!((sol.objective - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixed_continuous_and_binary() {
+        // min y + 0.1t : t ≥ 5y, t ≥ 3(1-y), t continuous.
+        // y=0 → t=3 cost 0.3; y=1 → t=5 cost 1.5. Expect y=0.
+        let mut lp = Lp::new(2); // y=0, t=1
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 0.1);
+        lp.add(vec![(1, 1.0), (0, -5.0)], Rel::Ge, 0.0);
+        lp.add(vec![(1, 1.0), (0, 3.0)], Rel::Ge, 3.0);
+        let milp = Milp::new(lp, vec![0]);
+        let sol = solve(&milp).unwrap();
+        assert!(sol.x[0] < 0.5);
+        assert!((sol.objective - 0.3).abs() < 1e-6);
+    }
+
+    /// Brute-force 0/1 reference.
+    fn brute_force(milp: &Milp) -> Option<f64> {
+        let nb = milp.binaries.len();
+        let mut best: Option<f64> = None;
+        for mask in 0u32..(1 << nb) {
+            let mut lp = milp.lp.clone();
+            for (bit, &v) in milp.binaries.iter().enumerate() {
+                let val = if mask >> bit & 1 == 1 { 1.0 } else { 0.0 };
+                lp.add(vec![(v, 1.0)], Rel::Eq, val);
+            }
+            if let Solution::Optimal { objective, .. } = crate::solver::lp::solve(&lp) {
+                best = Some(best.map_or(objective, |b: f64| b.min(objective)));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn random_knapsacks_match_brute_force() {
+        crate::util::testkit::forall(
+            "bb vs brute force knapsack",
+            0xBEEF,
+            30,
+            |rng: &mut Rng| {
+                let n = 3 + rng.next_below(4) as usize; // 3..6 items
+                let mut lp = Lp::new(n);
+                let mut weights = Vec::new();
+                for i in 0..n {
+                    lp.set_objective(i, -rng.uniform(1.0, 20.0)); // maximize value
+                    weights.push((i, rng.uniform(1.0, 10.0)));
+                }
+                let cap = rng.uniform(5.0, 25.0);
+                lp.add(weights, Rel::Le, cap);
+                Milp::new(lp, (0..n).collect())
+            },
+            |milp| {
+                let got = solve(milp).map(|s| s.objective);
+                let want = brute_force(milp);
+                match (got, want) {
+                    (Some(g), Some(w)) if (g - w).abs() < 1e-5 => Ok(()),
+                    (None, None) => Ok(()),
+                    other => Err(format!("bb {:?} vs brute {:?}", other.0, other.1)),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn random_assignment_with_capacity_matches_brute_force() {
+        crate::util::testkit::forall(
+            "bb vs brute force capacitated assignment",
+            0xFEED,
+            20,
+            |rng: &mut Rng| {
+                // 2 tasks × 3 machines with machine capacity 1 on a random
+                // machine, random costs.
+                let nt = 2;
+                let nm = 3;
+                let mut lp = Lp::new(nt * nm);
+                for i in 0..nt * nm {
+                    lp.set_objective(i, rng.uniform(1.0, 10.0));
+                }
+                for t in 0..nt {
+                    let row = (0..nm).map(|m| (t * nm + m, 1.0)).collect();
+                    lp.add(row, Rel::Eq, 1.0);
+                }
+                let tight = rng.next_below(nm as u64) as usize;
+                lp.add((0..nt).map(|t| (t * nm + tight, 1.0)).collect(), Rel::Le, 1.0);
+                Milp::new(lp, (0..nt * nm).collect())
+            },
+            |milp| {
+                let got = solve(milp).map(|s| s.objective);
+                let want = brute_force(milp);
+                match (got, want) {
+                    (Some(g), Some(w)) if (g - w).abs() < 1e-5 => Ok(()),
+                    (None, None) => Ok(()),
+                    other => Err(format!("bb {:?} vs brute {:?}", other.0, other.1)),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Optimization substrate: a dense two-phase simplex LP solver ([`lp`]) and
+//! a 0/1 branch-and-bound MILP solver over it ([`bb`]). Built from scratch;
+//! used by the Initial Mapping module (§4.2).
+
+pub mod bb;
+pub mod lp;
+
+pub use bb::{solve as solve_milp, Milp, MilpSolution};
+pub use lp::{solve as solve_lp, Constraint, Lp, Rel, Solution};

@@ -1,0 +1,622 @@
+//! Reproduction drivers for every table and figure in §5 of the paper.
+
+use crate::apps;
+use crate::cloud::{tables, Market};
+use crate::cloudsim::{MultiCloud, RevocationModel};
+use crate::coordinator::{run_trials, Scenario, SimConfig, TrialStats};
+use crate::dynsched::DynSchedPolicy;
+use crate::mapping::problem::MappingProblem;
+use crate::presched::PreScheduler;
+use crate::simul::SimTime;
+use crate::util::bench::Table;
+use crate::util::Json;
+
+/// Rounds used for the long-running TIL failure/checkpoint experiments
+/// (§5.5 "the number of rounds of the application was increased"; 80 rounds
+/// reproduces the ≈3 h executions of Fig. 2 / Tables 5–6).
+pub const TIL_EXTENDED_ROUNDS: u32 = 80;
+
+/// The paper's tables use 3-run averages.
+pub const TRIALS: usize = 3;
+
+fn cloudlab_sim() -> MultiCloud {
+    MultiCloud::new(
+        tables::cloudlab(),
+        tables::cloudlab_ground_truth(),
+        RevocationModel::none(),
+        1,
+    )
+}
+
+/// Table 3: execution slowdowns of every VM type (dummy TIL client, two
+/// rounds, baseline vm121).
+pub fn table3() -> (Table, Json) {
+    let mc = cloudlab_sim();
+    let report = PreScheduler::new(&mc).measure_defaults();
+    let mut t = Table::new(
+        "Table 3 — execution slowdowns (dummy app, baseline vm121)",
+        &["Cloud", "Region", "VM", "Train r1", "Train r2", "Test r1", "Test r2", "Slowdown"],
+    );
+    let mut rows = Vec::new();
+    let mut vms: Vec<_> = mc.catalog.vm_ids().collect();
+    vms.sort_by_key(|&v| mc.catalog.vm(v).id.clone());
+    for vm in vms {
+        let spec = mc.catalog.vm(vm);
+        let region = mc.catalog.region(spec.region);
+        let provider = mc.catalog.provider(region.provider);
+        let d = report.dummy_runs[&vm];
+        let sl = report.sl_inst(vm);
+        t.row(&[
+            provider.name.clone(),
+            region.name.clone(),
+            spec.id.clone(),
+            format!("{:.2}", d.train_r1),
+            format!("{:.2}", d.train_r2),
+            format!("{:.2}", d.test_r1),
+            format!("{:.2}", d.test_r2),
+            format!("{sl:.3}"),
+        ]);
+        rows.push(Json::obj().set("vm", spec.id.clone()).set("slowdown", sl));
+    }
+    (t, Json::obj().set("table", "3").set("rows", Json::Arr(rows)))
+}
+
+/// Table 4: communication slowdowns of every region pair (2 GB train + 1 GB
+/// test messages, baseline APT–APT).
+pub fn table4() -> (Table, Json) {
+    let mc = cloudlab_sim();
+    let report = PreScheduler::new(&mc).measure_defaults();
+    let mut t = Table::new(
+        "Table 4 — communication slowdowns (baseline APT–APT)",
+        &["Pair of regions", "Training (s)", "Test (s)", "Slowdown"],
+    );
+    let mut rows = Vec::new();
+    let mut pairs: Vec<_> = report.comm_runs.keys().copied().collect();
+    pairs.sort();
+    for (a, b) in pairs {
+        let c = report.comm_runs[&(a, b)];
+        let sl = report.sl_comm(a, b);
+        let name = format!(
+            "{}-{}",
+            mc.catalog.region(a).name,
+            mc.catalog.region(b).name
+        );
+        t.row(&[
+            name.clone(),
+            format!("{:.2}", c.train_secs),
+            format!("{:.2}", c.test_secs),
+            format!("{sl:.3}"),
+        ]);
+        rows.push(Json::obj().set("pair", name).set("slowdown", sl));
+    }
+    (t, Json::obj().set("table", "4").set("rows", Json::Arr(rows)))
+}
+
+/// §5.4 validation: Initial Mapping prediction vs simulated execution for
+/// the 10-round TIL job on on-demand VMs.
+pub fn validation_5_4() -> (Table, Json) {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+    cfg.checkpoints_enabled = false;
+    let out = crate::coordinator::simulate(&cfg).expect("simulation");
+    let predicted_10 = out.predicted_round_makespan * 10.0;
+    let mut t = Table::new(
+        "§5.4 — Initial Mapping validation (TIL, 10 rounds, on-demand)",
+        &["Quantity", "Model prediction", "Simulated execution", "Paper (predicted/measured)"],
+    );
+    t.row(&[
+        "FL execution time".into(),
+        SimTime::from_secs(predicted_10).hms(),
+        SimTime::from_secs(out.fl_exec_secs).hms(),
+        "22:38 / 24:47".into(),
+    ]);
+    t.row(&[
+        "Cost".into(),
+        format!("${:.2}", out.predicted_round_cost * 10.0),
+        format!("${:.2}", out.total_cost),
+        "$15.44 / $16.18".into(),
+    ]);
+    t.row(&[
+        "Server VM".into(),
+        out.initial_server.clone(),
+        out.initial_server.clone(),
+        "vm121".into(),
+    ]);
+    t.row(&[
+        "Client VMs".into(),
+        format!("4×{}", out.initial_clients[0]),
+        format!("4×{}", out.initial_clients[0]),
+        "4×vm126".into(),
+    ]);
+    let j = Json::obj()
+        .set("experiment", "validation-5.4")
+        .set("predicted_secs", predicted_10)
+        .set("simulated_secs", out.fl_exec_secs)
+        .set("predicted_cost", out.predicted_round_cost * 10.0)
+        .set("simulated_cost", out.total_cost)
+        .set("server", out.initial_server)
+        .set("clients", out.initial_clients);
+    (t, j)
+}
+
+/// Fig. 2: server checkpoint overhead for X ∈ {10,20,30,40} plus the client
+/// per-round checkpoint overhead (§5.5), on the extended TIL run.
+pub fn fig2() -> (Table, Json) {
+    let base = |seed: u64| {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, seed);
+        cfg.n_rounds = TIL_EXTENDED_ROUNDS;
+        cfg
+    };
+    // Baseline: no checkpoints at all.
+    let mut no_ckpt = base(42);
+    no_ckpt.checkpoints_enabled = false;
+    let t_none = crate::coordinator::simulate(&no_ckpt).unwrap();
+
+    let mut t = Table::new(
+        "Fig. 2 — checkpoint overhead (TIL, 80 rounds)",
+        &["Configuration", "Multi-FedLS time", "FL exec time", "Overhead vs no ckpt", "Paper"],
+    );
+    let mut rows = Vec::new();
+    t.row(&[
+        "no checkpoints".into(),
+        SimTime::from_secs(t_none.total_secs).hms(),
+        SimTime::from_secs(t_none.fl_exec_secs).hms(),
+        "—".into(),
+        "—".into(),
+    ]);
+    for (x, paper) in [(10u32, "7.55%"), (20, "~7%"), (30, "6.29%"), (40, "~6.5%")] {
+        let mut cfg = base(42);
+        cfg.ft.server_every_rounds = x;
+        cfg.ft.client_checkpoint = false;
+        let out = crate::coordinator::simulate(&cfg).unwrap();
+        let ovh = (out.fl_exec_secs - t_none.fl_exec_secs) / t_none.fl_exec_secs * 100.0;
+        t.row(&[
+            format!("server ckpt every {x} rounds"),
+            SimTime::from_secs(out.total_secs).hms(),
+            SimTime::from_secs(out.fl_exec_secs).hms(),
+            format!("{ovh:.2}%"),
+            paper.into(),
+        ]);
+        rows.push(Json::obj().set("every", x as i64).set("overhead_pct", ovh));
+    }
+    // Client checkpoint every round (server ckpt off).
+    let mut cfg = base(42);
+    cfg.ft.client_checkpoint = true;
+    cfg.ft.server_every_rounds = u32::MAX;
+    let out = crate::coordinator::simulate(&cfg).unwrap();
+    // Disable the server's armed-checkpoint constant for this row by
+    // comparing against the armed baseline: the paper measures the client
+    // overhead separately at 2.17%.
+    let client_only_ovh = (out.fl_exec_secs - t_none.fl_exec_secs) / t_none.fl_exec_secs * 100.0
+        - cfg.ft.server_round_overhead_secs * TIL_EXTENDED_ROUNDS as f64 / t_none.fl_exec_secs
+            * 100.0;
+    t.row(&[
+        "client ckpt every round".into(),
+        SimTime::from_secs(out.total_secs).hms(),
+        SimTime::from_secs(out.fl_exec_secs).hms(),
+        format!("{client_only_ovh:.2}%"),
+        "2.17%".into(),
+    ]);
+    rows.push(Json::obj().set("every", "client").set("overhead_pct", client_only_ovh));
+    (t, Json::obj().set("figure", "2").set("rows", Json::Arr(rows)))
+}
+
+/// A failure-simulation table (Tables 5–8 share this shape).
+fn failure_table(
+    title: &str,
+    app: apps::AppSpec,
+    n_rounds: u32,
+    rates: &[f64],
+    policy: DynSchedPolicy,
+    seed: u64,
+    paper_rows: &[(&str, f64, &str, &str)],
+) -> (Table, Json) {
+    let mut t = Table::new(
+        title,
+        &[
+            "Scenario",
+            "k_r",
+            "Avg # revoc.",
+            "Avg exec. time",
+            "Avg total costs",
+            "Paper (revoc/time/cost)",
+        ],
+    );
+    let mut rows = Vec::new();
+    for (si, scenario) in [Scenario::AllSpot, Scenario::OnDemandServer].iter().enumerate() {
+        let _ = si;
+        for (ri, &k_r) in rates.iter().enumerate() {
+            let mut cfg = SimConfig::new(app.clone(), *scenario, seed);
+            cfg.n_rounds = n_rounds;
+            cfg.revocation_mean_secs = Some(k_r);
+            cfg.dynsched_policy = policy;
+            // §5.6.1: the paper observed at most one revocation per task.
+            cfg.max_revocations_per_task = Some(1);
+            // Scenarios share the same seed base per rate so their client
+            // revocation draws are comparable (the server simply has no
+            // revocation in the on-demand scenario).
+            let stats = run_trials(&cfg, TRIALS, seed + ri as u64 * 1000).expect("trials");
+            let paper = paper_rows
+                .iter()
+                .find(|(s, k, _, _)| {
+                    *k == k_r
+                        && ((matches!(scenario, Scenario::AllSpot) && s.contains("spot"))
+                            || (matches!(scenario, Scenario::OnDemandServer) && s.contains("demand")))
+                })
+                .map(|(_, _, time, cost)| format!("{time} / {cost}"))
+                .unwrap_or_else(|| "—".into());
+            t.row(&[
+                scenario.label().into(),
+                format!("{}h", k_r / 3600.0),
+                format!("{:.2}", stats.avg_revocations),
+                stats.exec_hms(),
+                format!("${:.2}", stats.avg_cost),
+                paper,
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("scenario", scenario.label())
+                    .set("k_r", k_r)
+                    .set("avg_revocations", stats.avg_revocations)
+                    .set("avg_total_secs", stats.avg_total_secs)
+                    .set("avg_cost", stats.avg_cost),
+            );
+        }
+    }
+    (t, Json::obj().set("table", title).set("rows", Json::Arr(rows)))
+}
+
+/// Table 5: TIL failure simulation, restart on a *different* VM type.
+pub fn table5() -> (Table, Json) {
+    failure_table(
+        "Table 5 — TIL failure simulation (restart on different VM type)",
+        apps::til(),
+        TIL_EXTENDED_ROUNDS,
+        &[7200.0, 14400.0],
+        DynSchedPolicy::different_vm(),
+        50,
+        &[
+            ("spot", 7200.0, "10:01:46", "$81.12"),
+            ("spot", 14400.0, "3:04:37", "$15.64"),
+            ("on-demand", 7200.0, "6:31:44", "$55.60"),
+            ("on-demand", 14400.0, "3:05:39", "$19.27"),
+        ],
+    )
+}
+
+/// Table 6: TIL failure simulation, same VM type allowed on restart.
+pub fn table6() -> (Table, Json) {
+    failure_table(
+        "Table 6 — TIL failure simulation (restart on same VM type)",
+        apps::til(),
+        TIL_EXTENDED_ROUNDS,
+        &[7200.0, 14400.0],
+        DynSchedPolicy::same_vm_allowed(),
+        60,
+        &[
+            ("spot", 7200.0, "4:14:16", "$22.55"),
+            ("spot", 14400.0, "3:04:35", "$15.64"),
+            ("on-demand", 7200.0, "3:14:38", "$20.16"),
+            ("on-demand", 14400.0, "3:01:49", "$18.99"),
+        ],
+    )
+}
+
+/// Table 7: Shakespeare failure simulation (20 rounds × 20 epochs).
+pub fn table7() -> (Table, Json) {
+    failure_table(
+        "Table 7 — Shakespeare failure simulation (same VM type)",
+        apps::shakespeare(),
+        20,
+        &[3600.0, 7200.0],
+        DynSchedPolicy::same_vm_allowed(),
+        70,
+        &[
+            ("spot", 3600.0, "2:17:12", "$20.02"),
+            ("spot", 7200.0, "1:58:31", "$17.03"),
+            ("on-demand", 3600.0, "2:32:12", "$23.46"),
+            ("on-demand", 7200.0, "1:57:56", "$17.27"),
+        ],
+    )
+}
+
+/// Table 8: FEMNIST failure simulation (100 rounds × 100 epochs).
+pub fn table8() -> (Table, Json) {
+    failure_table(
+        "Table 8 — FEMNIST failure simulation (same VM type)",
+        apps::femnist(),
+        100,
+        &[3600.0, 7200.0],
+        DynSchedPolicy::same_vm_allowed(),
+        80,
+        &[
+            ("spot", 3600.0, "2:34:33", "$14.63"),
+            ("spot", 7200.0, "1:52:21", "$10.21"),
+            ("on-demand", 3600.0, "2:38:05", "$16.10"),
+            ("on-demand", 7200.0, "1:56:02", "$11.35"),
+        ],
+    )
+}
+
+/// §5.7: AWS/GCP proof of concept — on-demand vs all-spot with k_r = 2 h.
+pub fn poc_aws_gcp() -> (Table, Json) {
+    let mut od = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, 90);
+    od.checkpoints_enabled = false;
+    let od_stats = run_trials(&od, TRIALS, 90).unwrap();
+
+    let mut spot = SimConfig::new(apps::til_aws_gcp(), Scenario::AllSpot, 91);
+    spot.revocation_mean_secs = Some(7200.0);
+    spot.dynsched_policy = DynSchedPolicy::different_vm();
+    spot.max_revocations_per_task = Some(1); // §5.6.1 observed regime
+    spot.checkpoints_enabled = true;
+    let spot_stats = run_trials(&spot, TRIALS, 91).unwrap();
+
+    let cost_reduction = (od_stats.avg_cost - spot_stats.avg_cost) / od_stats.avg_cost * 100.0;
+    let time_increase =
+        (spot_stats.avg_total_secs - od_stats.avg_total_secs) / od_stats.avg_total_secs * 100.0;
+
+    let mut t = Table::new(
+        "§5.7 — AWS/GCP proof of concept (TIL, 2 clients, 10 rounds)",
+        &["Configuration", "Avg # revoc.", "Avg time", "Avg cost", "Paper"],
+    );
+    t.row(&[
+        "all on-demand".into(),
+        format!("{:.2}", od_stats.avg_revocations),
+        od_stats.exec_hms(),
+        format!("${:.2}", od_stats.avg_cost),
+        "0 / 2:00:18 / $3.28".into(),
+    ]);
+    t.row(&[
+        "all spot, k_r = 2h".into(),
+        format!("{:.2}", spot_stats.avg_revocations),
+        spot_stats.exec_hms(),
+        format!("${:.2}", spot_stats.avg_cost),
+        "1.33 / 2:06:51 / $1.41".into(),
+    ]);
+    t.row(&[
+        "cost reduction / time increase".into(),
+        "—".into(),
+        format!("+{time_increase:.2}%"),
+        format!("-{cost_reduction:.2}%"),
+        "-56.92% cost, +5.44% time".into(),
+    ]);
+    let j = Json::obj()
+        .set("experiment", "poc-aws-gcp")
+        .set("on_demand_cost", od_stats.avg_cost)
+        .set("spot_cost", spot_stats.avg_cost)
+        .set("cost_reduction_pct", cost_reduction)
+        .set("time_increase_pct", time_increase)
+        .set("on_demand_secs", od_stats.avg_total_secs)
+        .set("spot_secs", spot_stats.avg_total_secs);
+    (t, j)
+}
+
+/// Solver comparison (ours): exact vs linearized-MILP vs greedy baselines on
+/// the TIL instance — the quality/latency ablation DESIGN.md calls out.
+pub fn mapping_comparison() -> (Table, Json) {
+    let mc = cloudlab_sim();
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let job = apps::til().profile();
+    let mut t = Table::new(
+        "Initial Mapping — solver comparison (TIL on CloudLab)",
+        &["alpha", "Solver", "Objective", "Makespan (s)", "Cost ($/round)", "Feasible"],
+    );
+    let mut rows = Vec::new();
+    for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let exact = crate::mapping::exact::solve(&p).unwrap();
+        t.row(&[
+            format!("{alpha}"),
+            "exact (ours)".into(),
+            format!("{:.5}", exact.eval.objective),
+            format!("{:.1}", exact.eval.makespan),
+            format!("{:.4}", exact.eval.total_cost),
+            "yes".into(),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("alpha", alpha)
+                .set("solver", "exact")
+                .set("objective", exact.eval.objective),
+        );
+        for (name, mapping) in crate::mapping::baselines::all(&p) {
+            if let Some(m) = mapping {
+                let ev = p.evaluate(&m);
+                t.row(&[
+                    format!("{alpha}"),
+                    name.into(),
+                    format!("{:.5}", ev.objective),
+                    format!("{:.1}", ev.makespan),
+                    format!("{:.4}", ev.total_cost),
+                    if ev.feasible { "yes".into() } else { "no".into() },
+                ]);
+                rows.push(
+                    Json::obj()
+                        .set("alpha", alpha)
+                        .set("solver", name)
+                        .set("objective", ev.objective),
+                );
+            }
+        }
+    }
+    (t, Json::obj().set("experiment", "mapping-comparison").set("rows", Json::Arr(rows)))
+}
+
+/// Ablation (ours): how the user weight α trades cost for makespan on the
+/// TIL/CloudLab instance — sweeps the whole [0,1] range and reports the
+/// chosen placement at each point.
+pub fn alpha_sweep() -> (Table, Json) {
+    let mc = cloudlab_sim();
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let job = apps::til().profile();
+    let mut t = Table::new(
+        "Ablation — α sweep (TIL on CloudLab, spot prices)",
+        &["alpha", "Server", "Clients", "Makespan (s)", "Cost ($/round)"],
+    );
+    let mut rows = Vec::new();
+    for i in 0..=10 {
+        let alpha = i as f64 / 10.0;
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha,
+            market: Market::Spot,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let sol = crate::mapping::exact::solve(&p).expect("feasible");
+        let mut names: Vec<String> = sol
+            .mapping
+            .clients
+            .iter()
+            .map(|&v| mc.catalog.vm(v).id.clone())
+            .collect();
+        names.sort();
+        names.dedup();
+        t.row(&[
+            format!("{alpha:.1}"),
+            mc.catalog.vm(sol.mapping.server).id.clone(),
+            names.join("+"),
+            format!("{:.1}", sol.eval.makespan),
+            format!("{:.4}", sol.eval.total_cost),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("alpha", alpha)
+                .set("makespan", sol.eval.makespan)
+                .set("cost", sol.eval.total_cost),
+        );
+    }
+    (t, Json::obj().set("experiment", "alpha-sweep").set("rows", Json::Arr(rows)))
+}
+
+/// Multi-application extension demo (§6 future work): three apps share the
+/// AWS+GCP quota; FIFO vs shortest-makespan-first admission.
+pub fn multijob() -> (Table, Json) {
+    use crate::coordinator::multijob::{AdmissionPolicy, MultiJobScheduler};
+    let mc = MultiCloud::new(
+        tables::aws_gcp(),
+        tables::aws_gcp_ground_truth(),
+        RevocationModel::none(),
+        1,
+    );
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let apps_list = vec![apps::til_aws_gcp(), apps::til_aws_gcp(), apps::til_aws_gcp()];
+    let mut t = Table::new(
+        "Extension — concurrent FL applications on shared AWS+GCP quota",
+        &["Policy", "Job", "Server", "Clients", "Round makespan (s)"],
+    );
+    let mut rows = Vec::new();
+    for policy in [AdmissionPolicy::Fifo, AdmissionPolicy::ShortestMakespanFirst] {
+        let mut sched = MultiJobScheduler::new(&mc.catalog, &sl, 0.5, Market::OnDemand);
+        let plan = sched.plan(&apps_list, policy);
+        for (i, j) in plan.admitted.iter().enumerate() {
+            let clients: Vec<String> =
+                j.mapping.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect();
+            t.row(&[
+                format!("{policy:?}"),
+                format!("job-{i}"),
+                mc.catalog.vm(j.mapping.server).id.clone(),
+                clients.join("+"),
+                format!("{:.1}", j.predicted_makespan),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("policy", format!("{policy:?}"))
+                    .set("job", i)
+                    .set("makespan", j.predicted_makespan),
+            );
+        }
+        for q in &plan.queued {
+            t.row(&[
+                format!("{policy:?}"),
+                q.clone(),
+                "(queued)".into(),
+                "—".into(),
+                "—".into(),
+            ]);
+        }
+    }
+    (t, Json::obj().set("experiment", "multijob").set("rows", Json::Arr(rows)))
+}
+
+/// Table 2 / Table 9 catalog dump.
+pub fn catalog_table(which: &str) -> Table {
+    let cat = if which == "aws-gcp" { tables::aws_gcp() } else { tables::cloudlab() };
+    let mut t = Table::new(
+        format!("Catalog — {}", cat.name),
+        &["Cloud", "Region", "VM", "hw", "vCPUs", "GPUs", "RAM", "On-demand $/h", "Spot $/h"],
+    );
+    for v in cat.vm_ids() {
+        let spec = cat.vm(v);
+        let region = cat.region(spec.region);
+        t.row(&[
+            cat.provider(region.provider).name.clone(),
+            region.name.clone(),
+            spec.id.clone(),
+            spec.hw_name.clone(),
+            spec.vcpus.to_string(),
+            spec.gpus.to_string(),
+            format!("{:.0}", spec.ram_gb),
+            format!("{:.3}", spec.on_demand_hourly),
+            format!("{:.3}", spec.spot_hourly),
+        ]);
+    }
+    t
+}
+
+/// Accessor used by benches to render & persist.
+pub fn stats_row(stats: &TrialStats) -> String {
+    format!(
+        "revoc={:.2} exec={} cost=${:.2}",
+        stats.avg_revocations,
+        stats.exec_hms(),
+        stats.avg_cost
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_renders_13_vms() {
+        let (t, j) = table3();
+        let s = t.render();
+        assert!(s.contains("vm126") && s.contains("0.045"));
+        assert!(s.contains("vm212") && s.contains("2.328"));
+        assert!(j.to_string_compact().contains("\"slowdown\""));
+    }
+
+    #[test]
+    fn table4_renders_15_pairs() {
+        let (t, _) = table4();
+        let s = t.render();
+        assert!(s.contains("Massachusetts-Wisconsin") || s.contains("Wisconsin-Massachusetts"));
+        // measured via the network model (includes per-message latency): ≈24.5
+        assert!(s.contains("24."));
+    }
+
+    #[test]
+    fn validation_produces_paper_scale_numbers() {
+        let (t, j) = validation_5_4();
+        let s = t.render();
+        assert!(s.contains("vm126"));
+        let js = j.to_string_compact();
+        assert!(js.contains("simulated_secs"));
+    }
+
+    #[test]
+    fn catalog_tables_render() {
+        assert!(catalog_table("cloudlab").render().contains("c240g5"));
+        assert!(catalog_table("aws-gcp").render().contains("g4dn.2xlarge"));
+    }
+}

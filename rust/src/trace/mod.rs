@@ -1,0 +1,8 @@
+//! Experiment drivers: one function per table/figure in the paper's §5,
+//! shared by the `cargo bench` binaries and the CLI's `experiment`
+//! subcommand. Each prints the paper-format rows and returns machine-usable
+//! numbers (also exposed as JSON for EXPERIMENTS.md).
+
+pub mod experiments;
+
+pub use experiments::*;

@@ -1,0 +1,224 @@
+//! A small benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` binaries (`cargo bench` runs them with
+//! `harness = false`). Provides warm-up, calibrated iteration counts, and
+//! robust statistics, plus table-rendering helpers shared with the CLI's
+//! `experiment` subcommand.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of per-iteration timings.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` repeatedly: a warm-up pass, then enough iterations to cover
+/// ~`budget` of wall time (at least `min_iters`). Returns statistics.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: F) -> Stats {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed();
+    let target = budget.as_secs_f64();
+    let per = first.as_secs_f64().max(1e-9);
+    let iters = ((target / per) as usize).clamp(min_iters, 100_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let stats = Stats::from_samples(samples);
+    println!(
+        "bench {name:<40} iters={:<6} mean={:<12} median={:<12} min={:<12} max={:<12} stddev={}",
+        stats.iters,
+        fmt_duration(stats.mean),
+        fmt_duration(stats.median),
+        fmt_duration(stats.min),
+        fmt_duration(stats.max),
+        fmt_duration(stats.stddev),
+    );
+    stats
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render an aligned ASCII table (used to print the paper's tables).
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let samples = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.median, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn bench_runs_at_least_min_iters() {
+        let mut count = 0usize;
+        let stats = bench("noop", Duration::from_millis(1), 5, || {
+            count += 1;
+        });
+        assert!(stats.iters >= 5);
+        // warm-up + measured iterations
+        assert_eq!(count, stats.iters + 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["VM", "Slowdown"]);
+        t.row(&["vm126".into(), "0.045".into()]);
+        t.row(&["vm212".into(), "2.328".into()]);
+        let s = t.render();
+        assert!(s.contains("| vm126 | 0.045    |"));
+        assert!(s.contains("== Demo =="));
+        // All lines of the body share the same width.
+        let widths: std::collections::HashSet<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert_eq!(widths.len(), 1, "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.000 µs");
+        assert_eq!(fmt_duration(Duration::from_nanos(120)), "120.0 ns");
+    }
+}

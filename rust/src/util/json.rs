@@ -1,0 +1,221 @@
+//! A small JSON value builder/writer (no serde offline), used for trace and
+//! experiment output (`--json` CLI flags, EXPERIMENTS.md raw data).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object; panics on non-objects (builder misuse).
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value.into());
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, true);
+        out
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = if pretty { "  ".repeat(indent + 1) } else { String::new() };
+        let close_pad = if pretty { "  ".repeat(indent) } else { String::new() };
+        let nl = if pretty { "\n" } else { "" };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if x.fract() == 0.0 && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                out.push_str(nl);
+                for (i, item) in items.iter().enumerate() {
+                    out.push_str(&pad);
+                    item.write(out, indent + 1, pretty);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                }
+                out.push_str(&close_pad);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                out.push_str(nl);
+                for (i, (k, v)) in map.iter().enumerate() {
+                    out.push_str(&pad);
+                    Json::Str(k.clone()).write(out, indent + 1, pretty);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                    if i + 1 < map.len() {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                }
+                out.push_str(&close_pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(xs: Vec<T>) -> Json {
+        Json::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_object() {
+        let j = Json::obj()
+            .set("name", "til")
+            .set("rounds", 10i64)
+            .set("cost", 15.44)
+            .set("spot", true);
+        assert_eq!(
+            j.to_string_compact(),
+            r#"{"cost":15.44,"name":"til","rounds":10,"spot":true}"#
+        );
+    }
+
+    #[test]
+    fn arrays_and_nesting() {
+        let j = Json::obj().set("xs", vec![1i64, 2, 3]).set("inner", Json::obj().set("a", 1i64));
+        assert_eq!(j.to_string_compact(), r#"{"inner":{"a":1},"xs":[1,2,3]}"#);
+    }
+
+    #[test]
+    fn string_escaping() {
+        let j = Json::Str("a\"b\\c\nd".into());
+        assert_eq!(j.to_string_compact(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn integers_render_without_decimal() {
+        assert_eq!(Json::Num(10.0).to_string_compact(), "10");
+        assert_eq!(Json::Num(10.5).to_string_compact(), "10.5");
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn pretty_is_reparseable_shape() {
+        let j = Json::obj().set("a", vec![1i64, 2]).set("b", "x");
+        let p = j.to_string_pretty();
+        assert!(p.contains("\n"));
+        assert!(p.contains("\"a\": ["));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::Arr(vec![]).to_string_compact(), "[]");
+        assert_eq!(Json::obj().to_string_compact(), "{}");
+    }
+}

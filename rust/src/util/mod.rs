@@ -1,0 +1,11 @@
+//! Self-contained utility substrates: mini-TOML config parsing, JSON output,
+//! a benchmarking harness, and property-testing helpers. (The build
+//! environment is offline, so these replace `toml`, `serde_json`,
+//! `criterion`, and `proptest`.)
+
+pub mod bench;
+pub mod json;
+pub mod testkit;
+pub mod tomlmini;
+
+pub use json::Json;

@@ -1,0 +1,385 @@
+//! A minimal TOML-subset parser and writer for the config system.
+//!
+//! The environment is offline (no `toml`/`serde` crates), so we implement the
+//! subset the framework's config files need:
+//!
+//! * top-level `key = value` pairs
+//! * tables: `[section]` and dotted keys within sections
+//! * arrays of tables: `[[section]]`
+//! * values: strings (basic, `"..."`), integers, floats, booleans, and
+//!   homogeneous inline arrays `[1, 2, 3]`
+//! * `#` comments and blank lines
+//!
+//! Not supported (and not needed by `configs/`): multi-line strings, dates,
+//! nested inline tables, array-of-array.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    /// A table (section) of key → value.
+    Table(BTreeMap<String, Value>),
+    /// An array of tables (`[[name]]`).
+    TableArray(Vec<BTreeMap<String, Value>>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion: ints count as floats (TOML writes `1` for `1.0`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_table_array(&self) -> Option<&[BTreeMap<String, Value>]> {
+        match self {
+            Value::TableArray(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a document into its root table.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    // Path of the currently open section; empty = root. The bool is "array
+    // of tables" (append mode).
+    let mut current: Option<(String, bool)> = None;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(err(lineno, "empty table-array name"));
+            }
+            match root
+                .entry(name.clone())
+                .or_insert_with(|| Value::TableArray(Vec::new()))
+            {
+                Value::TableArray(v) => v.push(BTreeMap::new()),
+                _ => return Err(err(lineno, format!("{name} is not an array of tables"))),
+            }
+            current = Some((name, true));
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(err(lineno, "empty table name"));
+            }
+            match root.entry(name.clone()).or_insert_with(|| Value::Table(BTreeMap::new())) {
+                Value::Table(_) => {}
+                _ => return Err(err(lineno, format!("{name} is not a table"))),
+            }
+            current = Some((name, false));
+        } else {
+            let (key, val_text) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, format!("expected key = value, got {line:?}")))?;
+            let key = key.trim().to_string();
+            let value = parse_value(val_text.trim(), lineno)?;
+            let target = match &current {
+                None => &mut root,
+                Some((name, false)) => match root.get_mut(name) {
+                    Some(Value::Table(t)) => t,
+                    _ => unreachable!("section registered above"),
+                },
+                Some((name, true)) => match root.get_mut(name) {
+                    Some(Value::TableArray(v)) => v.last_mut().expect("entry pushed above"),
+                    _ => unreachable!(),
+                },
+            };
+            if target.insert(key.clone(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key {key}")));
+            }
+        }
+    }
+    Ok(root)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, ParseError> {
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        // Minimal escapes.
+        let s = inner.replace("\\\"", "\"").replace("\\\\", "\\").replace("\\n", "\n");
+        return Ok(Value::Str(s));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    let clean = text.replace('_', "");
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value {text:?}")))
+}
+
+/// Split on commas that are not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Serialize a root table back to TOML text (sections after scalars).
+pub fn write(root: &BTreeMap<String, Value>) -> String {
+    let mut out = String::new();
+    for (k, v) in root {
+        match v {
+            Value::Table(_) | Value::TableArray(_) => {}
+            _ => {
+                out.push_str(&format!("{k} = {}\n", write_value(v)));
+            }
+        }
+    }
+    for (k, v) in root {
+        match v {
+            Value::Table(t) => {
+                out.push_str(&format!("\n[{k}]\n"));
+                for (kk, vv) in t {
+                    out.push_str(&format!("{kk} = {}\n", write_value(vv)));
+                }
+            }
+            Value::TableArray(ts) => {
+                for t in ts {
+                    out.push_str(&format!("\n[[{k}]]\n"));
+                    for (kk, vv) in t {
+                        out.push_str(&format!("{kk} = {}\n", write_value(vv)));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn write_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(write_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        Value::Table(_) | Value::TableArray(_) => unreachable!("nested tables not supported inline"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = r#"
+name = "cloudlab"  # a comment
+alpha = 0.5
+rounds = 10
+spot = true
+
+[server]
+vm = "vm121"
+"#;
+        let root = parse(doc).unwrap();
+        assert_eq!(root["name"].as_str(), Some("cloudlab"));
+        assert_eq!(root["alpha"].as_float(), Some(0.5));
+        assert_eq!(root["rounds"].as_int(), Some(10));
+        assert_eq!(root["spot"].as_bool(), Some(true));
+        assert_eq!(root["server"].as_table().unwrap()["vm"].as_str(), Some("vm121"));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = r#"
+[[vm]]
+id = "vm121"
+price = 1.670
+
+[[vm]]
+id = "vm126"
+price = 4.693
+"#;
+        let root = parse(doc).unwrap();
+        let vms = root["vm"].as_table_array().unwrap();
+        assert_eq!(vms.len(), 2);
+        assert_eq!(vms[1]["id"].as_str(), Some("vm126"));
+        assert_eq!(vms[1]["price"].as_float(), Some(4.693));
+    }
+
+    #[test]
+    fn parses_inline_arrays() {
+        let root = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\n").unwrap();
+        let xs = root["xs"].as_array().unwrap();
+        assert_eq!(xs.iter().map(|v| v.as_int().unwrap()).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(root["ys"].as_array().unwrap()[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let root = parse("x = 3\n").unwrap();
+        assert_eq!(root["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let root = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(root["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn missing_equals_rejected() {
+        let e = parse("garbage line\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn round_trip() {
+        let doc = r#"
+alpha = 0.5
+name = "x"
+
+[server]
+vm = "vm121"
+
+[[client]]
+id = 0
+
+[[client]]
+id = 1
+"#;
+        let root = parse(doc).unwrap();
+        let text = write(&root);
+        let back = parse(&text).unwrap();
+        assert_eq!(root, back);
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let root = parse("a = -4\nb = 1_000\nc = -0.5\n").unwrap();
+        assert_eq!(root["a"].as_int(), Some(-4));
+        assert_eq!(root["b"].as_int(), Some(1000));
+        assert_eq!(root["c"].as_float(), Some(-0.5));
+    }
+}

@@ -1,0 +1,183 @@
+//! Cross-module integration tests: the full Multi-FedLS pipeline over the
+//! simulated multi-cloud, CLI-level config parsing, and cross-solver
+//! consistency. (Artifact-dependent runtime integration lives in
+//! `e2e_artifacts.rs`.)
+
+use multi_fedls::apps;
+use multi_fedls::cloud::{tables, Market};
+use multi_fedls::cloudsim::{MultiCloud, RevocationModel};
+use multi_fedls::coordinator::{run_trials, simulate, JobSpec, Scenario, SimConfig};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::mapping::problem::MappingProblem;
+use multi_fedls::presched::PreScheduler;
+
+#[test]
+fn full_pipeline_til_no_failures() {
+    // Pre-Scheduling → Initial Mapping → simulate → costs/time line up with
+    // the §5.4 validation window.
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+    cfg.checkpoints_enabled = false;
+    let out = simulate(&cfg).unwrap();
+    assert_eq!(out.rounds_completed, 10);
+    assert_eq!(out.initial_clients, vec!["vm126"; 4]);
+    // Makespan prediction consistent with the executed timeline (warm-up is
+    // the only difference).
+    assert!(out.fl_exec_secs >= out.predicted_round_makespan * 10.0 - 1e-6);
+    assert!(out.fl_exec_secs <= out.predicted_round_makespan * 10.0 + 400.0);
+    // Billing: VM cost + egress = total.
+    assert!((out.vm_cost + out.egress_cost - out.total_cost).abs() < 1e-9);
+    // Every client exchanged ~1.5 GB per round: 4 clients × 10 rounds.
+    assert!(out.egress_cost > 0.0);
+}
+
+#[test]
+fn revocations_conserve_rounds_and_billing() {
+    // Whatever the failure pattern, the job finishes all rounds and the
+    // ledger stays self-consistent.
+    for seed in [1u64, 2, 3, 4, 5] {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+        cfg.n_rounds = 40;
+        cfg.revocation_mean_secs = Some(3600.0);
+        cfg.dynsched_policy = DynSchedPolicy::same_vm_allowed();
+        let out = simulate(&cfg).unwrap();
+        assert_eq!(out.rounds_completed, 40, "seed {seed}");
+        assert!((out.vm_cost + out.egress_cost - out.total_cost).abs() < 1e-9);
+        assert!(out.total_secs >= out.fl_exec_secs);
+    }
+}
+
+#[test]
+fn same_vm_policy_dominates_different_vm_on_cloudlab() {
+    // The paper's central Table 5 vs Table 6 comparison: allowing the
+    // revoked type to be re-selected is strictly better on CloudLab, where
+    // VM types have very different hardware.
+    let mk = |policy| {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 9);
+        cfg.n_rounds = 60;
+        cfg.revocation_mean_secs = Some(5400.0);
+        cfg.dynsched_policy = policy;
+        cfg.max_revocations_per_task = Some(1);
+        run_trials(&cfg, 3, 500).unwrap()
+    };
+    let same = mk(DynSchedPolicy::same_vm_allowed());
+    let diff = mk(DynSchedPolicy::different_vm());
+    assert!(
+        same.avg_total_secs <= diff.avg_total_secs,
+        "same {} vs diff {}",
+        same.avg_total_secs,
+        diff.avg_total_secs
+    );
+    assert!(same.avg_cost <= diff.avg_cost);
+}
+
+#[test]
+fn spot_cuts_cost_on_aws_gcp_poc() {
+    // §5.7 headline: spot execution is substantially cheaper.
+    let mut od = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, 90);
+    od.checkpoints_enabled = false;
+    let od_stats = run_trials(&od, 3, 90).unwrap();
+    let mut spot = SimConfig::new(apps::til_aws_gcp(), Scenario::AllSpot, 91);
+    spot.revocation_mean_secs = Some(7200.0);
+    spot.max_revocations_per_task = Some(1);
+    spot.dynsched_policy = DynSchedPolicy::different_vm();
+    let spot_stats = run_trials(&spot, 3, 91).unwrap();
+    assert!(
+        spot_stats.avg_cost < od_stats.avg_cost * 0.7,
+        "spot ${:.2} vs od ${:.2}",
+        spot_stats.avg_cost,
+        od_stats.avg_cost
+    );
+    assert_eq!(spot_stats.trials, 3);
+}
+
+#[test]
+fn job_spec_round_trip_through_simulation() {
+    let spec = JobSpec::from_toml(
+        r#"
+app = "shakespeare"
+rounds = 10
+scenario = "all-spot"
+revocation_mean_secs = 3600.0
+remove_revoked_type = false
+trials = 2
+seed = 11
+"#,
+    )
+    .unwrap();
+    let stats = run_trials(&spec.config, spec.trials, spec.config.seed).unwrap();
+    assert!(stats.avg_total_secs > 0.0);
+    assert!(stats.avg_cost > 0.0);
+}
+
+#[test]
+fn config_files_in_repo_parse_and_run() {
+    // Every shipped configs/*.toml must parse and simulate.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("toml")
+            && path.file_name().unwrap().to_string_lossy().starts_with("job-")
+        {
+            found += 1;
+            let mut spec = JobSpec::from_file(&path).expect("parse");
+            // Trim for test speed.
+            spec.config.n_rounds = spec.config.n_rounds.min(10);
+            simulate(&spec.config).expect("simulate");
+        }
+    }
+    assert!(found >= 3, "expected ≥3 job configs in configs/, found {found}");
+}
+
+#[test]
+fn catalog_toml_files_load() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    for name in ["cloudlab.toml", "aws-gcp.toml"] {
+        let cat = multi_fedls::cloud::Catalog::from_toml_file(&dir.join(name)).expect(name);
+        assert!(!cat.vm_types.is_empty());
+    }
+}
+
+#[test]
+fn solvers_agree_on_reduced_cloudlab() {
+    // Exact vs generic simplex+B&B MILP on a 5-VM slice of the real catalog
+    // with the real TIL profile.
+    let mut cat = tables::cloudlab();
+    let keep = ["vm121", "vm126", "vm138", "vm211", "vm212"];
+    cat.vm_types.retain(|v| keep.contains(&v.id.as_str()));
+    let mc = MultiCloud::new(cat.clone(), tables::cloudlab_ground_truth(), RevocationModel::none(), 5);
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let mut app = apps::til();
+    app.train_samples = vec![948; 2]; // 2 clients keeps the generic MILP quick
+    app.test_samples = vec![522; 2];
+    let job = app.profile();
+    for alpha in [0.2, 0.8] {
+        let p = MappingProblem {
+            catalog: &cat,
+            slowdowns: &sl,
+            job: &job,
+            alpha,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let exact = multi_fedls::mapping::exact::solve(&p).unwrap();
+        let milp = multi_fedls::mapping::milp::solve(&p).unwrap();
+        let em = p.evaluate(&milp);
+        assert!(
+            (exact.eval.objective - em.objective).abs() < 1e-6,
+            "alpha={alpha}: exact {} vs milp {}",
+            exact.eval.objective,
+            em.objective
+        );
+    }
+}
+
+#[test]
+fn deterministic_experiment_regeneration() {
+    // The same experiment function twice → identical JSON (bit-identical
+    // tables, the reproducibility claim in DESIGN.md).
+    let (_, j1) = multi_fedls::trace::table7();
+    let (_, j2) = multi_fedls::trace::table7();
+    assert_eq!(j1.to_string_compact(), j2.to_string_compact());
+}
