@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
     let od_stats = run_trials(&od, 3, 90)?;
     println!(
         "\non-demand : revoc {:.2}  time {}  cost ${:.2}   (paper: 2:00:18, $3.28)",
-        od_stats.avg_revocations,
+        od_stats.revocations.mean,
         od_stats.exec_hms(),
-        od_stats.avg_cost
+        od_stats.cost.mean
     );
 
     let mut spot = SimConfig::new(app, Scenario::AllSpot, 91);
@@ -35,14 +35,15 @@ fn main() -> anyhow::Result<()> {
     let spot_stats = run_trials(&spot, 3, 91)?;
     println!(
         "all-spot  : revoc {:.2}  time {}  cost ${:.2}   (paper: 1.33 revoc, 2:06:51, $1.41)",
-        spot_stats.avg_revocations,
+        spot_stats.revocations.mean,
         spot_stats.exec_hms(),
-        spot_stats.avg_cost
+        spot_stats.cost.mean
     );
 
-    let cost_reduction = (od_stats.avg_cost - spot_stats.avg_cost) / od_stats.avg_cost * 100.0;
-    let time_increase =
-        (spot_stats.avg_total_secs - od_stats.avg_total_secs) / od_stats.avg_total_secs * 100.0;
+    let cost_reduction = (od_stats.cost.mean - spot_stats.cost.mean) / od_stats.cost.mean * 100.0;
+    let time_increase = (spot_stats.total_secs.mean - od_stats.total_secs.mean)
+        / od_stats.total_secs.mean
+        * 100.0;
     println!(
         "\ncost reduction {cost_reduction:.2}% for a {time_increase:.2}% time increase \
          (paper: 56.92% / 5.44%)"

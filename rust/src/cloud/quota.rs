@@ -22,17 +22,26 @@ pub struct QuotaTracker {
 }
 
 /// Why an allocation was refused.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum QuotaError {
-    #[error("provider {0} GPU quota exceeded")]
     ProviderGpu(String),
-    #[error("provider {0} vCPU quota exceeded")]
     ProviderCpu(String),
-    #[error("region {0} GPU quota exceeded")]
     RegionGpu(String),
-    #[error("region {0} vCPU quota exceeded")]
     RegionCpu(String),
 }
+
+impl std::fmt::Display for QuotaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuotaError::ProviderGpu(p) => write!(f, "provider {p} GPU quota exceeded"),
+            QuotaError::ProviderCpu(p) => write!(f, "provider {p} vCPU quota exceeded"),
+            QuotaError::RegionGpu(r) => write!(f, "region {r} GPU quota exceeded"),
+            QuotaError::RegionCpu(r) => write!(f, "region {r} vCPU quota exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for QuotaError {}
 
 impl QuotaTracker {
     pub fn new() -> Self {

@@ -1,7 +1,8 @@
 //! The Multi-FedLS coordinator: configuration (TOML job specs), the
 //! simulated-time experiment driver ([`sim`]), the real-compute driver
 //! ([`real`]) and multi-trial aggregation (the paper averages 3 executions
-//! per table row).
+//! per table row). Trial fan-out is delegated to the [`crate::sweep`]
+//! campaign engine, so repeated executions run across a worker pool.
 
 pub mod multijob;
 pub mod real;
@@ -9,61 +10,71 @@ pub mod sim;
 
 pub use sim::{simulate, Scenario, SimConfig, SimOutcome};
 
-use crate::dynsched::DynSchedPolicy;
 use crate::simul::SimTime;
+use crate::sweep::{self, MetricAgg, TrialOutcome};
 
-/// Averages over repeated executions of one configuration (the paper's
-/// tables report 3-run averages).
+/// Aggregates over repeated executions of one configuration. The paper's
+/// tables report 3-run averages; each metric additionally carries sample
+/// stddev, min/max, and a 95% confidence interval (see [`MetricAgg`]).
 #[derive(Debug, Clone)]
 pub struct TrialStats {
     pub trials: usize,
-    pub avg_revocations: f64,
-    pub avg_exec_secs: f64,
-    pub avg_total_secs: f64,
-    pub avg_cost: f64,
-    pub min_cost: f64,
-    pub max_cost: f64,
+    pub revocations: MetricAgg,
+    /// FL execution time only (first round start → last round end).
+    pub exec_secs: MetricAgg,
+    /// Whole framework time (provisioning → teardown).
+    pub total_secs: MetricAgg,
+    pub cost: MetricAgg,
 }
 
 impl TrialStats {
-    pub fn exec_hms(&self) -> String {
-        SimTime::from_secs(self.avg_total_secs).hms()
+    pub fn from_outcomes(outs: &[TrialOutcome]) -> TrialStats {
+        let col = |f: fn(&TrialOutcome) -> f64| -> MetricAgg {
+            MetricAgg::from_samples(&outs.iter().map(f).collect::<Vec<_>>())
+        };
+        TrialStats {
+            trials: outs.len(),
+            revocations: col(|o| o.revocations),
+            exec_secs: col(|o| o.fl_exec_secs),
+            total_secs: col(|o| o.total_secs),
+            cost: col(|o| o.cost),
+        }
     }
+
+    /// Mean whole-framework time as `H:MM:SS` (the tables' "exec. time").
+    pub fn exec_hms(&self) -> String {
+        SimTime::from_secs(self.total_secs.mean).hms()
+    }
+
+    /// Mean FL execution time as `H:MM:SS`.
     pub fn fl_hms(&self) -> String {
-        SimTime::from_secs(self.avg_exec_secs).hms()
+        SimTime::from_secs(self.exec_secs.mean).hms()
     }
 }
 
-/// Run `trials` executions with seeds `base_seed..base_seed+trials`.
+/// Run `trials` executions with seeds `base_seed..base_seed+trials`, fanned
+/// out over the sweep worker pool (one worker per core). Every seed is fixed
+/// before the pool starts, so results are identical to the historical serial
+/// loop regardless of worker count.
 pub fn run_trials(cfg: &SimConfig, trials: usize, base_seed: u64) -> anyhow::Result<TrialStats> {
+    run_trials_with_jobs(cfg, trials, base_seed, 0)
+}
+
+/// [`run_trials`] with an explicit worker count (0 = one per core, 1 = serial).
+pub fn run_trials_with_jobs(
+    cfg: &SimConfig,
+    trials: usize,
+    base_seed: u64,
+    jobs: usize,
+) -> anyhow::Result<TrialStats> {
     anyhow::ensure!(trials > 0);
-    let mut revocations = 0.0;
-    let mut exec = 0.0;
-    let mut total = 0.0;
-    let mut cost = 0.0;
-    let mut min_cost = f64::INFINITY;
-    let mut max_cost = f64::NEG_INFINITY;
-    for t in 0..trials {
-        let mut c = cfg.clone();
-        c.seed = base_seed + t as u64;
-        let out = sim::simulate(&c)?;
-        revocations += out.n_revocations as f64;
-        exec += out.fl_exec_secs;
-        total += out.total_secs;
-        cost += out.total_cost;
-        min_cost = min_cost.min(out.total_cost);
-        max_cost = max_cost.max(out.total_cost);
-    }
-    let n = trials as f64;
-    Ok(TrialStats {
-        trials,
-        avg_revocations: revocations / n,
-        avg_exec_secs: exec / n,
-        avg_total_secs: total / n,
-        avg_cost: cost / n,
-        min_cost,
-        max_cost,
-    })
+    let point = sweep::PointSpec {
+        tags: Vec::new(),
+        cfg: cfg.clone(),
+        seeds: (0..trials as u64).map(|t| base_seed + t).collect(),
+    };
+    let mut stats = sweep::run_campaign(std::slice::from_ref(&point), jobs)?;
+    Ok(stats.pop().expect("one point"))
 }
 
 /// A TOML job specification (the framework's user-facing config):
@@ -78,6 +89,7 @@ pub fn run_trials(cfg: &SimConfig, trials: usize, base_seed: u64) -> anyhow::Res
 /// server_ckpt_every = 10
 /// client_checkpoint = true
 /// checkpoints = true
+/// max_revocations_per_task = 1  # §5.6.1 observed regime; omit for unbounded
 /// seed = 42
 /// trials = 3
 /// ```
@@ -89,6 +101,7 @@ pub struct JobSpec {
 
 impl JobSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<JobSpec> {
+        use crate::dynsched::DynSchedPolicy;
         let root = crate::util::tomlmini::parse(text)?;
         let app_name = root
             .get("app")
@@ -96,15 +109,19 @@ impl JobSpec {
             .ok_or_else(|| anyhow::anyhow!("job spec missing `app`"))?;
         let app = crate::apps::by_name(app_name)
             .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
-        let scenario = match root.get("scenario").and_then(|v| v.as_str()).unwrap_or("all-on-demand") {
-            "all-spot" => Scenario::AllSpot,
-            "on-demand-server" => Scenario::OnDemandServer,
-            "all-on-demand" => Scenario::AllOnDemand,
-            other => anyhow::bail!("unknown scenario {other}"),
+        let scenario_key = root.get("scenario").and_then(|v| v.as_str()).unwrap_or("all-on-demand");
+        let scenario = Scenario::from_key(scenario_key)
+            .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario_key}"))?;
+        // Negative integers must error, not wrap through the `as` casts.
+        let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
+            match root.get(key).and_then(|v| v.as_int()) {
+                Some(x) if x < 0 => anyhow::bail!("{key} must be non-negative, got {x}"),
+                other => Ok(other),
+            }
         };
-        let seed = root.get("seed").and_then(|v| v.as_int()).unwrap_or(42) as u64;
+        let seed = get_nonneg("seed")?.unwrap_or(42) as u64;
         let mut config = SimConfig::new(app, scenario, seed);
-        if let Some(r) = root.get("rounds").and_then(|v| v.as_int()) {
+        if let Some(r) = get_nonneg("rounds")? {
             config.n_rounds = r as u32;
         }
         if let Some(a) = root.get("alpha").and_then(|v| v.as_float()) {
@@ -119,7 +136,7 @@ impl JobSpec {
                 DynSchedPolicy::same_vm_allowed()
             };
         }
-        if let Some(x) = root.get("server_ckpt_every").and_then(|v| v.as_int()) {
+        if let Some(x) = get_nonneg("server_ckpt_every")? {
             config.ft.server_every_rounds = x as u32;
         }
         if let Some(b) = root.get("client_checkpoint").and_then(|v| v.as_bool()) {
@@ -128,7 +145,10 @@ impl JobSpec {
         if let Some(b) = root.get("checkpoints").and_then(|v| v.as_bool()) {
             config.checkpoints_enabled = b;
         }
-        let trials = root.get("trials").and_then(|v| v.as_int()).unwrap_or(1) as usize;
+        if let Some(m) = get_nonneg("max_revocations_per_task")? {
+            config.max_revocations_per_task = Some(m as u32);
+        }
+        let trials = get_nonneg("trials")?.unwrap_or(1) as usize;
         Ok(JobSpec { config, trials })
     }
 
@@ -155,6 +175,7 @@ revocation_mean_secs = 7200.0
 remove_revoked_type = true
 server_ckpt_every = 20
 client_checkpoint = false
+max_revocations_per_task = 1
 seed = 7
 trials = 3
 "#,
@@ -168,6 +189,7 @@ trials = 3
         assert!(spec.config.dynsched_policy.remove_revoked);
         assert_eq!(spec.config.ft.server_every_rounds, 20);
         assert!(!spec.config.ft.client_checkpoint);
+        assert_eq!(spec.config.max_revocations_per_task, Some(1));
         assert_eq!(spec.trials, 3);
     }
 
@@ -185,6 +207,9 @@ trials = 3
         assert!(JobSpec::from_toml("app = \"nope\"\n").is_err());
         assert!(JobSpec::from_toml("app = \"til\"\nscenario = \"weird\"\n").is_err());
         assert!(JobSpec::from_toml("app = \"til\"\nalpha = 2.0\n").is_err());
+        // Negative ints must error, not wrap through the u32/u64 casts.
+        assert!(JobSpec::from_toml("app = \"til\"\nrounds = -5\n").is_err());
+        assert!(JobSpec::from_toml("app = \"til\"\nmax_revocations_per_task = -1\n").is_err());
     }
 
     #[test]
@@ -194,7 +219,49 @@ trials = 3
         cfg.revocation_mean_secs = Some(7200.0);
         let stats = run_trials(&cfg, 3, 100).unwrap();
         assert_eq!(stats.trials, 3);
-        assert!(stats.min_cost <= stats.avg_cost && stats.avg_cost <= stats.max_cost);
-        assert!(stats.avg_total_secs > 0.0);
+        assert!(stats.cost.min <= stats.cost.mean && stats.cost.mean <= stats.cost.max);
+        assert!(stats.total_secs.mean > 0.0);
+        assert!(stats.cost.stddev >= 0.0 && stats.cost.ci95 >= 0.0);
+    }
+
+    #[test]
+    fn trial_stats_hand_computed_three_trial_case() {
+        // Regression for the aggregate formulas on a hand-computed case:
+        // costs 10/20/30 → mean 20, sample stddev 10, CI half-width
+        // 1.96·10/√3 ≈ 11.31609.
+        let outs: Vec<TrialOutcome> = [10.0f64, 20.0, 30.0]
+            .iter()
+            .map(|&c| TrialOutcome {
+                revocations: 1.0,
+                fl_exec_secs: 2.0 * c,
+                total_secs: 3.0 * c,
+                cost: c,
+                rounds_completed: 5,
+            })
+            .collect();
+        let s = TrialStats::from_outcomes(&outs);
+        assert_eq!(s.trials, 3);
+        assert!((s.cost.mean - 20.0).abs() < 1e-12);
+        assert!((s.cost.stddev - 10.0).abs() < 1e-12);
+        assert!((s.cost.min - 10.0).abs() < 1e-12);
+        assert!((s.cost.max - 30.0).abs() < 1e-12);
+        assert!((s.cost.ci95 - 11.316090442).abs() < 1e-6);
+        // Linearity: total_secs = 3×cost, so its aggregates scale by 3.
+        assert!((s.total_secs.mean - 60.0).abs() < 1e-12);
+        assert!((s.total_secs.stddev - 30.0).abs() < 1e-12);
+        assert!((s.revocations.stddev - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_trials_identical_across_worker_counts() {
+        let mut cfg = SimConfig::new(crate::apps::til(), Scenario::AllSpot, 0);
+        cfg.n_rounds = 20;
+        cfg.revocation_mean_secs = Some(7200.0);
+        let serial = run_trials_with_jobs(&cfg, 3, 100, 1).unwrap();
+        let parallel = run_trials_with_jobs(&cfg, 3, 100, 8).unwrap();
+        assert_eq!(serial.cost.mean.to_bits(), parallel.cost.mean.to_bits());
+        assert_eq!(serial.cost.stddev.to_bits(), parallel.cost.stddev.to_bits());
+        assert_eq!(serial.total_secs.mean.to_bits(), parallel.total_secs.mean.to_bits());
+        assert_eq!(serial.revocations.mean.to_bits(), parallel.revocations.mean.to_bits());
     }
 }

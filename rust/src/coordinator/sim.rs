@@ -55,6 +55,24 @@ impl Scenario {
             Scenario::AllOnDemand => "all on-demand",
         }
     }
+
+    /// Stable config-file key (job specs and sweep grids).
+    pub fn key(self) -> &'static str {
+        match self {
+            Scenario::AllSpot => "all-spot",
+            Scenario::OnDemandServer => "on-demand-server",
+            Scenario::AllOnDemand => "all-on-demand",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<Scenario> {
+        match key {
+            "all-spot" => Some(Scenario::AllSpot),
+            "on-demand-server" => Some(Scenario::OnDemandServer),
+            "all-on-demand" => Some(Scenario::AllOnDemand),
+            _ => None,
+        }
+    }
 }
 
 /// One experiment configuration.

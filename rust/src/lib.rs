@@ -24,6 +24,8 @@
 //! * [`data`] — synthetic federated datasets (TIL, Shakespeare, FEMNIST).
 //! * [`apps`] — the paper's three application descriptors (§5.1).
 //! * [`coordinator`] — the end-to-end driver tying everything together.
+//! * [`sweep`] — the parallel experiment-campaign engine: declarative config
+//!   grids fanned out across an OS-thread worker pool, deterministically.
 //! * [`trace`] — experiment recording and table rendering.
 
 pub mod apps;
@@ -40,4 +42,5 @@ pub mod cloudsim;
 pub mod runtime;
 pub mod trace;
 pub mod simul;
+pub mod sweep;
 pub mod util;

@@ -5,6 +5,7 @@
 //! multi-fedls preschedule [--env E] [--cache F] run Pre-Scheduling, print slowdowns
 //! multi-fedls map --app A [--alpha X] [...]    run the Initial Mapping solver
 //! multi-fedls simulate --spec FILE [--json]    simulate a job spec (TOML)
+//! multi-fedls sweep --spec FILE [--jobs N]     run a campaign grid in parallel
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
 //! ```
@@ -26,6 +27,12 @@ struct Args {
     options: HashMap<String, String>,
 }
 
+/// A token only counts as an option if it is not a (possibly negative or
+/// exponent-form) number, so `--alpha -0.5` parses as a value, not a flag.
+fn is_option_token(tok: &str) -> bool {
+    tok.starts_with('-') && tok != "-" && tok.parse::<f64>().is_err()
+}
+
 impl Args {
     fn parse(argv: &[String]) -> Args {
         let mut positional = Vec::new();
@@ -33,7 +40,10 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !is_option_token(&argv[i + 1]) {
                     options.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -66,6 +76,7 @@ USAGE:
   multi-fedls map --app <til|shakespeare|femnist|til-aws-gcp> [--alpha A]
                   [--market on-demand|spot] [--budget B] [--deadline T]
   multi-fedls simulate --spec configs/<job>.toml [--json]
+  multi-fedls sweep --spec configs/<grid>.toml [--jobs N] [--json|--csv]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
   multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|all> [--json]
@@ -84,6 +95,7 @@ fn main() {
         "preschedule" => cmd_preschedule(&args),
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "help" | "--help" | "-h" => {
@@ -204,21 +216,56 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let j = multi_fedls::util::Json::obj()
             .set("app", spec.config.app.name)
             .set("trials", spec.trials)
-            .set("avg_revocations", stats.avg_revocations)
-            .set("avg_fl_exec_secs", stats.avg_exec_secs)
-            .set("avg_total_secs", stats.avg_total_secs)
-            .set("avg_cost", stats.avg_cost);
+            .set("avg_revocations", stats.revocations.mean)
+            .set("avg_fl_exec_secs", stats.exec_secs.mean)
+            .set("avg_total_secs", stats.total_secs.mean)
+            .set("avg_cost", stats.cost.mean)
+            .set("cost_stddev", stats.cost.stddev)
+            .set("cost_ci95", stats.cost.ci95);
         println!("{}", j.to_string_pretty());
     } else {
         println!(
-            "{} × {} trials: avg revocations {:.2}, FL exec {}, total {}, cost ${:.2}",
+            "{} × {} trials: avg revocations {:.2}, FL exec {}, total {}, cost ${:.2} ±{:.2}",
             spec.config.app.name,
             spec.trials,
-            stats.avg_revocations,
+            stats.revocations.mean,
             stats.fl_hms(),
             stats.exec_hms(),
-            stats.avg_cost
+            stats.cost.mean,
+            stats.cost.ci95
         );
+    }
+    Ok(())
+}
+
+/// `multi-fedls sweep --spec FILE [--jobs N] [--json|--csv]`: expand a
+/// declarative campaign grid and run it across the worker pool. Output is
+/// byte-identical for any `--jobs` value.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
+    let spec = multi_fedls::sweep::SweepSpec::from_file(std::path::Path::new(spec_path))?;
+    let jobs = match args.get("jobs") {
+        Some(j) => j.parse::<usize>().map_err(|e| anyhow::anyhow!("--jobs {j}: {e}"))?,
+        None => spec.jobs.unwrap_or(0), // 0 = one worker per core
+    };
+    let points = spec.expand()?;
+    let n_trials: usize = points.iter().map(|p| p.seeds.len()).sum();
+    eprintln!(
+        "sweep {}: {} points × {} trials = {} runs on {} workers",
+        spec.name,
+        points.len(),
+        spec.trials,
+        n_trials,
+        multi_fedls::sweep::effective_jobs(jobs, n_trials)
+    );
+    let stats = multi_fedls::sweep::run_campaign(&points, jobs)?;
+    if args.flag("json") {
+        let j = multi_fedls::sweep::spec::render_json(&spec, &points, &stats);
+        println!("{}", j.to_string_pretty());
+    } else if args.flag("csv") {
+        print!("{}", multi_fedls::sweep::spec::render_csv(&points, &stats));
+    } else {
+        multi_fedls::sweep::spec::render_table(&spec, &points, &stats).print();
     }
     Ok(())
 }
@@ -341,4 +388,55 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown experiment {other}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let argv: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn negative_numeric_values_are_not_swallowed_as_flags() {
+        let a = parse(&["--alpha", "-0.5", "--budget", "-3", "--deadline", "-1e4"]);
+        assert_eq!(a.get("alpha"), Some("-0.5"));
+        assert_eq!(a.get("budget"), Some("-3"));
+        assert_eq!(a.get("deadline"), Some("-1e4"));
+    }
+
+    #[test]
+    fn key_equals_value_syntax() {
+        let a = parse(&["--alpha=-0.5", "--spec=configs/x.toml"]);
+        assert_eq!(a.get("alpha"), Some("-0.5"));
+        assert_eq!(a.get("spec"), Some("configs/x.toml"));
+    }
+
+    #[test]
+    fn bare_flags_and_positionals() {
+        let a = parse(&["simulate", "--json", "--spec", "f.toml", "extra"]);
+        assert_eq!(a.positional, vec!["simulate", "extra"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.get("spec"), Some("f.toml"));
+    }
+
+    #[test]
+    fn flag_followed_by_another_option_stays_boolean() {
+        let a = parse(&["--json", "--jobs", "8"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.get("jobs"), Some("8"));
+    }
+
+    #[test]
+    fn option_token_classification() {
+        assert!(is_option_token("--jobs"));
+        assert!(is_option_token("-x"));
+        assert!(!is_option_token("-0.5"));
+        assert!(!is_option_token("-3"));
+        assert!(!is_option_token("-1e-4"));
+        assert!(!is_option_token("value"));
+        assert!(!is_option_token("-"));
+    }
 }

@@ -49,6 +49,29 @@ impl Rng {
         Rng::seeded(mix)
     }
 
+    /// Derive a child seed *without* advancing this generator: a pure
+    /// function of (current state, tag). The sweep engine uses this to give
+    /// every trial in a campaign its own stream — because the parent is
+    /// never mutated, expansion order, worker count, and completion order
+    /// cannot change any derived seed.
+    pub fn split_seed(&self, tag: u64) -> u64 {
+        let mut sm = SplitMix64::new(
+            self.s[0]
+                ^ self.s[1].rotate_left(16)
+                ^ self.s[2].rotate_left(32)
+                ^ self.s[3].rotate_left(48)
+                ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        // Two rounds so that consecutive tags map to well-separated seeds.
+        sm.next_u64();
+        sm.next_u64()
+    }
+
+    /// Like [`Rng::split`], but pure: see [`Rng::split_seed`].
+    pub fn split_at(&self, tag: u64) -> Rng {
+        Rng::seeded(self.split_seed(tag))
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -175,6 +198,23 @@ mod tests {
         let mut c1 = root.split(1);
         let mut c2 = root.split(2);
         let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_seed_is_pure_and_tag_sensitive() {
+        let root = Rng::seeded(7);
+        assert_eq!(root.split_seed(3), root.split_seed(3), "no state advance");
+        assert_ne!(root.split_seed(3), root.split_seed(4));
+        // Pure split streams are independent across tags.
+        let mut c1 = root.split_at(1);
+        let mut c2 = root.split_at(2);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+        // And differ from the parent's own output stream.
+        let mut parent = Rng::seeded(7);
+        let mut child = root.split_at(0);
+        let same = (0..64).filter(|_| parent.next_u64() == child.next_u64()).count();
         assert!(same < 2);
     }
 

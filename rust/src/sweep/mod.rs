@@ -1,0 +1,301 @@
+//! The experiment-campaign engine: expands declarative config grids into
+//! trial configurations and fans them out across a fixed-size OS-thread
+//! worker pool (the same `std::thread` + channel idiom as the in-process FL
+//! runtime in [`crate::fl`]).
+//!
+//! Determinism contract: every trial's [`SimConfig`] — including its RNG
+//! seed — is fixed *before* any worker starts, and outcomes are re-assembled
+//! in expansion order. Aggregates are therefore bit-identical regardless of
+//! worker count or completion order (enforced by `tests/sweep_determinism.rs`
+//! and the CI smoke job).
+//!
+//! Layering: [`spec`] parses `multi-fedls sweep --spec` TOML grids into
+//! [`PointSpec`]s; [`run_campaign`] executes them; both
+//! [`crate::coordinator::run_trials`] and the `trace::experiments` table
+//! drivers are thin layers over the same pool.
+
+pub mod spec;
+
+pub use spec::SweepSpec;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::coordinator::sim::{self, SimConfig, SimOutcome};
+
+/// One fully-resolved trial: the index of the campaign point it belongs to
+/// and the exact simulator configuration (seed included) to run.
+#[derive(Debug, Clone)]
+pub struct TrialConfig {
+    pub point: usize,
+    pub cfg: SimConfig,
+}
+
+/// The scalar metrics extracted from one simulated execution.
+#[derive(Debug, Clone, Copy)]
+pub struct TrialOutcome {
+    pub revocations: f64,
+    /// FL execution time only (first round start → last round end).
+    pub fl_exec_secs: f64,
+    /// Whole framework time (provisioning → teardown).
+    pub total_secs: f64,
+    pub cost: f64,
+    pub rounds_completed: u32,
+}
+
+impl From<&SimOutcome> for TrialOutcome {
+    fn from(o: &SimOutcome) -> TrialOutcome {
+        TrialOutcome {
+            revocations: o.n_revocations as f64,
+            fl_exec_secs: o.fl_exec_secs,
+            total_secs: o.total_secs,
+            cost: o.total_cost,
+            rounds_completed: o.rounds_completed,
+        }
+    }
+}
+
+/// Mean, sample standard deviation, min/max and a 95% confidence interval
+/// for one metric over a point's trials.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricAgg {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample standard deviation (n − 1 denominator); 0 for n < 2.
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Half-width of the normal-approximation 95% CI: `1.96·stddev/√n`
+    /// (0 for n < 2).
+    pub ci95: f64,
+}
+
+impl MetricAgg {
+    pub fn from_samples(xs: &[f64]) -> MetricAgg {
+        assert!(!xs.is_empty(), "MetricAgg over zero samples");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        let (stddev, ci95) = if n > 1 {
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+            let sd = var.sqrt();
+            (sd, 1.96 * sd / (n as f64).sqrt())
+        } else {
+            (0.0, 0.0)
+        };
+        MetricAgg { n, mean, stddev, min, max, ci95 }
+    }
+
+    /// Render as a JSON object (`{mean, stddev, min, max, ci95}`).
+    pub fn json(&self) -> crate::util::Json {
+        crate::util::Json::obj()
+            .set("mean", self.mean)
+            .set("stddev", self.stddev)
+            .set("min", self.min)
+            .set("max", self.max)
+            .set("ci95", self.ci95)
+    }
+}
+
+/// One grid point of a campaign: a base configuration plus the explicit
+/// per-trial seeds. `tags` carries the axis values (app, scenario, …) for
+/// output rendering; the engine itself never reads them.
+#[derive(Debug, Clone)]
+pub struct PointSpec {
+    pub tags: Vec<(String, String)>,
+    pub cfg: SimConfig,
+    pub seeds: Vec<u64>,
+}
+
+impl PointSpec {
+    /// Look up an axis value by tag name (rendering helper).
+    pub fn tag(&self, key: &str) -> &str {
+        self.tags
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("")
+    }
+}
+
+/// Resolve a worker-count request: 0 = one worker per available core,
+/// always clamped to the number of trials.
+pub fn effective_jobs(jobs: usize, n_trials: usize) -> usize {
+    let jobs = if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    };
+    jobs.clamp(1, n_trials.max(1))
+}
+
+/// Run every trial, `jobs` at a time, returning outcomes in input order.
+///
+/// Workers pull the next trial index from a shared atomic cursor and report
+/// `(index, outcome)` over a channel; the assembly into the result vector is
+/// by index, so completion order cannot influence the output.
+pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<TrialOutcome>> {
+    let jobs = effective_jobs(jobs, trials.len());
+    if jobs == 1 {
+        return trials
+            .iter()
+            .map(|t| Ok(TrialOutcome::from(&sim::simulate(&t.cfg)?)))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TrialOutcome>)>();
+    let mut slots: Vec<Option<TrialOutcome>> = vec![None; trials.len()];
+    let run: anyhow::Result<()> = std::thread::scope(|s| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= trials.len() {
+                    break;
+                }
+                let out = sim::simulate(&trials[i].cfg).map(|o| TrialOutcome::from(&o));
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, out) in rx {
+            slots[i] = Some(out?);
+        }
+        Ok(())
+    });
+    run?;
+    Ok(slots.into_iter().map(|s| s.expect("every trial reported")).collect())
+}
+
+/// Run a whole campaign: flatten every point's trials, push them through one
+/// shared worker pool, and re-group per-point aggregate statistics in point
+/// order.
+pub fn run_campaign(
+    points: &[PointSpec],
+    jobs: usize,
+) -> anyhow::Result<Vec<crate::coordinator::TrialStats>> {
+    let mut trials = Vec::new();
+    for (pi, p) in points.iter().enumerate() {
+        anyhow::ensure!(!p.seeds.is_empty(), "campaign point {pi} has no trials");
+        for &seed in &p.seeds {
+            let mut cfg = p.cfg.clone();
+            cfg.seed = seed;
+            trials.push(TrialConfig { point: pi, cfg });
+        }
+    }
+    let outcomes = run_pool(&trials, jobs)?;
+    let mut grouped: Vec<Vec<TrialOutcome>> = vec![Vec::new(); points.len()];
+    for (t, o) in trials.iter().zip(&outcomes) {
+        grouped[t.point].push(*o);
+    }
+    Ok(grouped
+        .iter()
+        .map(|outs| crate::coordinator::TrialStats::from_outcomes(outs))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::Scenario;
+
+    fn outcome(cost: f64) -> TrialOutcome {
+        TrialOutcome {
+            revocations: cost / 10.0,
+            fl_exec_secs: cost * 2.0,
+            total_secs: cost * 3.0,
+            cost,
+            rounds_completed: 10,
+        }
+    }
+
+    #[test]
+    fn metric_agg_hand_computed_three_samples() {
+        // Samples 10, 20, 30: mean 20, sample stddev 10 (variance 100),
+        // 95% CI half-width 1.96·10/√3 = 11.3160904…
+        let a = MetricAgg::from_samples(&[10.0, 20.0, 30.0]);
+        assert_eq!(a.n, 3);
+        assert!((a.mean - 20.0).abs() < 1e-12);
+        assert!((a.stddev - 10.0).abs() < 1e-12);
+        assert!((a.min - 10.0).abs() < 1e-12);
+        assert!((a.max - 30.0).abs() < 1e-12);
+        let expected_ci = 1.96 * 10.0 / 3f64.sqrt();
+        assert!((a.ci95 - expected_ci).abs() < 1e-12);
+        assert!((a.ci95 - 11.316).abs() < 1e-3);
+    }
+
+    #[test]
+    fn metric_agg_single_sample_has_zero_spread() {
+        let a = MetricAgg::from_samples(&[5.0]);
+        assert_eq!(a.n, 1);
+        assert_eq!(a.stddev, 0.0);
+        assert_eq!(a.ci95, 0.0);
+        assert_eq!(a.min, 5.0);
+        assert_eq!(a.max, 5.0);
+    }
+
+    #[test]
+    fn pool_preserves_input_order_across_worker_counts() {
+        // A small real campaign: outcomes must line up with their configs no
+        // matter how many workers raced over the queue.
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 0);
+        cfg.checkpoints_enabled = false;
+        let trials: Vec<TrialConfig> = (0..6)
+            .map(|i| {
+                let mut c = cfg.clone();
+                c.seed = 1000 + i;
+                TrialConfig { point: i as usize, cfg: c }
+            })
+            .collect();
+        let serial = run_pool(&trials, 1).unwrap();
+        let parallel = run_pool(&trials, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+            assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+            assert_eq!(a.revocations, b.revocations);
+        }
+    }
+
+    #[test]
+    fn campaign_groups_by_point() {
+        let cfg = {
+            let mut c = SimConfig::new(apps::til(), Scenario::AllOnDemand, 0);
+            c.checkpoints_enabled = false;
+            c
+        };
+        let points = vec![
+            PointSpec { tags: vec![], cfg: cfg.clone(), seeds: vec![1, 2] },
+            PointSpec { tags: vec![], cfg: cfg.clone(), seeds: vec![3, 4, 5] },
+        ];
+        let stats = run_campaign(&points, 0).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].trials, 2);
+        assert_eq!(stats[1].trials, 3);
+    }
+
+    #[test]
+    fn effective_jobs_clamps() {
+        assert_eq!(effective_jobs(8, 3), 3);
+        assert_eq!(effective_jobs(2, 100), 2);
+        assert!(effective_jobs(0, 100) >= 1);
+        assert_eq!(effective_jobs(1, 0), 1);
+    }
+
+    #[test]
+    fn outcome_helper_is_consistent() {
+        let o = outcome(10.0);
+        assert_eq!(o.cost, 10.0);
+        assert_eq!(o.total_secs, 30.0);
+    }
+}

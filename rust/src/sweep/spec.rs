@@ -1,0 +1,460 @@
+//! Declarative sweep specifications: a TOML grid expanded into campaign
+//! points, with per-trial RNG streams derived via [`Rng::split_seed`] so the
+//! expansion is a pure function of the spec — worker count and completion
+//! order cannot change any seed.
+//!
+//! Spec format (parsed with `util::tomlmini`):
+//!
+//! ```toml
+//! name = "til-failures"        # optional; used in the JSON header
+//! trials = 3                   # executions per grid point (default 1)
+//! seed = 50                    # root seed for the split streams (default 42)
+//! rounds = 80                  # optional n_rounds override for every point
+//! max_revocations_per_task = 1 # optional §5.6.1 cap
+//! checkpoints = true           # optional checkpoints_enabled override
+//! jobs = 8                     # optional default worker count (CLI --jobs wins)
+//!
+//! [grid]                       # every key is an axis; the grid is the product
+//! apps = ["til"]
+//! scenarios = ["all-spot", "on-demand-server"]
+//! revocation_mean_secs = [7200.0, 14400.0]   # 0 = no failures
+//! policies = ["different-vm", "same-vm"]
+//! alphas = [0.5]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::PointSpec;
+use crate::apps;
+use crate::coordinator::{Scenario, SimConfig, TrialStats};
+use crate::dynsched::DynSchedPolicy;
+use crate::simul::Rng;
+use crate::util::bench::Table;
+use crate::util::tomlmini::{self, Value};
+use crate::util::Json;
+
+/// A parsed sweep specification (the campaign grid).
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    pub trials: usize,
+    pub seed: u64,
+    pub apps: Vec<String>,
+    pub scenarios: Vec<Scenario>,
+    /// Mean time between revocations `k_r`; `None` = no failures (spelled
+    /// `0` in the TOML grid).
+    pub revocation_mean_secs: Vec<Option<f64>>,
+    pub policies: Vec<DynSchedPolicy>,
+    pub alphas: Vec<f64>,
+    pub rounds: Option<u32>,
+    pub max_revocations_per_task: Option<u32>,
+    pub checkpoints: Option<bool>,
+    /// Default worker count; the CLI `--jobs` flag overrides it.
+    pub jobs: Option<usize>,
+}
+
+fn policy_key(p: DynSchedPolicy) -> &'static str {
+    if p.remove_revoked {
+        "different-vm"
+    } else {
+        "same-vm"
+    }
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<DynSchedPolicy> {
+    match s {
+        "different-vm" => Ok(DynSchedPolicy::different_vm()),
+        "same-vm" => Ok(DynSchedPolicy::same_vm_allowed()),
+        other => anyhow::bail!("unknown policy {other} (different-vm | same-vm)"),
+    }
+}
+
+type Tbl = BTreeMap<String, Value>;
+
+/// Read an axis as a list, accepting a bare scalar as a one-element list.
+fn axis<'a>(grid: &'a Tbl, key: &str) -> Option<Vec<&'a Value>> {
+    match grid.get(key)? {
+        Value::Array(items) => Some(items.iter().collect()),
+        v => Some(vec![v]),
+    }
+}
+
+fn str_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<String>>> {
+    match axis(grid, key) {
+        None => Ok(None),
+        Some(items) => items
+            .into_iter()
+            .map(|v| {
+                v.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("grid.{key} entries must be strings"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+fn num_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+    match axis(grid, key) {
+        None => Ok(None),
+        Some(items) => items
+            .into_iter()
+            .map(|v| {
+                v.as_float()
+                    .ok_or_else(|| anyhow::anyhow!("grid.{key} entries must be numbers"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+impl SweepSpec {
+    pub fn from_toml(text: &str) -> anyhow::Result<SweepSpec> {
+        let root = tomlmini::parse(text)?;
+        let grid = root
+            .get("grid")
+            .and_then(|v| v.as_table())
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing [grid] section"))?;
+
+        let apps = str_axis(grid, "apps")?
+            .ok_or_else(|| anyhow::anyhow!("grid.apps is required (e.g. [\"til\"])"))?;
+        anyhow::ensure!(!apps.is_empty(), "grid.apps is empty");
+        for a in &apps {
+            anyhow::ensure!(apps::by_name(a).is_some(), "unknown app {a}");
+        }
+
+        let scenarios = match str_axis(grid, "scenarios")? {
+            Some(keys) => keys
+                .iter()
+                .map(|k| {
+                    Scenario::from_key(k)
+                        .ok_or_else(|| anyhow::anyhow!("unknown scenario {k}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![Scenario::AllOnDemand],
+        };
+
+        let revocation_mean_secs = match num_axis(grid, "revocation_mean_secs")? {
+            Some(ks) => ks
+                .into_iter()
+                .map(|k| {
+                    anyhow::ensure!(k >= 0.0, "revocation_mean_secs must be >= 0 (0 = none)");
+                    Ok(if k == 0.0 { None } else { Some(k) })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![None],
+        };
+
+        let policies = match str_axis(grid, "policies")? {
+            Some(keys) => keys
+                .iter()
+                .map(|k| parse_policy(k))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![DynSchedPolicy::same_vm_allowed()],
+        };
+
+        let alphas = match num_axis(grid, "alphas")? {
+            Some(xs) => {
+                for &a in &xs {
+                    anyhow::ensure!((0.0..=1.0).contains(&a), "alpha {a} outside [0,1]");
+                }
+                xs
+            }
+            None => vec![0.5],
+        };
+
+        // Negative integers must error, not wrap through the `as` casts.
+        let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
+            match root.get(key).and_then(|v| v.as_int()) {
+                Some(x) if x < 0 => anyhow::bail!("{key} must be non-negative, got {x}"),
+                other => Ok(other),
+            }
+        };
+        let trials = get_nonneg("trials")?.unwrap_or(1);
+        anyhow::ensure!(trials > 0, "trials must be positive");
+        Ok(SweepSpec {
+            name: root
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("sweep")
+                .to_string(),
+            trials: trials as usize,
+            seed: get_nonneg("seed")?.unwrap_or(42) as u64,
+            apps,
+            scenarios,
+            revocation_mean_secs,
+            policies,
+            alphas,
+            rounds: get_nonneg("rounds")?.map(|r| r as u32),
+            max_revocations_per_task: get_nonneg("max_revocations_per_task")?.map(|m| m as u32),
+            checkpoints: root.get("checkpoints").and_then(|v| v.as_bool()),
+            jobs: get_nonneg("jobs")?.map(|j| j as usize),
+        })
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Number of grid points (trial count is `n_points() * trials`).
+    pub fn n_points(&self) -> usize {
+        self.apps.len()
+            * self.scenarios.len()
+            * self.revocation_mean_secs.len()
+            * self.policies.len()
+            * self.alphas.len()
+    }
+
+    /// Expand the grid into campaign points. Each trial's seed is derived
+    /// from the root seed via a pure `Rng::split_seed` on the trial's global
+    /// index, so the same spec always yields the same seeds.
+    pub fn expand(&self) -> anyhow::Result<Vec<PointSpec>> {
+        let root = Rng::seeded(self.seed);
+        let mut points = Vec::with_capacity(self.n_points());
+        let mut global_trial: u64 = 0;
+        for app_name in &self.apps {
+            let app = apps::by_name(app_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
+            for &scenario in &self.scenarios {
+                for &k_r in &self.revocation_mean_secs {
+                    for &policy in &self.policies {
+                        for &alpha in &self.alphas {
+                            let mut cfg = SimConfig::new(app.clone(), scenario, self.seed);
+                            cfg.alpha = alpha;
+                            cfg.revocation_mean_secs = k_r;
+                            cfg.dynsched_policy = policy;
+                            if let Some(r) = self.rounds {
+                                cfg.n_rounds = r;
+                            }
+                            if let Some(m) = self.max_revocations_per_task {
+                                cfg.max_revocations_per_task = Some(m);
+                            }
+                            if let Some(c) = self.checkpoints {
+                                cfg.checkpoints_enabled = c;
+                            }
+                            let seeds: Vec<u64> = (0..self.trials)
+                                .map(|_| {
+                                    let s = root.split_seed(global_trial);
+                                    global_trial += 1;
+                                    s
+                                })
+                                .collect();
+                            let tags = vec![
+                                ("app".to_string(), app_name.clone()),
+                                ("scenario".to_string(), scenario.key().to_string()),
+                                (
+                                    "revocation_mean_secs".to_string(),
+                                    format!("{}", k_r.unwrap_or(0.0)),
+                                ),
+                                ("policy".to_string(), policy_key(policy).to_string()),
+                                ("alpha".to_string(), format!("{alpha}")),
+                            ];
+                            points.push(PointSpec { tags, cfg, seeds });
+                        }
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(!points.is_empty(), "sweep grid expanded to zero points");
+        Ok(points)
+    }
+}
+
+/// Render campaign results as JSON (one object per point, aggregates per
+/// metric). Deliberately excludes the worker count so output is byte-stable
+/// across `--jobs` values.
+pub fn render_json(spec: &SweepSpec, points: &[PointSpec], stats: &[TrialStats]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .zip(stats)
+        .map(|(p, s)| {
+            let mut row = Json::obj();
+            for (k, v) in &p.tags {
+                row = row.set(k, v.clone());
+            }
+            row.set("trials", s.trials)
+                .set("revocations", s.revocations.json())
+                .set("fl_exec_secs", s.exec_secs.json())
+                .set("total_secs", s.total_secs.json())
+                .set("cost", s.cost.json())
+        })
+        .collect();
+    Json::obj()
+        .set("sweep", spec.name.clone())
+        .set("seed", spec.seed)
+        .set("trials_per_point", spec.trials)
+        .set("points", Json::Arr(rows))
+}
+
+/// Render campaign results as CSV (flat columns, one row per point).
+pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
+    let mut out = String::new();
+    out.push_str("app,scenario,revocation_mean_secs,policy,alpha,trials");
+    for metric in ["revocations", "fl_exec_secs", "total_secs", "cost"] {
+        for stat in ["mean", "stddev", "min", "max", "ci95"] {
+            out.push_str(&format!(",{metric}_{stat}"));
+        }
+    }
+    out.push('\n');
+    for (p, s) in points.iter().zip(stats) {
+        out.push_str(&format!(
+            "{},{},{},{},{},{}",
+            p.tag("app"),
+            p.tag("scenario"),
+            p.tag("revocation_mean_secs"),
+            p.tag("policy"),
+            p.tag("alpha"),
+            s.trials
+        ));
+        for agg in [&s.revocations, &s.exec_secs, &s.total_secs, &s.cost] {
+            out.push_str(&format!(
+                ",{},{},{},{},{}",
+                agg.mean, agg.stddev, agg.min, agg.max, agg.ci95
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render campaign results as a human table.
+pub fn render_table(spec: &SweepSpec, points: &[PointSpec], stats: &[TrialStats]) -> Table {
+    let mut t = Table::new(
+        format!("Sweep — {} ({} points × {} trials)", spec.name, points.len(), spec.trials),
+        &[
+            "App",
+            "Scenario",
+            "k_r",
+            "Policy",
+            "alpha",
+            "Avg revoc.",
+            "FL exec",
+            "Total",
+            "Cost ($)",
+            "Cost ±95% CI",
+        ],
+    );
+    for (p, s) in points.iter().zip(stats) {
+        t.row(&[
+            p.tag("app").to_string(),
+            p.tag("scenario").to_string(),
+            p.tag("revocation_mean_secs").to_string(),
+            p.tag("policy").to_string(),
+            p.tag("alpha").to_string(),
+            format!("{:.2}", s.revocations.mean),
+            s.fl_hms(),
+            s.exec_hms(),
+            format!("{:.2}", s.cost.mean),
+            format!("±{:.2}", s.cost.ci95),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "unit"
+trials = 3
+seed = 9
+rounds = 20
+max_revocations_per_task = 1
+
+[grid]
+apps = ["til"]
+scenarios = ["all-spot", "on-demand-server"]
+revocation_mean_secs = [7200.0, 0]
+policies = ["different-vm", "same-vm"]
+alphas = 0.5
+"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let spec = SweepSpec::from_toml(SPEC).unwrap();
+        assert_eq!(spec.name, "unit");
+        assert_eq!(spec.trials, 3);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.rounds, Some(20));
+        assert_eq!(spec.max_revocations_per_task, Some(1));
+        assert_eq!(spec.apps, vec!["til"]);
+        assert_eq!(spec.scenarios, vec![Scenario::AllSpot, Scenario::OnDemandServer]);
+        assert_eq!(spec.revocation_mean_secs, vec![Some(7200.0), None]);
+        assert_eq!(spec.policies.len(), 2);
+        assert!(spec.policies[0].remove_revoked);
+        assert_eq!(spec.alphas, vec![0.5]); // scalar accepted as 1-element axis
+        assert_eq!(spec.n_points(), 8);
+    }
+
+    #[test]
+    fn expansion_is_cartesian_and_sets_config() {
+        let spec = SweepSpec::from_toml(SPEC).unwrap();
+        let points = spec.expand().unwrap();
+        assert_eq!(points.len(), 8);
+        for p in &points {
+            assert_eq!(p.seeds.len(), 3);
+            assert_eq!(p.cfg.n_rounds, 20);
+            assert_eq!(p.cfg.max_revocations_per_task, Some(1));
+        }
+        // Axis ordering: scenario is the outer loop over (k_r, policy).
+        assert_eq!(points[0].tag("scenario"), "all-spot");
+        assert_eq!(points[0].tag("policy"), "different-vm");
+        assert_eq!(points[1].tag("policy"), "same-vm");
+        assert_eq!(points[4].tag("scenario"), "on-demand-server");
+        // k_r = 0 means no failures.
+        assert!(points[2].cfg.revocation_mean_secs.is_none());
+        assert_eq!(points[2].tag("revocation_mean_secs"), "0");
+    }
+
+    #[test]
+    fn seeds_are_unique_and_reproducible() {
+        let spec = SweepSpec::from_toml(SPEC).unwrap();
+        let a = spec.expand().unwrap();
+        let b = spec.expand().unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.seeds, pb.seeds, "expansion must be deterministic");
+            for &s in &pa.seeds {
+                assert!(seen.insert(s), "duplicate trial seed {s}");
+            }
+        }
+        assert_eq!(seen.len(), 24);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(SweepSpec::from_toml("trials = 3\n").is_err(), "missing [grid]");
+        assert!(SweepSpec::from_toml("[grid]\nscenarios = [\"all-spot\"]\n").is_err(), "no apps");
+        assert!(SweepSpec::from_toml("[grid]\napps = [\"nope\"]\n").is_err(), "unknown app");
+        assert!(
+            SweepSpec::from_toml("[grid]\napps = [\"til\"]\nscenarios = [\"weird\"]\n").is_err()
+        );
+        assert!(SweepSpec::from_toml("[grid]\napps = [\"til\"]\nalphas = [1.5]\n").is_err());
+        assert!(
+            SweepSpec::from_toml("[grid]\napps = [\"til\"]\nrevocation_mean_secs = [-1.0]\n")
+                .is_err()
+        );
+        // Negative ints must error, not wrap through the u32/usize casts.
+        assert!(SweepSpec::from_toml("rounds = -80\n[grid]\napps = [\"til\"]\n").is_err());
+        assert!(
+            SweepSpec::from_toml("max_revocations_per_task = -1\n[grid]\napps = [\"til\"]\n")
+                .is_err()
+        );
+        assert!(SweepSpec::from_toml("jobs = -4\n[grid]\napps = [\"til\"]\n").is_err());
+    }
+
+    #[test]
+    fn defaults_fill_missing_axes() {
+        let spec = SweepSpec::from_toml("[grid]\napps = [\"femnist\"]\n").unwrap();
+        assert_eq!(spec.trials, 1);
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.scenarios, vec![Scenario::AllOnDemand]);
+        assert_eq!(spec.revocation_mean_secs, vec![None]);
+        assert_eq!(spec.alphas, vec![0.5]);
+        assert_eq!(spec.n_points(), 1);
+    }
+}

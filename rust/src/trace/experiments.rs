@@ -8,6 +8,7 @@ use crate::dynsched::DynSchedPolicy;
 use crate::mapping::problem::MappingProblem;
 use crate::presched::PreScheduler;
 use crate::simul::SimTime;
+use crate::sweep::{self, PointSpec};
 use crate::util::bench::Table;
 use crate::util::Json;
 
@@ -201,6 +202,11 @@ pub fn fig2() -> (Table, Json) {
 }
 
 /// A failure-simulation table (Tables 5–8 share this shape).
+///
+/// The scenario × k_r grid is expanded into sweep campaign points and runs
+/// across the worker pool; the per-point seed bases (`seed + rate_index·1000`,
+/// trials `base..base+3`) match the historical serial driver, so every value
+/// is unchanged — the table is just produced N-way parallel now.
 fn failure_table(
     title: &str,
     app: apps::AppSpec,
@@ -210,6 +216,31 @@ fn failure_table(
     seed: u64,
     paper_rows: &[(&str, f64, &str, &str)],
 ) -> (Table, Json) {
+    let mut points = Vec::new();
+    for scenario in [Scenario::AllSpot, Scenario::OnDemandServer] {
+        for (ri, &k_r) in rates.iter().enumerate() {
+            let mut cfg = SimConfig::new(app.clone(), scenario, seed);
+            cfg.n_rounds = n_rounds;
+            cfg.revocation_mean_secs = Some(k_r);
+            cfg.dynsched_policy = policy;
+            // §5.6.1: the paper observed at most one revocation per task.
+            cfg.max_revocations_per_task = Some(1);
+            // Scenarios share the same seed base per rate so their client
+            // revocation draws are comparable (the server simply has no
+            // revocation in the on-demand scenario).
+            let base = seed + ri as u64 * 1000;
+            points.push(PointSpec {
+                tags: vec![
+                    ("scenario".to_string(), scenario.key().to_string()),
+                    ("k_r".to_string(), format!("{k_r}")),
+                ],
+                cfg,
+                seeds: (0..TRIALS as u64).map(|t| base + t).collect(),
+            });
+        }
+    }
+    let stats_list = sweep::run_campaign(&points, 0).expect("campaign");
+
     let mut t = Table::new(
         title,
         &[
@@ -222,45 +253,38 @@ fn failure_table(
         ],
     );
     let mut rows = Vec::new();
-    for (si, scenario) in [Scenario::AllSpot, Scenario::OnDemandServer].iter().enumerate() {
-        let _ = si;
-        for (ri, &k_r) in rates.iter().enumerate() {
-            let mut cfg = SimConfig::new(app.clone(), *scenario, seed);
-            cfg.n_rounds = n_rounds;
-            cfg.revocation_mean_secs = Some(k_r);
-            cfg.dynsched_policy = policy;
-            // §5.6.1: the paper observed at most one revocation per task.
-            cfg.max_revocations_per_task = Some(1);
-            // Scenarios share the same seed base per rate so their client
-            // revocation draws are comparable (the server simply has no
-            // revocation in the on-demand scenario).
-            let stats = run_trials(&cfg, TRIALS, seed + ri as u64 * 1000).expect("trials");
-            let paper = paper_rows
-                .iter()
-                .find(|(s, k, _, _)| {
-                    *k == k_r
-                        && ((matches!(scenario, Scenario::AllSpot) && s.contains("spot"))
-                            || (matches!(scenario, Scenario::OnDemandServer) && s.contains("demand")))
-                })
-                .map(|(_, _, time, cost)| format!("{time} / {cost}"))
-                .unwrap_or_else(|| "—".into());
-            t.row(&[
-                scenario.label().into(),
-                format!("{}h", k_r / 3600.0),
-                format!("{:.2}", stats.avg_revocations),
-                stats.exec_hms(),
-                format!("${:.2}", stats.avg_cost),
-                paper,
-            ]);
-            rows.push(
-                Json::obj()
-                    .set("scenario", scenario.label())
-                    .set("k_r", k_r)
-                    .set("avg_revocations", stats.avg_revocations)
-                    .set("avg_total_secs", stats.avg_total_secs)
-                    .set("avg_cost", stats.avg_cost),
-            );
-        }
+    for (p, stats) in points.iter().zip(&stats_list) {
+        let scenario = Scenario::from_key(p.tag("scenario")).expect("tag written above");
+        let k_r: f64 = p.tag("k_r").parse().expect("tag written above");
+        let paper = paper_rows
+            .iter()
+            .find(|(s, k, _, _)| {
+                *k == k_r
+                    && ((matches!(scenario, Scenario::AllSpot) && s.contains("spot"))
+                        || (matches!(scenario, Scenario::OnDemandServer) && s.contains("demand")))
+            })
+            .map(|(_, _, time, cost)| format!("{time} / {cost}"))
+            .unwrap_or_else(|| "—".into());
+        t.row(&[
+            scenario.label().into(),
+            format!("{}h", k_r / 3600.0),
+            format!("{:.2}", stats.revocations.mean),
+            stats.exec_hms(),
+            format!("${:.2}", stats.cost.mean),
+            paper,
+        ]);
+        rows.push(
+            Json::obj()
+                .set("scenario", scenario.label())
+                .set("k_r", k_r)
+                .set("avg_revocations", stats.revocations.mean)
+                .set("avg_total_secs", stats.total_secs.mean)
+                .set("avg_cost", stats.cost.mean)
+                .set("cost_stddev", stats.cost.stddev)
+                .set("cost_ci95", stats.cost.ci95)
+                .set("total_secs_stddev", stats.total_secs.stddev)
+                .set("total_secs_ci95", stats.total_secs.ci95),
+        );
     }
     (t, Json::obj().set("table", title).set("rows", Json::Arr(rows)))
 }
@@ -350,9 +374,10 @@ pub fn poc_aws_gcp() -> (Table, Json) {
     spot.checkpoints_enabled = true;
     let spot_stats = run_trials(&spot, TRIALS, 91).unwrap();
 
-    let cost_reduction = (od_stats.avg_cost - spot_stats.avg_cost) / od_stats.avg_cost * 100.0;
-    let time_increase =
-        (spot_stats.avg_total_secs - od_stats.avg_total_secs) / od_stats.avg_total_secs * 100.0;
+    let cost_reduction = (od_stats.cost.mean - spot_stats.cost.mean) / od_stats.cost.mean * 100.0;
+    let time_increase = (spot_stats.total_secs.mean - od_stats.total_secs.mean)
+        / od_stats.total_secs.mean
+        * 100.0;
 
     let mut t = Table::new(
         "§5.7 — AWS/GCP proof of concept (TIL, 2 clients, 10 rounds)",
@@ -360,16 +385,16 @@ pub fn poc_aws_gcp() -> (Table, Json) {
     );
     t.row(&[
         "all on-demand".into(),
-        format!("{:.2}", od_stats.avg_revocations),
+        format!("{:.2}", od_stats.revocations.mean),
         od_stats.exec_hms(),
-        format!("${:.2}", od_stats.avg_cost),
+        format!("${:.2}", od_stats.cost.mean),
         "0 / 2:00:18 / $3.28".into(),
     ]);
     t.row(&[
         "all spot, k_r = 2h".into(),
-        format!("{:.2}", spot_stats.avg_revocations),
+        format!("{:.2}", spot_stats.revocations.mean),
         spot_stats.exec_hms(),
-        format!("${:.2}", spot_stats.avg_cost),
+        format!("${:.2}", spot_stats.cost.mean),
         "1.33 / 2:06:51 / $1.41".into(),
     ]);
     t.row(&[
@@ -381,12 +406,14 @@ pub fn poc_aws_gcp() -> (Table, Json) {
     ]);
     let j = Json::obj()
         .set("experiment", "poc-aws-gcp")
-        .set("on_demand_cost", od_stats.avg_cost)
-        .set("spot_cost", spot_stats.avg_cost)
+        .set("on_demand_cost", od_stats.cost.mean)
+        .set("spot_cost", spot_stats.cost.mean)
         .set("cost_reduction_pct", cost_reduction)
         .set("time_increase_pct", time_increase)
-        .set("on_demand_secs", od_stats.avg_total_secs)
-        .set("spot_secs", spot_stats.avg_total_secs);
+        .set("on_demand_secs", od_stats.total_secs.mean)
+        .set("spot_secs", spot_stats.total_secs.mean)
+        .set("on_demand_cost_ci95", od_stats.cost.ci95)
+        .set("spot_cost_ci95", spot_stats.cost.ci95);
     (t, j)
 }
 
@@ -576,10 +603,11 @@ pub fn catalog_table(which: &str) -> Table {
 /// Accessor used by benches to render & persist.
 pub fn stats_row(stats: &TrialStats) -> String {
     format!(
-        "revoc={:.2} exec={} cost=${:.2}",
-        stats.avg_revocations,
+        "revoc={:.2} exec={} cost=${:.2} (±{:.2} 95% CI)",
+        stats.revocations.mean,
         stats.exec_hms(),
-        stats.avg_cost
+        stats.cost.mean,
+        stats.cost.ci95
     )
 }
 

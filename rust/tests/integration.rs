@@ -62,12 +62,12 @@ fn same_vm_policy_dominates_different_vm_on_cloudlab() {
     let same = mk(DynSchedPolicy::same_vm_allowed());
     let diff = mk(DynSchedPolicy::different_vm());
     assert!(
-        same.avg_total_secs <= diff.avg_total_secs,
+        same.total_secs.mean <= diff.total_secs.mean,
         "same {} vs diff {}",
-        same.avg_total_secs,
-        diff.avg_total_secs
+        same.total_secs.mean,
+        diff.total_secs.mean
     );
-    assert!(same.avg_cost <= diff.avg_cost);
+    assert!(same.cost.mean <= diff.cost.mean);
 }
 
 #[test]
@@ -82,10 +82,10 @@ fn spot_cuts_cost_on_aws_gcp_poc() {
     spot.dynsched_policy = DynSchedPolicy::different_vm();
     let spot_stats = run_trials(&spot, 3, 91).unwrap();
     assert!(
-        spot_stats.avg_cost < od_stats.avg_cost * 0.7,
+        spot_stats.cost.mean < od_stats.cost.mean * 0.7,
         "spot ${:.2} vs od ${:.2}",
-        spot_stats.avg_cost,
-        od_stats.avg_cost
+        spot_stats.cost.mean,
+        od_stats.cost.mean
     );
     assert_eq!(spot_stats.trials, 3);
 }
@@ -105,8 +105,8 @@ seed = 11
     )
     .unwrap();
     let stats = run_trials(&spec.config, spec.trials, spec.config.seed).unwrap();
-    assert!(stats.avg_total_secs > 0.0);
-    assert!(stats.avg_cost > 0.0);
+    assert!(stats.total_secs.mean > 0.0);
+    assert!(stats.cost.mean > 0.0);
 }
 
 #[test]

@@ -1,0 +1,114 @@
+//! Sweep-engine determinism and regression tests: identical aggregate output
+//! for any worker count, and table drivers unchanged vs the historical
+//! serial `run_trials` loop.
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{simulate, Scenario, SimConfig};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::sweep::{self, SweepSpec};
+use multi_fedls::util::Json;
+
+/// 16 points × 2 trials = 32 trial configs (the acceptance grid is ≥ 24).
+const GRID: &str = r#"
+name = "determinism"
+trials = 2
+seed = 7
+rounds = 20
+max_revocations_per_task = 1
+
+[grid]
+apps = ["til"]
+scenarios = ["all-spot", "on-demand-server"]
+revocation_mean_secs = [7200.0, 14400.0]
+policies = ["different-vm", "same-vm"]
+alphas = [0.3, 0.7]
+"#;
+
+#[test]
+fn jobs_1_and_jobs_8_produce_byte_identical_output() {
+    let spec = SweepSpec::from_toml(GRID).unwrap();
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 16);
+    assert_eq!(points.iter().map(|p| p.seeds.len()).sum::<usize>(), 32);
+
+    let s1 = sweep::run_campaign(&points, 1).unwrap();
+    let s8 = sweep::run_campaign(&points, 8).unwrap();
+
+    let j1 = sweep::spec::render_json(&spec, &points, &s1).to_string_pretty();
+    let j8 = sweep::spec::render_json(&spec, &points, &s8).to_string_pretty();
+    assert_eq!(j1, j8, "JSON output must be byte-identical across --jobs");
+
+    let c1 = sweep::spec::render_csv(&points, &s1);
+    let c8 = sweep::spec::render_csv(&points, &s8);
+    assert_eq!(c1, c8, "CSV output must be byte-identical across --jobs");
+
+    // Spot scenarios under failures actually revoke something, so the sweep
+    // exercised the dynamic scheduler, not just happy paths.
+    let total_revocations: f64 = s1.iter().map(|s| s.revocations.mean).sum();
+    assert!(total_revocations > 0.0, "expected revocations in the spot points");
+}
+
+fn row_num(j: &Json, row: usize, key: &str) -> f64 {
+    let Json::Obj(root) = j else { panic!("root not an object") };
+    let Json::Arr(rows) = &root["rows"] else { panic!("rows not an array") };
+    let Json::Obj(r) = &rows[row] else { panic!("row not an object") };
+    let Json::Num(x) = &r[key] else { panic!("{key} not a number") };
+    *x
+}
+
+#[test]
+fn failure_table_matches_historical_serial_driver() {
+    // Table 5's first point (all-spot, k_r = 2 h) recomputed with the exact
+    // seed schedule of the pre-sweep serial loop: seeds 50, 51, 52.
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 50);
+    cfg.n_rounds = 80;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    let mut revocations = 0.0;
+    let mut total = 0.0;
+    let mut cost = 0.0;
+    for t in 0..3u64 {
+        let mut c = cfg.clone();
+        c.seed = 50 + t;
+        let out = simulate(&c).unwrap();
+        revocations += out.n_revocations as f64;
+        total += out.total_secs;
+        cost += out.total_cost;
+    }
+    let (_, j) = multi_fedls::trace::table5();
+    assert_eq!(row_num(&j, 0, "avg_revocations").to_bits(), (revocations / 3.0).to_bits());
+    assert_eq!(row_num(&j, 0, "avg_total_secs").to_bits(), (total / 3.0).to_bits());
+    assert_eq!(row_num(&j, 0, "avg_cost").to_bits(), (cost / 3.0).to_bits());
+    // The richer aggregates are present and sane.
+    assert!(row_num(&j, 0, "cost_stddev") >= 0.0);
+    assert!(row_num(&j, 0, "cost_ci95") >= 0.0);
+}
+
+#[test]
+fn shipped_sweep_specs_parse_and_expand() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let smoke = SweepSpec::from_file(&dir.join("sweep-smoke.toml")).unwrap();
+    let points = smoke.expand().unwrap();
+    assert_eq!(points.len(), 2, "smoke grid is the documented 2-point grid");
+    let failures = SweepSpec::from_file(&dir.join("sweep-til-failures.toml")).unwrap();
+    let points = failures.expand().unwrap();
+    assert_eq!(points.len() * failures.trials, 24, "acceptance grid has ≥24 trial configs");
+}
+
+#[test]
+fn smoke_spec_runs_end_to_end() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let spec = SweepSpec::from_file(&dir.join("sweep-smoke.toml")).unwrap();
+    let points = spec.expand().unwrap();
+    let stats = sweep::run_campaign(&points, 0).unwrap();
+    assert_eq!(stats.len(), 2);
+    for s in &stats {
+        assert_eq!(s.trials, 2);
+        assert!(s.cost.mean > 0.0 && s.total_secs.mean > 0.0);
+        assert!(s.cost.min <= s.cost.mean && s.cost.mean <= s.cost.max);
+    }
+    // The on-demand point never revokes; table row order follows the grid.
+    assert_eq!(points[0].tag("scenario"), "all-on-demand");
+    assert_eq!(stats[0].revocations.mean, 0.0);
+}
