@@ -84,9 +84,10 @@ pub fn run_trials_with_jobs(
 /// rounds = 80
 /// alpha = 0.5
 /// scenario = "all-spot"        # all-spot | on-demand-server | all-on-demand
+/// mapper = "exact"              # exact | milp | cheapest | fastest | random | single-cloud
 /// revocation_mean_secs = 7200.0 # omit for no failures
 /// remove_revoked_type = true    # Algorithm 3 policy
-/// server_ckpt_every = 10
+/// server_ckpt_every = 10        # 0 = server checkpointing off
 /// client_checkpoint = true
 /// checkpoints = true
 /// max_revocations_per_task = 1  # §5.6.1 observed regime; omit for unbounded
@@ -129,6 +130,10 @@ impl JobSpec {
             config.alpha = a;
         }
         config.revocation_mean_secs = root.get("revocation_mean_secs").and_then(|v| v.as_float());
+        if let Some(m) = root.get("mapper").and_then(|v| v.as_str()) {
+            config.mapper = crate::mapping::MapperKind::from_key(m)
+                .ok_or_else(|| anyhow::anyhow!("unknown mapper {m}"))?;
+        }
         if let Some(b) = root.get("remove_revoked_type").and_then(|v| v.as_bool()) {
             config.dynsched_policy = if b {
                 DynSchedPolicy::different_vm()
@@ -136,14 +141,15 @@ impl JobSpec {
                 DynSchedPolicy::same_vm_allowed()
             };
         }
-        if let Some(x) = get_nonneg("server_ckpt_every")? {
-            config.ft.server_every_rounds = x as u32;
+        if let Some(b) = root.get("checkpoints").and_then(|v| v.as_bool()) {
+            config.checkpoints_enabled = b;
         }
         if let Some(b) = root.get("client_checkpoint").and_then(|v| v.as_bool()) {
             config.ft.client_checkpoint = b;
         }
-        if let Some(b) = root.get("checkpoints").and_then(|v| v.as_bool()) {
-            config.checkpoints_enabled = b;
+        if let Some(x) = get_nonneg("server_ckpt_every")? {
+            anyhow::ensure!(x <= u32::MAX as i64, "server_ckpt_every {x} out of range");
+            config.set_server_ckpt_every(x as u32);
         }
         if let Some(m) = get_nonneg("max_revocations_per_task")? {
             config.max_revocations_per_task = Some(m as u32);
@@ -200,6 +206,29 @@ trials = 3
         assert_eq!(spec.config.scenario, Scenario::AllOnDemand);
         assert_eq!(spec.trials, 1);
         assert!(spec.config.revocation_mean_secs.is_none());
+    }
+
+    #[test]
+    fn job_spec_parses_mapper_selection() {
+        let spec = JobSpec::from_toml("app = \"til\"\nmapper = \"cheapest\"\n").unwrap();
+        assert_eq!(spec.config.mapper, crate::mapping::MapperKind::Cheapest);
+        // Default is the exact solver.
+        let spec = JobSpec::from_toml("app = \"til\"\n").unwrap();
+        assert_eq!(spec.config.mapper, crate::mapping::MapperKind::Exact);
+        assert!(JobSpec::from_toml("app = \"til\"\nmapper = \"nope\"\n").is_err());
+        // server_ckpt_every = 0 disables the periodic save instead of
+        // crashing the round-cadence modulo; client checkpointing (default
+        // on) keeps the checkpoint machinery armed.
+        let spec = JobSpec::from_toml("app = \"til\"\nserver_ckpt_every = 0\n").unwrap();
+        assert_eq!(spec.config.ft.server_every_rounds, u32::MAX);
+        assert!(spec.config.checkpoints_enabled);
+        // With the client side also off, nothing is checkpointed at all —
+        // the same semantics as the sweep grid's server_ckpt_every axis.
+        let spec = JobSpec::from_toml(
+            "app = \"til\"\nserver_ckpt_every = 0\nclient_checkpoint = false\n",
+        )
+        .unwrap();
+        assert!(!spec.config.checkpoints_enabled);
     }
 
     #[test]

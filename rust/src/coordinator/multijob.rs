@@ -187,7 +187,7 @@ impl<'a> MultiJobScheduler<'a> {
                     (i, m)
                 })
                 .collect();
-            keyed.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            crate::mapping::rank::sort_by_key_f64(&mut keyed, |x| x.1);
             order = keyed.into_iter().map(|(i, _)| i).collect();
         }
         let mut admitted = Vec::new();

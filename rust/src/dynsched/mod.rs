@@ -14,9 +14,14 @@
 //! removes the revoked type from the candidate set. CloudLab allows instant
 //! re-allocation, which Table 6 exploits by keeping the revoked type; this is
 //! [`DynSchedPolicy::remove_revoked`].
+//!
+//! The simulated pipeline consults this module through the pluggable
+//! `DynScheduler` trait (`crate::framework::modules`); candidate ranking
+//! uses the shared [`crate::mapping::rank`] comparator.
 
 use crate::cloud::VmTypeId;
 use crate::mapping::problem::MappingProblem;
+use crate::mapping::rank;
 
 /// Which task failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -152,22 +157,24 @@ pub fn select_instance(
     } else {
         candidate_set.to_vec()
     };
-    let mut best: Option<Selection> = None;
-    for &vm in &set {
-        let makespan = recompute_makespan(p, map, t, vm);
-        let cost = recompute_cost(p, map, t, vm, makespan);
-        let value = p.objective_value(cost, makespan);
-        let better = best.as_ref().map_or(true, |b| value < b.value);
-        if better {
-            best = Some(Selection {
-                vm,
-                expected_makespan: makespan,
-                expected_cost: cost,
-                value,
-                candidates_considered: set.len(),
-            });
-        }
-    }
+    // Minimize the weighted objective with the shared first-wins comparator
+    // (same tie-break as the Initial Mapping baselines' rankings). Each
+    // candidate's makespan/cost is computed exactly once.
+    let best = rank::argmin_by_f64(
+        set.iter().map(|&vm| {
+            let makespan = recompute_makespan(p, map, t, vm);
+            let cost = recompute_cost(p, map, t, vm, makespan);
+            (vm, makespan, cost)
+        }),
+        |&(_, makespan, cost)| p.objective_value(cost, makespan),
+    )
+    .map(|((vm, expected_makespan, expected_cost), value)| Selection {
+        vm,
+        expected_makespan,
+        expected_cost,
+        value,
+        candidates_considered: set.len(),
+    });
     (best, set)
 }
 

@@ -1,0 +1,340 @@
+//! The slimmed event-loop core of the simulated-time executor.
+//!
+//! Drives one Multi-FedLS job over the simulated multi-cloud through the
+//! pluggable module stack of a [`Framework`]: Pre-Scheduling → Initial
+//! Mapping → provisioning → synchronous FL rounds → spot revocations →
+//! Dynamic Scheduler replacement → checkpoint-based recovery → teardown,
+//! with per-second billing throughout.
+//!
+//! This is the former monolithic `coordinator::sim::simulate` body with
+//! every module decision routed through the stack's trait objects. With the
+//! default stack the arithmetic (including floating-point operation order)
+//! is unchanged, so outputs are bit-identical to the pre-refactor
+//! simulator; `tests/framework_parity.rs` enforces that.
+
+use crate::cloud::VmTypeId;
+use crate::cloudsim::{MultiCloud, RevocationModel, VmId};
+use crate::coordinator::sim::{environment_for, SimConfig, SimEvent, SimOutcome};
+use crate::dynsched::{CurrentMap, FaultyTask};
+use crate::mapping::problem::{JobProfile, Mapping, MappingProblem};
+use crate::presched::SlowdownReport;
+use crate::simul::SimTime;
+
+use super::modules::FaultTolerance;
+use super::Framework;
+
+struct TaskState {
+    vm_type: VmTypeId,
+    instance: VmId,
+    /// Rounds completed on this instance (warm-up applies on its first).
+    rounds_on_instance: u32,
+}
+
+/// Run one simulated Multi-FedLS execution through `fw`'s module stack.
+pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+    let (catalog, ground_truth) = environment_for(&cfg.app);
+    let mut mc = MultiCloud::new(
+        catalog,
+        ground_truth,
+        match cfg.revocation_mean_secs {
+            Some(k) => RevocationModel::poisson(k),
+            None => RevocationModel::none(),
+        },
+        cfg.seed,
+    );
+    let mut events = Vec::new();
+    let mut now = SimTime::ZERO;
+
+    // --- Pre-Scheduling (§4.1; cached per environment by `EnvCache`) ---
+    let slowdowns = fw.pre_sched().slowdowns(&mc);
+    let slowdowns: &SlowdownReport = slowdowns.as_ref();
+    let job = cfg.app.profile();
+
+    // --- Initial Mapping (§4.2) ---
+    // (The problem borrows a snapshot of the catalog so the simulator can be
+    // mutated while the dynamic scheduler keeps consulting prices/slowdowns.)
+    let catalog = mc.catalog.clone();
+    let problem = MappingProblem {
+        catalog: &catalog,
+        slowdowns,
+        job: &job,
+        alpha: cfg.alpha,
+        market: cfg.scenario.client_market(),
+        budget_round: f64::INFINITY,
+        deadline_round: f64::INFINITY,
+    };
+    let mapper = fw.mapper_for(cfg);
+    let sol = mapper
+        .map(&problem)
+        .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible ({})", mapper.name()))?;
+    let initial: Mapping = sol.mapping.clone();
+    events.push(SimEvent {
+        at: now,
+        what: format!(
+            "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
+            mc.catalog.vm(initial.server).id,
+            initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
+            sol.eval.makespan,
+            sol.eval.total_cost
+        ),
+    });
+
+    // --- provision all tasks (boot in parallel) ---
+    let server_market = cfg.scenario.server_market();
+    let client_market = cfg.scenario.client_market();
+    let mut server = TaskState {
+        vm_type: initial.server,
+        instance: mc.provision(now, initial.server, server_market)?,
+        rounds_on_instance: 0,
+    };
+    let mut clients: Vec<TaskState> = Vec::new();
+    for &vm in &initial.clients {
+        clients.push(TaskState {
+            vm_type: vm,
+            instance: mc.provision(now, vm, client_market)?,
+            rounds_on_instance: 0,
+        });
+    }
+    let mut ready_at = mc.instance(server.instance).ready_at;
+    for c in &clients {
+        ready_at = ready_at.max(mc.instance(c.instance).ready_at);
+    }
+    now = ready_at;
+    mc.mark_running(server.instance);
+    for c in &clients {
+        mc.mark_running(c.instance);
+    }
+    events.push(SimEvent { at: now, what: "all VMs prepared; FL execution starts".into() });
+    let fl_start = now;
+
+    // Dynamic Scheduler candidate sets (I_t), per task (§4.4).
+    let all_vms: Vec<VmTypeId> = mc.catalog.vm_ids().collect();
+    let mut server_set = all_vms.clone();
+    let mut client_sets: Vec<Vec<VmTypeId>> = vec![all_vms.clone(); clients.len()];
+
+    let mut n_revocations = 0u32;
+    let mut revocations_per_task: Vec<u32> = vec![0; clients.len() + 1]; // [server, clients...]
+    let mut completed = 0u32; // fully completed rounds
+    // Freshest server-side checkpoint round (replicated → survives loss).
+    let mut server_ckpt_round = 0u32;
+    let mut safety = 0usize;
+
+    while completed < cfg.n_rounds {
+        safety += 1;
+        anyhow::ensure!(safety < 200_000, "simulation did not converge (runaway revocations)");
+        let round = completed + 1;
+
+        // Round duration with the current placement.
+        let duration = round_duration(cfg, &mc, slowdowns, &job, fw.ft(), &server, &clients);
+        let end = now + duration;
+
+        // Earliest spot revocation strictly before the round completes.
+        let mut hit: Option<(SimTime, FaultyTask)> = None;
+        let consider =
+            |at: Option<SimTime>, task: FaultyTask, hit: &mut Option<(SimTime, FaultyTask)>| {
+                if let Some(t) = at {
+                    if t > now && t <= end {
+                        let better = hit.map_or(true, |(bt, _)| t < bt);
+                        if better {
+                            *hit = Some((t, task));
+                        }
+                    }
+                }
+            };
+        consider(mc.instance(server.instance).revocation_at, FaultyTask::Server, &mut hit);
+        for (i, c) in clients.iter().enumerate() {
+            consider(mc.instance(c.instance).revocation_at, FaultyTask::Client(i), &mut hit);
+        }
+
+        match hit {
+            None => {
+                // Round completes.
+                now = end;
+                server.rounds_on_instance += 1;
+                for c in clients.iter_mut() {
+                    c.rounds_on_instance += 1;
+                }
+                completed = round;
+                if fw.ft().checkpoint_after_round(cfg, round) {
+                    server_ckpt_round = round;
+                }
+                // Message-exchange costs (Eq. 6) for this round.
+                for c in &clients {
+                    let m = &job.msg;
+                    mc.charge_egress(now, server.vm_type, m.s_train_gb + m.s_aggreg_gb, "server msgs");
+                    mc.charge_egress(now, c.vm_type, m.c_train_gb + m.c_test_gb, "client msgs");
+                }
+            }
+            Some((t_rev, faulty)) => {
+                // Revocation interrupts the round; the round's work is lost.
+                now = t_rev;
+                n_revocations += 1;
+                let current_map = CurrentMap {
+                    server: server.vm_type,
+                    clients: clients.iter().map(|c| c.vm_type).collect(),
+                };
+                let (task_name, old_type, set): (String, VmTypeId, &mut Vec<VmTypeId>) = match faulty
+                {
+                    FaultyTask::Server => ("server".into(), server.vm_type, &mut server_set),
+                    FaultyTask::Client(i) => {
+                        (format!("client-{i}"), clients[i].vm_type, &mut client_sets[i])
+                    }
+                };
+                // Revoke in the platform (blocks the type per policy).
+                let inst = match faulty {
+                    FaultyTask::Server => server.instance,
+                    FaultyTask::Client(i) => clients[i].instance,
+                };
+                mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
+                events.push(SimEvent {
+                    at: now,
+                    what: format!(
+                        "revocation: {task_name} on {} during round {round}",
+                        mc.catalog.vm(old_type).id
+                    ),
+                });
+
+                // Dynamic Scheduler picks the replacement.
+                let (selection, new_set) = fw.dynsched().select(
+                    &problem,
+                    &current_map,
+                    faulty,
+                    set,
+                    old_type,
+                    cfg.dynsched_policy,
+                );
+                *set = new_set;
+                let sel = selection
+                    .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
+
+                // Provision the replacement; everyone waits for its boot
+                // (the server requires all clients each round, §4.3). When
+                // the per-task revocation cap is reached the replacement is
+                // not re-exposed to the Poisson process (§5.6.1's observed
+                // "at most one revocation per task" regime).
+                let task_idx = match faulty {
+                    FaultyTask::Server => 0,
+                    FaultyTask::Client(i) => i + 1,
+                };
+                revocations_per_task[task_idx] += 1;
+                let allow_more = cfg
+                    .max_revocations_per_task
+                    .map_or(true, |cap| revocations_per_task[task_idx] < cap);
+                let new_inst = mc.provision_with(
+                    now,
+                    sel.vm,
+                    match faulty {
+                        FaultyTask::Server => server_market,
+                        FaultyTask::Client(_) => client_market,
+                    },
+                    allow_more,
+                )?;
+                let boot_done = mc.instance(new_inst).ready_at;
+                events.push(SimEvent {
+                    at: now,
+                    what: format!(
+                        "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
+                        mc.catalog.vm(sel.vm).id,
+                        sel.value,
+                        boot_done.hms()
+                    ),
+                });
+                match faulty {
+                    FaultyTask::Server => {
+                        server = TaskState {
+                            vm_type: sel.vm,
+                            instance: new_inst,
+                            rounds_on_instance: 0,
+                        };
+                        // Recovery (§4.3): the FT module plans the restore
+                        // round from the freshest checkpoint available.
+                        let restore = fw.ft().restore_round(cfg, completed, server_ckpt_round);
+                        if restore < completed {
+                            events.push(SimEvent {
+                                at: now,
+                                what: format!(
+                                    "server restore from round {restore} (lost {} rounds)",
+                                    completed - restore
+                                ),
+                            });
+                            completed = restore;
+                        }
+                    }
+                    FaultyTask::Client(i) => {
+                        clients[i] = TaskState {
+                            vm_type: sel.vm,
+                            instance: new_inst,
+                            rounds_on_instance: 0,
+                        };
+                    }
+                }
+                // Other tasks idle (and bill) until the replacement is up.
+                now = boot_done;
+                mc.mark_running(new_inst);
+            }
+        }
+    }
+
+    let fl_end = now;
+    // Teardown: terminate every live instance.
+    let live: Vec<VmId> = mc.live_instances().map(|v| v.id).collect();
+    for id in live {
+        mc.terminate(now, id);
+    }
+    events.push(SimEvent { at: now, what: "all rounds complete; VMs terminated".into() });
+
+    Ok(SimOutcome {
+        fl_exec_secs: fl_end - fl_start,
+        total_secs: now.secs(),
+        total_cost: mc.total_cost(now),
+        vm_cost: mc.ledger.vm_cost(now),
+        egress_cost: mc.ledger.egress_cost(),
+        n_revocations,
+        rounds_completed: completed,
+        initial_server: mc.catalog.vm(initial.server).id.clone(),
+        initial_clients: initial
+            .clients
+            .iter()
+            .map(|&v| mc.catalog.vm(v).id.clone())
+            .collect(),
+        events,
+        predicted_round_makespan: sol.eval.makespan,
+        predicted_round_cost: sol.eval.total_cost,
+    })
+}
+
+/// Duration of one FL round for the current placement, including first-round
+/// warm-up on fresh instances and the FT module's checkpoint overheads
+/// (§5.5). Overheads are added in the same order as the historical
+/// monolithic simulator (disabled hooks return exactly 0.0, which is a
+/// bitwise no-op on the accumulators).
+fn round_duration(
+    cfg: &SimConfig,
+    mc: &MultiCloud,
+    slowdowns: &SlowdownReport,
+    job: &JobProfile,
+    ft: &dyn FaultTolerance,
+    server: &TaskState,
+    clients: &[TaskState],
+) -> f64 {
+    let mut makespan: f64 = 0.0;
+    for (i, c) in clients.iter().enumerate() {
+        let first = c.rounds_on_instance == 0;
+        let exec = mc.exec_secs(c.vm_type, job.client_train_bl[i] + job.client_test_bl[i], first);
+        let comm = (job.train_comm_bl + job.test_comm_bl)
+            * slowdowns.sl_comm(mc.catalog.region_of(c.vm_type), mc.catalog.region_of(server.vm_type));
+        let mut t = exec + comm;
+        // Client checkpoint: save received weights locally each round.
+        t += ft.client_round_overhead_secs(cfg);
+        makespan = makespan.max(t);
+    }
+    let agg = job.agg_bl * slowdowns.sl_inst(server.vm_type);
+    let mut total = makespan + agg;
+    // Server checkpoint every X rounds (local save is synchronous; the
+    // replication overlaps the next round's waiting, §5.5). The round being
+    // executed is approximated by the server instance's age + 1.
+    let next_round_number = server.rounds_on_instance + 1;
+    total += ft.server_armed_overhead_secs(cfg);
+    total += ft.server_save_overhead_secs(cfg, next_round_number);
+    total
+}

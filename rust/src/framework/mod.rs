@@ -1,0 +1,214 @@
+//! The composable Multi-FedLS execution pipeline.
+//!
+//! The paper defines the framework as four cooperating modules; here each
+//! is an object-safe trait ([`PreScheduling`], [`InitialMapper`],
+//! [`FaultTolerance`], [`DynScheduler`] in [`modules`]) plugged into a
+//! slimmed event-loop core (`exec.rs`, carved out of the former monolithic
+//! `coordinator::sim::simulate`). A [`Framework`] value is one assembled
+//! stack:
+//!
+//! ```
+//! use multi_fedls::apps;
+//! use multi_fedls::coordinator::{Scenario, SimConfig};
+//! use multi_fedls::framework::{CheapestMapper, Framework};
+//!
+//! let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+//! cfg.checkpoints_enabled = false;
+//! cfg.n_rounds = 2;
+//!
+//! // The default stack reproduces the paper's pipeline exactly...
+//! let outcome = Framework::default_stack().run(&cfg).unwrap();
+//! assert_eq!(outcome.rounds_completed, 2);
+//!
+//! // ...and any module can be swapped for an ablation.
+//! let greedy = Framework::builder().mapper(CheapestMapper).build();
+//! let ablated = greedy.run(&cfg).unwrap();
+//! assert_ne!(outcome.initial_server, ablated.initial_server);
+//! ```
+//!
+//! The Initial Mapping module is special-cased for configuration-driven
+//! selection: unless the builder pins a mapper, each run resolves
+//! `cfg.mapper` (a `MapperKind`) through `modules::mapper_for`, so job
+//! specs and sweep grids can choose the solver per configuration.
+//!
+//! [`EnvCache`] is the shared environment cache: campaign drivers build
+//! their stack with [`Framework::with_env_cache`] so the Pre-Scheduling
+//! slowdown report is measured once per environment instead of once per
+//! trial (see `crate::sweep`).
+
+pub mod cache;
+mod exec;
+pub mod modules;
+
+pub use cache::EnvCache;
+pub use modules::{
+    CachedPreSched, CheapestMapper, DummyAppPreSched, DynScheduler, ExactMapper, FastestMapper,
+    FaultTolerance, InitialMapper, MilpMapper, NoFt, PaperDynSched, PaperFt, PreScheduling,
+    RandomMapper, RestartSameType, SingleCloudMapper,
+};
+
+use std::sync::Arc;
+
+use crate::coordinator::sim::{SimConfig, SimOutcome};
+use crate::mapping::MapperKind;
+
+/// One assembled module stack. Cheap to clone (modules are shared behind
+/// `Arc`) and `Sync`, so a single stack can drive a whole worker pool.
+#[derive(Clone)]
+pub struct Framework {
+    pre_sched: Arc<dyn PreScheduling>,
+    /// `None` = resolve from `cfg.mapper` at run time.
+    mapper: Option<Arc<dyn InitialMapper>>,
+    ft: Arc<dyn FaultTolerance>,
+    dynsched: Arc<dyn DynScheduler>,
+}
+
+impl Framework {
+    pub fn builder() -> FrameworkBuilder {
+        FrameworkBuilder {
+            pre_sched: Arc::new(DummyAppPreSched),
+            mapper: None,
+            ft: Arc::new(PaperFt),
+            dynsched: Arc::new(PaperDynSched),
+        }
+    }
+
+    /// The paper's stack: dummy-app Pre-Scheduling, config-selected mapper
+    /// (exact by default), checkpoint FT, Algorithms 1–3 Dynamic Scheduler.
+    pub fn default_stack() -> Framework {
+        Self::builder().build()
+    }
+
+    /// The default stack with Pre-Scheduling served from a shared
+    /// environment cache (one slowdown measurement per environment).
+    pub fn with_env_cache(cache: Arc<EnvCache>) -> Framework {
+        Self::builder().pre_sched(CachedPreSched::new(cache)).build()
+    }
+
+    /// Execute one configuration through this stack.
+    pub fn run(&self, cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+        exec::run(self, cfg)
+    }
+
+    pub(crate) fn pre_sched(&self) -> &dyn PreScheduling {
+        self.pre_sched.as_ref()
+    }
+
+    pub(crate) fn ft(&self) -> &dyn FaultTolerance {
+        self.ft.as_ref()
+    }
+
+    pub(crate) fn dynsched(&self) -> &dyn DynScheduler {
+        self.dynsched.as_ref()
+    }
+
+    /// The mapper for `cfg`: the builder-pinned module if any, otherwise
+    /// the built-in implementation selected by `cfg.mapper`.
+    pub fn mapper_for(&self, cfg: &SimConfig) -> Arc<dyn InitialMapper> {
+        match &self.mapper {
+            Some(m) => m.clone(),
+            None => modules::mapper_for(cfg.mapper),
+        }
+    }
+}
+
+/// Assembles a [`Framework`], defaulting every slot to the paper's module.
+pub struct FrameworkBuilder {
+    pre_sched: Arc<dyn PreScheduling>,
+    mapper: Option<Arc<dyn InitialMapper>>,
+    ft: Arc<dyn FaultTolerance>,
+    dynsched: Arc<dyn DynScheduler>,
+}
+
+impl FrameworkBuilder {
+    pub fn pre_sched(mut self, module: impl PreScheduling + 'static) -> Self {
+        self.pre_sched = Arc::new(module);
+        self
+    }
+
+    /// Pin the Initial Mapping module (overrides `cfg.mapper` selection).
+    pub fn mapper(mut self, module: impl InitialMapper + 'static) -> Self {
+        self.mapper = Some(Arc::new(module));
+        self
+    }
+
+    /// Select the built-in mapper for a [`MapperKind`] (equivalent to
+    /// setting `cfg.mapper`, but pinned at build time).
+    pub fn mapper_kind(mut self, kind: MapperKind) -> Self {
+        self.mapper = Some(modules::mapper_for(kind));
+        self
+    }
+
+    pub fn ft(mut self, module: impl FaultTolerance + 'static) -> Self {
+        self.ft = Arc::new(module);
+        self
+    }
+
+    pub fn dynsched(mut self, module: impl DynScheduler + 'static) -> Self {
+        self.dynsched = Arc::new(module);
+        self
+    }
+
+    pub fn build(self) -> Framework {
+        Framework {
+            pre_sched: self.pre_sched,
+            mapper: self.mapper,
+            ft: self.ft,
+            dynsched: self.dynsched,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::Scenario;
+
+    #[test]
+    fn default_stack_runs_til() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+        cfg.checkpoints_enabled = false;
+        cfg.n_rounds = 3;
+        let out = Framework::default_stack().run(&cfg).unwrap();
+        assert_eq!(out.rounds_completed, 3);
+        assert_eq!(out.initial_clients, vec!["vm126"; 4]);
+    }
+
+    #[test]
+    fn builder_pinned_mapper_overrides_cfg_selection() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+        cfg.checkpoints_enabled = false;
+        cfg.n_rounds = 2;
+        cfg.mapper = MapperKind::Exact;
+        let fw = Framework::builder().mapper(CheapestMapper).build();
+        let out = fw.run(&cfg).unwrap();
+        // cheapest picks vm212 for everything, never the exact optimum.
+        assert_eq!(out.initial_server, "vm212");
+    }
+
+    #[test]
+    fn cfg_mapper_kind_selects_module() {
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+        cfg.checkpoints_enabled = false;
+        cfg.n_rounds = 2;
+        cfg.mapper = MapperKind::Fastest;
+        let out = Framework::default_stack().run(&cfg).unwrap();
+        // fastest puts everyone on the lowest-slowdown type (vm126).
+        assert_eq!(out.initial_server, "vm126");
+        assert_eq!(out.initial_clients, vec!["vm126"; 4]);
+    }
+
+    #[test]
+    fn framework_is_cloneable_and_shares_modules() {
+        let cache = Arc::new(EnvCache::new());
+        let fw = Framework::with_env_cache(cache.clone());
+        let fw2 = fw.clone();
+        let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 1);
+        cfg.checkpoints_enabled = false;
+        cfg.n_rounds = 1;
+        fw.run(&cfg).unwrap();
+        fw2.run(&cfg).unwrap();
+        assert_eq!(cache.computations(), 1, "clones share one cache");
+    }
+}

@@ -1,0 +1,361 @@
+//! The four pluggable module traits of the Multi-FedLS pipeline and their
+//! built-in implementations.
+//!
+//! Each trait mirrors one module of the paper:
+//!
+//! * [`PreScheduling`] (§4.1) produces the environment's `SlowdownReport`;
+//! * [`InitialMapper`] (§4.2) solves the placement problem;
+//! * [`FaultTolerance`] (§4.3) prices checkpoint overheads and plans
+//!   recovery;
+//! * [`DynScheduler`] (§4.4) picks replacement VMs after revocations.
+//!
+//! All traits are object-safe and `Send + Sync`, so module stacks can be
+//! shared across the sweep worker pool. The default stack
+//! (`DummyAppPreSched` + the [`MapperKind`]-selected mapper + `PaperFt` +
+//! `PaperDynSched`) reproduces the original monolithic simulator
+//! bit-for-bit; every other implementation is a drop-in ablation.
+
+use std::sync::Arc;
+
+use crate::cloud::VmTypeId;
+use crate::cloudsim::MultiCloud;
+use crate::coordinator::sim::SimConfig;
+use crate::dynsched::{self, CurrentMap, DynSchedPolicy, FaultyTask, Selection};
+use crate::mapping::problem::{Mapping, MappingProblem};
+use crate::mapping::{self, MapperKind, MappingSolution};
+use crate::presched::{PreScheduler, SlowdownReport};
+
+use super::EnvCache;
+
+// ---------------------------------------------------------------------------
+// Pre-Scheduling (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Produces the slowdown report the Initial Mapping and Dynamic Scheduler
+/// consume.
+pub trait PreScheduling: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Measure (or fetch) the environment's slowdown report.
+    fn slowdowns(&self, mc: &MultiCloud) -> Arc<SlowdownReport>;
+}
+
+/// Default: run the dummy application on every framework execution — the
+/// paper's measurement protocol, uncached.
+pub struct DummyAppPreSched;
+
+impl PreScheduling for DummyAppPreSched {
+    fn name(&self) -> &'static str {
+        "dummy-app"
+    }
+    fn slowdowns(&self, mc: &MultiCloud) -> Arc<SlowdownReport> {
+        Arc::new(PreScheduler::new(mc).measure_defaults())
+    }
+}
+
+/// Campaign-scoped caching: one measurement per environment fingerprint,
+/// shared across every trial that uses the same [`EnvCache`].
+pub struct CachedPreSched {
+    cache: Arc<EnvCache>,
+}
+
+impl CachedPreSched {
+    pub fn new(cache: Arc<EnvCache>) -> CachedPreSched {
+        CachedPreSched { cache }
+    }
+}
+
+impl PreScheduling for CachedPreSched {
+    fn name(&self) -> &'static str {
+        "cached-dummy-app"
+    }
+    fn slowdowns(&self, mc: &MultiCloud) -> Arc<SlowdownReport> {
+        self.cache.get_or_measure(mc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Initial Mapping (§4.2)
+// ---------------------------------------------------------------------------
+
+/// Solves the Initial Mapping problem; `None` = no feasible placement.
+pub trait InitialMapper: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution>;
+}
+
+/// Wrap a bare baseline `Mapping` into a solution, rejecting infeasible
+/// placements (the exact solver checks feasibility internally; baselines
+/// need the explicit gate).
+fn solution_from(p: &MappingProblem, mapping: Mapping) -> Option<MappingSolution> {
+    let eval = p.evaluate(&mapping);
+    if !eval.feasible {
+        return None;
+    }
+    Some(MappingSolution { mapping, eval, nodes: 0 })
+}
+
+/// The structured exact MILP solver (the paper's production path).
+pub struct ExactMapper;
+
+impl InitialMapper for ExactMapper {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::exact::solve(p)
+    }
+}
+
+/// The linearized-MILP transcription over the generic simplex + B&B solver
+/// (slow; cross-check and ablation only).
+pub struct MilpMapper;
+
+impl InitialMapper for MilpMapper {
+    fn name(&self) -> &'static str {
+        "milp"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::milp::solve(p).and_then(|m| solution_from(p, m))
+    }
+}
+
+/// Everyone on the cheapest-rate VM type that fits quota.
+pub struct CheapestMapper;
+
+impl InitialMapper for CheapestMapper {
+    fn name(&self) -> &'static str {
+        "cheapest"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::baselines::cheapest(p).and_then(|m| solution_from(p, m))
+    }
+}
+
+/// Everyone on the lowest-slowdown VM type that fits quota.
+pub struct FastestMapper;
+
+impl InitialMapper for FastestMapper {
+    fn name(&self) -> &'static str {
+        "fastest"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::baselines::fastest(p).and_then(|m| solution_from(p, m))
+    }
+}
+
+/// Uniform-random feasible placement.
+pub struct RandomMapper {
+    pub seed: u64,
+    pub attempts: usize,
+}
+
+impl Default for RandomMapper {
+    fn default() -> Self {
+        RandomMapper { seed: 2024, attempts: 200 }
+    }
+}
+
+impl InitialMapper for RandomMapper {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::baselines::random(p, self.seed, self.attempts).and_then(|m| solution_from(p, m))
+    }
+}
+
+/// Exact solve restricted to the best single provider (the "don't go
+/// multi-cloud" ablation).
+pub struct SingleCloudMapper;
+
+impl InitialMapper for SingleCloudMapper {
+    fn name(&self) -> &'static str {
+        "single-cloud"
+    }
+    fn map(&self, p: &MappingProblem) -> Option<MappingSolution> {
+        mapping::baselines::single_cloud(p, None).and_then(|m| solution_from(p, m))
+    }
+}
+
+/// The built-in mapper for a [`MapperKind`] (job-spec / sweep selection).
+pub fn mapper_for(kind: MapperKind) -> Arc<dyn InitialMapper> {
+    match kind {
+        MapperKind::Exact => Arc::new(ExactMapper),
+        MapperKind::Milp => Arc::new(MilpMapper),
+        MapperKind::Cheapest => Arc::new(CheapestMapper),
+        MapperKind::Fastest => Arc::new(FastestMapper),
+        MapperKind::Random => Arc::new(RandomMapper::default()),
+        MapperKind::SingleCloud => Arc::new(SingleCloudMapper),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault Tolerance (§4.3)
+// ---------------------------------------------------------------------------
+
+/// Checkpoint-overhead and recovery hooks consulted by the event loop.
+/// Implementations must be pure functions of `cfg` and their arguments —
+/// the loop owns all mutable state (current checkpoint round, etc.).
+pub trait FaultTolerance: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Seconds each client adds to its round for checkpointing received
+    /// weights (0 when disabled).
+    fn client_round_overhead_secs(&self, cfg: &SimConfig) -> f64;
+    /// Constant per-round server-side overhead while checkpointing is armed
+    /// (0 when disabled).
+    fn server_armed_overhead_secs(&self, cfg: &SimConfig) -> f64;
+    /// Synchronous save cost added when round `next_round_number` triggers a
+    /// periodic server checkpoint (0 otherwise).
+    fn server_save_overhead_secs(&self, cfg: &SimConfig, next_round_number: u32) -> f64;
+    /// Does completing `round` persist a server checkpoint?
+    fn checkpoint_after_round(&self, cfg: &SimConfig, round: u32) -> bool;
+    /// Round to restore from after a server loss, given `completed` rounds
+    /// and the freshest server checkpoint.
+    fn restore_round(&self, cfg: &SimConfig, completed: u32, server_ckpt_round: u32) -> u32;
+}
+
+/// The paper's checkpoint model (§4.3), calibrated against Fig. 2: client
+/// checkpoints every round, server checkpoints every X rounds plus a
+/// constant armed-overhead, recovery from the freshest checkpoint.
+pub struct PaperFt;
+
+impl FaultTolerance for PaperFt {
+    fn name(&self) -> &'static str {
+        "paper-checkpoints"
+    }
+
+    fn client_round_overhead_secs(&self, cfg: &SimConfig) -> f64 {
+        if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+            cfg.ft.client_save_overhead_secs(cfg.app.checkpoint_gb)
+        } else {
+            0.0
+        }
+    }
+
+    fn server_armed_overhead_secs(&self, cfg: &SimConfig) -> f64 {
+        if cfg.checkpoints_enabled {
+            cfg.ft.server_round_overhead_secs
+        } else {
+            0.0
+        }
+    }
+
+    fn server_save_overhead_secs(&self, cfg: &SimConfig, next_round_number: u32) -> f64 {
+        if cfg.checkpoints_enabled && next_round_number % cfg.ft.server_every_rounds == 0 {
+            cfg.ft.save_overhead_secs(cfg.app.checkpoint_gb)
+        } else {
+            0.0
+        }
+    }
+
+    fn checkpoint_after_round(&self, cfg: &SimConfig, round: u32) -> bool {
+        cfg.checkpoints_enabled && round % cfg.ft.server_every_rounds == 0
+    }
+
+    fn restore_round(&self, cfg: &SimConfig, completed: u32, server_ckpt_round: u32) -> u32 {
+        if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+            // Clients checkpoint every round → freshest state is `completed`.
+            completed
+        } else if cfg.checkpoints_enabled {
+            server_ckpt_round
+        } else {
+            0
+        }
+    }
+}
+
+/// Fault tolerance fully disabled regardless of `cfg` (the "no FT module"
+/// ablation: zero overheads, server losses restart from round 0).
+pub struct NoFt;
+
+impl FaultTolerance for NoFt {
+    fn name(&self) -> &'static str {
+        "no-ft"
+    }
+    fn client_round_overhead_secs(&self, _cfg: &SimConfig) -> f64 {
+        0.0
+    }
+    fn server_armed_overhead_secs(&self, _cfg: &SimConfig) -> f64 {
+        0.0
+    }
+    fn server_save_overhead_secs(&self, _cfg: &SimConfig, _next_round_number: u32) -> f64 {
+        0.0
+    }
+    fn checkpoint_after_round(&self, _cfg: &SimConfig, _round: u32) -> bool {
+        false
+    }
+    fn restore_round(&self, _cfg: &SimConfig, _completed: u32, _server_ckpt_round: u32) -> u32 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic Scheduler (§4.4)
+// ---------------------------------------------------------------------------
+
+/// Picks the replacement VM for a revoked task, returning the selection and
+/// the task's updated candidate set.
+pub trait DynScheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn select(
+        &self,
+        p: &MappingProblem,
+        map: &CurrentMap,
+        faulty: FaultyTask,
+        candidate_set: &[VmTypeId],
+        revoked: VmTypeId,
+        policy: DynSchedPolicy,
+    ) -> (Option<Selection>, Vec<VmTypeId>);
+}
+
+/// Algorithms 1–3 (the paper's Dynamic Scheduler): re-compute makespan and
+/// cost for every candidate and minimize the weighted objective.
+pub struct PaperDynSched;
+
+impl DynScheduler for PaperDynSched {
+    fn name(&self) -> &'static str {
+        "algorithms-1-3"
+    }
+    fn select(
+        &self,
+        p: &MappingProblem,
+        map: &CurrentMap,
+        faulty: FaultyTask,
+        candidate_set: &[VmTypeId],
+        revoked: VmTypeId,
+        policy: DynSchedPolicy,
+    ) -> (Option<Selection>, Vec<VmTypeId>) {
+        dynsched::select_instance(p, map, faulty, candidate_set, revoked, policy)
+    }
+}
+
+/// Trivial baseline: always restart the task on the same VM type that was
+/// revoked, ignoring the candidate set and the removal policy. Isolates the
+/// benefit of Algorithm 3's re-optimization in ablations.
+pub struct RestartSameType;
+
+impl DynScheduler for RestartSameType {
+    fn name(&self) -> &'static str {
+        "restart-same-type"
+    }
+    fn select(
+        &self,
+        p: &MappingProblem,
+        map: &CurrentMap,
+        faulty: FaultyTask,
+        candidate_set: &[VmTypeId],
+        revoked: VmTypeId,
+        _policy: DynSchedPolicy,
+    ) -> (Option<Selection>, Vec<VmTypeId>) {
+        let expected_makespan = dynsched::recompute_makespan(p, map, faulty, revoked);
+        let expected_cost = dynsched::recompute_cost(p, map, faulty, revoked, expected_makespan);
+        let selection = Selection {
+            vm: revoked,
+            expected_makespan,
+            expected_cost,
+            value: p.objective_value(expected_cost, expected_makespan),
+            candidates_considered: 1,
+        };
+        (Some(selection), candidate_set.to_vec())
+    }
+}

@@ -13,6 +13,10 @@
 //! * on server restart, resume from the freshest of server/client
 //!   checkpoints: if a client's is newer, the new server waits for that
 //!   client to upload it.
+//!
+//! In the simulated pipeline this model is consulted through the pluggable
+//! `FaultTolerance` trait (`crate::framework::modules`); [`FtConfig`] is
+//! the configuration the default `PaperFt` module prices from.
 
 pub mod checkpoint;
 

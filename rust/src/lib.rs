@@ -5,8 +5,29 @@
 //!
 //! Multi-FedLS manages multi-cloud resources to reduce the execution time and
 //! financial cost of Cross-Silo FL jobs, exploiting cheap preemptible (spot)
-//! VMs while surviving their revocation. It is organized as the paper's four
-//! modules plus the substrates they need:
+//! VMs while surviving their revocation.
+//!
+//! ## The module pipeline
+//!
+//! The paper's four cooperating modules are object-safe traits assembled
+//! into a [`framework::Framework`] stack:
+//!
+//! ```text
+//! Framework::builder()
+//!     .pre_sched(..)   // PreScheduling (§4.1): dummy-app slowdown report
+//!     .mapper(..)      // InitialMapper (§4.2): exact MILP | baselines
+//!     .ft(..)          // FaultTolerance (§4.3): checkpoint/recovery model
+//!     .dynsched(..)    // DynScheduler (§4.4): Algorithms 1–3 | ablations
+//!     .build()
+//!     .run(&cfg)
+//! ```
+//!
+//! The default stack reproduces the paper's pipeline exactly;
+//! `coordinator::simulate` and `coordinator::run_trials` are thin wrappers
+//! over it. Campaign drivers share a [`framework::EnvCache`] so each
+//! environment's Pre-Scheduling report is measured once per campaign.
+//!
+//! ## Module map
 //!
 //! * [`cloud`] — the environment model: providers, regions, VM types, prices,
 //!   quotas (§3), with the paper's Table 2 / Table 9 catalogs built in.
@@ -16,16 +37,23 @@
 //! * [`presched`] — Pre-Scheduling (§4.1): dummy-app slowdown measurement.
 //! * [`solver`] — from-scratch LP simplex + 0/1 branch-and-bound MILP.
 //! * [`mapping`] — Initial Mapping (§4.2): the MILP formulation (Eqs. 3–18)
-//!   with exact and baseline solvers.
+//!   with exact and baseline solvers, module selection
+//!   ([`mapping::MapperKind`]) and the shared ranking helpers
+//!   ([`mapping::rank`]).
 //! * [`fl`] — a Flower-like Cross-Silo FL runtime (rounds, FedAvg, messages).
 //! * [`ft`] — Fault Tolerance (§4.3): monitoring + checkpointing.
 //! * [`dynsched`] — Dynamic Scheduler (§4.4): Algorithms 1–3.
+//! * [`framework`] — the composable pipeline: the four module traits, their
+//!   built-in implementations, the builder, the event-loop core, and the
+//!   shared environment cache.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts.
 //! * [`data`] — synthetic federated datasets (TIL, Shakespeare, FEMNIST).
 //! * [`apps`] — the paper's three application descriptors (§5.1).
-//! * [`coordinator`] — the end-to-end driver tying everything together.
+//! * [`coordinator`] — configuration (job specs) and the end-to-end drivers
+//!   (simulated, real-compute, multi-job) over the framework stack.
 //! * [`sweep`] — the parallel experiment-campaign engine: declarative config
-//!   grids fanned out across an OS-thread worker pool, deterministically.
+//!   grids fanned out across an OS-thread worker pool, deterministically,
+//!   with persisted, resumable results ([`sweep::persist`]).
 //! * [`trace`] — experiment recording and table rendering.
 
 pub mod apps;
@@ -34,6 +62,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dynsched;
 pub mod fl;
+pub mod framework;
 pub mod ft;
 pub mod mapping;
 pub mod presched;

@@ -6,6 +6,7 @@
 //! multi-fedls map --app A [--alpha X] [...]    run the Initial Mapping solver
 //! multi-fedls simulate --spec FILE [--json]    simulate a job spec (TOML)
 //! multi-fedls sweep --spec FILE [--jobs N]     run a campaign grid in parallel
+//!                   [--results DIR] [--resume] [--no-persist]
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
 //! ```
@@ -75,8 +76,10 @@ USAGE:
   multi-fedls preschedule [--env cloudlab|aws-gcp] [--cache FILE]
   multi-fedls map --app <til|shakespeare|femnist|til-aws-gcp> [--alpha A]
                   [--market on-demand|spot] [--budget B] [--deadline T]
+                  [--mapper exact|milp|cheapest|fastest|random|single-cloud]
   multi-fedls simulate --spec configs/<job>.toml [--json]
   multi-fedls sweep --spec configs/<grid>.toml [--jobs N] [--json|--csv]
+                    [--results DIR] [--resume] [--no-persist]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
   multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|all> [--json]
@@ -185,9 +188,18 @@ fn cmd_map(args: &Args) -> anyhow::Result<()> {
             .transpose()?
             .unwrap_or(f64::INFINITY),
     };
-    match multi_fedls::mapping::exact::solve(&p) {
+    let mapper_kind = match args.get("mapper") {
+        Some(k) => multi_fedls::mapping::MapperKind::from_key(k)
+            .ok_or_else(|| anyhow::anyhow!("unknown mapper {k}"))?,
+        None => multi_fedls::mapping::MapperKind::Exact,
+    };
+    let mapper = multi_fedls::framework::modules::mapper_for(mapper_kind);
+    match mapper.map(&p) {
         Some(sol) => {
-            println!("Initial Mapping for {app_name} (alpha={alpha}, {market}):");
+            println!(
+                "Initial Mapping for {app_name} (alpha={alpha}, {market}, {} mapper):",
+                mapper.name()
+            );
             println!("  server : {}", mc.catalog.vm(sol.mapping.server).id);
             for (i, &c) in sol.mapping.clients.iter().enumerate() {
                 println!("  client{i}: {}", mc.catalog.vm(c).id);
@@ -238,9 +250,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `multi-fedls sweep --spec FILE [--jobs N] [--json|--csv]`: expand a
-/// declarative campaign grid and run it across the worker pool. Output is
-/// byte-identical for any `--jobs` value.
+/// `multi-fedls sweep --spec FILE [--jobs N] [--json|--csv] [--results DIR]
+/// [--resume] [--no-persist]`: expand a declarative campaign grid and run
+/// it across the worker pool. Output is byte-identical for any `--jobs`
+/// value. By default results are persisted under `--results` (default
+/// `results/`) keyed by the spec fingerprint; `--resume` skips grid points
+/// already recorded there.
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
     let spec = multi_fedls::sweep::SweepSpec::from_file(std::path::Path::new(spec_path))?;
@@ -258,7 +273,26 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         n_trials,
         multi_fedls::sweep::effective_jobs(jobs, n_trials)
     );
-    let stats = multi_fedls::sweep::run_campaign(&points, jobs)?;
+    let resume = args.flag("resume");
+    anyhow::ensure!(
+        !(resume && args.flag("no-persist")),
+        "--resume reads and writes the results directory; drop --no-persist"
+    );
+    let persist = resume || !args.flag("no-persist");
+    let stats = if persist {
+        let results_dir = std::path::Path::new(args.get("results").unwrap_or("results"));
+        let (stats, dir) = multi_fedls::sweep::persist::run_campaign_persistent(
+            &spec,
+            &points,
+            jobs,
+            results_dir,
+            resume,
+        )?;
+        eprintln!("campaign recorded in {}", dir.display());
+        stats
+    } else {
+        multi_fedls::sweep::run_campaign(&points, jobs)?
+    };
     if args.flag("json") {
         let j = multi_fedls::sweep::spec::render_json(&spec, &points, &stats);
         println!("{}", j.to_string_pretty());

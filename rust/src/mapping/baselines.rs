@@ -1,12 +1,16 @@
 //! Baseline placement policies the paper's exact mapping is compared
-//! against in our benches: random, cheapest-rate, fastest, and
-//! single-cloud-restricted exact.
+//! against in our benches — random, cheapest-rate, fastest, and
+//! single-cloud-restricted exact — all usable as drop-in `InitialMapper`
+//! implementations via `crate::framework::modules`. VM ranking goes through
+//! the shared [`super::rank`] helpers so ties break identically to the
+//! Dynamic Scheduler's Algorithm 3.
 
 use crate::cloud::quota::QuotaTracker;
 use crate::cloud::{ProviderId, VmTypeId};
 use crate::simul::Rng;
 
 use super::problem::{Mapping, MappingProblem};
+use super::rank;
 
 /// Uniform-random feasible placement (quota-aware), or None after
 /// `attempts` failed tries.
@@ -31,25 +35,14 @@ pub fn random(p: &MappingProblem, seed: u64, attempts: usize) -> Option<Mapping>
 /// cost-greedy baseline, oblivious to slowdowns).
 pub fn cheapest(p: &MappingProblem) -> Option<Mapping> {
     let mut by_rate: Vec<VmTypeId> = p.catalog.vm_ids().collect();
-    by_rate.sort_by(|&a, &b| {
-        p.catalog
-            .vm(a)
-            .cost_per_sec(p.market)
-            .partial_cmp(&p.catalog.vm(b).cost_per_sec(p.market))
-            .unwrap()
-    });
+    rank::sort_by_key_f64(&mut by_rate, |&v| p.catalog.vm(v).cost_per_sec(p.market));
     greedy_fill(p, &by_rate)
 }
 
 /// Everyone on the lowest-slowdown VM type (time-greedy, oblivious to cost).
 pub fn fastest(p: &MappingProblem) -> Option<Mapping> {
     let mut by_speed: Vec<VmTypeId> = p.catalog.vm_ids().collect();
-    by_speed.sort_by(|&a, &b| {
-        p.slowdowns
-            .sl_inst(a)
-            .partial_cmp(&p.slowdowns.sl_inst(b))
-            .unwrap()
-    });
+    rank::sort_by_key_f64(&mut by_speed, |&v| p.slowdowns.sl_inst(v));
     greedy_fill(p, &by_speed)
 }
 

@@ -22,6 +22,7 @@ use crate::cloud::quota::QuotaTracker;
 use crate::cloud::VmTypeId;
 
 use super::problem::{Evaluation, Mapping, MappingProblem};
+use super::rank;
 
 /// Result of the Initial Mapping: the chosen placement and its evaluation.
 #[derive(Debug, Clone)]
@@ -65,7 +66,7 @@ pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
             .copied()
             .filter(|&t| t <= p.deadline_round + 1e-9)
             .collect();
-        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rank::sort_f64(&mut candidates);
         candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
 
         let server_rate = p.catalog.vm(server).cost_per_sec(p.market);
@@ -86,7 +87,7 @@ pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
                     ok = false;
                     break;
                 }
-                opts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                rank::sort_by_key_f64(&mut opts, |o| o.1);
                 options.push(opts);
             }
             if !ok {

@@ -1,12 +1,93 @@
 //! Initial Mapping module (§4.2): the MILP formulation of Eqs. 3–18 with an
 //! exact structured solver ([`exact`], the production path), a faithful
 //! linearized-MILP transcription over the generic solver ([`milp`],
-//! cross-check + ablation), and greedy/random baselines ([`baselines`]).
+//! cross-check + ablation), greedy/random baselines ([`baselines`]), and the
+//! deterministic ranking helpers they share with the Dynamic Scheduler
+//! ([`rank`]).
+//!
+//! Which implementation a `Framework` run uses is selected by [`MapperKind`]
+//! (the `mapper = "..."` key of job specs and the `mappers` sweep-grid
+//! axis); `crate::framework::modules::mapper_for` turns a kind into the
+//! corresponding `InitialMapper` module.
 
 pub mod baselines;
 pub mod exact;
 pub mod milp;
 pub mod problem;
+pub mod rank;
 
 pub use exact::{solve as solve_exact, MappingSolution};
 pub use problem::{Evaluation, JobProfile, Mapping, MappingProblem, MessageSizes};
+
+/// Which Initial Mapping implementation to run (module selection for the
+/// pluggable `Framework` pipeline). `Exact` is the paper's MILP solved by
+/// the structured exact solver; the others are the cross-check solver and
+/// the comparison baselines, promoted to drop-in alternatives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MapperKind {
+    /// Structured exact MILP solver (the production path).
+    #[default]
+    Exact,
+    /// Linearized MILP over the generic simplex + branch-and-bound.
+    Milp,
+    /// Everyone on the cheapest-rate VM type that fits quota.
+    Cheapest,
+    /// Everyone on the lowest-slowdown VM type that fits quota.
+    Fastest,
+    /// Uniform-random feasible placement (fixed internal seed).
+    Random,
+    /// Exact solve restricted to the best single provider.
+    SingleCloud,
+}
+
+impl MapperKind {
+    /// Stable config-file key (job specs and sweep grids).
+    pub fn key(self) -> &'static str {
+        match self {
+            MapperKind::Exact => "exact",
+            MapperKind::Milp => "milp",
+            MapperKind::Cheapest => "cheapest",
+            MapperKind::Fastest => "fastest",
+            MapperKind::Random => "random",
+            MapperKind::SingleCloud => "single-cloud",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<MapperKind> {
+        match key {
+            "exact" => Some(MapperKind::Exact),
+            "milp" => Some(MapperKind::Milp),
+            "cheapest" => Some(MapperKind::Cheapest),
+            "fastest" => Some(MapperKind::Fastest),
+            "random" => Some(MapperKind::Random),
+            "single-cloud" => Some(MapperKind::SingleCloud),
+            _ => None,
+        }
+    }
+
+    /// Every selectable kind (CLI help, property tests).
+    pub fn all() -> [MapperKind; 6] {
+        [
+            MapperKind::Exact,
+            MapperKind::Milp,
+            MapperKind::Cheapest,
+            MapperKind::Fastest,
+            MapperKind::Random,
+            MapperKind::SingleCloud,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapper_kind_keys_round_trip() {
+        for kind in MapperKind::all() {
+            assert_eq!(MapperKind::from_key(kind.key()), Some(kind));
+        }
+        assert_eq!(MapperKind::from_key("nope"), None);
+        assert_eq!(MapperKind::default(), MapperKind::Exact);
+    }
+}

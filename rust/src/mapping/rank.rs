@@ -1,0 +1,87 @@
+//! Deterministic VM-ranking helpers shared by the Initial Mapping solvers
+//! and baselines and by the Dynamic Scheduler.
+//!
+//! Both modules rank candidate VMs by a floating-point key (price rate,
+//! measured slowdown, or the weighted objective of Algorithm 3) and must do
+//! so with identical tie-breaking so that results are reproducible across
+//! module implementations: a *stable* sort keeps catalog order for equal
+//! keys, and the argmin keeps the *first* minimal element in input order.
+//! Before this module each caller hand-rolled its own `partial_cmp` dance;
+//! now the comparator lives in one place.
+
+use std::cmp::Ordering;
+
+/// Total order on finite ranking keys. Panics on NaN — a NaN key means the
+/// caller computed a slowdown/cost from corrupt inputs, which must never be
+/// silently ordered.
+pub fn cmp_f64(a: f64, b: f64) -> Ordering {
+    a.partial_cmp(&b).expect("NaN ranking key")
+}
+
+/// Sort a slice of keys ascending (stable).
+pub fn sort_f64(xs: &mut [f64]) {
+    xs.sort_by(|a, b| cmp_f64(*a, *b));
+}
+
+/// Sort items ascending by an f64 key (stable: ties keep input order).
+pub fn sort_by_key_f64<T>(items: &mut [T], mut key: impl FnMut(&T) -> f64) {
+    items.sort_by(|a, b| cmp_f64(key(a), key(b)));
+}
+
+/// First minimal element in input order (ties keep the earliest), together
+/// with its key. This is the selection rule of Algorithm 3: a later
+/// candidate replaces the incumbent only when *strictly* better.
+pub fn argmin_by_f64<T>(
+    items: impl IntoIterator<Item = T>,
+    mut key: impl FnMut(&T) -> f64,
+) -> Option<(T, f64)> {
+    let mut best: Option<(T, f64)> = None;
+    for item in items {
+        let k = key(&item);
+        let better = best.as_ref().map_or(true, |(_, bk)| cmp_f64(k, *bk) == Ordering::Less);
+        if better {
+            best = Some((item, k));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_is_stable_on_ties() {
+        let mut items = vec![("a", 2.0), ("b", 1.0), ("c", 1.0), ("d", 0.5)];
+        sort_by_key_f64(&mut items, |x| x.1);
+        let names: Vec<&str> = items.iter().map(|x| x.0).collect();
+        assert_eq!(names, vec!["d", "b", "c", "a"]);
+    }
+
+    #[test]
+    fn argmin_keeps_first_on_ties() {
+        let xs = vec![("a", 3.0), ("b", 1.0), ("c", 1.0)];
+        let (item, k) = argmin_by_f64(xs, |x| x.1).unwrap();
+        assert_eq!(item.0, "b");
+        assert_eq!(k, 1.0);
+    }
+
+    #[test]
+    fn argmin_empty_is_none() {
+        let xs: Vec<f64> = vec![];
+        assert!(argmin_by_f64(xs, |&x| x).is_none());
+    }
+
+    #[test]
+    fn sort_f64_handles_infinity() {
+        let mut xs = vec![f64::INFINITY, 1.0, 0.0];
+        sort_f64(&mut xs);
+        assert_eq!(xs, vec![0.0, 1.0, f64::INFINITY]);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN ranking key")]
+    fn nan_keys_panic() {
+        cmp_f64(f64::NAN, 1.0);
+    }
+}

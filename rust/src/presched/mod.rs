@@ -18,7 +18,9 @@
 //! protocol behind Table 3. Results are cached on disk keyed by an
 //! environment fingerprint so re-runs are no-ops until regions or VM types
 //! change (§4.1: "it is not necessary to re-execute the dummy application in
-//! every framework execution").
+//! every framework execution"); campaigns additionally share reports
+//! in-memory through `crate::framework::EnvCache`, keyed by the same
+//! [`fingerprint`].
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -10,18 +10,24 @@
 //! and the CI smoke job).
 //!
 //! Layering: [`spec`] parses `multi-fedls sweep --spec` TOML grids into
-//! [`PointSpec`]s; [`run_campaign`] executes them; both
+//! [`PointSpec`]s; [`run_campaign`] executes them through a shared
+//! [`Framework`] stack whose Pre-Scheduling module is backed by one
+//! [`EnvCache`] — so each environment's slowdown report is measured once
+//! per campaign, not once per trial; [`persist`] records per-point results
+//! under `results/` and powers `--resume`. Both
 //! [`crate::coordinator::run_trials`] and the `trace::experiments` table
 //! drivers are thin layers over the same pool.
 
+pub mod persist;
 pub mod spec;
 
 pub use spec::SweepSpec;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
-use crate::coordinator::sim::{self, SimConfig, SimOutcome};
+use crate::coordinator::sim::{SimConfig, SimOutcome};
+use crate::framework::{EnvCache, Framework};
 
 /// One fully-resolved trial: the index of the campaign point it belongs to
 /// and the exact simulator configuration (seed included) to run.
@@ -134,17 +140,28 @@ pub fn effective_jobs(jobs: usize, n_trials: usize) -> usize {
     jobs.clamp(1, n_trials.max(1))
 }
 
-/// Run every trial, `jobs` at a time, returning outcomes in input order.
+/// Run every trial through the default module stack (no cross-trial
+/// sharing). See [`run_pool_with`].
+pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<TrialOutcome>> {
+    run_pool_with(trials, jobs, &Framework::default_stack())
+}
+
+/// Run every trial, `jobs` at a time, through `fw`'s module stack,
+/// returning outcomes in input order.
 ///
 /// Workers pull the next trial index from a shared atomic cursor and report
 /// `(index, outcome)` over a channel; the assembly into the result vector is
 /// by index, so completion order cannot influence the output.
-pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<TrialOutcome>> {
+pub fn run_pool_with(
+    trials: &[TrialConfig],
+    jobs: usize,
+    fw: &Framework,
+) -> anyhow::Result<Vec<TrialOutcome>> {
     let jobs = effective_jobs(jobs, trials.len());
     if jobs == 1 {
         return trials
             .iter()
-            .map(|t| Ok(TrialOutcome::from(&sim::simulate(&t.cfg)?)))
+            .map(|t| Ok(TrialOutcome::from(&fw.run(&t.cfg)?)))
             .collect();
     }
     let next = AtomicUsize::new(0);
@@ -159,7 +176,7 @@ pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<Trial
                 if i >= trials.len() {
                     break;
                 }
-                let out = sim::simulate(&trials[i].cfg).map(|o| TrialOutcome::from(&o));
+                let out = fw.run(&trials[i].cfg).map(|o| TrialOutcome::from(&o));
                 if tx.send((i, out)).is_err() {
                     break;
                 }
@@ -175,31 +192,111 @@ pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<Trial
     Ok(slots.into_iter().map(|s| s.expect("every trial reported")).collect())
 }
 
-/// Run a whole campaign: flatten every point's trials, push them through one
-/// shared worker pool, and re-group per-point aggregate statistics in point
-/// order.
+/// Run a whole campaign with a fresh environment cache: each distinct
+/// environment's Pre-Scheduling report is measured exactly once and shared
+/// across every trial. See [`run_campaign_with`].
 pub fn run_campaign(
     points: &[PointSpec],
     jobs: usize,
 ) -> anyhow::Result<Vec<crate::coordinator::TrialStats>> {
+    run_campaign_with(points, jobs, &Framework::with_env_cache(Arc::new(EnvCache::new())))
+}
+
+/// Run a whole campaign through `fw`'s module stack: flatten every point's
+/// trials, push them through one shared worker pool, and re-group per-point
+/// aggregate statistics in point order.
+pub fn run_campaign_with(
+    points: &[PointSpec],
+    jobs: usize,
+    fw: &Framework,
+) -> anyhow::Result<Vec<crate::coordinator::TrialStats>> {
+    run_campaign_streaming(points, jobs, fw, |_, _| Ok(()))
+}
+
+/// Like [`run_campaign_with`], but invokes `on_point_done(index, stats)` as
+/// soon as *all* of a point's trials have completed (in completion order,
+/// not input order), so callers can persist partial campaign progress
+/// before the whole campaign — or the process — ends. The returned vector
+/// is in point order and bit-identical to [`run_campaign_with`]'s.
+pub fn run_campaign_streaming(
+    points: &[PointSpec],
+    jobs: usize,
+    fw: &Framework,
+    mut on_point_done: impl FnMut(usize, &crate::coordinator::TrialStats) -> anyhow::Result<()>,
+) -> anyhow::Result<Vec<crate::coordinator::TrialStats>> {
     let mut trials = Vec::new();
+    // First flattened trial index of each point (a point's trials are
+    // contiguous in expansion order).
+    let mut point_start = Vec::with_capacity(points.len());
     for (pi, p) in points.iter().enumerate() {
         anyhow::ensure!(!p.seeds.is_empty(), "campaign point {pi} has no trials");
+        point_start.push(trials.len());
         for &seed in &p.seeds {
             let mut cfg = p.cfg.clone();
             cfg.seed = seed;
             trials.push(TrialConfig { point: pi, cfg });
         }
     }
-    let outcomes = run_pool(&trials, jobs)?;
-    let mut grouped: Vec<Vec<TrialOutcome>> = vec![Vec::new(); points.len()];
-    for (t, o) in trials.iter().zip(&outcomes) {
-        grouped[t.point].push(*o);
+    let mut slots: Vec<Option<TrialOutcome>> = vec![None; trials.len()];
+    let mut remaining: Vec<usize> = points.iter().map(|p| p.seeds.len()).collect();
+    let mut stats: Vec<Option<crate::coordinator::TrialStats>> = vec![None; points.len()];
+
+    // Record one finished trial; when its point is complete, aggregate (in
+    // trial input order, so aggregates are independent of completion order)
+    // and notify the caller.
+    macro_rules! record {
+        ($i:expr, $out:expr) => {{
+            let i: usize = $i;
+            slots[i] = Some($out);
+            let pi = trials[i].point;
+            remaining[pi] -= 1;
+            if remaining[pi] == 0 {
+                let outs: Vec<TrialOutcome> = (point_start[pi]
+                    ..point_start[pi] + points[pi].seeds.len())
+                    .map(|j| slots[j].expect("trial recorded"))
+                    .collect();
+                let s = crate::coordinator::TrialStats::from_outcomes(&outs);
+                on_point_done(pi, &s)?;
+                stats[pi] = Some(s);
+            }
+        }};
     }
-    Ok(grouped
-        .iter()
-        .map(|outs| crate::coordinator::TrialStats::from_outcomes(outs))
-        .collect())
+
+    let jobs = effective_jobs(jobs, trials.len());
+    if jobs == 1 {
+        for i in 0..trials.len() {
+            let out = TrialOutcome::from(&fw.run(&trials[i].cfg)?);
+            record!(i, out);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TrialOutcome>)>();
+        let run: anyhow::Result<()> = std::thread::scope(|s| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let next = &next;
+                let trials = &trials;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= trials.len() {
+                        break;
+                    }
+                    let out = fw.run(&trials[i].cfg).map(|o| TrialOutcome::from(&o));
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (i, out) in rx {
+                let out = out?;
+                record!(i, out);
+            }
+            Ok(())
+        });
+        run?;
+    }
+    Ok(stats.into_iter().map(|s| s.expect("every point finalized")).collect())
 }
 
 #[cfg(test)]
@@ -282,6 +379,36 @@ mod tests {
         assert_eq!(stats.len(), 2);
         assert_eq!(stats[0].trials, 2);
         assert_eq!(stats[1].trials, 3);
+    }
+
+    #[test]
+    fn streaming_callback_fires_once_per_completed_point() {
+        let cfg = {
+            let mut c = SimConfig::new(apps::til(), Scenario::AllOnDemand, 0);
+            c.checkpoints_enabled = false;
+            c.n_rounds = 2;
+            c
+        };
+        let points = vec![
+            PointSpec { tags: vec![], cfg: cfg.clone(), seeds: vec![1, 2] },
+            PointSpec { tags: vec![], cfg: cfg.clone(), seeds: vec![3] },
+        ];
+        let fw = Framework::default_stack();
+        let mut seen: Vec<usize> = Vec::new();
+        let stats = run_campaign_streaming(&points, 2, &fw, |i, s| {
+            assert!(s.trials > 0);
+            seen.push(i);
+            Ok(())
+        })
+        .unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1], "each point finalized exactly once");
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].trials, 2);
+        assert_eq!(stats[1].trials, 1);
+        // A callback error aborts the campaign instead of being swallowed.
+        let err = run_campaign_streaming(&points, 1, &fw, |_, _| anyhow::bail!("disk full"));
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Campaign persistence and `--resume`.
+//!
+//! Each campaign gets a directory `results/<name>-<fingerprint>/` where
+//! `<fingerprint>` hashes everything that determines the campaign's trials
+//! (every point's axis tags, full simulator configuration, and seed
+//! schedule). Inside, every grid point is recorded as `point-NNNN.toml`
+//! (mini-TOML so the offline parser can read it back losslessly — floats
+//! round-trip via shortest-representation formatting), and the rendered
+//! campaign outputs land next to them as `campaign.json` / `campaign.csv`
+//! (the ROADMAP "sweep-level outputs" item).
+//!
+//! `--resume` loads every recorded point whose per-point fingerprint still
+//! matches the spec, runs only the missing points (through the shared
+//! environment cache), and re-renders the combined outputs. Because every
+//! trial's seed is fixed at expansion time, a resumed campaign is
+//! byte-identical to a from-scratch run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::TrialStats;
+use crate::framework::{EnvCache, Framework};
+use crate::util::tomlmini::{self, Value};
+
+use super::spec::{render_csv, render_json};
+use super::{MetricAgg, PointSpec, SweepSpec};
+
+/// FNV-1a over a byte string (same constants as the presched fingerprint).
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fingerprint of one expanded grid point: axis tags + the full simulator
+/// configuration + the trial seed schedule.
+pub fn point_fingerprint(point: &PointSpec) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for (k, v) in &point.tags {
+        let _ = write!(s, "{k}={v};");
+    }
+    let _ = write!(s, "cfg={:?};seeds={:?}", point.cfg, point.seeds);
+    format!("{:016x}", fnv1a(&s))
+}
+
+/// Fingerprint of a whole campaign: the combined point fingerprints.
+pub fn campaign_fingerprint(points: &[PointSpec]) -> String {
+    let mut s = String::new();
+    for p in points {
+        s.push_str(&point_fingerprint(p));
+        s.push('|');
+    }
+    format!("{:016x}", fnv1a(&s))
+}
+
+/// Directory-safe form of a campaign name.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect()
+}
+
+/// One campaign's on-disk store.
+pub struct CampaignStore {
+    dir: PathBuf,
+    point_fps: Vec<String>,
+}
+
+impl CampaignStore {
+    /// Open (creating if needed) the store for this spec + expansion under
+    /// `results_dir`.
+    pub fn open(
+        results_dir: &Path,
+        spec: &SweepSpec,
+        points: &[PointSpec],
+    ) -> anyhow::Result<CampaignStore> {
+        let dir = results_dir
+            .join(format!("{}-{}", sanitize(&spec.name), campaign_fingerprint(points)));
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        let point_fps = points.iter().map(point_fingerprint).collect();
+        Ok(CampaignStore { dir, point_fps })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn point_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(format!("point-{idx:04}.toml"))
+    }
+
+    /// Record one point's aggregates.
+    pub fn save_point(
+        &self,
+        idx: usize,
+        point: &PointSpec,
+        stats: &TrialStats,
+    ) -> anyhow::Result<()> {
+        let mut root: BTreeMap<String, Value> = BTreeMap::new();
+        root.insert("schema".into(), Value::Int(1));
+        root.insert("point".into(), Value::Int(idx as i64));
+        root.insert("fingerprint".into(), Value::Str(self.point_fps[idx].clone()));
+        root.insert("trials".into(), Value::Int(stats.trials as i64));
+        let mut tags: BTreeMap<String, Value> = BTreeMap::new();
+        for (k, v) in &point.tags {
+            tags.insert(k.clone(), Value::Str(v.clone()));
+        }
+        root.insert("tags".into(), Value::Table(tags));
+        let mut metrics: Vec<BTreeMap<String, Value>> = Vec::new();
+        for (name, agg) in [
+            ("revocations", &stats.revocations),
+            ("fl_exec_secs", &stats.exec_secs),
+            ("total_secs", &stats.total_secs),
+            ("cost", &stats.cost),
+        ] {
+            let mut m: BTreeMap<String, Value> = BTreeMap::new();
+            m.insert("name".into(), Value::Str(name.into()));
+            m.insert("n".into(), Value::Int(agg.n as i64));
+            m.insert("mean".into(), Value::Float(agg.mean));
+            m.insert("stddev".into(), Value::Float(agg.stddev));
+            m.insert("min".into(), Value::Float(agg.min));
+            m.insert("max".into(), Value::Float(agg.max));
+            m.insert("ci95".into(), Value::Float(agg.ci95));
+            metrics.push(m);
+        }
+        root.insert("metric".into(), Value::TableArray(metrics));
+        let path = self.point_path(idx);
+        std::fs::write(&path, tomlmini::write(&root))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load one recorded point. Returns `None` when the file is missing,
+    /// unreadable, or stale (its fingerprint no longer matches the spec) —
+    /// in all of which cases the caller recomputes the point.
+    pub fn load_point(&self, idx: usize) -> Option<TrialStats> {
+        let expected_fp = self.point_fps.get(idx)?;
+        let text = std::fs::read_to_string(self.point_path(idx)).ok()?;
+        let root = tomlmini::parse(&text).ok()?;
+        if root.get("fingerprint")?.as_str()? != expected_fp.as_str() {
+            return None;
+        }
+        let trials = root.get("trials")?.as_int()?;
+        if trials <= 0 {
+            return None;
+        }
+        let mut by_name: BTreeMap<String, MetricAgg> = BTreeMap::new();
+        for m in root.get("metric")?.as_table_array()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            let agg = MetricAgg {
+                n: m.get("n")?.as_int()? as usize,
+                mean: m.get("mean")?.as_float()?,
+                stddev: m.get("stddev")?.as_float()?,
+                min: m.get("min")?.as_float()?,
+                max: m.get("max")?.as_float()?,
+                ci95: m.get("ci95")?.as_float()?,
+            };
+            by_name.insert(name, agg);
+        }
+        Some(TrialStats {
+            trials: trials as usize,
+            revocations: *by_name.get("revocations")?,
+            exec_secs: *by_name.get("fl_exec_secs")?,
+            total_secs: *by_name.get("total_secs")?,
+            cost: *by_name.get("cost")?,
+        })
+    }
+
+    /// Write the rendered campaign-level outputs (`campaign.json`,
+    /// `campaign.csv`), returning their paths.
+    pub fn write_campaign_outputs(
+        &self,
+        spec: &SweepSpec,
+        points: &[PointSpec],
+        stats: &[TrialStats],
+    ) -> anyhow::Result<(PathBuf, PathBuf)> {
+        let json_path = self.dir.join("campaign.json");
+        let csv_path = self.dir.join("campaign.csv");
+        let mut json = render_json(spec, points, stats).to_string_pretty();
+        json.push('\n');
+        std::fs::write(&json_path, json)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
+        std::fs::write(&csv_path, render_csv(points, stats))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+/// Run a campaign with persistence: when `resume` is set, recorded points
+/// are loaded instead of recomputed; everything else runs through the
+/// shared-cache worker pool with each point's record written *as soon as
+/// its trials complete* — so a killed campaign leaves every finished point
+/// on disk for the next `--resume`. Finally the campaign JSON/CSV are
+/// (re)written. Returns the full per-point stats plus the campaign
+/// directory.
+pub fn run_campaign_persistent(
+    spec: &SweepSpec,
+    points: &[PointSpec],
+    jobs: usize,
+    results_dir: &Path,
+    resume: bool,
+) -> anyhow::Result<(Vec<TrialStats>, PathBuf)> {
+    let store = CampaignStore::open(results_dir, spec, points)?;
+    let mut stats: Vec<Option<TrialStats>> = vec![None; points.len()];
+    if resume {
+        for (i, slot) in stats.iter_mut().enumerate() {
+            *slot = store.load_point(i);
+        }
+    }
+    let missing: Vec<usize> =
+        (0..points.len()).filter(|&i| stats[i].is_none()).collect();
+    if !missing.is_empty() {
+        let subset: Vec<PointSpec> = missing.iter().map(|&i| points[i].clone()).collect();
+        let fw = Framework::with_env_cache(Arc::new(EnvCache::new()));
+        let computed = super::run_campaign_streaming(&subset, jobs, &fw, |sub_idx, s| {
+            // Record immediately (completion order): a killed or failing
+            // campaign keeps every finished point.
+            store.save_point(missing[sub_idx], &points[missing[sub_idx]], s)
+        })?;
+        for (&i, s) in missing.iter().zip(computed) {
+            stats[i] = Some(s);
+        }
+    }
+    let stats: Vec<TrialStats> =
+        stats.into_iter().map(|s| s.expect("every point loaded or computed")).collect();
+    store.write_campaign_outputs(spec, points, &stats)?;
+    Ok((stats, store.dir().to_path_buf()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::TrialOutcome;
+
+    fn spec_and_points() -> (SweepSpec, Vec<PointSpec>) {
+        let spec = SweepSpec::from_toml(
+            "name = \"unit\"\ntrials = 2\nrounds = 5\n[grid]\napps = [\"til\"]\n",
+        )
+        .unwrap();
+        let points = spec.expand().unwrap();
+        (spec, points)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mfls-persist-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fake_stats() -> TrialStats {
+        // Deliberately awkward floats: 0.1 + 0.2 etc. must survive the
+        // TOML round trip bit-for-bit.
+        let outs = [0.1f64 + 0.2, 1.0 / 3.0, 15.0]
+            .iter()
+            .map(|&c| TrialOutcome {
+                revocations: c / 7.0,
+                fl_exec_secs: c * std::f64::consts::PI,
+                total_secs: c * 3.0,
+                cost: c,
+                rounds_completed: 5,
+            })
+            .collect::<Vec<_>>();
+        TrialStats::from_outcomes(&outs)
+    }
+
+    #[test]
+    fn point_round_trip_is_bit_exact() {
+        let (spec, points) = spec_and_points();
+        let dir = tmpdir("roundtrip");
+        let store = CampaignStore::open(&dir, &spec, &points).unwrap();
+        let stats = fake_stats();
+        store.save_point(0, &points[0], &stats).unwrap();
+        let loaded = store.load_point(0).expect("fresh record");
+        assert_eq!(loaded.trials, stats.trials);
+        for (a, b) in [
+            (&loaded.revocations, &stats.revocations),
+            (&loaded.exec_secs, &stats.exec_secs),
+            (&loaded.total_secs, &stats.total_secs),
+            (&loaded.cost, &stats.cost),
+        ] {
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.stddev.to_bits(), b.stddev.to_bits());
+            assert_eq!(a.min.to_bits(), b.min.to_bits());
+            assert_eq!(a.max.to_bits(), b.max.to_bits());
+            assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_fingerprint_is_ignored() {
+        let (spec, points) = spec_and_points();
+        let dir = tmpdir("stale");
+        let store = CampaignStore::open(&dir, &spec, &points).unwrap();
+        store.save_point(0, &points[0], &fake_stats()).unwrap();
+        // Corrupt the fingerprint → the record must be treated as missing.
+        let path = store.point_path(0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let text = text.replace(&point_fingerprint(&points[0]), "0000000000000000");
+        std::fs::write(&path, text).unwrap();
+        assert!(store.load_point(0).is_none());
+        assert!(store.load_point(1).is_none(), "never-written point is missing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_spec_changes() {
+        let (_, points) = spec_and_points();
+        let other = SweepSpec::from_toml(
+            "name = \"unit\"\ntrials = 2\nrounds = 6\n[grid]\napps = [\"til\"]\n",
+        )
+        .unwrap();
+        let other_points = other.expand().unwrap();
+        assert_ne!(campaign_fingerprint(&points), campaign_fingerprint(&other_points));
+        assert_ne!(point_fingerprint(&points[0]), point_fingerprint(&other_points[0]));
+    }
+
+    #[test]
+    fn sanitize_keeps_names_path_safe() {
+        assert_eq!(sanitize("til failures/5.6"), "til-failures-5-6");
+        assert_eq!(sanitize("ok-name_2"), "ok-name_2");
+    }
+}

@@ -10,7 +10,7 @@
 //! trials = 3                   # executions per grid point (default 1)
 //! seed = 50                    # root seed for the split streams (default 42)
 //! rounds = 80                  # optional n_rounds override for every point
-//! max_revocations_per_task = 1 # optional §5.6.1 cap
+//! max_revocations_per_task = 1 # optional §5.6.1 cap (scalar; or a grid axis)
 //! checkpoints = true           # optional checkpoints_enabled override
 //! jobs = 8                     # optional default worker count (CLI --jobs wins)
 //!
@@ -20,7 +20,16 @@
 //! revocation_mean_secs = [7200.0, 14400.0]   # 0 = no failures
 //! policies = ["different-vm", "same-vm"]
 //! alphas = [0.5]
+//! mappers = ["exact"]          # optional: Initial Mapping module per point
+//! server_ckpt_every = [10, 40] # optional: server cadence X; 0 = server ckpt off
+//! client_checkpoint = [true]   # optional: per-round client checkpoint on/off
+//! max_revocations_per_task = [1, 2]  # optional axis form of the scalar cap
 //! ```
+//!
+//! Checkpoint-axis semantics (Fig. 2 in one spec, `sweep-fig2.toml`):
+//! `server_ckpt_every = 0` turns the periodic server save off; if the
+//! point's client checkpoint is also off, checkpointing is disabled
+//! entirely for that point (the Fig. 2 "no checkpoints" baseline).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -29,6 +38,7 @@ use super::PointSpec;
 use crate::apps;
 use crate::coordinator::{Scenario, SimConfig, TrialStats};
 use crate::dynsched::DynSchedPolicy;
+use crate::mapping::MapperKind;
 use crate::simul::Rng;
 use crate::util::bench::Table;
 use crate::util::tomlmini::{self, Value};
@@ -47,6 +57,17 @@ pub struct SweepSpec {
     pub revocation_mean_secs: Vec<Option<f64>>,
     pub policies: Vec<DynSchedPolicy>,
     pub alphas: Vec<f64>,
+    /// Initial Mapping module per point (default: exact only).
+    pub mappers: Vec<MapperKind>,
+    /// Optional axis: server checkpoint cadence X (0 = server ckpt off;
+    /// combined with a client-checkpoint-off point, checkpointing is
+    /// disabled entirely). `None` = not swept.
+    pub server_ckpt_every: Option<Vec<u32>>,
+    /// Optional axis: per-round client checkpoint on/off. `None` = not swept.
+    pub client_checkpoint: Option<Vec<bool>>,
+    /// Optional axis form of the per-task revocation cap. `None` = not
+    /// swept (the scalar `max_revocations_per_task` applies instead).
+    pub max_revocations_axis: Option<Vec<u32>>,
     pub rounds: Option<u32>,
     pub max_revocations_per_task: Option<u32>,
     pub checkpoints: Option<bool>,
@@ -109,6 +130,35 @@ fn num_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
     }
 }
 
+fn uint_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<u32>>> {
+    match axis(grid, key) {
+        None => Ok(None),
+        Some(items) => items
+            .into_iter()
+            .map(|v| match v.as_int() {
+                Some(x) if (0..=u32::MAX as i64).contains(&x) => Ok(x as u32),
+                Some(x) => anyhow::bail!("grid.{key} entry {x} outside 0..=u32::MAX"),
+                None => anyhow::bail!("grid.{key} entries must be integers"),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+fn bool_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<bool>>> {
+    match axis(grid, key) {
+        None => Ok(None),
+        Some(items) => items
+            .into_iter()
+            .map(|v| {
+                v.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("grid.{key} entries must be booleans"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
 impl SweepSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<SweepSpec> {
         let root = tomlmini::parse(text)?;
@@ -164,6 +214,20 @@ impl SweepSpec {
             None => vec![0.5],
         };
 
+        let mappers = match str_axis(grid, "mappers")? {
+            Some(keys) => keys
+                .iter()
+                .map(|k| {
+                    MapperKind::from_key(k).ok_or_else(|| anyhow::anyhow!("unknown mapper {k}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![MapperKind::Exact],
+        };
+
+        let server_ckpt_every = uint_axis(grid, "server_ckpt_every")?;
+        let client_checkpoint = bool_axis(grid, "client_checkpoint")?;
+        let max_revocations_axis = uint_axis(grid, "max_revocations_per_task")?;
+
         // Negative integers must error, not wrap through the `as` casts.
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
             match root.get(key).and_then(|v| v.as_int()) {
@@ -173,6 +237,11 @@ impl SweepSpec {
         };
         let trials = get_nonneg("trials")?.unwrap_or(1);
         anyhow::ensure!(trials > 0, "trials must be positive");
+        let max_revocations_per_task = get_nonneg("max_revocations_per_task")?.map(|m| m as u32);
+        anyhow::ensure!(
+            max_revocations_axis.is_none() || max_revocations_per_task.is_none(),
+            "max_revocations_per_task given both as a scalar and as a grid axis"
+        );
         Ok(SweepSpec {
             name: root
                 .get("name")
@@ -186,8 +255,12 @@ impl SweepSpec {
             revocation_mean_secs,
             policies,
             alphas,
+            mappers,
+            server_ckpt_every,
+            client_checkpoint,
+            max_revocations_axis,
             rounds: get_nonneg("rounds")?.map(|r| r as u32),
-            max_revocations_per_task: get_nonneg("max_revocations_per_task")?.map(|m| m as u32),
+            max_revocations_per_task,
             checkpoints: root.get("checkpoints").and_then(|v| v.as_bool()),
             jobs: get_nonneg("jobs")?.map(|j| j as usize),
         })
@@ -206,13 +279,32 @@ impl SweepSpec {
             * self.revocation_mean_secs.len()
             * self.policies.len()
             * self.alphas.len()
+            * self.mappers.len()
+            * self.server_ckpt_every.as_ref().map_or(1, |v| v.len())
+            * self.client_checkpoint.as_ref().map_or(1, |v| v.len())
+            * self.max_revocations_axis.as_ref().map_or(1, |v| v.len())
     }
 
     /// Expand the grid into campaign points. Each trial's seed is derived
     /// from the root seed via a pure `Rng::split_seed` on the trial's global
-    /// index, so the same spec always yields the same seeds.
+    /// index, so the same spec always yields the same seeds. Specs that do
+    /// not use the optional axes expand to the exact same points (and
+    /// seeds) as before those axes existed.
     pub fn expand(&self) -> anyhow::Result<Vec<PointSpec>> {
         let root = Rng::seeded(self.seed);
+        // Optional axes: a single `None` entry when not swept.
+        let ckpt_axis: Vec<Option<u32>> = match &self.server_ckpt_every {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
+        let client_axis: Vec<Option<bool>> = match &self.client_checkpoint {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
+        let maxrev_axis: Vec<Option<u32>> = match &self.max_revocations_axis {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for app_name in &self.apps {
@@ -222,37 +314,34 @@ impl SweepSpec {
                 for &k_r in &self.revocation_mean_secs {
                     for &policy in &self.policies {
                         for &alpha in &self.alphas {
-                            let mut cfg = SimConfig::new(app.clone(), scenario, self.seed);
-                            cfg.alpha = alpha;
-                            cfg.revocation_mean_secs = k_r;
-                            cfg.dynsched_policy = policy;
-                            if let Some(r) = self.rounds {
-                                cfg.n_rounds = r;
+                            for &mapper in &self.mappers {
+                                for &ckpt_every in &ckpt_axis {
+                                    for &client_ckpt in &client_axis {
+                                        for &maxrev in &maxrev_axis {
+                                            let seeds: Vec<u64> = (0..self.trials)
+                                                .map(|_| {
+                                                    let s = root.split_seed(global_trial);
+                                                    global_trial += 1;
+                                                    s
+                                                })
+                                                .collect();
+                                            points.push(self.point(
+                                                app.clone(),
+                                                app_name,
+                                                scenario,
+                                                k_r,
+                                                policy,
+                                                alpha,
+                                                mapper,
+                                                ckpt_every,
+                                                client_ckpt,
+                                                maxrev,
+                                                seeds,
+                                            ));
+                                        }
+                                    }
+                                }
                             }
-                            if let Some(m) = self.max_revocations_per_task {
-                                cfg.max_revocations_per_task = Some(m);
-                            }
-                            if let Some(c) = self.checkpoints {
-                                cfg.checkpoints_enabled = c;
-                            }
-                            let seeds: Vec<u64> = (0..self.trials)
-                                .map(|_| {
-                                    let s = root.split_seed(global_trial);
-                                    global_trial += 1;
-                                    s
-                                })
-                                .collect();
-                            let tags = vec![
-                                ("app".to_string(), app_name.clone()),
-                                ("scenario".to_string(), scenario.key().to_string()),
-                                (
-                                    "revocation_mean_secs".to_string(),
-                                    format!("{}", k_r.unwrap_or(0.0)),
-                                ),
-                                ("policy".to_string(), policy_key(policy).to_string()),
-                                ("alpha".to_string(), format!("{alpha}")),
-                            ];
-                            points.push(PointSpec { tags, cfg, seeds });
                         }
                     }
                 }
@@ -260,6 +349,66 @@ impl SweepSpec {
         }
         anyhow::ensure!(!points.is_empty(), "sweep grid expanded to zero points");
         Ok(points)
+    }
+
+    /// Build one grid point: apply every axis value to the base config and
+    /// record the axis tags for rendering.
+    #[allow(clippy::too_many_arguments)]
+    fn point(
+        &self,
+        app: apps::AppSpec,
+        app_name: &str,
+        scenario: Scenario,
+        k_r: Option<f64>,
+        policy: DynSchedPolicy,
+        alpha: f64,
+        mapper: MapperKind,
+        ckpt_every: Option<u32>,
+        client_ckpt: Option<bool>,
+        maxrev: Option<u32>,
+        seeds: Vec<u64>,
+    ) -> PointSpec {
+        let mut cfg = SimConfig::new(app, scenario, self.seed);
+        cfg.alpha = alpha;
+        cfg.revocation_mean_secs = k_r;
+        cfg.dynsched_policy = policy;
+        cfg.mapper = mapper;
+        if let Some(r) = self.rounds {
+            cfg.n_rounds = r;
+        }
+        if let Some(m) = maxrev.or(self.max_revocations_per_task) {
+            cfg.max_revocations_per_task = Some(m);
+        }
+        if let Some(c) = self.checkpoints {
+            cfg.checkpoints_enabled = c;
+        }
+        if let Some(b) = client_ckpt {
+            cfg.ft.client_checkpoint = b;
+        }
+        if let Some(x) = ckpt_every {
+            // 0 = server checkpointing off; with the client side also off
+            // nothing is checkpointed at all (the Fig. 2 baseline). Shared
+            // rule with the job-spec key via `set_server_ckpt_every`.
+            cfg.set_server_ckpt_every(x);
+        }
+        let mut tags = vec![
+            ("app".to_string(), app_name.to_string()),
+            ("scenario".to_string(), scenario.key().to_string()),
+            ("revocation_mean_secs".to_string(), format!("{}", k_r.unwrap_or(0.0))),
+            ("policy".to_string(), policy_key(policy).to_string()),
+            ("alpha".to_string(), format!("{alpha}")),
+            ("mapper".to_string(), mapper.key().to_string()),
+        ];
+        if let Some(x) = ckpt_every {
+            tags.push(("server_ckpt_every".to_string(), format!("{x}")));
+        }
+        if let Some(b) = client_ckpt {
+            tags.push(("client_checkpoint".to_string(), format!("{b}")));
+        }
+        if let Some(m) = maxrev {
+            tags.push(("max_revocations_per_task".to_string(), format!("{m}")));
+        }
+        PointSpec { tags, cfg, seeds }
     }
 }
 
@@ -289,10 +438,14 @@ pub fn render_json(spec: &SweepSpec, points: &[PointSpec], stats: &[TrialStats])
         .set("points", Json::Arr(rows))
 }
 
-/// Render campaign results as CSV (flat columns, one row per point).
+/// Render campaign results as CSV (flat columns, one row per point; axis
+/// columns for un-swept optional axes are empty).
 pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     let mut out = String::new();
-    out.push_str("app,scenario,revocation_mean_secs,policy,alpha,trials");
+    out.push_str(
+        "app,scenario,revocation_mean_secs,policy,alpha,mapper,\
+         server_ckpt_every,client_checkpoint,max_revocations_per_task,trials",
+    );
     for metric in ["revocations", "fl_exec_secs", "total_secs", "cost"] {
         for stat in ["mean", "stddev", "min", "max", "ci95"] {
             out.push_str(&format!(",{metric}_{stat}"));
@@ -301,12 +454,16 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push('\n');
     for (p, s) in points.iter().zip(stats) {
         out.push_str(&format!(
-            "{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{}",
             p.tag("app"),
             p.tag("scenario"),
             p.tag("revocation_mean_secs"),
             p.tag("policy"),
             p.tag("alpha"),
+            p.tag("mapper"),
+            p.tag("server_ckpt_every"),
+            p.tag("client_checkpoint"),
+            p.tag("max_revocations_per_task"),
             s.trials
         ));
         for agg in [&s.revocations, &s.exec_secs, &s.total_secs, &s.cost] {
@@ -330,6 +487,7 @@ pub fn render_table(spec: &SweepSpec, points: &[PointSpec], stats: &[TrialStats]
             "k_r",
             "Policy",
             "alpha",
+            "Mapper",
             "Avg revoc.",
             "FL exec",
             "Total",
@@ -344,6 +502,7 @@ pub fn render_table(spec: &SweepSpec, points: &[PointSpec], stats: &[TrialStats]
             p.tag("revocation_mean_secs").to_string(),
             p.tag("policy").to_string(),
             p.tag("alpha").to_string(),
+            p.tag("mapper").to_string(),
             format!("{:.2}", s.revocations.mean),
             s.fl_hms(),
             s.exec_hms(),
@@ -455,6 +614,92 @@ alphas = 0.5
         assert_eq!(spec.scenarios, vec![Scenario::AllOnDemand]);
         assert_eq!(spec.revocation_mean_secs, vec![None]);
         assert_eq!(spec.alphas, vec![0.5]);
+        assert_eq!(spec.mappers, vec![MapperKind::Exact]);
+        assert!(spec.server_ckpt_every.is_none());
+        assert!(spec.client_checkpoint.is_none());
+        assert!(spec.max_revocations_axis.is_none());
         assert_eq!(spec.n_points(), 1);
+    }
+
+    #[test]
+    fn mapper_axis_expands_and_tags() {
+        let spec = SweepSpec::from_toml(
+            "[grid]\napps = [\"til\"]\nmappers = [\"exact\", \"cheapest\"]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].cfg.mapper, MapperKind::Exact);
+        assert_eq!(points[1].cfg.mapper, MapperKind::Cheapest);
+        assert_eq!(points[0].tag("mapper"), "exact");
+        assert_eq!(points[1].tag("mapper"), "cheapest");
+        assert!(
+            SweepSpec::from_toml("[grid]\napps = [\"til\"]\nmappers = [\"nope\"]\n").is_err()
+        );
+    }
+
+    #[test]
+    fn checkpoint_axes_expand_with_fig2_semantics() {
+        let spec = SweepSpec::from_toml(
+            "rounds = 80\n[grid]\napps = [\"til\"]\nserver_ckpt_every = [0, 10]\nclient_checkpoint = [false, true]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.n_points(), 4);
+        let points = spec.expand().unwrap();
+        // (0, false): nothing checkpointed → the Fig. 2 baseline.
+        assert!(!points[0].cfg.checkpoints_enabled);
+        assert_eq!(points[0].cfg.ft.server_every_rounds, u32::MAX);
+        assert_eq!(points[0].tag("server_ckpt_every"), "0");
+        assert_eq!(points[0].tag("client_checkpoint"), "false");
+        // (0, true): client-only checkpointing.
+        assert!(points[1].cfg.checkpoints_enabled);
+        assert!(points[1].cfg.ft.client_checkpoint);
+        assert_eq!(points[1].cfg.ft.server_every_rounds, u32::MAX);
+        // (10, false): server-only cadence X=10.
+        assert!(points[2].cfg.checkpoints_enabled);
+        assert!(!points[2].cfg.ft.client_checkpoint);
+        assert_eq!(points[2].cfg.ft.server_every_rounds, 10);
+        // (10, true): both.
+        assert!(points[3].cfg.ft.client_checkpoint);
+        assert_eq!(points[3].cfg.ft.server_every_rounds, 10);
+    }
+
+    #[test]
+    fn max_revocations_axis_expands_and_conflicts_with_scalar() {
+        let spec = SweepSpec::from_toml(
+            "[grid]\napps = [\"til\"]\nmax_revocations_per_task = [1, 2]\n",
+        )
+        .unwrap();
+        let points = spec.expand().unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].cfg.max_revocations_per_task, Some(1));
+        assert_eq!(points[1].cfg.max_revocations_per_task, Some(2));
+        assert_eq!(points[1].tag("max_revocations_per_task"), "2");
+        // Scalar and axis together are ambiguous → rejected.
+        assert!(SweepSpec::from_toml(
+            "max_revocations_per_task = 1\n[grid]\napps = [\"til\"]\nmax_revocations_per_task = [1, 2]\n"
+        )
+        .is_err());
+        // Negative axis entries are rejected.
+        assert!(SweepSpec::from_toml(
+            "[grid]\napps = [\"til\"]\nserver_ckpt_every = [-1]\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn legacy_specs_expand_to_identical_seeds() {
+        // The optional axes must not perturb the seed schedule of specs
+        // that do not use them (resume-compatibility with old campaigns).
+        let spec = SweepSpec::from_toml(SPEC).unwrap();
+        let points = spec.expand().unwrap();
+        let root = crate::simul::Rng::seeded(spec.seed);
+        let mut global = 0u64;
+        for p in &points {
+            for &s in &p.seeds {
+                assert_eq!(s, root.split_seed(global));
+                global += 1;
+            }
+        }
     }
 }

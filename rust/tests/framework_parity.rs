@@ -1,0 +1,521 @@
+//! Golden parity for the pluggable pipeline: the default `Framework` stack
+//! (and any explicitly assembled copy of it) must reproduce the historical
+//! monolithic simulator bit-for-bit on the Table 5/6 configurations, the
+//! shared environment cache must not perturb results and must measure each
+//! environment exactly once per campaign, and swapping a module must change
+//! outcomes deterministically.
+
+use std::sync::Arc;
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{run_trials, simulate, Scenario, SimConfig, SimOutcome};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::framework::{
+    DummyAppPreSched, EnvCache, ExactMapper, Framework, PaperDynSched, PaperFt, RestartSameType,
+};
+use multi_fedls::mapping::MapperKind;
+use multi_fedls::sweep::{self, PointSpec};
+
+/// Table 5's grid base: TIL, 80 rounds, all-spot, k_r = 2 h, restart on a
+/// different VM type, at most one revocation per task.
+fn table5_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+    cfg.n_rounds = 80;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    cfg
+}
+
+/// Table 6's grid base: same, but the revoked type may be re-selected.
+fn table6_cfg(seed: u64) -> SimConfig {
+    let mut cfg = table5_cfg(seed);
+    cfg.dynsched_policy = DynSchedPolicy::same_vm_allowed();
+    cfg
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+    assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.vm_cost.to_bits(), b.vm_cost.to_bits());
+    assert_eq!(a.egress_cost.to_bits(), b.egress_cost.to_bits());
+    assert_eq!(a.n_revocations, b.n_revocations);
+    assert_eq!(a.rounds_completed, b.rounds_completed);
+    assert_eq!(a.initial_server, b.initial_server);
+    assert_eq!(a.initial_clients, b.initial_clients);
+    assert_eq!(a.predicted_round_makespan.to_bits(), b.predicted_round_makespan.to_bits());
+    assert_eq!(a.predicted_round_cost.to_bits(), b.predicted_round_cost.to_bits());
+    let ea: Vec<&str> = a.events.iter().map(|e| e.what.as_str()).collect();
+    let eb: Vec<&str> = b.events.iter().map(|e| e.what.as_str()).collect();
+    assert_eq!(ea, eb, "event traces must match");
+}
+
+/// A frozen, verbatim transcription of the pre-refactor monolithic
+/// `coordinator::sim::simulate` (the ~640-line event loop before it was
+/// carved into `framework::exec` + module traits), kept here as the golden
+/// reference. If the refactor dropped or reordered any arithmetic, the
+/// bit-identity assertions against this copy fail. Uses public APIs only;
+/// hard-wires the default module stack (dummy-app Pre-Scheduling, exact
+/// mapper, paper FT, Algorithms 1–3).
+mod legacy {
+    use multi_fedls::cloud::VmTypeId;
+    use multi_fedls::cloudsim::{MultiCloud, RevocationModel, VmId};
+    use multi_fedls::coordinator::sim::environment_for;
+    use multi_fedls::coordinator::{SimConfig, SimOutcome};
+    use multi_fedls::coordinator::sim::SimEvent;
+    use multi_fedls::dynsched::{self, CurrentMap, FaultyTask};
+    use multi_fedls::mapping::problem::{JobProfile, MappingProblem};
+    use multi_fedls::mapping::{self, Mapping};
+    use multi_fedls::presched::{PreScheduler, SlowdownReport};
+    use multi_fedls::simul::SimTime;
+
+    struct TaskState {
+        vm_type: VmTypeId,
+        instance: VmId,
+        rounds_on_instance: u32,
+    }
+
+    pub fn simulate(cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+        let (catalog, ground_truth) = environment_for(&cfg.app);
+        let mut mc = MultiCloud::new(
+            catalog,
+            ground_truth,
+            match cfg.revocation_mean_secs {
+                Some(k) => RevocationModel::poisson(k),
+                None => RevocationModel::none(),
+            },
+            cfg.seed,
+        );
+        let mut events = Vec::new();
+        let mut now = SimTime::ZERO;
+
+        let slowdowns = PreScheduler::new(&mc).measure_defaults();
+        let job = cfg.app.profile();
+
+        let catalog = mc.catalog.clone();
+        let problem = MappingProblem {
+            catalog: &catalog,
+            slowdowns: &slowdowns,
+            job: &job,
+            alpha: cfg.alpha,
+            market: cfg.scenario.client_market(),
+            budget_round: f64::INFINITY,
+            deadline_round: f64::INFINITY,
+        };
+        let sol = mapping::exact::solve(&problem)
+            .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible"))?;
+        let initial: Mapping = sol.mapping.clone();
+        events.push(SimEvent {
+            at: now,
+            what: format!(
+                "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
+                mc.catalog.vm(initial.server).id,
+                initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
+                sol.eval.makespan,
+                sol.eval.total_cost
+            ),
+        });
+
+        let server_market = cfg.scenario.server_market();
+        let client_market = cfg.scenario.client_market();
+        let mut server = TaskState {
+            vm_type: initial.server,
+            instance: mc.provision(now, initial.server, server_market)?,
+            rounds_on_instance: 0,
+        };
+        let mut clients: Vec<TaskState> = Vec::new();
+        for &vm in &initial.clients {
+            clients.push(TaskState {
+                vm_type: vm,
+                instance: mc.provision(now, vm, client_market)?,
+                rounds_on_instance: 0,
+            });
+        }
+        let mut ready_at = mc.instance(server.instance).ready_at;
+        for c in &clients {
+            ready_at = ready_at.max(mc.instance(c.instance).ready_at);
+        }
+        now = ready_at;
+        mc.mark_running(server.instance);
+        for c in &clients {
+            mc.mark_running(c.instance);
+        }
+        events.push(SimEvent { at: now, what: "all VMs prepared; FL execution starts".into() });
+        let fl_start = now;
+
+        let all_vms: Vec<VmTypeId> = mc.catalog.vm_ids().collect();
+        let mut server_set = all_vms.clone();
+        let mut client_sets: Vec<Vec<VmTypeId>> = vec![all_vms.clone(); clients.len()];
+
+        let mut n_revocations = 0u32;
+        let mut revocations_per_task: Vec<u32> = vec![0; clients.len() + 1];
+        let mut completed = 0u32;
+        let mut server_ckpt_round = 0u32;
+        let mut safety = 0usize;
+
+        while completed < cfg.n_rounds {
+            safety += 1;
+            anyhow::ensure!(safety < 200_000, "simulation did not converge");
+            let round = completed + 1;
+
+            let duration = round_duration(cfg, &mc, &slowdowns, &job, &server, &clients);
+            let end = now + duration;
+
+            let mut hit: Option<(SimTime, FaultyTask)> = None;
+            let consider =
+                |at: Option<SimTime>, task: FaultyTask, hit: &mut Option<(SimTime, FaultyTask)>| {
+                    if let Some(t) = at {
+                        if t > now && t <= end {
+                            let better = hit.map_or(true, |(bt, _)| t < bt);
+                            if better {
+                                *hit = Some((t, task));
+                            }
+                        }
+                    }
+                };
+            consider(mc.instance(server.instance).revocation_at, FaultyTask::Server, &mut hit);
+            for (i, c) in clients.iter().enumerate() {
+                consider(mc.instance(c.instance).revocation_at, FaultyTask::Client(i), &mut hit);
+            }
+
+            match hit {
+                None => {
+                    now = end;
+                    server.rounds_on_instance += 1;
+                    for c in clients.iter_mut() {
+                        c.rounds_on_instance += 1;
+                    }
+                    completed = round;
+                    if cfg.checkpoints_enabled && round % cfg.ft.server_every_rounds == 0 {
+                        server_ckpt_round = round;
+                    }
+                    for c in &clients {
+                        let m = &job.msg;
+                        mc.charge_egress(
+                            now,
+                            server.vm_type,
+                            m.s_train_gb + m.s_aggreg_gb,
+                            "server msgs",
+                        );
+                        mc.charge_egress(now, c.vm_type, m.c_train_gb + m.c_test_gb, "client msgs");
+                    }
+                }
+                Some((t_rev, faulty)) => {
+                    now = t_rev;
+                    n_revocations += 1;
+                    let current_map = CurrentMap {
+                        server: server.vm_type,
+                        clients: clients.iter().map(|c| c.vm_type).collect(),
+                    };
+                    let (task_name, old_type, set): (String, VmTypeId, &mut Vec<VmTypeId>) =
+                        match faulty {
+                            FaultyTask::Server => {
+                                ("server".into(), server.vm_type, &mut server_set)
+                            }
+                            FaultyTask::Client(i) => {
+                                (format!("client-{i}"), clients[i].vm_type, &mut client_sets[i])
+                            }
+                        };
+                    let inst = match faulty {
+                        FaultyTask::Server => server.instance,
+                        FaultyTask::Client(i) => clients[i].instance,
+                    };
+                    mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
+                    events.push(SimEvent {
+                        at: now,
+                        what: format!(
+                            "revocation: {task_name} on {} during round {round}",
+                            mc.catalog.vm(old_type).id
+                        ),
+                    });
+
+                    let (selection, new_set) = dynsched::select_instance(
+                        &problem,
+                        &current_map,
+                        faulty,
+                        set,
+                        old_type,
+                        cfg.dynsched_policy,
+                    );
+                    *set = new_set;
+                    let sel = selection
+                        .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
+
+                    let task_idx = match faulty {
+                        FaultyTask::Server => 0,
+                        FaultyTask::Client(i) => i + 1,
+                    };
+                    revocations_per_task[task_idx] += 1;
+                    let allow_more = cfg
+                        .max_revocations_per_task
+                        .map_or(true, |cap| revocations_per_task[task_idx] < cap);
+                    let new_inst = mc.provision_with(
+                        now,
+                        sel.vm,
+                        match faulty {
+                            FaultyTask::Server => server_market,
+                            FaultyTask::Client(_) => client_market,
+                        },
+                        allow_more,
+                    )?;
+                    let boot_done = mc.instance(new_inst).ready_at;
+                    events.push(SimEvent {
+                        at: now,
+                        what: format!(
+                            "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
+                            mc.catalog.vm(sel.vm).id,
+                            sel.value,
+                            boot_done.hms()
+                        ),
+                    });
+                    match faulty {
+                        FaultyTask::Server => {
+                            server = TaskState {
+                                vm_type: sel.vm,
+                                instance: new_inst,
+                                rounds_on_instance: 0,
+                            };
+                            let restore = if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+                                completed
+                            } else if cfg.checkpoints_enabled {
+                                server_ckpt_round
+                            } else {
+                                0
+                            };
+                            if restore < completed {
+                                events.push(SimEvent {
+                                    at: now,
+                                    what: format!(
+                                        "server restore from round {restore} (lost {} rounds)",
+                                        completed - restore
+                                    ),
+                                });
+                                completed = restore;
+                            }
+                        }
+                        FaultyTask::Client(i) => {
+                            clients[i] = TaskState {
+                                vm_type: sel.vm,
+                                instance: new_inst,
+                                rounds_on_instance: 0,
+                            };
+                        }
+                    }
+                    now = boot_done;
+                    mc.mark_running(new_inst);
+                }
+            }
+        }
+
+        let fl_end = now;
+        let live: Vec<VmId> = mc.live_instances().map(|v| v.id).collect();
+        for id in live {
+            mc.terminate(now, id);
+        }
+        events.push(SimEvent { at: now, what: "all rounds complete; VMs terminated".into() });
+
+        Ok(SimOutcome {
+            fl_exec_secs: fl_end - fl_start,
+            total_secs: now.secs(),
+            total_cost: mc.total_cost(now),
+            vm_cost: mc.ledger.vm_cost(now),
+            egress_cost: mc.ledger.egress_cost(),
+            n_revocations,
+            rounds_completed: completed,
+            initial_server: mc.catalog.vm(initial.server).id.clone(),
+            initial_clients: initial
+                .clients
+                .iter()
+                .map(|&v| mc.catalog.vm(v).id.clone())
+                .collect(),
+            events,
+            predicted_round_makespan: sol.eval.makespan,
+            predicted_round_cost: sol.eval.total_cost,
+        })
+    }
+
+    fn round_duration(
+        cfg: &SimConfig,
+        mc: &MultiCloud,
+        slowdowns: &SlowdownReport,
+        job: &JobProfile,
+        server: &TaskState,
+        clients: &[TaskState],
+    ) -> f64 {
+        let mut makespan: f64 = 0.0;
+        for (i, c) in clients.iter().enumerate() {
+            let first = c.rounds_on_instance == 0;
+            let exec =
+                mc.exec_secs(c.vm_type, job.client_train_bl[i] + job.client_test_bl[i], first);
+            let comm = (job.train_comm_bl + job.test_comm_bl)
+                * slowdowns.sl_comm(
+                    mc.catalog.region_of(c.vm_type),
+                    mc.catalog.region_of(server.vm_type),
+                );
+            let mut t = exec + comm;
+            if cfg.checkpoints_enabled && cfg.ft.client_checkpoint {
+                t += cfg.ft.client_save_overhead_secs(cfg.app.checkpoint_gb);
+            }
+            makespan = makespan.max(t);
+        }
+        let agg = job.agg_bl * slowdowns.sl_inst(server.vm_type);
+        let mut total = makespan + agg;
+        let next_round_number = server.rounds_on_instance + 1;
+        if cfg.checkpoints_enabled {
+            total += cfg.ft.server_round_overhead_secs;
+            if next_round_number % cfg.ft.server_every_rounds == 0 {
+                total += cfg.ft.save_overhead_secs(cfg.app.checkpoint_gb);
+            }
+        }
+        total
+    }
+}
+
+#[test]
+fn default_stack_is_bit_identical_to_frozen_pre_refactor_simulator() {
+    // The golden parity check: the new pipeline (via the `simulate`
+    // wrapper AND an explicitly assembled builder stack) must reproduce
+    // the frozen pre-refactor monolithic simulator bit-for-bit on the
+    // Table 5/6 configurations (seeds straight from the tables' seed
+    // schedule).
+    let fw = Framework::builder()
+        .pre_sched(DummyAppPreSched)
+        .mapper(ExactMapper)
+        .ft(PaperFt)
+        .dynsched(PaperDynSched)
+        .build();
+    for cfg in [table5_cfg(50), table5_cfg(51), table6_cfg(60), table6_cfg(61)] {
+        let golden = legacy::simulate(&cfg).unwrap();
+        let a = simulate(&cfg).unwrap();
+        let b = fw.run(&cfg).unwrap();
+        assert_outcomes_identical(&golden, &a);
+        assert_outcomes_identical(&golden, &b);
+    }
+}
+
+#[test]
+fn cached_pre_scheduling_is_bit_identical_to_uncached() {
+    // Sharing one SlowdownReport across runs (what campaigns do) must not
+    // change a single bit of any outcome.
+    let cache = Arc::new(EnvCache::new());
+    let cached = Framework::with_env_cache(cache.clone());
+    for cfg in [table5_cfg(50), table6_cfg(60)] {
+        let a = simulate(&cfg).unwrap();
+        let b = cached.run(&cfg).unwrap();
+        assert_outcomes_identical(&a, &b);
+    }
+    assert_eq!(cache.computations(), 1, "one environment → one measurement");
+}
+
+#[test]
+fn campaign_measures_each_environment_exactly_once() {
+    // A campaign of N trials over one environment must compute its
+    // Pre-Scheduling report exactly once (the ROADMAP sharing item) and
+    // still match the uncached per-trial outcomes exactly.
+    let cache = Arc::new(EnvCache::new());
+    let fw = Framework::with_env_cache(cache.clone());
+    let mut cfg = table6_cfg(60);
+    cfg.n_rounds = 20;
+    let seeds: Vec<u64> = (60..66).collect();
+    let point = PointSpec { tags: Vec::new(), cfg: cfg.clone(), seeds: seeds.clone() };
+    let stats = sweep::run_campaign_with(std::slice::from_ref(&point), 4, &fw).unwrap();
+    assert_eq!(cache.computations(), 1, "6 trials, 1 measurement");
+    // Cross-check the aggregate against the frozen pre-refactor simulator.
+    let mut cost_sum = 0.0;
+    for &s in &seeds {
+        let mut c = cfg.clone();
+        c.seed = s;
+        cost_sum += legacy::simulate(&c).unwrap().total_cost;
+    }
+    let mean = cost_sum / seeds.len() as f64;
+    assert_eq!(stats[0].cost.mean.to_bits(), mean.to_bits());
+
+    // A second environment in the same campaign adds exactly one more.
+    let mut aws = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, 4);
+    aws.checkpoints_enabled = false;
+    let point2 = PointSpec { tags: Vec::new(), cfg: aws, seeds: vec![4, 5] };
+    sweep::run_campaign_with(&[point.clone(), point2], 4, &fw).unwrap();
+    assert_eq!(cache.computations(), 2, "two environments → two measurements");
+}
+
+#[test]
+fn run_trials_matches_historical_serial_loop() {
+    // `run_trials` (now campaign-cached) must still equal the historical
+    // serial seed schedule base_seed..base_seed+trials driven through the
+    // frozen pre-refactor simulator.
+    let mut cfg = table5_cfg(50);
+    cfg.n_rounds = 30;
+    let stats = run_trials(&cfg, 3, 500).unwrap();
+    let outs: Vec<SimOutcome> = (0..3u64)
+        .map(|t| {
+            let mut c = cfg.clone();
+            c.seed = 500 + t;
+            legacy::simulate(&c).unwrap()
+        })
+        .collect();
+    let mean = |f: fn(&SimOutcome) -> f64| outs.iter().map(f).sum::<f64>() / 3.0;
+    assert_eq!(stats.cost.mean.to_bits(), mean(|o| o.total_cost).to_bits());
+    assert_eq!(stats.total_secs.mean.to_bits(), mean(|o| o.total_secs).to_bits());
+    assert_eq!(
+        stats.revocations.mean.to_bits(),
+        mean(|o| o.n_revocations as f64).to_bits()
+    );
+}
+
+#[test]
+fn swapped_dynscheduler_changes_outcomes_deterministically() {
+    // Under the different-VM policy the paper's Algorithm 3 must restart a
+    // revoked vm126 client elsewhere; the restart-same-type baseline keeps
+    // the revoked type. Both stacks are deterministic, and their traces
+    // must diverge.
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 5);
+    cfg.n_rounds = 60;
+    cfg.revocation_mean_secs = Some(3600.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+
+    let baseline = Framework::builder().dynsched(RestartSameType).build();
+    let a1 = baseline.run(&cfg).unwrap();
+    let a2 = baseline.run(&cfg).unwrap();
+    assert_outcomes_identical(&a1, &a2);
+
+    let paper = simulate(&cfg).unwrap();
+    assert!(paper.n_revocations > 0, "config must actually revoke something");
+    assert!(a1.n_revocations > 0);
+
+    // Every baseline replacement re-selects the revoked type...
+    let mut last_revoked: Option<String> = None;
+    let mut replacements = 0;
+    for e in &a1.events {
+        if let Some(rest) = e.what.strip_prefix("revocation: ") {
+            let vm = rest.split(" on ").nth(1).unwrap().split(' ').next().unwrap();
+            last_revoked = Some(vm.to_string());
+        } else if e.what.starts_with("dynamic scheduler:") {
+            let chosen = e.what.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
+            let revoked = last_revoked.take().expect("selection follows revocation");
+            assert_eq!(chosen, revoked, "baseline must restart on the same type");
+            replacements += 1;
+        }
+    }
+    assert!(replacements > 0);
+    // ...so the two stacks' traces cannot coincide.
+    let ea: Vec<&str> = a1.events.iter().map(|e| e.what.as_str()).collect();
+    let eb: Vec<&str> = paper.events.iter().map(|e| e.what.as_str()).collect();
+    assert_ne!(ea, eb, "swapping the DynScheduler must change the trace");
+}
+
+#[test]
+fn mapper_selection_via_config_changes_initial_mapping() {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+    cfg.checkpoints_enabled = false;
+    cfg.n_rounds = 3;
+    let exact = simulate(&cfg).unwrap();
+    cfg.mapper = MapperKind::Cheapest;
+    let cheap = simulate(&cfg).unwrap();
+    assert_eq!(cheap.initial_server, "vm212", "cheapest CloudLab VM");
+    assert_ne!(exact.initial_server, cheap.initial_server);
+    assert_eq!(cheap.rounds_completed, 3);
+    // Determinism of the swapped stack.
+    let cheap2 = simulate(&cfg).unwrap();
+    assert_outcomes_identical(&cheap, &cheap2);
+}

@@ -1,0 +1,124 @@
+//! Campaign persistence and `--resume`: a resumed campaign (some points
+//! loaded from disk, some recomputed) must render byte-identical outputs to
+//! a from-scratch run, and the shipped Fig. 2 grid must expand to the
+//! figure's configuration matrix.
+
+use std::path::PathBuf;
+
+use multi_fedls::sweep::persist::{self, run_campaign_persistent};
+use multi_fedls::sweep::{spec, SweepSpec};
+
+const GRID: &str = r#"
+name = "resume-unit"
+trials = 2
+seed = 7
+rounds = 10
+
+[grid]
+apps = ["til"]
+scenarios = ["all-on-demand", "all-spot"]
+revocation_mean_secs = [7200.0]
+policies = ["same-vm"]
+alphas = [0.5]
+"#;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mfls-resume-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn resume_after_deleting_one_point_matches_full_run() {
+    let sweep_spec = SweepSpec::from_toml(GRID).unwrap();
+    let points = sweep_spec.expand().unwrap();
+    assert_eq!(points.len(), 2);
+    let dir = tmpdir("full");
+
+    // Full run: computes and records both points.
+    let (full, campaign_dir) =
+        run_campaign_persistent(&sweep_spec, &points, 0, &dir, false).unwrap();
+    let full_json = spec::render_json(&sweep_spec, &points, &full).to_string_pretty();
+    let full_csv = spec::render_csv(&points, &full);
+    assert!(campaign_dir.join("campaign.json").exists());
+    assert!(campaign_dir.join("campaign.csv").exists());
+    assert!(campaign_dir.join("point-0000.toml").exists());
+    assert!(campaign_dir.join("point-0001.toml").exists());
+
+    // Simulate a killed campaign: one record lost.
+    std::fs::remove_file(campaign_dir.join("point-0001.toml")).unwrap();
+
+    // Resume: point 0 loads from disk, point 1 recomputes.
+    let (resumed, dir2) = run_campaign_persistent(&sweep_spec, &points, 0, &dir, true).unwrap();
+    assert_eq!(dir2, campaign_dir, "same spec → same campaign directory");
+    let resumed_json = spec::render_json(&sweep_spec, &points, &resumed).to_string_pretty();
+    assert_eq!(full_json, resumed_json, "resumed output must be byte-identical");
+    assert_eq!(full_csv, spec::render_csv(&points, &resumed));
+
+    // And the persisted campaign.json matches the rendered output too.
+    let on_disk = std::fs::read_to_string(campaign_dir.join("campaign.json")).unwrap();
+    assert_eq!(on_disk, format!("{full_json}\n"));
+
+    // A second resume with everything recorded is pure load.
+    let (again, _) = run_campaign_persistent(&sweep_spec, &points, 0, &dir, true).unwrap();
+    assert_eq!(full_json, spec::render_json(&sweep_spec, &points, &again).to_string_pretty());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn without_resume_records_are_recomputed_and_rewritten() {
+    let sweep_spec = SweepSpec::from_toml(GRID).unwrap();
+    let points = sweep_spec.expand().unwrap();
+    let dir = tmpdir("norec");
+    let (a, campaign_dir) = run_campaign_persistent(&sweep_spec, &points, 0, &dir, false).unwrap();
+    // Vandalize a record; a non-resume run must overwrite it with the truth.
+    std::fs::write(campaign_dir.join("point-0000.toml"), "schema = 1\n").unwrap();
+    let (b, _) = run_campaign_persistent(&sweep_spec, &points, 0, &dir, false).unwrap();
+    assert_eq!(
+        spec::render_json(&sweep_spec, &points, &a).to_string_pretty(),
+        spec::render_json(&sweep_spec, &points, &b).to_string_pretty()
+    );
+    let text = std::fs::read_to_string(campaign_dir.join("point-0000.toml")).unwrap();
+    assert!(text.contains("fingerprint"), "record rewritten: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn changed_spec_lands_in_a_different_campaign_dir() {
+    let a = SweepSpec::from_toml(GRID).unwrap();
+    let pa = a.expand().unwrap();
+    let changed = GRID.replace("rounds = 10", "rounds = 12");
+    let b = SweepSpec::from_toml(&changed).unwrap();
+    let pb = b.expand().unwrap();
+    assert_ne!(
+        persist::campaign_fingerprint(&pa),
+        persist::campaign_fingerprint(&pb),
+        "rounds override must change the campaign fingerprint"
+    );
+}
+
+#[test]
+fn shipped_fig2_spec_is_the_figure_matrix() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let spec = SweepSpec::from_file(&dir.join("sweep-fig2.toml")).unwrap();
+    assert_eq!(spec.rounds, Some(80));
+    assert_eq!(spec.server_ckpt_every.as_deref(), Some(&[0, 10, 20, 30, 40][..]));
+    assert_eq!(spec.client_checkpoint.as_deref(), Some(&[false, true][..]));
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 10);
+    // The (0, false) point is the figure's no-checkpoint baseline.
+    let baseline = points
+        .iter()
+        .find(|p| p.tag("server_ckpt_every") == "0" && p.tag("client_checkpoint") == "false")
+        .expect("baseline point present");
+    assert!(!baseline.cfg.checkpoints_enabled);
+    // The server-cadence points disable the client side, like §5.5.
+    let x10 = points
+        .iter()
+        .find(|p| p.tag("server_ckpt_every") == "10" && p.tag("client_checkpoint") == "false")
+        .expect("X=10 point present");
+    assert!(x10.cfg.checkpoints_enabled);
+    assert!(!x10.cfg.ft.client_checkpoint);
+    assert_eq!(x10.cfg.ft.server_every_rounds, 10);
+}
