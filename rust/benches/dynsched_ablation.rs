@@ -1,0 +1,8 @@
+//! Regenerates the Dynamic Scheduler ablation: Algorithms 1–3 vs the
+//! restart-same-type baseline on the Table 5 configuration (TIL, all-spot,
+//! different-VM policy, 3-trial averages).
+fn main() {
+    let (table, json) = multi_fedls::trace::dynsched_ablation();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -91,6 +91,8 @@ pub fn run_trials_with_jobs(
 /// client_checkpoint = true
 /// checkpoints = true
 /// max_revocations_per_task = 1  # §5.6.1 observed regime; omit for unbounded
+/// budget_round = 2.5            # B_round, $ per round (omit = unconstrained)
+/// deadline_round = 900.0        # T_round, seconds per round (omit = unconstrained)
 /// seed = 42
 /// trials = 3
 /// ```
@@ -102,8 +104,17 @@ pub struct JobSpec {
 
 impl JobSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<JobSpec> {
-        use crate::dynsched::DynSchedPolicy;
         let root = crate::util::tomlmini::parse(text)?;
+        Self::from_table(&root)
+    }
+
+    /// Parse a job spec out of an already-parsed TOML table. Workload specs
+    /// reuse this for each `[[job]]` entry, so the single-job and multi-job
+    /// configuration surfaces share one set of keys and semantics.
+    pub fn from_table(
+        root: &std::collections::BTreeMap<String, crate::util::tomlmini::Value>,
+    ) -> anyhow::Result<JobSpec> {
+        use crate::dynsched::DynSchedPolicy;
         let app_name = root
             .get("app")
             .and_then(|v| v.as_str())
@@ -153,6 +164,14 @@ impl JobSpec {
         }
         if let Some(m) = get_nonneg("max_revocations_per_task")? {
             config.max_revocations_per_task = Some(m as u32);
+        }
+        if let Some(b) = root.get("budget_round").and_then(|v| v.as_float()) {
+            anyhow::ensure!(b > 0.0, "budget_round must be positive, got {b}");
+            config.budget_round = b;
+        }
+        if let Some(d) = root.get("deadline_round").and_then(|v| v.as_float()) {
+            anyhow::ensure!(d > 0.0, "deadline_round must be positive, got {d}");
+            config.deadline_round = d;
         }
         let trials = get_nonneg("trials")?.unwrap_or(1) as usize;
         Ok(JobSpec { config, trials })
@@ -229,6 +248,23 @@ trials = 3
         )
         .unwrap();
         assert!(!spec.config.checkpoints_enabled);
+    }
+
+    #[test]
+    fn job_spec_parses_budget_and_deadline() {
+        let spec = JobSpec::from_toml(
+            "app = \"til\"\nbudget_round = 2.5\ndeadline_round = 900.0\n",
+        )
+        .unwrap();
+        assert_eq!(spec.config.budget_round, 2.5);
+        assert_eq!(spec.config.deadline_round, 900.0);
+        // Defaults are unconstrained (the historical behaviour).
+        let spec = JobSpec::from_toml("app = \"til\"\n").unwrap();
+        assert!(spec.config.budget_round.is_infinite());
+        assert!(spec.config.deadline_round.is_infinite());
+        // Non-positive constraints are configuration errors.
+        assert!(JobSpec::from_toml("app = \"til\"\nbudget_round = 0.0\n").is_err());
+        assert!(JobSpec::from_toml("app = \"til\"\ndeadline_round = -1.0\n").is_err());
     }
 
     #[test]

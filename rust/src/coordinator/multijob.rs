@@ -26,6 +26,24 @@ pub enum AdmissionPolicy {
     ShortestMakespanFirst,
 }
 
+impl AdmissionPolicy {
+    /// Stable config-file key (workload specs and grid axes).
+    pub fn key(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::ShortestMakespanFirst => "sjf",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<AdmissionPolicy> {
+        match key {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "sjf" => Some(AdmissionPolicy::ShortestMakespanFirst),
+            _ => None,
+        }
+    }
+}
+
 /// One admitted job: its placement plus the quota it holds.
 #[derive(Debug, Clone)]
 pub struct AdmittedJob {
@@ -133,10 +151,17 @@ impl<'a> MultiJobScheduler<'a> {
                     region.max_gpus = Some(maxg.saturating_sub(used));
                 }
             }
-            let sub_sl = remap(self.slowdowns, self.catalog, &reduced);
+            // The slowdown report is keyed by VM-type/region indices into the
+            // original catalog. `reduced` above only shrinks the quota
+            // *bounds* — it never adds, drops, or reorders providers, regions
+            // or VM types — so every index (and therefore every slowdown key)
+            // is valid unchanged against the reduced catalog and the report
+            // can be reused as-is. (A former `remap` helper cloned the report
+            // while ignoring both catalogs; this invariant is what it relied
+            // on.)
             let p2 = MappingProblem {
                 catalog: &reduced,
-                slowdowns: &sub_sl,
+                slowdowns: self.slowdowns,
                 job: &job,
                 alpha: self.alpha,
                 market: self.market,
@@ -200,12 +225,6 @@ impl<'a> MultiJobScheduler<'a> {
         }
         MultiJobPlan { admitted, queued }
     }
-}
-
-/// The slowdown report's keys are indices into the original catalog; the
-/// reduced catalog keeps identical ordering, so keys carry over unchanged.
-fn remap(sl: &SlowdownReport, _orig: &Catalog, _reduced: &Catalog) -> SlowdownReport {
-    sl.clone()
 }
 
 #[cfg(test)]

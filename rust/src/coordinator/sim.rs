@@ -97,6 +97,11 @@ pub struct SimConfig {
     /// one revocation per task in each execution"; Tables 5–8 reproduce that
     /// regime with `Some(1)`. `None` = the unbounded Poisson process.
     pub max_revocations_per_task: Option<u32>,
+    /// `B_round` (Constraint 8): per-round budget in $ handed to the Initial
+    /// Mapping solver. `INFINITY` = unconstrained (the historical behaviour).
+    pub budget_round: f64,
+    /// `T_round` (Constraint 9): per-round deadline in seconds.
+    pub deadline_round: f64,
     pub seed: u64,
 }
 
@@ -114,6 +119,8 @@ impl SimConfig {
             ft: FtConfig::default(),
             checkpoints_enabled: true,
             max_revocations_per_task: None,
+            budget_round: f64::INFINITY,
+            deadline_round: f64::INFINITY,
             seed,
         }
     }

@@ -60,8 +60,8 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
         job: &job,
         alpha: cfg.alpha,
         market: cfg.scenario.client_market(),
-        budget_round: f64::INFINITY,
-        deadline_round: f64::INFINITY,
+        budget_round: cfg.budget_round,
+        deadline_round: cfg.deadline_round,
     };
     let mapper = fw.mapper_for(cfg);
     let sol = mapper
@@ -202,6 +202,7 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
                     set,
                     old_type,
                     cfg.dynsched_policy,
+                    now,
                 );
                 *set = new_set;
                 let sel = selection

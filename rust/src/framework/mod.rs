@@ -43,8 +43,8 @@ pub mod modules;
 pub use cache::EnvCache;
 pub use modules::{
     CachedPreSched, CheapestMapper, DummyAppPreSched, DynScheduler, ExactMapper, FastestMapper,
-    FaultTolerance, InitialMapper, MilpMapper, NoFt, PaperDynSched, PaperFt, PreScheduling,
-    RandomMapper, RestartSameType, SingleCloudMapper,
+    FaultTolerance, FixedMapper, InitialMapper, MilpMapper, NoFt, PaperDynSched, PaperFt,
+    PreScheduling, RandomMapper, RestartSameType, SingleCloudMapper,
 };
 
 use std::sync::Arc;

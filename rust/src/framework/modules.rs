@@ -177,6 +177,29 @@ impl InitialMapper for SingleCloudMapper {
     }
 }
 
+/// A pinned, precomputed Initial Mapping. The workload engine solves each
+/// job's placement against the *residual* shared quota at admission time and
+/// pins the result here, so the per-job event loop provisions exactly the
+/// admitted placement instead of re-solving against the full catalog.
+pub struct FixedMapper {
+    solution: MappingSolution,
+}
+
+impl FixedMapper {
+    pub fn new(solution: MappingSolution) -> FixedMapper {
+        FixedMapper { solution }
+    }
+}
+
+impl InitialMapper for FixedMapper {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+    fn map(&self, _p: &MappingProblem) -> Option<MappingSolution> {
+        Some(self.solution.clone())
+    }
+}
+
 /// The built-in mapper for a [`MapperKind`] (job-spec / sweep selection).
 pub fn mapper_for(kind: MapperKind) -> Arc<dyn InitialMapper> {
     match kind {
@@ -294,7 +317,10 @@ impl FaultTolerance for NoFt {
 // ---------------------------------------------------------------------------
 
 /// Picks the replacement VM for a revoked task, returning the selection and
-/// the task's updated candidate set.
+/// the task's updated candidate set. `at` is the simulated instant of the
+/// revocation, so implementations can consult time-dependent shared state
+/// (the workload engine's shared quota ledger competes replacement choices
+/// across concurrent jobs through it).
 pub trait DynScheduler: Send + Sync {
     fn name(&self) -> &'static str;
     fn select(
@@ -305,6 +331,7 @@ pub trait DynScheduler: Send + Sync {
         candidate_set: &[VmTypeId],
         revoked: VmTypeId,
         policy: DynSchedPolicy,
+        at: crate::simul::SimTime,
     ) -> (Option<Selection>, Vec<VmTypeId>);
 }
 
@@ -324,6 +351,7 @@ impl DynScheduler for PaperDynSched {
         candidate_set: &[VmTypeId],
         revoked: VmTypeId,
         policy: DynSchedPolicy,
+        _at: crate::simul::SimTime,
     ) -> (Option<Selection>, Vec<VmTypeId>) {
         dynsched::select_instance(p, map, faulty, candidate_set, revoked, policy)
     }
@@ -346,6 +374,7 @@ impl DynScheduler for RestartSameType {
         candidate_set: &[VmTypeId],
         revoked: VmTypeId,
         _policy: DynSchedPolicy,
+        _at: crate::simul::SimTime,
     ) -> (Option<Selection>, Vec<VmTypeId>) {
         let expected_makespan = dynsched::recompute_makespan(p, map, faulty, revoked);
         let expected_cost = dynsched::recompute_cost(p, map, faulty, revoked, expected_makespan);

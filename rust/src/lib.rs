@@ -50,7 +50,12 @@
 //! * [`data`] — synthetic federated datasets (TIL, Shakespeare, FEMNIST).
 //! * [`apps`] — the paper's three application descriptors (§5.1).
 //! * [`coordinator`] — configuration (job specs) and the end-to-end drivers
-//!   (simulated, real-compute, multi-job) over the framework stack.
+//!   (simulated, real-compute, multi-job planning) over the framework stack.
+//! * [`workload`] — first-class multi-job campaigns: arrival processes
+//!   (batch/Poisson/trace), admission policies, per-job budget/deadline
+//!   constraints, and a discrete-event engine that drives every admitted job
+//!   through the framework pipeline against one shared quota ledger
+//!   ([`workload::Workload::single`] is the degenerate one-job case).
 //! * [`sweep`] — the parallel experiment-campaign engine: declarative config
 //!   grids fanned out across an OS-thread worker pool, deterministically,
 //!   with persisted, resumable results ([`sweep::persist`]).
@@ -73,3 +78,4 @@ pub mod trace;
 pub mod simul;
 pub mod sweep;
 pub mod util;
+pub mod workload;

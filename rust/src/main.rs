@@ -7,6 +7,8 @@
 //! multi-fedls simulate --spec FILE [--json]    simulate a job spec (TOML)
 //! multi-fedls sweep --spec FILE [--jobs N]     run a campaign grid in parallel
 //!                   [--results DIR] [--resume] [--no-persist]
+//! multi-fedls workload --spec FILE [--jobs N]  run a multi-job workload campaign
+//!                   [--results DIR] [--resume] [--no-persist]
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
 //! ```
@@ -80,9 +82,11 @@ USAGE:
   multi-fedls simulate --spec configs/<job>.toml [--json]
   multi-fedls sweep --spec configs/<grid>.toml [--jobs N] [--json|--csv]
                     [--results DIR] [--resume] [--no-persist]
+  multi-fedls workload --spec configs/workload-<name>.toml [--jobs N] [--json|--csv]
+                    [--results DIR] [--resume] [--no-persist]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
-  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|all> [--json]
+  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|all> [--json]
 ";
 
 fn main() {
@@ -99,6 +103,7 @@ fn main() {
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "workload" => cmd_workload(&args),
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "help" | "--help" | "-h" => {
@@ -304,6 +309,58 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `multi-fedls workload --spec FILE [--jobs N] [--json|--csv]
+/// [--results DIR] [--resume] [--no-persist]`: expand a multi-job workload
+/// campaign (arrival processes × admission policies × budget/deadline axes)
+/// and run each point's trials across the worker pool. Output is
+/// byte-identical for any `--jobs` value.
+fn cmd_workload(args: &Args) -> anyhow::Result<()> {
+    let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
+    let spec = multi_fedls::workload::WorkloadSpec::from_file(std::path::Path::new(spec_path))?;
+    let jobs = match args.get("jobs") {
+        Some(j) => j.parse::<usize>().map_err(|e| anyhow::anyhow!("--jobs {j}: {e}"))?,
+        None => spec.workers.unwrap_or(0), // 0 = one worker per core
+    };
+    let points = spec.expand()?;
+    eprintln!(
+        "workload {}: {} jobs × {} points × {} trials on {} workers",
+        spec.name,
+        spec.jobs.len(),
+        points.len(),
+        spec.trials,
+        multi_fedls::sweep::effective_jobs(jobs, spec.trials.max(1))
+    );
+    let resume = args.flag("resume");
+    anyhow::ensure!(
+        !(resume && args.flag("no-persist")),
+        "--resume reads and writes the results directory; drop --no-persist"
+    );
+    let persist = resume || !args.flag("no-persist");
+    let aggs = if persist {
+        let results_dir = std::path::Path::new(args.get("results").unwrap_or("results"));
+        let (aggs, dir) = multi_fedls::sweep::persist::run_workload_campaign_persistent(
+            &spec,
+            &points,
+            jobs,
+            results_dir,
+            resume,
+        )?;
+        eprintln!("campaign recorded in {}", dir.display());
+        aggs
+    } else {
+        multi_fedls::workload::spec::run_points(&points, jobs)?
+    };
+    if args.flag("json") {
+        let j = multi_fedls::workload::spec::render_json(&spec, &points, &aggs);
+        println!("{}", j.to_string_pretty());
+    } else if args.flag("csv") {
+        print!("{}", multi_fedls::workload::spec::render_csv(&points, &aggs));
+    } else {
+        multi_fedls::workload::spec::render_table(&spec, &points, &aggs).print();
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let app_name = args.get("app").ok_or_else(|| anyhow::anyhow!("--app required"))?;
     let app = multi_fedls::apps::by_name(app_name)
@@ -399,6 +456,10 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             let (t, j) = trace::multijob();
             render(t, j);
         }
+        "dynsched-ablation" => {
+            let (t, j) = trace::dynsched_ablation();
+            render(t, j);
+        }
         "all" => {
             for f in [
                 trace::table3 as fn() -> (multi_fedls::util::bench::Table, multi_fedls::util::Json),
@@ -413,6 +474,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
                 trace::mapping_comparison,
                 trace::alpha_sweep,
                 trace::multijob,
+                trace::dynsched_ablation,
             ] {
                 let (t, _) = f();
                 t.print();

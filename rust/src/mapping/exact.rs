@@ -321,6 +321,49 @@ mod tests {
     }
 
     #[test]
+    fn budget_at_exact_equality_is_feasible() {
+        // Boundary case for the 1e-9 feasibility epsilon (problem.rs): a
+        // budget equal to the cheapest attainable per-round cost must still
+        // admit a mapping, while a budget just below it (beyond the epsilon)
+        // must yield None — not a constraint-violating mapping.
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        // α=1 minimizes cost, so its optimum is the cheapest possible cost.
+        let p_cost = til_problem(&mc, &sl, &job, 1.0);
+        let min_cost = solve(&p_cost).expect("unconstrained feasible").eval.total_cost;
+        for alpha in [0.0, 0.5, 1.0] {
+            let mut p = til_problem(&mc, &sl, &job, alpha);
+            p.budget_round = min_cost; // exact equality
+            let sol = solve(&p).expect("budget at equality must stay feasible");
+            assert!(sol.eval.total_cost <= min_cost + 1e-9);
+            p.budget_round = min_cost - 1e-3; // strictly below every mapping
+            assert!(solve(&p).is_none(), "alpha={alpha}: sub-minimum budget must be infeasible");
+        }
+    }
+
+    #[test]
+    fn deadline_at_exact_equality_is_feasible() {
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        // α=0 minimizes makespan, so its optimum is the fastest possible round.
+        let p_time = til_problem(&mc, &sl, &job, 0.0);
+        let min_makespan = solve(&p_time).expect("unconstrained feasible").eval.makespan;
+        for alpha in [0.0, 0.5, 1.0] {
+            let mut p = til_problem(&mc, &sl, &job, alpha);
+            p.deadline_round = min_makespan; // exact equality
+            let sol = solve(&p).expect("deadline at equality must stay feasible");
+            assert!(sol.eval.makespan <= min_makespan + 1e-9);
+            p.deadline_round = min_makespan - 1e-3;
+            assert!(
+                solve(&p).is_none(),
+                "alpha={alpha}: sub-minimum deadline must be infeasible"
+            );
+        }
+    }
+
+    #[test]
     fn quota_limits_gpu_client_count() {
         // AWS/GCP: 4 GPUs per provider. 5 T4-hungry clients cannot all sit
         // in AWS; the solver must spill or use CPU VMs, never violate quota.

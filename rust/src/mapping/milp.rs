@@ -335,6 +335,43 @@ mod tests {
     }
 
     #[test]
+    fn milp_budget_deadline_boundary_matches_exact() {
+        // Exact-equality boundary (the 1e-9 epsilon in problem.rs): a budget
+        // or deadline equal to the attainable minimum stays feasible for
+        // BOTH solver routes; just below it, both return None rather than a
+        // constraint-violating mapping.
+        let (cat, sl) = small_env();
+        let job = small_job(2);
+        let base = |alpha: f64| MappingProblem {
+            catalog: &cat,
+            slowdowns: &sl,
+            job: &job,
+            alpha,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let min_cost = crate::mapping::exact::solve(&base(1.0)).unwrap().eval.total_cost;
+        let min_makespan = crate::mapping::exact::solve(&base(0.0)).unwrap().eval.makespan;
+
+        let mut p = base(0.5);
+        p.budget_round = min_cost;
+        let m = solve(&p).expect("milp feasible at budget equality");
+        assert!(p.evaluate(&m).total_cost <= min_cost + 1e-9);
+        p.budget_round = min_cost - 1e-3;
+        assert!(solve(&p).is_none(), "milp sub-minimum budget must be infeasible");
+        assert!(crate::mapping::exact::solve(&p).is_none());
+
+        let mut p = base(0.5);
+        p.deadline_round = min_makespan;
+        let m = solve(&p).expect("milp feasible at deadline equality");
+        assert!(p.evaluate(&m).makespan <= min_makespan + 1e-9);
+        p.deadline_round = min_makespan - 1e-3;
+        assert!(solve(&p).is_none(), "milp sub-minimum deadline must be infeasible");
+        assert!(crate::mapping::exact::solve(&p).is_none());
+    }
+
+    #[test]
     fn milp_infeasible_when_budget_zero() {
         let (cat, sl) = small_env();
         let job = small_job(2);

@@ -367,6 +367,46 @@ mod tests {
     }
 
     #[test]
+    fn feasibility_epsilon_boundary_at_exact_equality() {
+        // The 1e-9 slack in `evaluate` exists so a budget/deadline equal to
+        // a mapping's own cost/makespan (a natural way to pin "this exact
+        // placement") is not rejected by floating-point noise. Exactly-equal
+        // bounds are feasible; bounds below by more than the epsilon are not.
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let mapping = Mapping { server: vm126, clients: vec![vm126; 4], market: Market::OnDemand };
+        let free = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::OnDemand,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+        };
+        let ev = free.evaluate(&mapping);
+        assert!(ev.feasible);
+
+        let pinned = MappingProblem {
+            budget_round: ev.total_cost,   // exact equality
+            deadline_round: ev.makespan,   // exact equality
+            ..free
+        };
+        assert!(pinned.evaluate(&mapping).feasible, "equality must stay feasible");
+
+        let below_budget = MappingProblem { budget_round: ev.total_cost - 1e-6, ..pinned };
+        assert!(!below_budget.evaluate(&mapping).feasible);
+        let below_deadline = MappingProblem {
+            budget_round: ev.total_cost,
+            deadline_round: ev.makespan - 1e-6,
+            ..below_budget
+        };
+        assert!(!below_deadline.evaluate(&mapping).feasible);
+    }
+
+    #[test]
     fn alpha_extremes_reorder_solutions() {
         let mc = cloudlab_sim();
         let sl = slowdowns(&mc);

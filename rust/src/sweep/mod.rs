@@ -140,43 +140,40 @@ pub fn effective_jobs(jobs: usize, n_trials: usize) -> usize {
     jobs.clamp(1, n_trials.max(1))
 }
 
-/// Run every trial through the default module stack (no cross-trial
-/// sharing). See [`run_pool_with`].
-pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<TrialOutcome>> {
-    run_pool_with(trials, jobs, &Framework::default_stack())
-}
-
-/// Run every trial, `jobs` at a time, through `fw`'s module stack,
-/// returning outcomes in input order.
+/// Run `n` independent tasks, `jobs` at a time, over an OS-thread pool,
+/// returning results in index order.
 ///
-/// Workers pull the next trial index from a shared atomic cursor and report
-/// `(index, outcome)` over a channel; the assembly into the result vector is
-/// by index, so completion order cannot influence the output.
-pub fn run_pool_with(
-    trials: &[TrialConfig],
+/// Workers pull the next task index from a shared atomic cursor and report
+/// `(index, result)` over a channel; the assembly into the result vector is
+/// by index, so completion order cannot influence the output. This is the
+/// one worker-pool implementation shared by the sweep trial pool and the
+/// workload trial pool ([`crate::workload::run_trials`]).
+pub fn run_indexed<T: Send>(
+    n: usize,
     jobs: usize,
-    fw: &Framework,
-) -> anyhow::Result<Vec<TrialOutcome>> {
-    let jobs = effective_jobs(jobs, trials.len());
+    task: impl Fn(usize) -> anyhow::Result<T> + Sync,
+) -> anyhow::Result<Vec<T>> {
+    let jobs = effective_jobs(jobs, n);
     if jobs == 1 {
-        return trials
-            .iter()
-            .map(|t| Ok(TrialOutcome::from(&fw.run(&t.cfg)?)))
-            .collect();
+        return (0..n).map(&task).collect();
     }
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TrialOutcome>)>();
-    let mut slots: Vec<Option<TrialOutcome>> = vec![None; trials.len()];
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<T>)>();
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        slots.push(None);
+    }
     let run: anyhow::Result<()> = std::thread::scope(|s| {
         for _ in 0..jobs {
             let tx = tx.clone();
             let next = &next;
+            let task = &task;
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= trials.len() {
+                if i >= n {
                     break;
                 }
-                let out = fw.run(&trials[i].cfg).map(|o| TrialOutcome::from(&o));
+                let out = task(i);
                 if tx.send((i, out)).is_err() {
                     break;
                 }
@@ -189,7 +186,23 @@ pub fn run_pool_with(
         Ok(())
     });
     run?;
-    Ok(slots.into_iter().map(|s| s.expect("every trial reported")).collect())
+    Ok(slots.into_iter().map(|s| s.expect("every task reported")).collect())
+}
+
+/// Run every trial through the default module stack (no cross-trial
+/// sharing). See [`run_pool_with`].
+pub fn run_pool(trials: &[TrialConfig], jobs: usize) -> anyhow::Result<Vec<TrialOutcome>> {
+    run_pool_with(trials, jobs, &Framework::default_stack())
+}
+
+/// Run every trial, `jobs` at a time, through `fw`'s module stack,
+/// returning outcomes in input order (see [`run_indexed`]).
+pub fn run_pool_with(
+    trials: &[TrialConfig],
+    jobs: usize,
+    fw: &Framework,
+) -> anyhow::Result<Vec<TrialOutcome>> {
+    run_indexed(trials.len(), jobs, |i| Ok(TrialOutcome::from(&fw.run(&trials[i].cfg)?)))
 }
 
 /// Run a whole campaign with a fresh environment cache: each distinct

@@ -58,6 +58,65 @@ pub fn campaign_fingerprint(points: &[PointSpec]) -> String {
     format!("{:016x}", fnv1a(&s))
 }
 
+/// Fingerprint of one expanded workload point: axis tags + every trial's
+/// full job list (configurations, seeds, arrival times) + admission policy.
+pub fn workload_point_fingerprint(point: &crate::workload::WorkloadPoint) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for (k, v) in &point.tags {
+        let _ = write!(s, "{k}={v};");
+    }
+    for w in &point.trials {
+        let _ = write!(s, "wl={w:?};");
+    }
+    format!("{:016x}", fnv1a(&s))
+}
+
+/// A named `[[metric]]` entry for one aggregate.
+fn agg_table(name: &str, agg: &MetricAgg) -> BTreeMap<String, Value> {
+    let mut m: BTreeMap<String, Value> = BTreeMap::new();
+    m.insert("name".into(), Value::Str(name.into()));
+    m.insert("n".into(), Value::Int(agg.n as i64));
+    m.insert("mean".into(), Value::Float(agg.mean));
+    m.insert("stddev".into(), Value::Float(agg.stddev));
+    m.insert("min".into(), Value::Float(agg.min));
+    m.insert("max".into(), Value::Float(agg.max));
+    m.insert("ci95".into(), Value::Float(agg.ci95));
+    m
+}
+
+fn read_agg_table(m: &BTreeMap<String, Value>) -> Option<MetricAgg> {
+    Some(MetricAgg {
+        n: m.get("n")?.as_int()? as usize,
+        mean: m.get("mean")?.as_float()?,
+        stddev: m.get("stddev")?.as_float()?,
+        min: m.get("min")?.as_float()?,
+        max: m.get("max")?.as_float()?,
+        ci95: m.get("ci95")?.as_float()?,
+    })
+}
+
+/// Flatten one aggregate into `<prefix>_*` keys of an existing row.
+fn flatten_agg(row: &mut BTreeMap<String, Value>, prefix: &str, agg: &MetricAgg) {
+    row.insert(format!("{prefix}_n"), Value::Int(agg.n as i64));
+    row.insert(format!("{prefix}_mean"), Value::Float(agg.mean));
+    row.insert(format!("{prefix}_stddev"), Value::Float(agg.stddev));
+    row.insert(format!("{prefix}_min"), Value::Float(agg.min));
+    row.insert(format!("{prefix}_max"), Value::Float(agg.max));
+    row.insert(format!("{prefix}_ci95"), Value::Float(agg.ci95));
+}
+
+fn read_flat_agg(row: &BTreeMap<String, Value>, prefix: &str) -> Option<MetricAgg> {
+    Some(MetricAgg {
+        n: row.get(&format!("{prefix}_n"))?.as_int()? as usize,
+        mean: row.get(&format!("{prefix}_mean"))?.as_float()?,
+        stddev: row.get(&format!("{prefix}_stddev"))?.as_float()?,
+        min: row.get(&format!("{prefix}_min"))?.as_float()?,
+        max: row.get(&format!("{prefix}_max"))?.as_float()?,
+        ci95: row.get(&format!("{prefix}_ci95"))?.as_float()?,
+    })
+}
+
 /// Directory-safe form of a campaign name.
 fn sanitize(name: &str) -> String {
     name.chars()
@@ -79,11 +138,37 @@ impl CampaignStore {
         spec: &SweepSpec,
         points: &[PointSpec],
     ) -> anyhow::Result<CampaignStore> {
-        let dir = results_dir
-            .join(format!("{}-{}", sanitize(&spec.name), campaign_fingerprint(points)));
+        Self::open_raw(results_dir, &spec.name, points.iter().map(point_fingerprint).collect())
+    }
+
+    /// Open a store for a workload campaign (per-point fingerprints over the
+    /// full seeded trial set).
+    pub fn open_workload(
+        results_dir: &Path,
+        spec: &crate::workload::WorkloadSpec,
+        points: &[crate::workload::WorkloadPoint],
+    ) -> anyhow::Result<CampaignStore> {
+        Self::open_raw(
+            results_dir,
+            &spec.name,
+            points.iter().map(workload_point_fingerprint).collect(),
+        )
+    }
+
+    fn open_raw(
+        results_dir: &Path,
+        name: &str,
+        point_fps: Vec<String>,
+    ) -> anyhow::Result<CampaignStore> {
+        let mut combined = String::new();
+        for fp in &point_fps {
+            combined.push_str(fp);
+            combined.push('|');
+        }
+        let dir =
+            results_dir.join(format!("{}-{:016x}", sanitize(name), fnv1a(&combined)));
         std::fs::create_dir_all(&dir)
             .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
-        let point_fps = points.iter().map(point_fingerprint).collect();
         Ok(CampaignStore { dir, point_fps })
     }
 
@@ -172,6 +257,97 @@ impl CampaignStore {
         })
     }
 
+    /// Record one workload point's aggregates, including the per-job
+    /// completion/wait/cost/revocation metrics.
+    pub fn save_workload_point(
+        &self,
+        idx: usize,
+        point: &crate::workload::WorkloadPoint,
+        agg: &crate::workload::WorkloadAgg,
+    ) -> anyhow::Result<()> {
+        let mut root: BTreeMap<String, Value> = BTreeMap::new();
+        root.insert("schema".into(), Value::Int(2));
+        root.insert("point".into(), Value::Int(idx as i64));
+        root.insert("fingerprint".into(), Value::Str(self.point_fps[idx].clone()));
+        root.insert("trials".into(), Value::Int(agg.trials as i64));
+        let mut tags: BTreeMap<String, Value> = BTreeMap::new();
+        for (k, v) in &point.tags {
+            tags.insert(k.clone(), Value::Str(v.clone()));
+        }
+        root.insert("tags".into(), Value::Table(tags));
+        let mut metrics: Vec<BTreeMap<String, Value>> = Vec::new();
+        for (name, a) in [
+            ("makespan_secs", &agg.makespan),
+            ("mean_wait_secs", &agg.mean_wait),
+            ("total_cost", &agg.total_cost),
+            ("admitted", &agg.admitted),
+            ("queued", &agg.queued),
+            ("rejected", &agg.rejected),
+        ] {
+            metrics.push(agg_table(name, a));
+        }
+        root.insert("metric".into(), Value::TableArray(metrics));
+        let mut job_rows: Vec<BTreeMap<String, Value>> = Vec::new();
+        for j in &agg.jobs {
+            let mut row: BTreeMap<String, Value> = BTreeMap::new();
+            row.insert("name".into(), Value::Str(j.name.clone()));
+            for (m, a) in [
+                ("wait", &j.wait),
+                ("completion", &j.completion),
+                ("cost", &j.cost),
+                ("revocations", &j.revocations),
+            ] {
+                flatten_agg(&mut row, m, a);
+            }
+            job_rows.push(row);
+        }
+        root.insert("job".into(), Value::TableArray(job_rows));
+        let path = self.point_path(idx);
+        std::fs::write(&path, tomlmini::write(&root))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load one recorded workload point (same staleness rules as
+    /// [`Self::load_point`]).
+    pub fn load_workload_point(&self, idx: usize) -> Option<crate::workload::WorkloadAgg> {
+        let expected_fp = self.point_fps.get(idx)?;
+        let text = std::fs::read_to_string(self.point_path(idx)).ok()?;
+        let root = tomlmini::parse(&text).ok()?;
+        if root.get("fingerprint")?.as_str()? != expected_fp.as_str() {
+            return None;
+        }
+        let trials = root.get("trials")?.as_int()?;
+        if trials <= 0 {
+            return None;
+        }
+        let mut by_name: BTreeMap<String, MetricAgg> = BTreeMap::new();
+        for m in root.get("metric")?.as_table_array()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            by_name.insert(name, read_agg_table(m)?);
+        }
+        let mut jobs = Vec::new();
+        for row in root.get("job")?.as_table_array()? {
+            jobs.push(crate::workload::JobAgg {
+                name: row.get("name")?.as_str()?.to_string(),
+                wait: read_flat_agg(row, "wait")?,
+                completion: read_flat_agg(row, "completion")?,
+                cost: read_flat_agg(row, "cost")?,
+                revocations: read_flat_agg(row, "revocations")?,
+            });
+        }
+        Some(crate::workload::WorkloadAgg {
+            trials: trials as usize,
+            makespan: *by_name.get("makespan_secs")?,
+            mean_wait: *by_name.get("mean_wait_secs")?,
+            total_cost: *by_name.get("total_cost")?,
+            admitted: *by_name.get("admitted")?,
+            queued: *by_name.get("queued")?,
+            rejected: *by_name.get("rejected")?,
+            jobs,
+        })
+    }
+
     /// Write the rendered campaign-level outputs (`campaign.json`,
     /// `campaign.csv`), returning their paths.
     pub fn write_campaign_outputs(
@@ -231,6 +407,54 @@ pub fn run_campaign_persistent(
         stats.into_iter().map(|s| s.expect("every point loaded or computed")).collect();
     store.write_campaign_outputs(spec, points, &stats)?;
     Ok((stats, store.dir().to_path_buf()))
+}
+
+/// Workload analogue of [`run_campaign_persistent`]: recorded points are
+/// loaded on `--resume`; the missing points' trials are flattened into one
+/// shared worker pool (parallelism spans points) and every recomputed point
+/// is recorded before the campaign JSON/CSV are (re)written.
+pub fn run_workload_campaign_persistent(
+    spec: &crate::workload::WorkloadSpec,
+    points: &[crate::workload::WorkloadPoint],
+    jobs: usize,
+    results_dir: &Path,
+    resume: bool,
+) -> anyhow::Result<(Vec<crate::workload::WorkloadAgg>, PathBuf)> {
+    let store = CampaignStore::open_workload(results_dir, spec, points)?;
+    let mut aggs: Vec<Option<crate::workload::WorkloadAgg>> = vec![None; points.len()];
+    if resume {
+        for (i, slot) in aggs.iter_mut().enumerate() {
+            *slot = store.load_workload_point(i);
+        }
+    }
+    let missing: Vec<usize> = (0..points.len()).filter(|&i| aggs[i].is_none()).collect();
+    if !missing.is_empty() {
+        let cache = Arc::new(EnvCache::new());
+        let flat: Vec<crate::workload::Workload> = missing
+            .iter()
+            .flat_map(|&i| points[i].trials.iter().cloned())
+            .collect();
+        let outs = crate::workload::run_trials(&flat, jobs, &cache)?;
+        let mut idx = 0;
+        for &i in &missing {
+            let n = points[i].trials.len();
+            let agg = crate::workload::WorkloadAgg::from_outcomes(&outs[idx..idx + n]);
+            idx += n;
+            store.save_workload_point(i, &points[i], &agg)?;
+            aggs[i] = Some(agg);
+        }
+    }
+    let aggs: Vec<crate::workload::WorkloadAgg> =
+        aggs.into_iter().map(|a| a.expect("every point loaded or computed")).collect();
+    let json_path = store.dir.join("campaign.json");
+    let csv_path = store.dir.join("campaign.csv");
+    let mut json = crate::workload::spec::render_json(spec, points, &aggs).to_string_pretty();
+    json.push('\n');
+    std::fs::write(&json_path, json)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
+    std::fs::write(&csv_path, crate::workload::spec::render_csv(points, &aggs))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+    Ok((aggs, store.dir().to_path_buf()))
 }
 
 #[cfg(test)]
@@ -320,6 +544,61 @@ mod tests {
         let other_points = other.expand().unwrap();
         assert_ne!(campaign_fingerprint(&points), campaign_fingerprint(&other_points));
         assert_ne!(point_fingerprint(&points[0]), point_fingerprint(&other_points[0]));
+    }
+
+    #[test]
+    fn workload_point_round_trip_is_bit_exact() {
+        let spec = crate::workload::WorkloadSpec::from_toml(
+            "name = \"wl-unit\"\ntrials = 3\nseed = 4\n[[job]]\napp = \"til\"\nrounds = 2\ncount = 2\n",
+        )
+        .unwrap();
+        let points = spec.expand().unwrap();
+        let dir = tmpdir("wl-roundtrip");
+        let store = CampaignStore::open_workload(&dir, &spec, &points).unwrap();
+        // Synthetic aggregates with awkward floats (never run the engine).
+        let mk = |x: f64| MetricAgg::from_samples(&[x, x * std::f64::consts::PI, 0.1 + 0.2]);
+        let agg = crate::workload::WorkloadAgg {
+            trials: 3,
+            makespan: mk(100.0),
+            mean_wait: mk(1.0),
+            total_cost: mk(3.5),
+            admitted: mk(2.0),
+            queued: mk(0.0),
+            rejected: mk(0.0),
+            jobs: vec![crate::workload::JobAgg {
+                name: "til-0".into(),
+                wait: mk(0.5),
+                completion: mk(900.0),
+                cost: mk(1.75),
+                revocations: mk(0.0),
+            }],
+        };
+        store.save_workload_point(0, &points[0], &agg).unwrap();
+        let loaded = store.load_workload_point(0).expect("fresh record");
+        assert_eq!(loaded.trials, 3);
+        for (a, b) in [
+            (&loaded.makespan, &agg.makespan),
+            (&loaded.mean_wait, &agg.mean_wait),
+            (&loaded.total_cost, &agg.total_cost),
+            (&loaded.admitted, &agg.admitted),
+        ] {
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());
+        }
+        assert_eq!(loaded.jobs.len(), 1);
+        assert_eq!(loaded.jobs[0].name, "til-0");
+        assert_eq!(loaded.jobs[0].completion.mean.to_bits(), agg.jobs[0].completion.mean.to_bits());
+        // A different expansion (other seed) must not resolve the record.
+        let other = crate::workload::WorkloadSpec::from_toml(
+            "name = \"wl-unit\"\ntrials = 3\nseed = 5\n[[job]]\napp = \"til\"\nrounds = 2\ncount = 2\n",
+        )
+        .unwrap();
+        let other_points = other.expand().unwrap();
+        assert_ne!(
+            workload_point_fingerprint(&points[0]),
+            workload_point_fingerprint(&other_points[0])
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

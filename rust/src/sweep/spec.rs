@@ -24,6 +24,8 @@
 //! server_ckpt_every = [10, 40] # optional: server cadence X; 0 = server ckpt off
 //! client_checkpoint = [true]   # optional: per-round client checkpoint on/off
 //! max_revocations_per_task = [1, 2]  # optional axis form of the scalar cap
+//! budget_round = [1.0, 2.0]    # optional: B_round $ cap per round (Constraint 8)
+//! deadline_round = [600.0]     # optional: T_round seconds per round (Constraint 9)
 //! ```
 //!
 //! Checkpoint-axis semantics (Fig. 2 in one spec, `sweep-fig2.toml`):
@@ -68,6 +70,11 @@ pub struct SweepSpec {
     /// Optional axis form of the per-task revocation cap. `None` = not
     /// swept (the scalar `max_revocations_per_task` applies instead).
     pub max_revocations_axis: Option<Vec<u32>>,
+    /// Optional axis: per-round budget `B_round` in $ handed to the Initial
+    /// Mapping solver. `None` = not swept (unconstrained).
+    pub budget_round: Option<Vec<f64>>,
+    /// Optional axis: per-round deadline `T_round` in seconds.
+    pub deadline_round: Option<Vec<f64>>,
     pub rounds: Option<u32>,
     pub max_revocations_per_task: Option<u32>,
     pub checkpoints: Option<bool>,
@@ -227,6 +234,19 @@ impl SweepSpec {
         let server_ckpt_every = uint_axis(grid, "server_ckpt_every")?;
         let client_checkpoint = bool_axis(grid, "client_checkpoint")?;
         let max_revocations_axis = uint_axis(grid, "max_revocations_per_task")?;
+        let positive_axis = |key: &str| -> anyhow::Result<Option<Vec<f64>>> {
+            match num_axis(grid, key)? {
+                None => Ok(None),
+                Some(xs) => {
+                    for &x in &xs {
+                        anyhow::ensure!(x > 0.0, "grid.{key} entries must be positive, got {x}");
+                    }
+                    Ok(Some(xs))
+                }
+            }
+        };
+        let budget_round = positive_axis("budget_round")?;
+        let deadline_round = positive_axis("deadline_round")?;
 
         // Negative integers must error, not wrap through the `as` casts.
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
@@ -259,6 +279,8 @@ impl SweepSpec {
             server_ckpt_every,
             client_checkpoint,
             max_revocations_axis,
+            budget_round,
+            deadline_round,
             rounds: get_nonneg("rounds")?.map(|r| r as u32),
             max_revocations_per_task,
             checkpoints: root.get("checkpoints").and_then(|v| v.as_bool()),
@@ -283,6 +305,8 @@ impl SweepSpec {
             * self.server_ckpt_every.as_ref().map_or(1, |v| v.len())
             * self.client_checkpoint.as_ref().map_or(1, |v| v.len())
             * self.max_revocations_axis.as_ref().map_or(1, |v| v.len())
+            * self.budget_round.as_ref().map_or(1, |v| v.len())
+            * self.deadline_round.as_ref().map_or(1, |v| v.len())
     }
 
     /// Expand the grid into campaign points. Each trial's seed is derived
@@ -305,6 +329,14 @@ impl SweepSpec {
             Some(v) => v.iter().copied().map(Some).collect(),
             None => vec![None],
         };
+        let budget_axis: Vec<Option<f64>> = match &self.budget_round {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
+        let deadline_axis: Vec<Option<f64>> = match &self.deadline_round {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for app_name in &self.apps {
@@ -318,26 +350,32 @@ impl SweepSpec {
                                 for &ckpt_every in &ckpt_axis {
                                     for &client_ckpt in &client_axis {
                                         for &maxrev in &maxrev_axis {
-                                            let seeds: Vec<u64> = (0..self.trials)
-                                                .map(|_| {
-                                                    let s = root.split_seed(global_trial);
-                                                    global_trial += 1;
-                                                    s
-                                                })
-                                                .collect();
-                                            points.push(self.point(
-                                                app.clone(),
-                                                app_name,
-                                                scenario,
-                                                k_r,
-                                                policy,
-                                                alpha,
-                                                mapper,
-                                                ckpt_every,
-                                                client_ckpt,
-                                                maxrev,
-                                                seeds,
-                                            ));
+                                            for &budget in &budget_axis {
+                                                for &deadline in &deadline_axis {
+                                                    let seeds: Vec<u64> = (0..self.trials)
+                                                        .map(|_| {
+                                                            let s = root.split_seed(global_trial);
+                                                            global_trial += 1;
+                                                            s
+                                                        })
+                                                        .collect();
+                                                    points.push(self.point(
+                                                        app.clone(),
+                                                        app_name,
+                                                        scenario,
+                                                        k_r,
+                                                        policy,
+                                                        alpha,
+                                                        mapper,
+                                                        ckpt_every,
+                                                        client_ckpt,
+                                                        maxrev,
+                                                        budget,
+                                                        deadline,
+                                                        seeds,
+                                                    ));
+                                                }
+                                            }
                                         }
                                     }
                                 }
@@ -366,6 +404,8 @@ impl SweepSpec {
         ckpt_every: Option<u32>,
         client_ckpt: Option<bool>,
         maxrev: Option<u32>,
+        budget: Option<f64>,
+        deadline: Option<f64>,
         seeds: Vec<u64>,
     ) -> PointSpec {
         let mut cfg = SimConfig::new(app, scenario, self.seed);
@@ -391,6 +431,12 @@ impl SweepSpec {
             // rule with the job-spec key via `set_server_ckpt_every`.
             cfg.set_server_ckpt_every(x);
         }
+        if let Some(b) = budget {
+            cfg.budget_round = b;
+        }
+        if let Some(d) = deadline {
+            cfg.deadline_round = d;
+        }
         let mut tags = vec![
             ("app".to_string(), app_name.to_string()),
             ("scenario".to_string(), scenario.key().to_string()),
@@ -407,6 +453,12 @@ impl SweepSpec {
         }
         if let Some(m) = maxrev {
             tags.push(("max_revocations_per_task".to_string(), format!("{m}")));
+        }
+        if let Some(b) = budget {
+            tags.push(("budget_round".to_string(), format!("{b}")));
+        }
+        if let Some(d) = deadline {
+            tags.push(("deadline_round".to_string(), format!("{d}")));
         }
         PointSpec { tags, cfg, seeds }
     }
@@ -444,7 +496,8 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     let mut out = String::new();
     out.push_str(
         "app,scenario,revocation_mean_secs,policy,alpha,mapper,\
-         server_ckpt_every,client_checkpoint,max_revocations_per_task,trials",
+         server_ckpt_every,client_checkpoint,max_revocations_per_task,\
+         budget_round,deadline_round,trials",
     );
     for metric in ["revocations", "fl_exec_secs", "total_secs", "cost"] {
         for stat in ["mean", "stddev", "min", "max", "ci95"] {
@@ -454,7 +507,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push('\n');
     for (p, s) in points.iter().zip(stats) {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{}",
             p.tag("app"),
             p.tag("scenario"),
             p.tag("revocation_mean_secs"),
@@ -464,6 +517,8 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
             p.tag("server_ckpt_every"),
             p.tag("client_checkpoint"),
             p.tag("max_revocations_per_task"),
+            p.tag("budget_round"),
+            p.tag("deadline_round"),
             s.trials
         ));
         for agg in [&s.revocations, &s.exec_secs, &s.total_secs, &s.cost] {
@@ -618,7 +673,37 @@ alphas = 0.5
         assert!(spec.server_ckpt_every.is_none());
         assert!(spec.client_checkpoint.is_none());
         assert!(spec.max_revocations_axis.is_none());
+        assert!(spec.budget_round.is_none());
+        assert!(spec.deadline_round.is_none());
         assert_eq!(spec.n_points(), 1);
+    }
+
+    #[test]
+    fn budget_deadline_axes_expand_and_tag() {
+        let spec = SweepSpec::from_toml(
+            "[grid]\napps = [\"til\"]\nbudget_round = [2.0, 4.0]\ndeadline_round = [600.0]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].cfg.budget_round, 2.0);
+        assert_eq!(points[1].cfg.budget_round, 4.0);
+        assert_eq!(points[0].cfg.deadline_round, 600.0);
+        assert_eq!(points[0].tag("budget_round"), "2");
+        assert_eq!(points[1].tag("budget_round"), "4");
+        assert_eq!(points[1].tag("deadline_round"), "600");
+        // Un-swept specs leave the config unconstrained.
+        let plain = SweepSpec::from_toml("[grid]\napps = [\"til\"]\n").unwrap();
+        let p = plain.expand().unwrap();
+        assert!(p[0].cfg.budget_round.is_infinite());
+        assert!(p[0].cfg.deadline_round.is_infinite());
+        // Non-positive entries are rejected.
+        assert!(
+            SweepSpec::from_toml("[grid]\napps = [\"til\"]\nbudget_round = [0.0]\n").is_err()
+        );
+        assert!(
+            SweepSpec::from_toml("[grid]\napps = [\"til\"]\ndeadline_round = [-5.0]\n").is_err()
+        );
     }
 
     #[test]

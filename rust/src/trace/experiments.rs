@@ -575,6 +575,87 @@ pub fn multijob() -> (Table, Json) {
     (t, Json::obj().set("experiment", "multijob").set("rows", Json::Arr(rows)))
 }
 
+/// Ablation (ours, closing the ROADMAP "Framework ablation studies" item):
+/// the paper's Dynamic Scheduler (Algorithms 1–3) against the
+/// restart-same-type baseline on the Table 5 configuration (TIL, all-spot,
+/// different-VM policy, ≤1 revocation per task) — isolates the benefit of
+/// Algorithm 3's re-optimization after each revocation.
+pub fn dynsched_ablation() -> (Table, Json) {
+    use crate::framework::{CachedPreSched, EnvCache, Framework, PaperDynSched, RestartSameType};
+    use std::sync::Arc;
+
+    let rates = [7200.0, 14400.0];
+    let points: Vec<PointSpec> = rates
+        .iter()
+        .enumerate()
+        .map(|(ri, &k_r)| {
+            let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 50);
+            cfg.n_rounds = TIL_EXTENDED_ROUNDS;
+            cfg.revocation_mean_secs = Some(k_r);
+            cfg.dynsched_policy = DynSchedPolicy::different_vm();
+            cfg.max_revocations_per_task = Some(1);
+            // Same seed bases as the Table 5 driver so the paper-stack rows
+            // line up with the published table.
+            let base = 50 + ri as u64 * 1000;
+            PointSpec {
+                tags: vec![("k_r".to_string(), format!("{k_r}"))],
+                cfg,
+                seeds: (0..TRIALS as u64).map(|t| base + t).collect(),
+            }
+        })
+        .collect();
+
+    let cache = Arc::new(EnvCache::new());
+    let paper_fw = Framework::builder()
+        .pre_sched(CachedPreSched::new(cache.clone()))
+        .dynsched(PaperDynSched)
+        .build();
+    let baseline_fw = Framework::builder()
+        .pre_sched(CachedPreSched::new(cache.clone()))
+        .dynsched(RestartSameType)
+        .build();
+    let paper_stats = sweep::run_campaign_with(&points, 0, &paper_fw).expect("campaign");
+    let baseline_stats = sweep::run_campaign_with(&points, 0, &baseline_fw).expect("campaign");
+
+    let mut t = Table::new(
+        "Ablation — Dynamic Scheduler (TIL, all-spot, different-VM policy)",
+        &["k_r", "Scheduler", "Avg # revoc.", "Avg exec. time", "Avg total costs", "Δcost vs Alg. 1–3"],
+    );
+    let mut rows = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let k_r: f64 = p.tag("k_r").parse().expect("tag written above");
+        for (label, stats, reference) in [
+            ("algorithms-1-3", &paper_stats[i], None),
+            ("restart-same-type", &baseline_stats[i], Some(&paper_stats[i])),
+        ] {
+            let delta = match reference {
+                None => "—".to_string(),
+                Some(r) => {
+                    format!("{:+.2}%", (stats.cost.mean - r.cost.mean) / r.cost.mean * 100.0)
+                }
+            };
+            t.row(&[
+                format!("{}h", k_r / 3600.0),
+                label.into(),
+                format!("{:.2}", stats.revocations.mean),
+                stats.exec_hms(),
+                format!("${:.2}", stats.cost.mean),
+                delta,
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("k_r", k_r)
+                    .set("scheduler", label)
+                    .set("avg_revocations", stats.revocations.mean)
+                    .set("avg_total_secs", stats.total_secs.mean)
+                    .set("avg_cost", stats.cost.mean)
+                    .set("cost_ci95", stats.cost.ci95),
+            );
+        }
+    }
+    (t, Json::obj().set("experiment", "dynsched-ablation").set("rows", Json::Arr(rows)))
+}
+
 /// Table 2 / Table 9 catalog dump.
 pub fn catalog_table(which: &str) -> Table {
     let cat = if which == "aws-gcp" { tables::aws_gcp() } else { tables::cloudlab() };

@@ -1,0 +1,836 @@
+//! First-class multi-job workloads (§6 future work, executed over time).
+//!
+//! A [`Workload`] is a set of FL jobs with arrival times and an admission
+//! policy, executed on one shared multi-cloud by a discrete-event engine:
+//! every placement decision — initial mappings at admission *and* the
+//! Dynamic Scheduler's replacement choices after spot revocations — competes
+//! for the same residual provider/region GPU and vCPU quotas, tracked by a
+//! time-indexed [`QuotaLedger`].
+//!
+//! Engine semantics (all deterministic):
+//!
+//! * Jobs are admitted greedily in policy order ([`AdmissionPolicy`]): a job
+//!   whose mapping is infeasible under the residual quota stays queued and
+//!   re-solves whenever capacity is released (a job completes, or a spot
+//!   revocation inside a running job returns a VM to the pool); jobs behind
+//!   it may backfill.
+//! * A job infeasible even on an *idle* environment (its `budget_round` /
+//!   `deadline_round` / the quotas exclude every placement) is rejected at
+//!   arrival.
+//! * An admitted job runs through the standard [`crate::framework`] pipeline
+//!   with its Initial Mapping pinned to the admission-time solution and its
+//!   Dynamic Scheduler wrapped so replacement candidates are filtered by the
+//!   residual shared quota at the revocation instant.
+//! * Admission-order causality: a job's execution is a pure function of the
+//!   jobs admitted before it, so the whole workload is reproducible from its
+//!   seeds regardless of host parallelism.
+//!
+//! Quota-safety invariant: every reservation interval is feasibility-checked
+//! against all previously committed intervals at every instant it covers, so
+//! by induction over commit order no provider/region bound is ever exceeded
+//! at any simulated instant (enforced end-to-end by
+//! `tests/workload_parity.rs`).
+//!
+//! [`Workload::single`] is the degenerate one-job case and reproduces
+//! [`crate::coordinator::simulate`] bit-for-bit; [`spec`] parses the
+//! `multi-fedls workload --spec` TOML (arrival processes, per-job overrides,
+//! campaign grids over admission/arrival/budget/deadline axes).
+
+pub mod spec;
+
+pub use spec::{ArrivalProcess, WorkloadPoint, WorkloadSpec};
+
+use std::sync::{Arc, Mutex};
+
+use crate::cloud::quota::QuotaTracker;
+use crate::cloud::{Catalog, VmTypeId};
+use crate::cloudsim::{MultiCloud, RevocationModel};
+use crate::coordinator::multijob::AdmissionPolicy;
+use crate::coordinator::sim::{environment_for, SimConfig};
+use crate::dynsched::{self, CurrentMap, DynSchedPolicy, FaultyTask, Selection};
+use crate::framework::{
+    modules, CachedPreSched, DynScheduler, EnvCache, FixedMapper, Framework, PaperDynSched,
+};
+use crate::mapping::problem::MappingProblem;
+use crate::mapping::MappingSolution;
+use crate::simul::SimTime;
+use crate::sweep::MetricAgg;
+
+/// One job in a workload: a complete simulator configuration plus its
+/// arrival instant on the shared cluster clock.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub name: String,
+    pub arrival_secs: f64,
+    pub cfg: SimConfig,
+}
+
+/// A set of jobs sharing one multi-cloud, with an admission policy.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub jobs: Vec<JobRequest>,
+    pub admission: AdmissionPolicy,
+}
+
+/// One committed reservation: `job` holds one VM of type `vm` over
+/// `[start, end)` on the cluster clock (`end = INFINITY` while running).
+#[derive(Debug, Clone)]
+pub struct Reservation {
+    pub job: usize,
+    pub vm: VmTypeId,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Time-indexed shared-quota accounting for one workload execution.
+///
+/// Usage over time is a sum of interval indicators, so it only increases at
+/// reservation starts; checking feasibility of an addition over `[start, ∞)`
+/// therefore reduces to checking `start` itself plus every later
+/// reservation start.
+#[derive(Debug)]
+pub struct QuotaLedger {
+    catalog: Catalog,
+    reservations: Vec<Reservation>,
+}
+
+impl QuotaLedger {
+    fn new(catalog: Catalog) -> QuotaLedger {
+        QuotaLedger { catalog, reservations: Vec::new() }
+    }
+
+    fn instants_from(&self, start: f64) -> Vec<f64> {
+        let mut instants = vec![start];
+        for r in &self.reservations {
+            if r.start > start && r.end > r.start {
+                instants.push(r.start);
+            }
+        }
+        instants
+    }
+
+    /// Would additionally holding one VM of each type in `add` over
+    /// `[start, ∞)` keep every provider/region bound satisfied at every
+    /// instant?
+    fn fits(&self, add: &[VmTypeId], start: f64) -> bool {
+        for t in self.instants_from(start) {
+            let mut q = QuotaTracker::new();
+            for r in &self.reservations {
+                if r.start <= t && t < r.end && q.allocate(&self.catalog, r.vm).is_err() {
+                    return false; // committed state over quota: impossible
+                }
+            }
+            for &vm in add {
+                if q.allocate(&self.catalog, vm).is_err() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Peak (GPUs, vCPUs) usage over `[start, ∞)`, per provider and per
+    /// region — used to shrink the mapping solver's catalog to residual
+    /// capacity (conservative per dimension, hence always quota-safe).
+    fn peak_usage(&self, start: f64) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+        let mut prov = vec![(0u32, 0u32); self.catalog.providers.len()];
+        let mut reg = vec![(0u32, 0u32); self.catalog.regions.len()];
+        for t in self.instants_from(start) {
+            let mut p_now = vec![(0u32, 0u32); prov.len()];
+            let mut r_now = vec![(0u32, 0u32); reg.len()];
+            for r in &self.reservations {
+                if r.start <= t && t < r.end {
+                    let spec = self.catalog.vm(r.vm);
+                    let pi = self.catalog.provider_of(r.vm).0;
+                    let ri = self.catalog.region_of(r.vm).0;
+                    p_now[pi].0 += spec.gpus;
+                    p_now[pi].1 += spec.vcpus;
+                    r_now[ri].0 += spec.gpus;
+                    r_now[ri].1 += spec.vcpus;
+                }
+            }
+            for i in 0..prov.len() {
+                prov[i].0 = prov[i].0.max(p_now[i].0);
+                prov[i].1 = prov[i].1.max(p_now[i].1);
+            }
+            for i in 0..reg.len() {
+                reg[i].0 = reg[i].0.max(r_now[i].0);
+                reg[i].1 = reg[i].1.max(r_now[i].1);
+            }
+        }
+        (prov, reg)
+    }
+
+    /// Any reservation still live at or after `start`?
+    fn any_live_after(&self, start: f64) -> bool {
+        self.reservations.iter().any(|r| r.end > start)
+    }
+
+    fn commit(&mut self, job: usize, vm: VmTypeId, start: f64) {
+        self.reservations.push(Reservation { job, vm, start, end: f64::INFINITY });
+    }
+
+    /// Close one open reservation of `(job, vm)` at `at` — a spot revocation
+    /// returning that VM's capacity to the shared pool.
+    fn release_one(&mut self, job: usize, vm: VmTypeId, at: f64) {
+        if let Some(r) = self
+            .reservations
+            .iter_mut()
+            .find(|r| r.job == job && r.vm == vm && r.end.is_infinite())
+        {
+            r.end = at;
+        }
+    }
+
+    /// Close every remaining open reservation of `job` at `at` (teardown).
+    fn end_job(&mut self, job: usize, at: f64) {
+        for r in self.reservations.iter_mut() {
+            if r.job == job && r.end.is_infinite() {
+                r.end = at;
+            }
+        }
+    }
+}
+
+/// Wraps a job's Dynamic Scheduler so replacement choices compete for the
+/// workload's residual shared quota: the revoked VM's capacity returns to
+/// the pool at the revocation instant, candidates that do not fit the
+/// residual quota (given every other job's committed reservations) are
+/// filtered out before the inner scheduler ranks them, and the chosen
+/// replacement is committed back to the ledger. Types skipped only because
+/// of a transient quota shortage stay in the task's candidate set.
+struct QuotaAwareDynSched {
+    inner: Arc<dyn DynScheduler>,
+    ledger: Arc<Mutex<QuotaLedger>>,
+    job: usize,
+    /// Cluster-clock offset of this job's simulation (its admission time).
+    offset: f64,
+}
+
+impl DynScheduler for QuotaAwareDynSched {
+    fn name(&self) -> &'static str {
+        "quota-aware"
+    }
+
+    fn select(
+        &self,
+        p: &MappingProblem,
+        map: &CurrentMap,
+        faulty: FaultyTask,
+        candidate_set: &[VmTypeId],
+        revoked: VmTypeId,
+        policy: DynSchedPolicy,
+        at: SimTime,
+    ) -> (Option<Selection>, Vec<VmTypeId>) {
+        let t = self.offset + at.secs();
+        let mut ledger = self.ledger.lock().expect("quota ledger poisoned");
+        ledger.release_one(self.job, revoked, t);
+        let filtered: Vec<VmTypeId> =
+            candidate_set.iter().copied().filter(|&v| ledger.fits(&[v], t)).collect();
+        let quota_blocked: Vec<VmTypeId> =
+            candidate_set.iter().copied().filter(|v| !filtered.contains(v)).collect();
+        let (selection, inner_set) =
+            self.inner.select(p, map, faulty, &filtered, revoked, policy, at);
+        match selection {
+            Some(sel) => {
+                ledger.commit(self.job, sel.vm, t);
+                // Keep quota-blocked types as candidates for later events;
+                // drop only what the inner scheduler itself removed.
+                let final_set: Vec<VmTypeId> = candidate_set
+                    .iter()
+                    .copied()
+                    .filter(|v| inner_set.contains(v) || quota_blocked.contains(v))
+                    .collect();
+                (Some(sel), final_set)
+            }
+            None if !quota_blocked.is_empty() => {
+                // Exhaustion attributable to the quota filter (candidates
+                // existed but none fit the residual shared quota): restart
+                // on the type whose capacity was just freed — it always
+                // fits, and the shortage is transient, so aborting the
+                // whole workload would be wrong.
+                let expected_makespan = dynsched::recompute_makespan(p, map, faulty, revoked);
+                let expected_cost =
+                    dynsched::recompute_cost(p, map, faulty, revoked, expected_makespan);
+                ledger.commit(self.job, revoked, t);
+                let sel = Selection {
+                    vm: revoked,
+                    expected_makespan,
+                    expected_cost,
+                    value: p.objective_value(expected_cost, expected_makespan),
+                    candidates_considered: 0,
+                };
+                (Some(sel), candidate_set.to_vec())
+            }
+            None => {
+                // Genuine exhaustion — the inner scheduler saw the full
+                // candidate set and found nothing. Propagate, so the job
+                // fails exactly like `coordinator::simulate` would.
+                (None, inner_set)
+            }
+        }
+    }
+}
+
+/// Per-job outcome of one workload execution.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub name: String,
+    pub arrival_secs: f64,
+    /// `None` = rejected (infeasible even on an idle environment).
+    pub admitted_at: Option<f64>,
+    pub completed_at: Option<f64>,
+    pub wait_secs: f64,
+    pub cost: f64,
+    pub revocations: u32,
+    pub rounds_completed: u32,
+    pub fl_exec_secs: f64,
+    pub predicted_round_makespan: f64,
+    pub predicted_round_cost: f64,
+    pub server: String,
+    pub clients: Vec<String>,
+}
+
+/// Workload-level summary metrics of one execution.
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    /// Cluster-clock span from the earliest arrival to the last completion.
+    pub makespan_secs: f64,
+    /// Mean admission wait over admitted jobs.
+    pub mean_wait_secs: f64,
+    pub admitted: usize,
+    /// Admitted jobs that could not start at their arrival instant.
+    pub queued: usize,
+    /// Jobs whose budget/deadline/quota excluded every placement outright.
+    pub rejected: usize,
+    pub total_cost: f64,
+}
+
+impl WorkloadStats {
+    pub fn from_records(records: &[JobRecord]) -> WorkloadStats {
+        let mut first_arrival = f64::INFINITY;
+        let mut last_completion: f64 = 0.0;
+        let mut wait_sum = 0.0;
+        let mut admitted = 0usize;
+        let mut queued = 0usize;
+        let mut rejected = 0usize;
+        let mut total_cost = 0.0;
+        for r in records {
+            match r.admitted_at {
+                Some(_) => {
+                    admitted += 1;
+                    if r.wait_secs > 1e-9 {
+                        queued += 1;
+                    }
+                    wait_sum += r.wait_secs;
+                    first_arrival = first_arrival.min(r.arrival_secs);
+                    last_completion = last_completion.max(r.completed_at.unwrap_or(0.0));
+                    total_cost += r.cost;
+                }
+                None => rejected += 1,
+            }
+        }
+        WorkloadStats {
+            makespan_secs: if admitted > 0 { last_completion - first_arrival } else { 0.0 },
+            mean_wait_secs: if admitted > 0 { wait_sum / admitted as f64 } else { 0.0 },
+            admitted,
+            queued,
+            rejected,
+            total_cost,
+        }
+    }
+}
+
+/// Everything one workload execution produced.
+#[derive(Debug, Clone)]
+pub struct WorkloadOutcome {
+    pub jobs: Vec<JobRecord>,
+    /// The complete shared-quota reservation timeline (for audits: sweeping
+    /// it proves no bound was exceeded at any simulated instant).
+    pub reservations: Vec<Reservation>,
+    pub stats: WorkloadStats,
+}
+
+impl Workload {
+    /// The degenerate one-job workload: `cfg` verbatim (seed included),
+    /// arriving at t = 0 under FIFO admission. Reproduces
+    /// [`crate::coordinator::simulate`] bit-for-bit
+    /// (`tests/workload_parity.rs`).
+    pub fn single(cfg: SimConfig) -> Workload {
+        let name = cfg.app.name.to_string();
+        Workload {
+            name: name.clone(),
+            jobs: vec![JobRequest { name, arrival_secs: 0.0, cfg }],
+            admission: AdmissionPolicy::Fifo,
+        }
+    }
+
+    /// Execute the workload with a private environment cache.
+    pub fn run(&self) -> anyhow::Result<WorkloadOutcome> {
+        self.run_with_cache(&Arc::new(EnvCache::new()))
+    }
+
+    /// Execute the workload; Pre-Scheduling reports come from (and feed)
+    /// the shared `cache`, so campaigns measure each environment once.
+    pub fn run_with_cache(&self, cache: &Arc<EnvCache>) -> anyhow::Result<WorkloadOutcome> {
+        anyhow::ensure!(!self.jobs.is_empty(), "workload has no jobs");
+        let (catalog, ground_truth) = environment_for(&self.jobs[0].cfg.app);
+        for j in &self.jobs {
+            let (c, _) = environment_for(&j.cfg.app);
+            anyhow::ensure!(
+                c.name == catalog.name,
+                "all jobs in a workload must share one environment ({} vs {})",
+                c.name,
+                catalog.name
+            );
+            anyhow::ensure!(
+                j.arrival_secs.is_finite() && j.arrival_secs >= 0.0,
+                "job {} has invalid arrival time {}",
+                j.name,
+                j.arrival_secs
+            );
+        }
+        let mc = MultiCloud::new(catalog.clone(), ground_truth, RevocationModel::none(), 1);
+        let slowdowns = cache.get_or_measure(&mc);
+        let ledger = Arc::new(Mutex::new(QuotaLedger::new(catalog.clone())));
+
+        let n = self.jobs.len();
+        let mut records: Vec<Option<JobRecord>> = vec![None; n];
+        let mut solo: Vec<Option<MappingSolution>> = vec![None; n];
+        let mut pending: Vec<usize> = Vec::new();
+        // (time, Some(job) = arrival | None = capacity-release trigger).
+        let mut events: Vec<(f64, Option<usize>)> =
+            self.jobs.iter().enumerate().map(|(i, j)| (j.arrival_secs, Some(i))).collect();
+
+        while !events.is_empty() {
+            let t = events.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
+            // Drain every event at exactly `t`, then run one admission pass.
+            let mut arrivals: Vec<usize> = Vec::new();
+            let mut k = 0;
+            while k < events.len() {
+                if events[k].0 == t {
+                    if let (_, Some(job)) = events.swap_remove(k) {
+                        arrivals.push(job);
+                    }
+                } else {
+                    k += 1;
+                }
+            }
+            arrivals.sort_unstable();
+            for j in arrivals {
+                let jr = &self.jobs[j];
+                let profile = jr.cfg.app.profile();
+                let p = MappingProblem {
+                    catalog: &catalog,
+                    slowdowns: slowdowns.as_ref(),
+                    job: &profile,
+                    alpha: jr.cfg.alpha,
+                    market: jr.cfg.scenario.client_market(),
+                    budget_round: jr.cfg.budget_round,
+                    deadline_round: jr.cfg.deadline_round,
+                };
+                match modules::mapper_for(jr.cfg.mapper).map(&p) {
+                    Some(sol) => {
+                        solo[j] = Some(sol);
+                        pending.push(j);
+                    }
+                    None => {
+                        // Infeasible even on an idle environment: reject.
+                        records[j] = Some(JobRecord {
+                            name: jr.name.clone(),
+                            arrival_secs: jr.arrival_secs,
+                            admitted_at: None,
+                            completed_at: None,
+                            wait_secs: 0.0,
+                            cost: 0.0,
+                            revocations: 0,
+                            rounds_completed: 0,
+                            fl_exec_secs: 0.0,
+                            predicted_round_makespan: 0.0,
+                            predicted_round_cost: 0.0,
+                            server: String::new(),
+                            clients: Vec::new(),
+                        });
+                    }
+                }
+            }
+
+            // Admission pass in policy order; later jobs may backfill past a
+            // blocked one (greedy, like the static multijob planner).
+            let mut order = pending.clone();
+            match self.admission {
+                AdmissionPolicy::Fifo => order.sort_by(|&a, &b| {
+                    self.jobs[a]
+                        .arrival_secs
+                        .total_cmp(&self.jobs[b].arrival_secs)
+                        .then(a.cmp(&b))
+                }),
+                AdmissionPolicy::ShortestMakespanFirst => order.sort_by(|&a, &b| {
+                    let ma = solo[a].as_ref().expect("pending job has solo solution").eval.makespan;
+                    let mb = solo[b].as_ref().expect("pending job has solo solution").eval.makespan;
+                    ma.total_cmp(&mb).then(a.cmp(&b))
+                }),
+            }
+            let mut admitted_now: Vec<usize> = Vec::new();
+            for j in order {
+                if let Some((completion, releases)) = self.try_admit(
+                    j,
+                    t,
+                    &catalog,
+                    slowdowns.as_ref(),
+                    &solo,
+                    &ledger,
+                    cache,
+                    &mut records,
+                )? {
+                    admitted_now.push(j);
+                    for rt in releases {
+                        if rt > t {
+                            events.push((rt, None));
+                        }
+                    }
+                    events.push((completion, None));
+                }
+            }
+            pending.retain(|j| !admitted_now.contains(j));
+        }
+        anyhow::ensure!(
+            pending.is_empty(),
+            "workload engine stalled with {} queued jobs",
+            pending.len()
+        );
+
+        let jobs: Vec<JobRecord> =
+            records.into_iter().map(|r| r.expect("every job recorded")).collect();
+        let reservations = ledger.lock().expect("quota ledger poisoned").reservations.clone();
+        let stats = WorkloadStats::from_records(&jobs);
+        Ok(WorkloadOutcome { jobs, reservations, stats })
+    }
+
+    /// Try to admit job `j` at instant `t` against the residual quota.
+    /// Returns `Some((completion_time, capacity_release_times))` on success.
+    #[allow(clippy::too_many_arguments)]
+    fn try_admit(
+        &self,
+        j: usize,
+        t: f64,
+        catalog: &Catalog,
+        slowdowns: &crate::presched::SlowdownReport,
+        solo: &[Option<MappingSolution>],
+        ledger: &Arc<Mutex<QuotaLedger>>,
+        cache: &Arc<EnvCache>,
+        records: &mut [Option<JobRecord>],
+    ) -> anyhow::Result<Option<(f64, Vec<f64>)>> {
+        let jr = &self.jobs[j];
+        let contended = ledger.lock().expect("quota ledger poisoned").any_live_after(t);
+        let sol: Option<MappingSolution> = if !contended {
+            // Idle environment: the arrival-time solution is exact (and this
+            // path keeps `Workload::single` bit-identical to `simulate`).
+            solo[j].clone()
+        } else {
+            // Re-solve against the residual capacity: shrink every quota
+            // bound by the ledger's peak usage from `t` on. The reduced
+            // catalog keeps providers/regions/VM types in identical order,
+            // so the slowdown report's index keys carry over unchanged
+            // (same invariant as `coordinator::multijob`).
+            let (pprov, preg) = ledger.lock().expect("quota ledger poisoned").peak_usage(t);
+            let mut reduced = catalog.clone();
+            for (pi, prov) in reduced.providers.iter_mut().enumerate() {
+                if let Some(maxg) = prov.max_gpus {
+                    prov.max_gpus = Some(maxg.saturating_sub(pprov[pi].0));
+                }
+                if let Some(maxc) = prov.max_vcpus {
+                    prov.max_vcpus = Some(maxc.saturating_sub(pprov[pi].1));
+                }
+            }
+            for (ri, region) in reduced.regions.iter_mut().enumerate() {
+                if let Some(maxg) = region.max_gpus {
+                    region.max_gpus = Some(maxg.saturating_sub(preg[ri].0));
+                }
+                if let Some(maxc) = region.max_vcpus {
+                    region.max_vcpus = Some(maxc.saturating_sub(preg[ri].1));
+                }
+            }
+            let profile = jr.cfg.app.profile();
+            let p = MappingProblem {
+                catalog: &reduced,
+                slowdowns,
+                job: &profile,
+                alpha: jr.cfg.alpha,
+                market: jr.cfg.scenario.client_market(),
+                budget_round: jr.cfg.budget_round,
+                deadline_round: jr.cfg.deadline_round,
+            };
+            modules::mapper_for(jr.cfg.mapper).map(&p)
+        };
+        let Some(sol) = sol else { return Ok(None) };
+        let mut vms = sol.mapping.clients.clone();
+        vms.push(sol.mapping.server);
+        {
+            let mut lg = ledger.lock().expect("quota ledger poisoned");
+            if !lg.fits(&vms, t) {
+                return Ok(None);
+            }
+            for &vm in &vms {
+                lg.commit(j, vm, t);
+            }
+        }
+        let fw = Framework::builder()
+            .pre_sched(CachedPreSched::new(cache.clone()))
+            .mapper(FixedMapper::new(sol.clone()))
+            .dynsched(QuotaAwareDynSched {
+                inner: Arc::new(PaperDynSched),
+                ledger: ledger.clone(),
+                job: j,
+                offset: t,
+            })
+            .build();
+        let out = fw.run(&jr.cfg)?;
+        let completion = t + out.total_secs;
+        let mut releases: Vec<f64> = Vec::new();
+        {
+            let mut lg = ledger.lock().expect("quota ledger poisoned");
+            lg.end_job(j, completion);
+            for r in lg.reservations.iter() {
+                if r.job == j && r.end < completion {
+                    releases.push(r.end);
+                }
+            }
+        }
+        records[j] = Some(JobRecord {
+            name: jr.name.clone(),
+            arrival_secs: jr.arrival_secs,
+            admitted_at: Some(t),
+            completed_at: Some(completion),
+            wait_secs: t - jr.arrival_secs,
+            cost: out.total_cost,
+            revocations: out.n_revocations,
+            rounds_completed: out.rounds_completed,
+            fl_exec_secs: out.fl_exec_secs,
+            predicted_round_makespan: out.predicted_round_makespan,
+            predicted_round_cost: out.predicted_round_cost,
+            server: out.initial_server.clone(),
+            clients: out.initial_clients.clone(),
+        });
+        Ok(Some((completion, releases)))
+    }
+}
+
+/// Run independent workload realizations (campaign trials) across a worker
+/// pool, returning outcomes in input order — bit-identical for any worker
+/// count (the pool is [`crate::sweep::run_indexed`]).
+pub fn run_trials(
+    trials: &[Workload],
+    jobs: usize,
+    cache: &Arc<EnvCache>,
+) -> anyhow::Result<Vec<WorkloadOutcome>> {
+    crate::sweep::run_indexed(trials.len(), jobs, |i| trials[i].run_with_cache(cache))
+}
+
+/// Aggregates of one workload configuration over repeated trials.
+#[derive(Debug, Clone)]
+pub struct WorkloadAgg {
+    pub trials: usize,
+    pub makespan: MetricAgg,
+    pub mean_wait: MetricAgg,
+    pub total_cost: MetricAgg,
+    pub admitted: MetricAgg,
+    pub queued: MetricAgg,
+    pub rejected: MetricAgg,
+    pub jobs: Vec<JobAgg>,
+}
+
+/// Per-job aggregates over a point's trials (completion uses 0 for trials
+/// where the job was rejected).
+#[derive(Debug, Clone)]
+pub struct JobAgg {
+    pub name: String,
+    pub wait: MetricAgg,
+    pub completion: MetricAgg,
+    pub cost: MetricAgg,
+    pub revocations: MetricAgg,
+}
+
+impl WorkloadAgg {
+    pub fn from_outcomes(outs: &[WorkloadOutcome]) -> WorkloadAgg {
+        assert!(!outs.is_empty(), "WorkloadAgg over zero trials");
+        let col = |f: &dyn Fn(&WorkloadOutcome) -> f64| -> MetricAgg {
+            MetricAgg::from_samples(&outs.iter().map(f).collect::<Vec<_>>())
+        };
+        let n_jobs = outs[0].jobs.len();
+        let mut jobs = Vec::with_capacity(n_jobs);
+        for ji in 0..n_jobs {
+            let jcol = |f: &dyn Fn(&JobRecord) -> f64| -> MetricAgg {
+                MetricAgg::from_samples(&outs.iter().map(|o| f(&o.jobs[ji])).collect::<Vec<_>>())
+            };
+            jobs.push(JobAgg {
+                name: outs[0].jobs[ji].name.clone(),
+                wait: jcol(&|r| r.wait_secs),
+                completion: jcol(&|r| r.completed_at.unwrap_or(0.0)),
+                cost: jcol(&|r| r.cost),
+                revocations: jcol(&|r| r.revocations as f64),
+            });
+        }
+        WorkloadAgg {
+            trials: outs.len(),
+            makespan: col(&|o| o.stats.makespan_secs),
+            mean_wait: col(&|o| o.stats.mean_wait_secs),
+            total_cost: col(&|o| o.stats.total_cost),
+            admitted: col(&|o| o.stats.admitted as f64),
+            queued: col(&|o| o.stats.queued as f64),
+            rejected: col(&|o| o.stats.rejected as f64),
+            jobs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::Scenario;
+
+    fn aws_job(seed: u64) -> SimConfig {
+        let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, seed);
+        cfg.checkpoints_enabled = false;
+        cfg
+    }
+
+    fn batch(cfgs: Vec<SimConfig>) -> Workload {
+        Workload {
+            name: "test".into(),
+            jobs: cfgs
+                .into_iter()
+                .enumerate()
+                .map(|(i, cfg)| JobRequest {
+                    name: format!("job-{i}"),
+                    arrival_secs: 0.0,
+                    cfg,
+                })
+                .collect(),
+            admission: AdmissionPolicy::Fifo,
+        }
+    }
+
+    #[test]
+    fn single_job_workload_completes() {
+        let out = Workload::single(aws_job(4)).run().unwrap();
+        assert_eq!(out.stats.admitted, 1);
+        assert_eq!(out.stats.queued, 0);
+        assert_eq!(out.stats.rejected, 0);
+        let j = &out.jobs[0];
+        assert_eq!(j.admitted_at, Some(0.0));
+        assert!(j.completed_at.unwrap() > 0.0);
+        assert_eq!(j.server, "vm313");
+        // Reservations: one per task, all spanning the whole execution.
+        assert_eq!(out.reservations.len(), 3);
+        for r in &out.reservations {
+            assert_eq!(r.start, 0.0);
+            assert!((r.end - j.completed_at.unwrap()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_of_three_shares_quota() {
+        // Three 2-client TIL jobs on AWS+GCP (4+4 GPUs): all admitted, but
+        // never more GPUs in flight than the quota allows.
+        let out = batch(vec![aws_job(1), aws_job(2), aws_job(3)]).run().unwrap();
+        assert_eq!(out.stats.admitted, 3);
+        assert_eq!(out.stats.rejected, 0);
+        for j in &out.jobs {
+            assert_eq!(j.rounds_completed, 10);
+        }
+    }
+
+    #[test]
+    fn saturated_quota_queues_and_drains() {
+        // Six jobs contend for the AWS+GCP quotas at t = 0. Whether they all
+        // fit (CPU fallbacks) or some queue, every one must eventually run —
+        // and any queued job must start only after an earlier release.
+        let out = batch((0..6).map(aws_job).collect()).run().unwrap();
+        assert_eq!(out.stats.admitted, 6, "every job eventually runs");
+        if out.stats.queued > 0 {
+            // Queued jobs start strictly after an earlier completion.
+            let first_done = out
+                .jobs
+                .iter()
+                .filter_map(|j| j.completed_at)
+                .fold(f64::INFINITY, f64::min);
+            for j in out.jobs.iter().filter(|j| j.wait_secs > 1e-9) {
+                assert!(j.admitted_at.unwrap() >= first_done - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_rejects_job() {
+        let mut bad = aws_job(7);
+        bad.budget_round = 1e-6;
+        let out = batch(vec![aws_job(1), bad]).run().unwrap();
+        assert_eq!(out.stats.admitted, 1);
+        assert_eq!(out.stats.rejected, 1);
+        assert!(out.jobs[1].admitted_at.is_none());
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        let w = batch((0..4).map(aws_job).collect());
+        let a = w.run().unwrap();
+        let b = w.run().unwrap();
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(ja.cost.to_bits(), jb.cost.to_bits());
+            assert_eq!(
+                ja.completed_at.unwrap().to_bits(),
+                jb.completed_at.unwrap().to_bits()
+            );
+        }
+        assert_eq!(a.stats.total_cost.to_bits(), b.stats.total_cost.to_bits());
+    }
+
+    #[test]
+    fn sjf_admits_short_job_first_under_contention() {
+        // Four long jobs and one short one: under SJF the short job must
+        // never be the last to start, however the quota contention resolves.
+        let mut cfgs: Vec<SimConfig> = (0..5).map(aws_job).collect();
+        for c in cfgs.iter_mut().take(4) {
+            c.app.exec_bl_secs = 5000.0; // four slow jobs
+        }
+        cfgs[4].app.exec_bl_secs = 100.0; // one fast job
+        let mut w = batch(cfgs);
+        w.admission = AdmissionPolicy::ShortestMakespanFirst;
+        let out = w.run().unwrap();
+        // The fast job must not be the last to start.
+        let fast_admit = out.jobs[4].admitted_at.unwrap();
+        let latest_admit =
+            out.jobs.iter().filter_map(|j| j.admitted_at).fold(0.0f64, f64::max);
+        assert!(fast_admit <= latest_admit);
+        assert_eq!(out.stats.admitted, 5);
+    }
+
+    #[test]
+    fn workload_agg_aggregates_per_job() {
+        let w = batch(vec![aws_job(1), aws_job(2)]);
+        let outs = run_trials(
+            &[w.clone(), w],
+            2,
+            &Arc::new(EnvCache::new()),
+        )
+        .unwrap();
+        let agg = WorkloadAgg::from_outcomes(&outs);
+        assert_eq!(agg.trials, 2);
+        assert_eq!(agg.jobs.len(), 2);
+        assert_eq!(agg.admitted.mean, 2.0);
+        assert!(agg.total_cost.mean > 0.0);
+    }
+
+    #[test]
+    fn mixed_environments_are_rejected() {
+        let a = aws_job(1);
+        let mut b = SimConfig::new(apps::til(), Scenario::AllOnDemand, 2);
+        b.checkpoints_enabled = false;
+        let err = batch(vec![a, b]).run();
+        assert!(err.is_err(), "cloudlab + aws-gcp in one workload must fail");
+    }
+}

@@ -1,0 +1,681 @@
+//! Declarative workload specifications: the `multi-fedls workload --spec`
+//! TOML, expanded into fully-seeded [`Workload`] trials with the same pure
+//! [`Rng::split_seed`] guarantees as the sweep grids — worker count and
+//! completion order cannot change any seed or arrival time.
+//!
+//! Spec format (parsed with `util::tomlmini`):
+//!
+//! ```toml
+//! name = "two-apps"            # optional; used in the JSON header
+//! seed = 7                     # root seed for arrivals + per-job sim seeds
+//! trials = 3                   # independent workload realizations
+//! workers = 4                  # optional default worker count (CLI --jobs wins)
+//! admission = "fifo"           # fifo | sjf (default fifo)
+//!
+//! [arrival]                    # omit for batch (everything arrives at t=0)
+//! kind = "poisson"             # batch | poisson | trace
+//! mean_secs = 1800.0           # poisson: mean inter-arrival gap
+//! # times = [0.0, 600.0]       # trace: explicit instants, one per job
+//!
+//! [[job]]                      # one entry per job template
+//! app = "til-aws-gcp"
+//! count = 2                    # replicate this template (default 1)
+//! rounds = 10
+//! scenario = "all-on-demand"
+//! budget_round = 2.5           # optional per-round constraints
+//! deadline_round = 900.0
+//! # ...every job-spec key except `seed`/`trials` (workload-level concerns)
+//!
+//! [grid]                       # optional campaign axes (cartesian product)
+//! admissions = ["fifo", "sjf"]
+//! arrivals = ["batch", "poisson"]
+//! budget_round = [1.0, 2.0]    # overrides every job's budget for the point
+//! deadline_round = [600.0]
+//! ```
+//!
+//! Per-trial seeds: trial `k` (global index over the expansion) gets
+//! `root.split_seed(k)`; within a trial, job `i` simulates with
+//! `split_seed(i)` of the trial seed and the arrival process draws from
+//! `split_seed(n_jobs)` (disjoint from every job tag by construction).
+
+use std::path::Path;
+
+use super::{JobRequest, Workload, WorkloadAgg};
+use crate::coordinator::multijob::AdmissionPolicy;
+use crate::coordinator::JobSpec;
+use crate::simul::{Rng, SimTime};
+use crate::util::bench::Table;
+use crate::util::tomlmini::{self, Value};
+use crate::util::Json;
+
+/// How a workload's jobs arrive on the cluster clock.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Every job arrives at t = 0.
+    Batch,
+    /// Exponential inter-arrival gaps with the given mean, in declaration
+    /// order, drawn from the trial's arrival seed (job 1 arrives after the
+    /// first gap).
+    Poisson { mean_secs: f64 },
+    /// Explicit arrival instants, one per job (after `count` expansion).
+    Trace { times: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    pub fn kind_key(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Batch => "batch",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Trace { .. } => "trace",
+        }
+    }
+}
+
+/// One job template: a base configuration replicated into the workload.
+#[derive(Debug, Clone)]
+pub struct JobTemplate {
+    pub name: String,
+    pub cfg: crate::coordinator::SimConfig,
+}
+
+/// A parsed workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub seed: u64,
+    pub trials: usize,
+    /// Default worker count; the CLI `--jobs` flag overrides it.
+    pub workers: Option<usize>,
+    pub admission: AdmissionPolicy,
+    pub arrival: ArrivalProcess,
+    /// After `count` expansion: the concrete job list of every trial.
+    pub jobs: Vec<JobTemplate>,
+    pub admissions_axis: Option<Vec<AdmissionPolicy>>,
+    pub arrivals_axis: Option<Vec<ArrivalProcess>>,
+    pub budget_axis: Option<Vec<f64>>,
+    pub deadline_axis: Option<Vec<f64>>,
+}
+
+/// One expanded campaign point: axis tags plus one fully-seeded [`Workload`]
+/// per trial.
+#[derive(Debug, Clone)]
+pub struct WorkloadPoint {
+    pub tags: Vec<(String, String)>,
+    pub trials: Vec<Workload>,
+}
+
+impl WorkloadPoint {
+    /// Look up an axis value by tag name (rendering helper).
+    pub fn tag(&self, key: &str) -> &str {
+        self.tags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str()).unwrap_or("")
+    }
+}
+
+/// Read a grid axis as a list, accepting a bare scalar as a one-element
+/// list (same convention as the sweep grids).
+fn axis_values<'a>(
+    grid: Option<&'a std::collections::BTreeMap<String, Value>>,
+    key: &str,
+) -> Option<Vec<&'a Value>> {
+    match grid?.get(key)? {
+        Value::Array(items) => Some(items.iter().collect()),
+        v => Some(vec![v]),
+    }
+}
+
+fn parse_arrival(
+    kind: &str,
+    arrival_tbl: Option<&std::collections::BTreeMap<String, Value>>,
+    n_jobs: usize,
+) -> anyhow::Result<ArrivalProcess> {
+    match kind {
+        "batch" => Ok(ArrivalProcess::Batch),
+        "poisson" => {
+            let mean = arrival_tbl
+                .and_then(|t| t.get("mean_secs"))
+                .and_then(|v| v.as_float())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("poisson arrivals need [arrival] mean_secs > 0")
+                })?;
+            anyhow::ensure!(mean > 0.0, "[arrival] mean_secs must be positive, got {mean}");
+            Ok(ArrivalProcess::Poisson { mean_secs: mean })
+        }
+        "trace" => {
+            let times = arrival_tbl
+                .and_then(|t| t.get("times"))
+                .and_then(|v| v.as_array())
+                .ok_or_else(|| anyhow::anyhow!("trace arrivals need [arrival] times = [..]"))?;
+            let times: Vec<f64> = times
+                .iter()
+                .map(|v| {
+                    v.as_float()
+                        .ok_or_else(|| anyhow::anyhow!("[arrival] times entries must be numbers"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            anyhow::ensure!(
+                times.len() == n_jobs,
+                "[arrival] times has {} entries for {} jobs (count-expanded)",
+                times.len(),
+                n_jobs
+            );
+            for &t in &times {
+                anyhow::ensure!(t >= 0.0 && t.is_finite(), "arrival time {t} invalid");
+            }
+            Ok(ArrivalProcess::Trace { times })
+        }
+        other => anyhow::bail!("unknown arrival kind {other} (batch | poisson | trace)"),
+    }
+}
+
+impl WorkloadSpec {
+    pub fn from_toml(text: &str) -> anyhow::Result<WorkloadSpec> {
+        let root = tomlmini::parse(text)?;
+        let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
+            match root.get(key).and_then(|v| v.as_int()) {
+                Some(x) if x < 0 => anyhow::bail!("{key} must be non-negative, got {x}"),
+                other => Ok(other),
+            }
+        };
+        let trials = get_nonneg("trials")?.unwrap_or(1);
+        anyhow::ensure!(trials > 0, "trials must be positive");
+
+        // --- job templates ([[job]] with optional count/name) ---
+        let job_tables = root
+            .get("job")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| anyhow::anyhow!("workload spec needs at least one [[job]]"))?;
+        anyhow::ensure!(!job_tables.is_empty(), "workload spec has zero [[job]] entries");
+        let mut jobs: Vec<JobTemplate> = Vec::new();
+        for (ti, tbl) in job_tables.iter().enumerate() {
+            for forbidden in ["seed", "trials"] {
+                anyhow::ensure!(
+                    !tbl.contains_key(forbidden),
+                    "[[job]] #{ti}: `{forbidden}` is a workload-level setting \
+                     (seeds derive from the workload seed)"
+                );
+            }
+            let spec = JobSpec::from_table(tbl)
+                .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?;
+            let count = match tbl.get("count").and_then(|v| v.as_int()) {
+                None => 1,
+                Some(c) if c >= 1 => c as usize,
+                Some(c) => anyhow::bail!("[[job]] #{ti}: count must be >= 1, got {c}"),
+            };
+            let base_name = tbl
+                .get("name")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| spec.config.app.name.to_string());
+            for k in 0..count {
+                let name =
+                    if count == 1 { base_name.clone() } else { format!("{base_name}-{k}") };
+                jobs.push(JobTemplate { name, cfg: spec.config.clone() });
+            }
+        }
+
+        // --- arrival process ---
+        let arrival_tbl = root.get("arrival").and_then(|v| v.as_table());
+        let kind = arrival_tbl
+            .and_then(|t| t.get("kind"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("batch");
+        let arrival = parse_arrival(kind, arrival_tbl, jobs.len())?;
+
+        let admission = match root.get("admission").and_then(|v| v.as_str()) {
+            None => AdmissionPolicy::Fifo,
+            Some(k) => AdmissionPolicy::from_key(k)
+                .ok_or_else(|| anyhow::anyhow!("unknown admission policy {k} (fifo | sjf)"))?,
+        };
+
+        // --- optional grid axes ---
+        let grid = root.get("grid").and_then(|v| v.as_table());
+        let admissions_axis = match axis_values(grid, "admissions") {
+            None => None,
+            Some(items) => Some(
+                items
+                    .into_iter()
+                    .map(|v| {
+                        v.as_str()
+                            .and_then(AdmissionPolicy::from_key)
+                            .ok_or_else(|| anyhow::anyhow!("grid.admissions: fifo | sjf"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
+        let arrivals_axis = match axis_values(grid, "arrivals") {
+            None => None,
+            Some(items) => Some(
+                items
+                    .into_iter()
+                    .map(|v| {
+                        let k = v
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("grid.arrivals entries are strings"))?;
+                        parse_arrival(k, arrival_tbl, jobs.len())
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
+        let float_axis = |key: &str| -> anyhow::Result<Option<Vec<f64>>> {
+            match axis_values(grid, key) {
+                None => Ok(None),
+                Some(items) => {
+                    let xs: Vec<f64> = items
+                        .into_iter()
+                        .map(|v| {
+                            v.as_float().ok_or_else(|| {
+                                anyhow::anyhow!("grid.{key} entries must be numbers")
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                    for &x in &xs {
+                        anyhow::ensure!(x > 0.0, "grid.{key} entries must be positive, got {x}");
+                    }
+                    Ok(Some(xs))
+                }
+            }
+        };
+        let budget_axis = float_axis("budget_round")?;
+        let deadline_axis = float_axis("deadline_round")?;
+
+        Ok(WorkloadSpec {
+            name: root
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("workload")
+                .to_string(),
+            seed: get_nonneg("seed")?.unwrap_or(42) as u64,
+            trials: trials as usize,
+            workers: get_nonneg("workers")?.map(|w| w as usize),
+            admission,
+            arrival,
+            jobs,
+            admissions_axis,
+            arrivals_axis,
+            budget_axis,
+            deadline_axis,
+        })
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Number of campaign points (each runs `trials` workload realizations).
+    pub fn n_points(&self) -> usize {
+        self.admissions_axis.as_ref().map_or(1, |v| v.len())
+            * self.arrivals_axis.as_ref().map_or(1, |v| v.len())
+            * self.budget_axis.as_ref().map_or(1, |v| v.len())
+            * self.deadline_axis.as_ref().map_or(1, |v| v.len())
+    }
+
+    /// Build one fully-seeded workload realization.
+    fn instantiate(
+        &self,
+        admission: AdmissionPolicy,
+        arrival: &ArrivalProcess,
+        budget: Option<f64>,
+        deadline: Option<f64>,
+        trial_seed: u64,
+    ) -> Workload {
+        let n = self.jobs.len();
+        let r = Rng::seeded(trial_seed);
+        let times: Vec<f64> = match arrival {
+            ArrivalProcess::Batch => vec![0.0; n],
+            ArrivalProcess::Poisson { mean_secs } => {
+                let mut ar = Rng::seeded(r.split_seed(n as u64));
+                let mut t = 0.0;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t += ar.exponential(1.0 / mean_secs);
+                    v.push(t);
+                }
+                v
+            }
+            ArrivalProcess::Trace { times } => times.clone(),
+        };
+        let jobs: Vec<JobRequest> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, tmpl)| {
+                let mut cfg = tmpl.cfg.clone();
+                cfg.seed = r.split_seed(i as u64);
+                if let Some(b) = budget {
+                    cfg.budget_round = b;
+                }
+                if let Some(d) = deadline {
+                    cfg.deadline_round = d;
+                }
+                JobRequest { name: tmpl.name.clone(), arrival_secs: times[i], cfg }
+            })
+            .collect();
+        Workload { name: self.name.clone(), jobs, admission }
+    }
+
+    /// Expand the grid into campaign points. Seeds (and therefore Poisson
+    /// arrival draws) are a pure function of the spec: trial `k` in global
+    /// expansion order always gets `root.split_seed(k)`.
+    pub fn expand(&self) -> anyhow::Result<Vec<WorkloadPoint>> {
+        let root = Rng::seeded(self.seed);
+        let admissions: Vec<AdmissionPolicy> =
+            self.admissions_axis.clone().unwrap_or_else(|| vec![self.admission]);
+        let arrivals: Vec<ArrivalProcess> =
+            self.arrivals_axis.clone().unwrap_or_else(|| vec![self.arrival.clone()]);
+        let budgets: Vec<Option<f64>> = match &self.budget_axis {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
+        let deadlines: Vec<Option<f64>> = match &self.deadline_axis {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
+        let mut points = Vec::with_capacity(self.n_points());
+        let mut global_trial: u64 = 0;
+        for &admission in &admissions {
+            for arrival in &arrivals {
+                for &budget in &budgets {
+                    for &deadline in &deadlines {
+                        let trials: Vec<Workload> = (0..self.trials)
+                            .map(|_| {
+                                let s = root.split_seed(global_trial);
+                                global_trial += 1;
+                                self.instantiate(admission, arrival, budget, deadline, s)
+                            })
+                            .collect();
+                        let mut tags = vec![
+                            ("admission".to_string(), admission.key().to_string()),
+                            ("arrival".to_string(), arrival.kind_key().to_string()),
+                        ];
+                        if let Some(b) = budget {
+                            tags.push(("budget_round".to_string(), format!("{b}")));
+                        }
+                        if let Some(d) = deadline {
+                            tags.push(("deadline_round".to_string(), format!("{d}")));
+                        }
+                        points.push(WorkloadPoint { tags, trials });
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(!points.is_empty(), "workload grid expanded to zero points");
+        Ok(points)
+    }
+}
+
+/// Run every point's trials through one shared environment cache, `jobs`
+/// workers at a time, returning per-point aggregates in point order. All
+/// points' trials are flattened into one worker pool, so parallelism spans
+/// points (same rationale as `sweep::run_campaign_streaming`).
+pub fn run_points(points: &[WorkloadPoint], jobs: usize) -> anyhow::Result<Vec<WorkloadAgg>> {
+    let cache = std::sync::Arc::new(crate::framework::EnvCache::new());
+    let flat: Vec<Workload> =
+        points.iter().flat_map(|p| p.trials.iter().cloned()).collect();
+    let outs = super::run_trials(&flat, jobs, &cache)?;
+    let mut aggs = Vec::with_capacity(points.len());
+    let mut idx = 0;
+    for p in points {
+        let n = p.trials.len();
+        aggs.push(WorkloadAgg::from_outcomes(&outs[idx..idx + n]));
+        idx += n;
+    }
+    Ok(aggs)
+}
+
+fn job_json(j: &super::JobAgg) -> Json {
+    Json::obj()
+        .set("name", j.name.clone())
+        .set("wait_secs", j.wait.json())
+        .set("completion_secs", j.completion.json())
+        .set("cost", j.cost.json())
+        .set("revocations", j.revocations.json())
+}
+
+/// Render campaign results as JSON. Deliberately excludes the worker count
+/// so output is byte-stable across `--jobs` values.
+pub fn render_json(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .zip(aggs)
+        .map(|(p, a)| {
+            let mut row = Json::obj();
+            for (k, v) in &p.tags {
+                row = row.set(k, v.clone());
+            }
+            row.set("trials", a.trials)
+                .set("makespan_secs", a.makespan.json())
+                .set("mean_wait_secs", a.mean_wait.json())
+                .set("total_cost", a.total_cost.json())
+                .set("admitted", a.admitted.json())
+                .set("queued", a.queued.json())
+                .set("rejected", a.rejected.json())
+                .set("jobs", Json::Arr(a.jobs.iter().map(job_json).collect()))
+        })
+        .collect();
+    Json::obj()
+        .set("workload", spec.name.clone())
+        .set("seed", spec.seed)
+        .set("trials_per_point", spec.trials)
+        .set("n_jobs", spec.jobs.len())
+        .set("points", Json::Arr(rows))
+}
+
+/// Render campaign results as CSV (one row per point).
+pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
+    let mut out = String::new();
+    out.push_str("admission,arrival,budget_round,deadline_round,trials");
+    for metric in
+        ["makespan_secs", "mean_wait_secs", "total_cost", "admitted", "queued", "rejected"]
+    {
+        for stat in ["mean", "stddev", "min", "max", "ci95"] {
+            out.push_str(&format!(",{metric}_{stat}"));
+        }
+    }
+    out.push('\n');
+    for (p, a) in points.iter().zip(aggs) {
+        out.push_str(&format!(
+            "{},{},{},{},{}",
+            p.tag("admission"),
+            p.tag("arrival"),
+            p.tag("budget_round"),
+            p.tag("deadline_round"),
+            a.trials
+        ));
+        for agg in [&a.makespan, &a.mean_wait, &a.total_cost, &a.admitted, &a.queued, &a.rejected]
+        {
+            out.push_str(&format!(
+                ",{},{},{},{},{}",
+                agg.mean, agg.stddev, agg.min, agg.max, agg.ci95
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render campaign results as a human table.
+pub fn render_table(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Workload — {} ({} jobs, {} points × {} trials)",
+            spec.name,
+            spec.jobs.len(),
+            points.len(),
+            spec.trials
+        ),
+        &[
+            "Admission",
+            "Arrival",
+            "B_round",
+            "T_round",
+            "Adm/Q/Rej",
+            "Makespan",
+            "Mean wait",
+            "Total cost ($)",
+        ],
+    );
+    for (p, a) in points.iter().zip(aggs) {
+        let b = p.tag("budget_round");
+        let d = p.tag("deadline_round");
+        t.row(&[
+            p.tag("admission").to_string(),
+            p.tag("arrival").to_string(),
+            if b.is_empty() { "∞".into() } else { b.to_string() },
+            if d.is_empty() { "∞".into() } else { d.to_string() },
+            format!("{:.1}/{:.1}/{:.1}", a.admitted.mean, a.queued.mean, a.rejected.mean),
+            SimTime::from_secs(a.makespan.mean).hms(),
+            SimTime::from_secs(a.mean_wait.mean).hms(),
+            format!("{:.2} ±{:.2}", a.total_cost.mean, a.total_cost.ci95),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "unit"
+seed = 9
+trials = 2
+admission = "fifo"
+
+[arrival]
+kind = "poisson"
+mean_secs = 600.0
+
+[[job]]
+app = "til-aws-gcp"
+count = 2
+rounds = 2
+checkpoints = false
+
+[[job]]
+app = "til-aws-gcp"
+name = "late"
+rounds = 2
+checkpoints = false
+budget_round = 5.0
+"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let spec = WorkloadSpec::from_toml(SPEC).unwrap();
+        assert_eq!(spec.name, "unit");
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.trials, 2);
+        assert_eq!(spec.jobs.len(), 3, "count=2 template expands");
+        assert_eq!(spec.jobs[0].name, "til-aws-gcp-0");
+        assert_eq!(spec.jobs[1].name, "til-aws-gcp-1");
+        assert_eq!(spec.jobs[2].name, "late");
+        assert_eq!(spec.jobs[2].cfg.budget_round, 5.0);
+        assert!(spec.jobs[0].cfg.budget_round.is_infinite());
+        assert!(matches!(spec.arrival, ArrivalProcess::Poisson { mean_secs } if mean_secs == 600.0));
+        assert_eq!(spec.n_points(), 1);
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let spec = WorkloadSpec::from_toml(SPEC).unwrap();
+        let a = spec.expand().unwrap();
+        let b = spec.expand().unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].trials.len(), 2);
+        for (wa, wb) in a[0].trials.iter().zip(&b[0].trials) {
+            for (ja, jb) in wa.jobs.iter().zip(&wb.jobs) {
+                assert_eq!(ja.cfg.seed, jb.cfg.seed);
+                assert_eq!(ja.arrival_secs.to_bits(), jb.arrival_secs.to_bits());
+            }
+        }
+        // Poisson arrivals are strictly increasing in declaration order and
+        // differ across trials.
+        let w0 = &a[0].trials[0];
+        assert!(w0.jobs[0].arrival_secs < w0.jobs[1].arrival_secs);
+        assert_ne!(
+            a[0].trials[0].jobs[0].arrival_secs.to_bits(),
+            a[0].trials[1].jobs[0].arrival_secs.to_bits()
+        );
+        // Per-job seeds are distinct within a trial.
+        assert_ne!(w0.jobs[0].cfg.seed, w0.jobs[1].cfg.seed);
+    }
+
+    #[test]
+    fn grid_axes_expand_with_tags() {
+        let text = format!(
+            "{SPEC}\n[grid]\nadmissions = [\"fifo\", \"sjf\"]\nbudget_round = [2.0, 4.0]\n"
+        );
+        let spec = WorkloadSpec::from_toml(&text).unwrap();
+        assert_eq!(spec.n_points(), 4);
+        let points = spec.expand().unwrap();
+        assert_eq!(points.len(), 4);
+        assert_eq!(points[0].tag("admission"), "fifo");
+        assert_eq!(points[0].tag("budget_round"), "2");
+        assert_eq!(points[3].tag("admission"), "sjf");
+        assert_eq!(points[3].tag("budget_round"), "4");
+        // The budget axis overrides every job's budget for the point.
+        for j in &points[0].trials[0].jobs {
+            assert_eq!(j.cfg.budget_round, 2.0);
+        }
+        // Trials across points never share a seed.
+        let mut seen = std::collections::HashSet::new();
+        for p in &points {
+            for w in &p.trials {
+                for j in &w.jobs {
+                    assert!(seen.insert(j.cfg.seed), "duplicate seed {}", j.cfg.seed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(WorkloadSpec::from_toml("trials = 1\n").is_err(), "no jobs");
+        assert!(
+            WorkloadSpec::from_toml("[[job]]\napp = \"til\"\nseed = 3\n").is_err(),
+            "per-job seed is workload-level"
+        );
+        assert!(
+            WorkloadSpec::from_toml("[[job]]\napp = \"til\"\ntrials = 3\n").is_err(),
+            "per-job trials is workload-level"
+        );
+        assert!(
+            WorkloadSpec::from_toml("[arrival]\nkind = \"poisson\"\n\n[[job]]\napp = \"til\"\n")
+                .is_err(),
+            "poisson needs mean_secs"
+        );
+        assert!(
+            WorkloadSpec::from_toml(
+                "[arrival]\nkind = \"trace\"\ntimes = [0.0]\n\n[[job]]\napp = \"til\"\ncount = 2\n"
+            )
+            .is_err(),
+            "trace times must match job count"
+        );
+        assert!(
+            WorkloadSpec::from_toml("admission = \"weird\"\n[[job]]\napp = \"til\"\n").is_err()
+        );
+        assert!(
+            WorkloadSpec::from_toml("[[job]]\napp = \"til\"\n\n[grid]\nbudget_round = [-1.0]\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn batch_default_and_trace_arrivals() {
+        let spec =
+            WorkloadSpec::from_toml("[[job]]\napp = \"til\"\ncount = 2\nrounds = 2\n").unwrap();
+        assert!(matches!(spec.arrival, ArrivalProcess::Batch));
+        let points = spec.expand().unwrap();
+        for j in &points[0].trials[0].jobs {
+            assert_eq!(j.arrival_secs, 0.0);
+        }
+        let spec = WorkloadSpec::from_toml(
+            "[arrival]\nkind = \"trace\"\ntimes = [0.0, 120.0]\n\n[[job]]\napp = \"til\"\ncount = 2\nrounds = 2\n",
+        )
+        .unwrap();
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].trials[0].jobs[1].arrival_secs, 120.0);
+    }
+}
