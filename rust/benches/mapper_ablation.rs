@@ -1,0 +1,8 @@
+//! Regenerates the Initial Mapping ablation: exact vs MILP vs the
+//! cheapest/fastest/random/single-cloud baselines on the Table 5
+//! configuration (TIL, all-spot, k_r = 2 h, 3-trial averages).
+fn main() {
+    let (table, json) = multi_fedls::trace::mapper_ablation();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

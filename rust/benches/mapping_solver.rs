@@ -37,6 +37,7 @@ fn main() {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -54,6 +55,7 @@ fn main() {
         job: &job,
         alpha: 0.5,
         market: Market::Spot,
+        spot_price_factor: 1.0,
         budget_round: 1e9,
         deadline_round: 1e9,
     };

@@ -1,0 +1,8 @@
+//! Regenerates the market-sensitivity study: the Table 5 configuration
+//! under exponential / Weibull / seasonal / trace-replay revocations and
+//! volatile / bid-priced spot prices (3-trial averages).
+fn main() {
+    let (table, json) = multi_fedls::trace::market_sensitivity();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -34,6 +34,7 @@ impl InitialMapper for CostOnlyMapper {
             job: p.job,
             alpha: 1.0,
             market: p.market,
+            spot_price_factor: p.spot_price_factor,
             budget_round: p.budget_round,
             deadline_round: p.deadline_round,
         };

@@ -1,8 +1,16 @@
 //! Billing ledger: per-second VM charges plus egress charges, matching the
 //! paper's cost model (`vm_costs` Eq. 4 + `comm_costs` Eqs. 5–6).
-
+//!
+//! Spot charges are billed against the market's [`PriceSeries`]: each
+//! VM-second costs `base rate × factor(t)`, integrated segment-accurately
+//! across price steps (`∫ factor dt` over the half-open charge interval
+//! `[start, end)`, so a VM revoked exactly on a step edge pays the pre-step
+//! price for its closing second). On-demand charges always bill the flat
+//! catalog rate; the constant series reproduces the historical fixed-rate
+//! arithmetic bit for bit.
 
 use crate::cloud::{Catalog, Market, VmTypeId};
+use crate::market::PriceSeries;
 use crate::simul::SimTime;
 
 use super::vm::VmId;
@@ -30,11 +38,19 @@ pub struct EgressCharge {
 pub struct Ledger {
     pub vm_charges: Vec<VmCharge>,
     pub egress_charges: Vec<EgressCharge>,
+    /// Spot-price multiplier over time (constant = the fixed catalog rate).
+    pub price: PriceSeries,
 }
 
 impl Ledger {
+    /// A fixed-rate ledger (the historical behaviour).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A ledger billing spot charges against `price`.
+    pub fn with_price(price: PriceSeries) -> Self {
+        Ledger { price, ..Self::default() }
     }
 
     /// Open a metered VM charge. Returns the charge index for later closing.
@@ -75,7 +91,19 @@ impl Ledger {
     pub fn vm_cost(&self, now: SimTime) -> f64 {
         self.vm_charges
             .iter()
-            .map(|c| c.rate_per_sec * (c.end.unwrap_or(now) - c.start).max(0.0))
+            .map(|c| {
+                let end = c.end.unwrap_or(now);
+                match c.market {
+                    // Spot: integrate the price series over [start, end) —
+                    // for the constant series `weighted_secs` is exactly the
+                    // clamped duration, so this is the historical formula.
+                    Market::Spot => {
+                        c.rate_per_sec * self.price.weighted_secs(c.start.secs(), end.secs())
+                    }
+                    // On-demand is never repriced by the spot market.
+                    Market::OnDemand => c.rate_per_sec * (end - c.start).max(0.0),
+                }
+            })
             .sum()
     }
 
@@ -147,6 +175,84 @@ mod tests {
     fn closing_unknown_vm_panics() {
         let mut ledger = Ledger::new();
         ledger.close_vm(VmId(7), SimTime::ZERO);
+    }
+
+    #[test]
+    fn spot_charges_integrate_price_steps_segment_accurately() {
+        // Hand-computed fixture: vm121 spot = $0.501/h. Price factor 1.0 on
+        // [0, 1800), 2.0 on [1800, 3600), 0.5 from 3600. A charge over
+        // [0, 5400) costs rate · (1800·1 + 1800·2 + 1800·0.5) = rate · 6300.
+        let cat = tables::cloudlab();
+        let series =
+            PriceSeries::steps(vec![(0.0, 1.0), (1800.0, 2.0), (3600.0, 0.5)]).unwrap();
+        let mut ledger = Ledger::with_price(series);
+        let vm121 = cat.vm_by_id("vm121").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm121, Market::Spot, SimTime::from_secs(0.0));
+        ledger.close_vm(VmId(1), SimTime::from_secs(5400.0));
+        let rate = 0.501 / 3600.0;
+        let cost = ledger.vm_cost(SimTime::from_secs(9e9));
+        assert!((cost - rate * 6300.0).abs() < 1e-9, "cost={cost}");
+    }
+
+    #[test]
+    fn revocation_on_a_price_step_edge_bills_the_pre_step_price() {
+        // Regression (billing at the revocation boundary): a spot VM whose
+        // charge closes exactly on a price-step edge is charged the pre-step
+        // price for the closing second — the new factor applies to [edge, ∞)
+        // and the charge covers [start, edge).
+        let cat = tables::cloudlab();
+        let series = PriceSeries::steps(vec![(0.0, 1.0), (1800.0, 3.0)]).unwrap();
+        let mut ledger = Ledger::with_price(series);
+        let vm121 = cat.vm_by_id("vm121").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm121, Market::Spot, SimTime::from_secs(0.0));
+        ledger.close_vm(VmId(1), SimTime::from_secs(1800.0)); // revoked on the edge
+        let rate = 0.501 / 3600.0;
+        let cost = ledger.vm_cost(SimTime::from_secs(9e9));
+        assert!((cost - rate * 1800.0).abs() < 1e-12, "edge must bill factor 1.0: {cost}");
+        // One second past the edge picks up the new factor for that second.
+        let mut past = Ledger::with_price(
+            PriceSeries::steps(vec![(0.0, 1.0), (1800.0, 3.0)]).unwrap(),
+        );
+        past.open_vm(&cat, VmId(2), vm121, Market::Spot, SimTime::from_secs(0.0));
+        past.close_vm(VmId(2), SimTime::from_secs(1801.0));
+        let cost = past.vm_cost(SimTime::from_secs(9e9));
+        assert!((cost - rate * (1800.0 + 3.0)).abs() < 1e-9, "cost={cost}");
+    }
+
+    #[test]
+    fn on_demand_charges_ignore_the_price_series() {
+        // Regression: the spot-price series must never reprice on-demand
+        // VMs — identical bits with and without a wild series attached.
+        let cat = tables::cloudlab();
+        let wild = PriceSeries::steps(vec![(0.0, 9.0), (60.0, 0.01)]).unwrap();
+        let mut priced = Ledger::with_price(wild);
+        let mut plain = Ledger::new();
+        let vm126 = cat.vm_by_id("vm126").unwrap();
+        for ledger in [&mut priced, &mut plain] {
+            ledger.open_vm(&cat, VmId(1), vm126, Market::OnDemand, SimTime::from_secs(0.0));
+            ledger.close_vm(VmId(1), SimTime::from_secs(3600.0));
+        }
+        let t = SimTime::from_secs(9e9);
+        assert_eq!(priced.vm_cost(t).to_bits(), plain.vm_cost(t).to_bits());
+        assert!((priced.vm_cost(t) - 4.693).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_series_is_bit_identical_to_the_fixed_rate_ledger() {
+        // The default market's billing arithmetic must be the historical
+        // formula down to the last bit, open charges included.
+        let cat = tables::cloudlab();
+        let mut a = Ledger::new();
+        let mut b = Ledger::with_price(PriceSeries::Constant);
+        let vm = cat.vm_by_id("vm138").unwrap();
+        for ledger in [&mut a, &mut b] {
+            ledger.open_vm(&cat, VmId(1), vm, Market::Spot, SimTime::from_secs(123.456));
+            ledger.open_vm(&cat, VmId(2), vm, Market::OnDemand, SimTime::from_secs(0.789));
+            ledger.close_vm(VmId(1), SimTime::from_secs(7777.123));
+        }
+        let now = SimTime::from_secs(9876.543);
+        assert_eq!(a.vm_cost(now).to_bits(), b.vm_cost(now).to_bits());
+        assert_eq!(a.total(now).to_bits(), b.total(now).to_bits());
     }
 
     #[test]

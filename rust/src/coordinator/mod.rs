@@ -95,6 +95,11 @@ pub fn run_trials_with_jobs(
 /// deadline_round = 900.0        # T_round, seconds per round (omit = unconstrained)
 /// seed = 42
 /// trials = 3
+///
+/// [market]                      # optional spot-market model (omit = the
+/// revocation = "seasonal"       # paper's exponential k_r at constant price;
+/// mean_secs = 7200.0            # see crate::market::spec for every key)
+/// period_secs = 86400.0
 /// ```
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -105,7 +110,7 @@ pub struct JobSpec {
 impl JobSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<JobSpec> {
         let root = crate::util::tomlmini::parse(text)?;
-        Self::from_table(&root)
+        Self::from_table_with_base(&root, None)
     }
 
     /// Parse a job spec out of an already-parsed TOML table. Workload specs
@@ -113,6 +118,15 @@ impl JobSpec {
     /// configuration surfaces share one set of keys and semantics.
     pub fn from_table(
         root: &std::collections::BTreeMap<String, crate::util::tomlmini::Value>,
+    ) -> anyhow::Result<JobSpec> {
+        Self::from_table_with_base(root, None)
+    }
+
+    /// [`Self::from_table`] with the spec file's directory for resolving
+    /// relative `[market]` trace-file references.
+    pub fn from_table_with_base(
+        root: &std::collections::BTreeMap<String, crate::util::tomlmini::Value>,
+        base: Option<&std::path::Path>,
     ) -> anyhow::Result<JobSpec> {
         use crate::dynsched::DynSchedPolicy;
         let app_name = root
@@ -173,6 +187,19 @@ impl JobSpec {
             anyhow::ensure!(d > 0.0, "deadline_round must be positive, got {d}");
             config.deadline_round = d;
         }
+        // Spot-market model: a `[market]` table (job specs) — a bare string
+        // is a named-market reference, which only workload specs can resolve.
+        match root.get("market") {
+            None => {}
+            Some(crate::util::tomlmini::Value::Table(tbl)) => {
+                config.market = crate::market::MarketSpec::from_table(tbl, base)?;
+            }
+            Some(crate::util::tomlmini::Value::Str(name)) => anyhow::bail!(
+                "market = \"{name}\" by name is only valid inside workload [[job]] tables \
+                 (use a [market] table here)"
+            ),
+            Some(_) => anyhow::bail!("[market] must be a table"),
+        }
         let trials = get_nonneg("trials")?.unwrap_or(1) as usize;
         Ok(JobSpec { config, trials })
     }
@@ -180,7 +207,8 @@ impl JobSpec {
     pub fn from_file(path: &std::path::Path) -> anyhow::Result<JobSpec> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Self::from_toml(&text)
+        let root = crate::util::tomlmini::parse(&text)?;
+        Self::from_table_with_base(&root, path.parent())
     }
 }
 

@@ -119,6 +119,7 @@ impl<'a> MultiJobScheduler<'a> {
             job: &job,
             alpha: self.alpha,
             market: self.market,
+            spot_price_factor: 1.0,
             budget_round: f64::INFINITY,
             deadline_round: f64::INFINITY,
         };
@@ -165,6 +166,7 @@ impl<'a> MultiJobScheduler<'a> {
                 job: &job,
                 alpha: self.alpha,
                 market: self.market,
+                spot_price_factor: 1.0,
                 budget_round: f64::INFINITY,
                 deadline_round: f64::INFINITY,
             };
@@ -203,6 +205,7 @@ impl<'a> MultiJobScheduler<'a> {
                         job: &job,
                         alpha: self.alpha,
                         market: self.market,
+                        spot_price_factor: 1.0,
                         budget_round: f64::INFINITY,
                         deadline_round: f64::INFINITY,
                     };

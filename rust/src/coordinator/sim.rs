@@ -22,6 +22,7 @@ use crate::cloud::Market;
 use crate::dynsched::DynSchedPolicy;
 use crate::ft::FtConfig;
 use crate::mapping::MapperKind;
+use crate::market::MarketSpec;
 use crate::simul::SimTime;
 
 /// Market scenario (§5.6): which tasks ride spot VMs.
@@ -84,8 +85,14 @@ pub struct SimConfig {
     pub n_rounds: u32,
     pub alpha: f64,
     pub scenario: Scenario,
-    /// Mean time between revocations `k_r` (None = no failures).
+    /// Mean time between revocations `k_r` (None = no failures). Consumed
+    /// by the default (exponential) market; other markets carry their own
+    /// revocation parameters in [`SimConfig::market`].
     pub revocation_mean_secs: Option<f64>,
+    /// The spot-market model: revocation process, price series, optional
+    /// bid threshold (the `[market]` job-spec table / `markets` sweep axis).
+    /// The default reproduces the paper's fixed-rate Poisson market.
+    pub market: MarketSpec,
     /// Which Initial Mapping implementation to use (module selection; the
     /// `mapper` job-spec key / `mappers` sweep axis).
     pub mapper: MapperKind,
@@ -114,6 +121,7 @@ impl SimConfig {
             alpha: 0.5,
             scenario,
             revocation_mean_secs: None,
+            market: MarketSpec::default(),
             mapper: MapperKind::Exact,
             dynsched_policy: DynSchedPolicy::same_vm_allowed(),
             ft: FtConfig::default(),
@@ -123,6 +131,15 @@ impl SimConfig {
             deadline_round: f64::INFINITY,
             seed,
         }
+    }
+
+    /// The crude pre-mapping job-length estimate — `n_rounds` baseline
+    /// rounds — used as the planning horizon for expected-spot-price
+    /// averaging. One definition shared by `framework::exec` (run-time
+    /// planning) and the workload engine (admission-time planning) so both
+    /// always price against the same horizon.
+    pub fn planning_horizon_secs(&self) -> f64 {
+        self.n_rounds as f64 * self.app.exec_bl_secs
     }
 
     /// Apply a `server_ckpt_every` setting: `X > 0` sets the server

@@ -102,7 +102,7 @@ pub fn recompute_cost(
     candidate: VmTypeId,
     makespan: f64,
 ) -> f64 {
-    let rate = |vm: VmTypeId| p.catalog.vm(vm).cost_per_sec(p.market);
+    let rate = |vm: VmTypeId| p.rate_per_sec(vm);
     let mut total = 0.0;
     match t {
         FaultyTask::Server => {
@@ -203,6 +203,7 @@ mod tests {
             job,
             alpha: 0.5,
             market: Market::Spot,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         }

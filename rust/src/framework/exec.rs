@@ -13,7 +13,7 @@
 //! simulator; `tests/framework_parity.rs` enforces that.
 
 use crate::cloud::VmTypeId;
-use crate::cloudsim::{MultiCloud, RevocationModel, VmId};
+use crate::cloudsim::{MultiCloud, VmId};
 use crate::coordinator::sim::{environment_for, SimConfig, SimEvent, SimOutcome};
 use crate::dynsched::{CurrentMap, FaultyTask};
 use crate::mapping::problem::{JobProfile, Mapping, MappingProblem};
@@ -33,13 +33,16 @@ struct TaskState {
 /// Run one simulated Multi-FedLS execution through `fw`'s module stack.
 pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
     let (catalog, ground_truth) = environment_for(&cfg.app);
-    let mut mc = MultiCloud::new(
+    // Assemble the spot-market model (the default: exponential k_r
+    // revocations at constant price, bit-identical to the historical inline
+    // draws) and the expected spot-price multiplier over the planning
+    // horizon, which the mapping/dynsched cost models charge per spot
+    // VM-second. Exactly 1.0 for the default market.
+    let spot_price_factor = cfg.market.planning_price_factor(cfg.planning_horizon_secs());
+    let mut mc = MultiCloud::with_market(
         catalog,
         ground_truth,
-        match cfg.revocation_mean_secs {
-            Some(k) => RevocationModel::poisson(k),
-            None => RevocationModel::none(),
-        },
+        cfg.market.build(cfg.revocation_mean_secs),
         cfg.seed,
     );
     let mut events = Vec::new();
@@ -60,6 +63,7 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
         job: &job,
         alpha: cfg.alpha,
         market: cfg.scenario.client_market(),
+        spot_price_factor,
         budget_round: cfg.budget_round,
         deadline_round: cfg.deadline_round,
     };

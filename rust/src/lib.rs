@@ -32,8 +32,13 @@
 //! * [`cloud`] — the environment model: providers, regions, VM types, prices,
 //!   quotas (§3), with the paper's Table 2 / Table 9 catalogs built in.
 //! * [`simul`] — deterministic RNG + discrete-event simulation engine.
+//! * [`market`] — the spot-market subsystem: pluggable revocation processes
+//!   (exponential `k_r` / Weibull / seasonal / trace-replay), dynamic price
+//!   series (constant / TOML price traces), and bid-priced VMs — configured
+//!   per job via `[market]` tables and swept via the `markets` grid axis.
 //! * [`cloudsim`] — the simulated multi-cloud platform (VM lifecycle, spot
-//!   revocations, network, billing).
+//!   revocations sampled from the market model, network, segment-accurate
+//!   market billing).
 //! * [`presched`] — Pre-Scheduling (§4.1): dummy-app slowdown measurement.
 //! * [`solver`] — from-scratch LP simplex + 0/1 branch-and-bound MILP.
 //! * [`mapping`] — Initial Mapping (§4.2): the MILP formulation (Eqs. 3–18)
@@ -70,6 +75,7 @@ pub mod fl;
 pub mod framework;
 pub mod ft;
 pub mod mapping;
+pub mod market;
 pub mod presched;
 pub mod solver;
 pub mod cloudsim;

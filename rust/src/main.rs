@@ -86,7 +86,7 @@ USAGE:
                     [--results DIR] [--resume] [--no-persist]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
-  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|all> [--json]
+  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|market-sensitivity|all> [--json]
 ";
 
 fn main() {
@@ -186,6 +186,7 @@ fn cmd_map(args: &Args) -> anyhow::Result<()> {
         job: &job,
         alpha,
         market,
+        spot_price_factor: 1.0,
         budget_round: args.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(f64::INFINITY),
         deadline_round: args
             .get("deadline")
@@ -328,7 +329,9 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
         spec.jobs.len(),
         points.len(),
         spec.trials,
-        multi_fedls::sweep::effective_jobs(jobs, spec.trials.max(1))
+        // The pool flattens every point's trials together, so parallelism
+        // spans points (matching run_points / the persistent runner).
+        multi_fedls::sweep::effective_jobs(jobs, points.len() * spec.trials.max(1))
     );
     let resume = args.flag("resume");
     anyhow::ensure!(
@@ -460,6 +463,14 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             let (t, j) = trace::dynsched_ablation();
             render(t, j);
         }
+        "mapper-ablation" => {
+            let (t, j) = trace::mapper_ablation();
+            render(t, j);
+        }
+        "market-sensitivity" => {
+            let (t, j) = trace::market_sensitivity();
+            render(t, j);
+        }
         "all" => {
             for f in [
                 trace::table3 as fn() -> (multi_fedls::util::bench::Table, multi_fedls::util::Json),
@@ -475,6 +486,8 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
                 trace::alpha_sweep,
                 trace::multijob,
                 trace::dynsched_ablation,
+                trace::mapper_ablation,
+                trace::market_sensitivity,
             ] {
                 let (t, _) = f();
                 t.print();

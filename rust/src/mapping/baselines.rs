@@ -35,7 +35,7 @@ pub fn random(p: &MappingProblem, seed: u64, attempts: usize) -> Option<Mapping>
 /// cost-greedy baseline, oblivious to slowdowns).
 pub fn cheapest(p: &MappingProblem) -> Option<Mapping> {
     let mut by_rate: Vec<VmTypeId> = p.catalog.vm_ids().collect();
-    rank::sort_by_key_f64(&mut by_rate, |&v| p.catalog.vm(v).cost_per_sec(p.market));
+    rank::sort_by_key_f64(&mut by_rate, |&v| p.rate_per_sec(v));
     greedy_fill(p, &by_rate)
 }
 
@@ -88,6 +88,7 @@ pub fn single_cloud(p: &MappingProblem, provider: Option<ProviderId>) -> Option<
             job: p.job,
             alpha: p.alpha,
             market: p.market,
+            spot_price_factor: p.spot_price_factor,
             budget_round: p.budget_round,
             deadline_round: p.deadline_round,
         };
@@ -175,6 +176,7 @@ mod tests {
             job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         }

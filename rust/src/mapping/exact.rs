@@ -69,7 +69,7 @@ pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
         rank::sort_f64(&mut candidates);
         candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
 
-        let server_rate = p.catalog.vm(server).cost_per_sec(p.market);
+        let server_rate = p.rate_per_sec(server);
         for &t_m in &candidates {
             // Feasible VM set + per-client cost under this t_m.
             // cost_i(v) = rate_v * t_m + comm_cost(v, server)
@@ -79,7 +79,7 @@ pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
                 let mut opts: Vec<(usize, f64)> = (0..vms.len())
                     .filter(|&vi| time[i][vi] <= t_m + 1e-9)
                     .map(|vi| {
-                        let rate = p.catalog.vm(vms[vi]).cost_per_sec(p.market);
+                        let rate = p.rate_per_sec(vms[vi]);
                         (vi, rate * t_m + ccost[i][vi])
                     })
                     .collect();
@@ -231,6 +231,7 @@ mod tests {
             job,
             alpha,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         }
@@ -384,6 +385,7 @@ mod tests {
             job: &job,
             alpha: 0.0,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -421,6 +423,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };

@@ -66,7 +66,7 @@ pub fn solve(p: &MappingProblem) -> Option<Mapping> {
     //              + (1-α) t_m / T_max ---
     for i in 0..lay.n_clients {
         for v in 0..lay.n_vms {
-            let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+            let rate = p.rate_per_sec(vms[v]);
             lp.set_objective(lay.u(i, v), p.alpha * rate / cost_max);
             for w in 0..lay.n_vms {
                 let comm = p.comm_cost(vms[v], vms[w]);
@@ -75,7 +75,7 @@ pub fn solve(p: &MappingProblem) -> Option<Mapping> {
         }
     }
     for v in 0..lay.n_vms {
-        let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+        let rate = p.rate_per_sec(vms[v]);
         lp.set_objective(lay.w(v), p.alpha * rate / cost_max);
     }
     lp.set_objective(lay.t_m(), (1.0 - p.alpha) / t_max);
@@ -210,7 +210,7 @@ pub fn solve(p: &MappingProblem) -> Option<Mapping> {
         let mut row = Vec::new();
         for i in 0..lay.n_clients {
             for v in 0..lay.n_vms {
-                let rate = p.catalog.vm(vms[v]).cost_per_sec(p.market);
+                let rate = p.rate_per_sec(vms[v]);
                 row.push((lay.u(i, v), rate));
                 for w in 0..lay.n_vms {
                     row.push((lay.z(i, v, w), p.comm_cost(vms[v], vms[w])));
@@ -218,7 +218,7 @@ pub fn solve(p: &MappingProblem) -> Option<Mapping> {
             }
         }
         for v in 0..lay.n_vms {
-            row.push((lay.w(v), p.catalog.vm(vms[v]).cost_per_sec(p.market)));
+            row.push((lay.w(v), p.rate_per_sec(vms[v])));
         }
         lp.add(row, Rel::Le, p.budget_round);
     }
@@ -294,6 +294,7 @@ mod tests {
                 job: &job,
                 alpha,
                 market: Market::OnDemand,
+                spot_price_factor: 1.0,
                 budget_round: 1e9,
                 deadline_round: 1e9,
             };
@@ -319,6 +320,7 @@ mod tests {
             job: &job,
             alpha: 1.0,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 100.0, // forces GPU VM despite pure-cost α
         };
@@ -348,6 +350,7 @@ mod tests {
             job: &job,
             alpha,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -381,6 +384,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e-9,
             deadline_round: 1e9,
         };
@@ -413,6 +417,7 @@ mod tests {
                     job,
                     alpha: *alpha,
                     market: Market::OnDemand,
+                    spot_price_factor: 1.0,
                     budget_round: 1e9,
                     deadline_round: 1e9,
                 };

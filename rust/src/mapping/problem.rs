@@ -87,6 +87,11 @@ pub struct MappingProblem<'a> {
     /// User weight α ∈ [0,1] between cost (α) and makespan (1-α).
     pub alpha: f64,
     pub market: Market,
+    /// Expected spot-price multiplier over the planning horizon (the
+    /// market's [`crate::market::PriceSeries`] time-averaged; 1.0 = the
+    /// catalog's fixed rate). Scales every spot VM rate the cost models see;
+    /// on-demand planning is unaffected.
+    pub spot_price_factor: f64,
     /// `B_round`: budget for a single round, $.
     pub budget_round: f64,
     /// `T_round`: deadline for a single round, seconds.
@@ -94,6 +99,37 @@ pub struct MappingProblem<'a> {
 }
 
 impl<'a> MappingProblem<'a> {
+    /// `cost_jkl` in $ per second as the planner sees it: the catalog rate
+    /// for `self.market`, scaled by the expected spot-price multiplier when
+    /// planning a spot placement. The factor-1.0 branch returns the catalog
+    /// rate untouched, keeping the default market bit-identical to the
+    /// historical arithmetic.
+    pub fn rate_per_sec(&self, vm: VmTypeId) -> f64 {
+        self.rate_for(vm, self.market)
+    }
+
+    /// [`Self::rate_per_sec`] for an explicit market (placements carry their
+    /// own market tag).
+    pub fn rate_for(&self, vm: VmTypeId, market: Market) -> f64 {
+        let base = self.catalog.vm(vm).cost_per_sec(market);
+        if market == Market::Spot && self.spot_price_factor != 1.0 {
+            base * self.spot_price_factor
+        } else {
+            base
+        }
+    }
+
+    /// The most expensive planner-visible rate (the Eq. 7 normalization
+    /// bound under the expected spot price).
+    pub fn max_rate_per_sec(&self) -> f64 {
+        let base = self.catalog.max_cost_per_sec(self.market);
+        if self.market == Market::Spot && self.spot_price_factor != 1.0 {
+            base * self.spot_price_factor
+        } else {
+            base
+        }
+    }
+
     /// Eq. 2: `t_exec_ijkl` — computation time of client `i` on VM `vm`.
     pub fn t_exec(&self, client: usize, vm: VmTypeId) -> f64 {
         (self.job.client_train_bl[client] + self.job.client_test_bl[client])
@@ -159,7 +195,7 @@ impl<'a> MappingProblem<'a> {
     /// Eq. 7: `cost_max` — normalization bound for the cost objective.
     pub fn cost_max(&self) -> f64 {
         let n_tasks = self.job.n_clients() as f64 + 1.0;
-        let max_rate = self.catalog.max_cost_per_sec(self.market);
+        let max_rate = self.max_rate_per_sec();
         let max_comm = self
             .catalog
             .provider_ids()
@@ -181,9 +217,9 @@ impl<'a> MappingProblem<'a> {
         let rate_sum: f64 = mapping
             .clients
             .iter()
-            .map(|&vm| self.catalog.vm(vm).cost_per_sec(mapping.market))
+            .map(|&vm| self.rate_for(vm, mapping.market))
             .sum::<f64>()
-            + self.catalog.vm(mapping.server).cost_per_sec(mapping.market);
+            + self.rate_for(mapping.server, mapping.market);
         let vm_cost = rate_sum * makespan;
         let comm_cost: f64 = mapping
             .clients
@@ -253,6 +289,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -274,6 +311,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -296,6 +334,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -327,6 +366,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -358,6 +398,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 0.01, // absurdly small
             deadline_round: 1e9,
         };
@@ -383,6 +424,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -390,6 +432,7 @@ mod tests {
         assert!(ev.feasible);
 
         let pinned = MappingProblem {
+            spot_price_factor: 1.0,
             budget_round: ev.total_cost,   // exact equality
             deadline_round: ev.makespan,   // exact equality
             ..free
@@ -399,6 +442,7 @@ mod tests {
         let below_budget = MappingProblem { budget_round: ev.total_cost - 1e-6, ..pinned };
         assert!(!below_budget.evaluate(&mapping).feasible);
         let below_deadline = MappingProblem {
+            spot_price_factor: 1.0,
             budget_round: ev.total_cost,
             deadline_round: ev.makespan - 1e-6,
             ..below_budget
@@ -419,6 +463,7 @@ mod tests {
             job: &job,
             alpha,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -449,6 +494,7 @@ mod tests {
             job: &job,
             alpha: 0.5,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };

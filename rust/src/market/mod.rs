@@ -1,0 +1,149 @@
+//! The spot-market subsystem: pluggable revocation processes + dynamic
+//! price traces.
+//!
+//! The paper's market model is a single fixed-rate Poisson clock (`k_r`)
+//! and a constant price per second. Real spot markets have time-varying
+//! prices, provider-specific interruption behaviour, and hazard rates that
+//! change with instance age. This module makes the market a first-class,
+//! pluggable model:
+//!
+//! * [`RevocationProcess`] (in [`revocation`]) — when spot VMs are
+//!   preempted: the paper's exponential clock (default), an age-dependent
+//!   Weibull hazard, a time-of-day [`SeasonalProcess`], and a deterministic
+//!   [`TraceReplay`] of recorded interruption timestamps.
+//! * [`PriceSeries`] (in [`price`]) — what spot capacity costs over time:
+//!   constant (today's behaviour, bit-identical) or piecewise steps loaded
+//!   from TOML price-trace files (AWS spot-price-history shape). Billing
+//!   integrates the series segment-accurately ([`crate::cloudsim::billing`])
+//!   and planning uses the expected factor over the horizon
+//!   ([`crate::mapping::MappingProblem::rate_per_sec`]).
+//! * Bid-priced VMs — with a `bid_factor`, a spot VM is additionally
+//!   revoked at the first price step that exceeds its bid (the
+//!   price-threshold market mode). Co-timed evictions follow the engine's
+//!   established one-revocation-per-event semantics: when one crossing
+//!   outbids several VMs at the same instant, the earliest-considered task
+//!   is evicted and the others absorb into the replacement's boot wait —
+//!   exactly as coinciding trace instants do (see [`TraceReplay`]).
+//!
+//! [`MarketSpec`] (in [`spec`]) is the declarative form carried by
+//! `SimConfig` and parsed from `[market]` / `[[market]]` TOML tables (job
+//! specs, sweep grids, workload specs); [`MarketModel`] is the assembled
+//! runtime model handed to [`crate::cloudsim::MultiCloud`].
+//!
+//! Parity contract: `MarketSpec::default()` (exponential `k_r` revocations,
+//! constant price, no bid) reproduces the pre-market simulator bit for bit —
+//! enforced by `tests/market_parity.rs` and `tests/framework_parity.rs`.
+
+pub mod price;
+pub mod revocation;
+pub mod spec;
+
+pub use price::PriceSeries;
+pub use revocation::{
+    ExponentialProcess, NoRevocations, RevocationProcess, SeasonalProcess, TraceReplay,
+    WeibullProcess,
+};
+pub use spec::{MarketSpec, PriceSpec, RevocationSpec};
+
+use crate::cloudsim::RevocationModel;
+use crate::simul::{Rng, SimTime};
+
+/// One assembled spot-market model: a revocation process, a price series,
+/// and an optional bid threshold. Owned by the simulated platform.
+#[derive(Debug)]
+pub struct MarketModel {
+    pub revocation: Box<dyn RevocationProcess>,
+    pub price: PriceSeries,
+    /// Bid as a multiple of the base spot rate: the VM is revoked when the
+    /// price factor first exceeds it. `None` = not bid-priced.
+    pub bid_factor: Option<f64>,
+}
+
+impl MarketModel {
+    /// The historical market: `RevocationModel` semantics (exponential
+    /// clock or none) at constant price.
+    pub fn from_revocation(model: RevocationModel) -> MarketModel {
+        let revocation: Box<dyn RevocationProcess> = match model.mean_secs {
+            Some(k_r) => Box::new(ExponentialProcess::new(k_r)),
+            None => Box::new(NoRevocations),
+        };
+        MarketModel { revocation, price: PriceSeries::Constant, bid_factor: None }
+    }
+
+    /// Pre-sample the revocation instant of a spot VM provisioned at `now`:
+    /// the earlier of the process sample and (for bid-priced VMs) the first
+    /// price step exceeding the bid.
+    pub fn revocation_at(&self, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        let sampled = self.revocation.sample(now, rng);
+        let outbid = self.bid_crossing_at(now);
+        match (sampled, outbid) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// The price-driven eviction instant alone: the first price step
+    /// exceeding the bid after `now`. Unlike the failure process, this is
+    /// *not* suppressed by the §5.6.1 revocation cap — a provider evicts an
+    /// outbid VM no matter how many failures the task has already absorbed.
+    pub fn bid_crossing_at(&self, now: SimTime) -> Option<SimTime> {
+        self.bid_factor
+            .and_then(|bid| self.price.first_crossing_above(now.secs(), bid))
+            .map(SimTime::from_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_revocation_preserves_legacy_semantics() {
+        let mut rng = Rng::seeded(42);
+        let none = MarketModel::from_revocation(RevocationModel::none());
+        assert!(none.revocation_at(SimTime::ZERO, &mut rng).is_none());
+        // No stream advance happened for the disabled model.
+        let mut fresh = Rng::seeded(42);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+
+        let poisson = MarketModel::from_revocation(RevocationModel::poisson(7200.0));
+        let mut a = Rng::seeded(9);
+        let mut b = Rng::seeded(9);
+        let got = poisson.revocation_at(SimTime::ZERO, &mut a).unwrap();
+        let want = b.exponential(1.0 / 7200.0);
+        assert_eq!(got.secs().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn bid_threshold_caps_the_sampled_instant() {
+        let price = PriceSeries::steps(vec![(0.0, 1.0), (500.0, 2.0)]).unwrap();
+        let model = MarketModel {
+            revocation: Box::new(NoRevocations),
+            price,
+            bid_factor: Some(1.5),
+        };
+        let mut rng = Rng::seeded(1);
+        // No process sample, but the price outbids the VM at t = 500.
+        let at = model.revocation_at(SimTime::ZERO, &mut rng).unwrap();
+        assert_eq!(at.secs(), 500.0);
+        // A VM provisioned after the crossing is never outbid again.
+        assert!(model.revocation_at(SimTime::from_secs(600.0), &mut rng).is_none());
+    }
+
+    #[test]
+    fn earlier_of_process_and_crossing_wins() {
+        let price = PriceSeries::steps(vec![(0.0, 1.0), (10_000.0, 3.0)]).unwrap();
+        let model = MarketModel {
+            revocation: Box::new(TraceReplay { times: vec![50.0] }),
+            price,
+            bid_factor: Some(2.0),
+        };
+        let mut rng = Rng::seeded(1);
+        assert_eq!(model.revocation_at(SimTime::ZERO, &mut rng).unwrap().secs(), 50.0);
+        // After the trace is exhausted the crossing takes over.
+        assert_eq!(
+            model.revocation_at(SimTime::from_secs(60.0), &mut rng).unwrap().secs(),
+            10_000.0
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Time-varying spot prices.
+//!
+//! A [`PriceSeries`] is a multiplier over the catalog's base spot rate as a
+//! piecewise-constant step function of simulated time — the shape of an AWS
+//! spot-price-history export. The constant series (factor 1.0 forever) is
+//! today's fixed-rate market and is arithmetically a no-op: every query
+//! returns the same bits as the historical fixed-rate code paths, which the
+//! default-market parity tests rely on.
+//!
+//! Steps are left-closed: a step `(at, factor)` puts `factor` in effect from
+//! `at` *inclusive*. A billing interval that closes exactly on a step edge
+//! therefore never pays the new price — integration is over `[start, end)`
+//! (see [`PriceSeries::weighted_secs`]), which is what makes billing at the
+//! revocation boundary segment-accurate.
+
+/// A spot-price multiplier over simulated time.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PriceSeries {
+    /// Factor 1.0 forever (the historical fixed-rate market).
+    #[default]
+    Constant,
+    /// Piecewise-constant steps `(at_secs, factor)` with strictly increasing
+    /// times; factor 1.0 applies before the first step.
+    Steps(Vec<(f64, f64)>),
+}
+
+impl PriceSeries {
+    /// Build a step series, validating the trace shape.
+    pub fn steps(points: Vec<(f64, f64)>) -> anyhow::Result<PriceSeries> {
+        anyhow::ensure!(!points.is_empty(), "price series needs at least one step");
+        let mut prev = f64::NEG_INFINITY;
+        for &(at, factor) in &points {
+            anyhow::ensure!(
+                at.is_finite() && at >= 0.0,
+                "price step time {at} must be finite and non-negative"
+            );
+            anyhow::ensure!(at > prev, "price step times must be strictly increasing (got {at})");
+            anyhow::ensure!(
+                factor.is_finite() && factor > 0.0,
+                "price factor {factor} must be finite and positive"
+            );
+            prev = at;
+        }
+        Ok(PriceSeries::Steps(points))
+    }
+
+    /// Multiplier in effect at instant `t` (the last step at or before `t`;
+    /// 1.0 before the first step).
+    pub fn factor_at(&self, t: f64) -> f64 {
+        match self {
+            PriceSeries::Constant => 1.0,
+            PriceSeries::Steps(points) => {
+                let mut f = 1.0;
+                for &(at, factor) in points {
+                    if at <= t {
+                        f = factor;
+                    } else {
+                        break;
+                    }
+                }
+                f
+            }
+        }
+    }
+
+    /// Factor-weighted seconds: `∫ factor(t) dt` over `[start, end)`,
+    /// clamped to 0 for empty intervals. The constant series returns exactly
+    /// `(end - start).max(0.0)` — the historical fixed-rate duration — so
+    /// `rate · weighted_secs` is bit-identical to the pre-market ledger.
+    pub fn weighted_secs(&self, start: f64, end: f64) -> f64 {
+        match self {
+            PriceSeries::Constant => (end - start).max(0.0),
+            PriceSeries::Steps(points) => {
+                if end <= start {
+                    return 0.0;
+                }
+                let mut total = 0.0;
+                let mut seg_start = start;
+                let mut f = self.factor_at(start);
+                for &(at, factor) in points {
+                    if at <= start {
+                        continue; // already reflected in factor_at(start)
+                    }
+                    if at >= end {
+                        break;
+                    }
+                    total += f * (at - seg_start);
+                    seg_start = at;
+                    f = factor;
+                }
+                total + f * (end - seg_start)
+            }
+        }
+    }
+
+    /// Mean factor over the planning horizon `[0, horizon_secs)` — the
+    /// expected spot-price multiplier the Initial Mapping and Dynamic
+    /// Scheduler cost models use. Degenerate horizons (zero, non-finite)
+    /// fall back to the factor at t = 0; the constant series is always 1.0.
+    pub fn mean_factor(&self, horizon_secs: f64) -> f64 {
+        match self {
+            PriceSeries::Constant => 1.0,
+            PriceSeries::Steps(_) => {
+                if horizon_secs.is_finite() && horizon_secs > 0.0 {
+                    self.weighted_secs(0.0, horizon_secs) / horizon_secs
+                } else {
+                    self.factor_at(0.0)
+                }
+            }
+        }
+    }
+
+    /// First step instant strictly after `t` whose factor exceeds `bid` —
+    /// the eviction instant of a bid-priced spot VM provisioned at `t`.
+    /// Acquisition itself is honored even when the price at `t` already
+    /// exceeds the bid (the engine's events are strictly-after-now): such a
+    /// VM is evicted only by the next step still above the bid, if any.
+    /// `None` = the bid is never outbid again.
+    pub fn first_crossing_above(&self, t: f64, bid: f64) -> Option<f64> {
+        match self {
+            PriceSeries::Constant => None,
+            PriceSeries::Steps(points) => points
+                .iter()
+                .find(|&&(at, factor)| at > t && factor > bid)
+                .map(|&(at, _)| at),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> PriceSeries {
+        // 1.0 until t=100, 2.0 until t=300, then 0.5.
+        PriceSeries::steps(vec![(0.0, 1.0), (100.0, 2.0), (300.0, 0.5)]).unwrap()
+    }
+
+    #[test]
+    fn constant_is_identity() {
+        let c = PriceSeries::Constant;
+        assert_eq!(c.factor_at(0.0), 1.0);
+        assert_eq!(c.factor_at(1e9), 1.0);
+        // Bit-exact: weighted seconds of the constant series are the plain
+        // duration, including the negative-interval clamp.
+        let (a, b) = (123.456789, 7890.12345);
+        assert_eq!(c.weighted_secs(a, b).to_bits(), (b - a).max(0.0).to_bits());
+        assert_eq!(c.weighted_secs(b, a), 0.0);
+        assert_eq!(c.mean_factor(1e4), 1.0);
+        assert_eq!(c.first_crossing_above(0.0, 1.0), None);
+    }
+
+    #[test]
+    fn factor_lookup_is_left_closed() {
+        let s = series();
+        assert_eq!(s.factor_at(0.0), 1.0);
+        assert_eq!(s.factor_at(99.999), 1.0);
+        assert_eq!(s.factor_at(100.0), 2.0, "step edge belongs to the new price");
+        assert_eq!(s.factor_at(299.0), 2.0);
+        assert_eq!(s.factor_at(300.0), 0.5);
+        assert_eq!(s.factor_at(1e9), 0.5);
+        // Before the first step the factor is 1.0.
+        let late = PriceSeries::steps(vec![(50.0, 3.0)]).unwrap();
+        assert_eq!(late.factor_at(0.0), 1.0);
+        assert_eq!(late.factor_at(49.0), 1.0);
+    }
+
+    #[test]
+    fn weighted_secs_hand_computed_segments() {
+        let s = series();
+        // [0, 100): 100·1.0; [100, 300): 200·2.0; [300, 400): 100·0.5.
+        assert!((s.weighted_secs(0.0, 400.0) - (100.0 + 400.0 + 50.0)).abs() < 1e-9);
+        // Interval entirely inside one segment.
+        assert!((s.weighted_secs(120.0, 180.0) - 120.0).abs() < 1e-9);
+        // Interval straddling one edge.
+        assert!((s.weighted_secs(50.0, 150.0) - (50.0 + 100.0)).abs() < 1e-9);
+        // Closing exactly on an edge pays only the pre-step price.
+        assert!((s.weighted_secs(50.0, 100.0) - 50.0).abs() < 1e-9);
+        // Empty/inverted intervals.
+        assert_eq!(s.weighted_secs(200.0, 200.0), 0.0);
+        assert_eq!(s.weighted_secs(300.0, 200.0), 0.0);
+    }
+
+    #[test]
+    fn mean_factor_over_horizon() {
+        let s = series();
+        // Over [0, 200): (100·1 + 100·2)/200 = 1.5.
+        assert!((s.mean_factor(200.0) - 1.5).abs() < 1e-12);
+        // Degenerate horizons fall back to the t=0 factor.
+        assert_eq!(s.mean_factor(0.0), 1.0);
+        assert_eq!(s.mean_factor(f64::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn bid_crossing_finds_first_exceeding_step() {
+        let s = series();
+        assert_eq!(s.first_crossing_above(0.0, 1.5), Some(100.0));
+        assert_eq!(s.first_crossing_above(100.0, 1.5), None, "strictly-after semantics");
+        assert_eq!(s.first_crossing_above(0.0, 2.0), None, "equal factor does not outbid");
+        assert_eq!(s.first_crossing_above(0.0, 0.4), Some(100.0));
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(PriceSeries::steps(vec![]).is_err());
+        assert!(PriceSeries::steps(vec![(0.0, 1.0), (0.0, 2.0)]).is_err(), "non-increasing");
+        assert!(PriceSeries::steps(vec![(-1.0, 1.0)]).is_err());
+        assert!(PriceSeries::steps(vec![(0.0, 0.0)]).is_err(), "zero factor");
+        assert!(PriceSeries::steps(vec![(0.0, f64::NAN)]).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Pluggable spot-revocation processes.
+//!
+//! The paper models preemption as a fixed-rate Poisson clock (§5.6's `k_r`);
+//! real spot markets have provider-specific interruption behaviour, hazard
+//! rates that change with instance age, time-of-day seasonality, and — when
+//! replaying recorded histories — fully deterministic interruption
+//! timestamps. Each of those is one [`RevocationProcess`] implementation;
+//! the platform ([`crate::cloudsim::MultiCloud`]) pre-samples a revocation
+//! instant from the process at provisioning time, exactly where the inline
+//! exponential draw used to live.
+//!
+//! Determinism contract: a process may only draw from the `rng` handed to
+//! [`RevocationProcess::sample`] (the platform's provisioning stream), and
+//! [`ExponentialProcess`] performs *exactly one* `exponential` draw per
+//! sample — the same expression, in the same stream order, as the historical
+//! inline code — so the default market is bit-identical to the pre-market
+//! simulator (`tests/market_parity.rs`).
+
+use crate::simul::{Rng, SimTime};
+
+/// Samples the preemption instant of a spot VM at provisioning time.
+pub trait RevocationProcess: Send + Sync + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Revocation instant for a spot VM provisioned at `now`, or `None` for
+    /// "never revoked". `rng` is the platform's provisioning stream; draws
+    /// must be a pure function of (process parameters, `now`, stream state).
+    fn sample(&self, now: SimTime, rng: &mut Rng) -> Option<SimTime>;
+}
+
+/// Revocations disabled (`k_r = None`); never touches the stream.
+#[derive(Debug, Clone, Copy)]
+pub struct NoRevocations;
+
+impl RevocationProcess for NoRevocations {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn sample(&self, _now: SimTime, _rng: &mut Rng) -> Option<SimTime> {
+        None
+    }
+}
+
+/// The paper's fixed-rate Poisson clock: exponential time-to-revocation with
+/// mean `k_r` seconds from the moment the instance starts (§5.6).
+#[derive(Debug, Clone, Copy)]
+pub struct ExponentialProcess {
+    pub mean_secs: f64,
+}
+
+impl ExponentialProcess {
+    pub fn new(mean_secs: f64) -> Self {
+        assert!(mean_secs > 0.0);
+        Self { mean_secs }
+    }
+}
+
+impl RevocationProcess for ExponentialProcess {
+    fn name(&self) -> &'static str {
+        "exponential"
+    }
+
+    fn sample(&self, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        // Verbatim the historical inline draw (one stream advance).
+        Some(now + rng.exponential(1.0 / self.mean_secs))
+    }
+}
+
+/// Age-dependent hazard: Weibull time-to-revocation. `shape < 1` models the
+/// empirical "young instances die fast" regime (interruption risk decays
+/// with age); `shape > 1` models wear-out; `shape = 1` degenerates to
+/// [`ExponentialProcess`] with mean `scale_secs` (asserted in the tests).
+#[derive(Debug, Clone, Copy)]
+pub struct WeibullProcess {
+    /// Scale λ in seconds (the 63rd-percentile lifetime).
+    pub scale_secs: f64,
+    /// Shape k (> 0).
+    pub shape: f64,
+}
+
+impl RevocationProcess for WeibullProcess {
+    fn name(&self) -> &'static str {
+        "weibull"
+    }
+
+    fn sample(&self, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        // Inverse-CDF: age = λ·(-ln U)^(1/k), with U in (0, 1]. For k = 1
+        // this is exactly the exponential draw's expression.
+        let u = rng.next_f64_open();
+        let age = self.scale_secs * (-u.ln()).powf(1.0 / self.shape);
+        Some(now + age)
+    }
+}
+
+/// Time-of-day modulated Poisson process: rate
+/// `λ(t) = (1 + amplitude·sin(2π·t/period)) / mean_secs`, so interruption
+/// pressure peaks once per period (e.g. business hours) and relaxes half a
+/// period later. Sampled by inversion of the integrated hazard, which is
+/// available in closed form; the root is isolated by doubling and bisection,
+/// so one sample costs exactly one stream advance.
+#[derive(Debug, Clone, Copy)]
+pub struct SeasonalProcess {
+    /// Time-averaged mean time between revocations, seconds.
+    pub mean_secs: f64,
+    /// Modulation period, seconds (86 400 = diurnal).
+    pub period_secs: f64,
+    /// Modulation depth in [0, 1): 0 = plain exponential.
+    pub amplitude: f64,
+    /// Phase offset added to the local clock — aligns a simulation whose
+    /// local t = 0 is some later cluster instant with the shared timeline
+    /// (see `MarketSpec::shifted`).
+    pub phase_secs: f64,
+}
+
+impl SeasonalProcess {
+    /// Integrated hazard `Λ(a, b) = ∫_a^b λ(t) dt` (closed form).
+    fn integrated_hazard(&self, a: f64, b: f64) -> f64 {
+        let w = std::f64::consts::TAU / self.period_secs;
+        let sine_term = self.amplitude / w * ((w * a).cos() - (w * b).cos());
+        ((b - a) + sine_term) / self.mean_secs
+    }
+}
+
+impl RevocationProcess for SeasonalProcess {
+    fn name(&self) -> &'static str {
+        "seasonal"
+    }
+
+    fn sample(&self, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        // Inversion: find x with Λ(now, now+x) = E, E ~ Exp(1). Λ is
+        // continuous and strictly increasing in x (amplitude < 1 keeps the
+        // rate positive), so doubling + bisection converges to full f64
+        // precision deterministically.
+        let e = -rng.next_f64_open().ln();
+        let t0 = now.secs() + self.phase_secs;
+        let mut hi = self.mean_secs.max(1.0);
+        while self.integrated_hazard(t0, t0 + hi) < e {
+            hi *= 2.0;
+        }
+        let mut lo = 0.0;
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break; // interval at f64 resolution
+            }
+            if self.integrated_hazard(t0, t0 + mid) < e {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(now + hi)
+    }
+}
+
+/// Replays recorded interruption timestamps (a provider history export): a
+/// VM provisioned at `now` is pre-assigned the first trace instant strictly
+/// after `now`, so one recorded capacity reclaim threatens every VM alive
+/// at it — correlated interruptions, unlike the independent per-VM clocks.
+/// Consumes no randomness; a trace-replay market is fully deterministic
+/// even across replacement VMs. (The event loop keeps its established
+/// one-revocation-per-event semantics: instants that land inside the
+/// replacement's boot wait are absorbed, exactly as they always were for
+/// coinciding exponential draws.)
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    /// Interruption instants, seconds, strictly increasing.
+    pub times: Vec<f64>,
+}
+
+impl RevocationProcess for TraceReplay {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn sample(&self, now: SimTime, _rng: &mut Rng) -> Option<SimTime> {
+        let t = now.secs();
+        self.times.iter().find(|&&at| at > t).map(|&at| SimTime::from_secs(at))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_matches_historical_inline_draw() {
+        // The process must advance the stream exactly like the old inline
+        // `rng.exponential(1.0 / k_r)` — same expression, same order.
+        let proc_ = ExponentialProcess::new(7200.0);
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..50 {
+            let now = SimTime::from_secs(a.uniform(0.0, 1e5));
+            let _ = b.uniform(0.0, 1e5); // keep streams aligned
+            let got = proc_.sample(now, &mut a).unwrap();
+            let want = now + b.exponential(1.0 / 7200.0);
+            assert_eq!(got.secs().to_bits(), want.secs().to_bits());
+        }
+    }
+
+    #[test]
+    fn weibull_shape_one_is_exponential() {
+        let w = WeibullProcess { scale_secs: 3600.0, shape: 1.0 };
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        let got = w.sample(SimTime::ZERO, &mut a).unwrap();
+        let u = b.next_f64_open();
+        let want = 3600.0 * (-u.ln());
+        assert!((got.secs() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weibull_mean_matches_gamma_formula() {
+        // E[Weibull(λ, k)] = λ·Γ(1 + 1/k); for k = 2, Γ(1.5) = √π/2.
+        let w = WeibullProcess { scale_secs: 1000.0, shape: 2.0 };
+        let mut rng = Rng::seeded(3);
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| w.sample(SimTime::ZERO, &mut rng).unwrap().secs())
+            .sum::<f64>()
+            / n as f64;
+        let expected = 1000.0 * std::f64::consts::PI.sqrt() / 2.0;
+        assert!((mean - expected).abs() < expected * 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn seasonal_zero_amplitude_has_exponential_mean() {
+        let s = SeasonalProcess {
+            mean_secs: 5000.0,
+            period_secs: 86_400.0,
+            amplitude: 0.0,
+            phase_secs: 0.0,
+        };
+        let mut rng = Rng::seeded(5);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| s.sample(SimTime::ZERO, &mut rng).unwrap().secs())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 5000.0).abs() < 5000.0 * 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn seasonal_hazard_inversion_is_consistent() {
+        // Λ(now, sample) must equal the implied exponential deviate: verify
+        // by inverting the sample back through the closed-form hazard.
+        let s = SeasonalProcess {
+            mean_secs: 3600.0,
+            period_secs: 7200.0,
+            amplitude: 0.8,
+            phase_secs: 0.0,
+        };
+        let mut a = Rng::seeded(11);
+        let mut b = Rng::seeded(11);
+        for _ in 0..100 {
+            let got = s.sample(SimTime::from_secs(500.0), &mut a).unwrap();
+            let e = -b.next_f64_open().ln();
+            let lambda = s.integrated_hazard(500.0, got.secs());
+            assert!((lambda - e).abs() < 1e-6, "Λ={lambda} vs E={e}");
+        }
+    }
+
+    #[test]
+    fn seasonal_revokes_more_during_peak() {
+        // Deep modulation with the period much longer than the mean life:
+        // a VM provisioned at the rate peak (sin = +1, t = period/4) lives
+        // its whole typical lifetime under ≈1.95× hazard, one provisioned
+        // at the trough under ≈0.05× — the sample means must be far apart.
+        let s = SeasonalProcess {
+            mean_secs: 10_000.0,
+            period_secs: 40_000.0,
+            amplitude: 0.95,
+            phase_secs: 0.0,
+        };
+        let mut rng = Rng::seeded(9);
+        let n = 5_000;
+        let avg_from = |t0: f64, rng: &mut Rng| -> f64 {
+            (0..n)
+                .map(|_| s.sample(SimTime::from_secs(t0), rng).unwrap().secs() - t0)
+                .sum::<f64>()
+                / n as f64
+        };
+        let peak = avg_from(10_000.0, &mut rng); // sin(2π·10000/40000) = 1
+        let trough = avg_from(30_000.0, &mut rng); // sin(2π·30000/40000) = −1
+        assert!(peak * 1.5 < trough, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn trace_replay_returns_first_instant_strictly_after() {
+        let t = TraceReplay { times: vec![100.0, 250.0, 900.0] };
+        let mut rng = Rng::seeded(1);
+        let at = |now: f64| t.sample(SimTime::from_secs(now), &mut rng).map(|s| s.secs());
+        assert_eq!(at(0.0), Some(100.0));
+        assert_eq!(at(100.0), Some(250.0), "a VM provisioned at an event survives it");
+        assert_eq!(at(899.9), Some(900.0));
+        assert_eq!(at(900.0), None, "trace exhausted");
+        // No randomness consumed: the stream is untouched.
+        let mut fresh = Rng::seeded(1);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
+    fn no_revocations_never_fires_nor_draws() {
+        let mut rng = Rng::seeded(2);
+        assert!(NoRevocations.sample(SimTime::ZERO, &mut rng).is_none());
+        let mut fresh = Rng::seeded(2);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+    }
+}

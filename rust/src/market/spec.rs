@@ -1,0 +1,708 @@
+//! Declarative market configuration: the `[market]` / `[[market]]` TOML
+//! tables of job specs, sweep grids, and workload specs.
+//!
+//! ```toml
+//! [market]                       # job spec: one table
+//! revocation = "seasonal"        # exponential | weibull | seasonal | trace
+//! mean_secs = 7200.0             # seasonal: time-averaged k_r
+//! period_secs = 86400.0          # seasonal: modulation period
+//! amplitude = 0.6                # seasonal: modulation depth in [0, 1)
+//! price = "steps"                # constant | steps
+//! price_file = "configs/market-price-trace.toml"  # [[step]] at_secs/factor
+//! bid_factor = 1.5               # optional: revoke when the price outbids
+//! ```
+//!
+//! Sweep and workload specs define *named* markets as `[[market]]` tables
+//! (same keys plus `name`) and select them per grid point via the `markets`
+//! axis. Unknown keys — including parameters that belong to a different
+//! revocation/price kind — are rejected with an error naming the offending
+//! key, in the same spirit as the rest of the spec validation.
+//!
+//! Trace data can be inline (`revocation_times`, `price_times` +
+//! `price_factors`) or loaded from sibling TOML trace files
+//! (`revocation_file` with `[[revocation]] at_secs`, `price_file` with
+//! `[[step]] at_secs`/`factor` — the AWS spot-price-history shape). Relative
+//! paths resolve against the spec file's directory first, then the working
+//! directory, so shipped configs work from the crate root.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::price::PriceSeries;
+use super::revocation::{
+    ExponentialProcess, NoRevocations, SeasonalProcess, TraceReplay, WeibullProcess,
+};
+use super::MarketModel;
+use crate::util::tomlmini::{self, Value};
+
+type Tbl = BTreeMap<String, Value>;
+
+/// Which revocation process drives spot preemptions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum RevocationSpec {
+    /// The paper's fixed-rate Poisson clock, driven by the job's
+    /// `revocation_mean_secs` (`k_r`; `None`/0 = no failures).
+    #[default]
+    Exponential,
+    /// Age-dependent Weibull hazard.
+    Weibull { scale_secs: f64, shape: f64 },
+    /// Time-of-day modulated Poisson process (`phase_secs` anchors local
+    /// t = 0 on the modulation cycle; workloads advance it per admission).
+    Seasonal { mean_secs: f64, period_secs: f64, amplitude: f64, phase_secs: f64 },
+    /// Deterministic replay of recorded interruption instants.
+    Trace { times: Vec<f64> },
+}
+
+impl RevocationSpec {
+    /// Stable config-file key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            RevocationSpec::Exponential => "exponential",
+            RevocationSpec::Weibull { .. } => "weibull",
+            RevocationSpec::Seasonal { .. } => "seasonal",
+            RevocationSpec::Trace { .. } => "trace",
+        }
+    }
+}
+
+/// Which price series spot capacity is billed against.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PriceSpec {
+    /// The catalog's fixed spot rate (factor 1.0 forever).
+    #[default]
+    Constant,
+    /// Piecewise-constant multiplier steps `(at_secs, factor)`.
+    Steps(Vec<(f64, f64)>),
+}
+
+impl PriceSpec {
+    pub fn key(&self) -> &'static str {
+        match self {
+            PriceSpec::Constant => "constant",
+            PriceSpec::Steps(_) => "steps",
+        }
+    }
+}
+
+/// The declarative spot-market configuration carried by
+/// [`crate::coordinator::SimConfig`] (trace data resolved inline, so the
+/// spec is self-contained and `Debug`-fingerprintable).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MarketSpec {
+    pub revocation: RevocationSpec,
+    pub price: PriceSpec,
+    /// Bid as a multiple of the base spot rate (price-threshold mode).
+    pub bid_factor: Option<f64>,
+}
+
+impl MarketSpec {
+    /// Is this the historical market (exponential `k_r`, constant price, no
+    /// bid) whose outputs are bit-identical to the pre-market simulator?
+    pub fn is_default(&self) -> bool {
+        *self == MarketSpec::default()
+    }
+
+    /// The price series of this market.
+    ///
+    /// Panics on a malformed step trace: TOML-parsed specs are validated at
+    /// parse time, but `PriceSpec::Steps` can also be built in code — an
+    /// unsorted trace would silently mis-integrate bills, so it is a
+    /// programming error, caught here.
+    pub fn price_series(&self) -> PriceSeries {
+        match &self.price {
+            PriceSpec::Constant => PriceSeries::Constant,
+            PriceSpec::Steps(points) => {
+                PriceSeries::steps(points.clone()).expect("invalid price steps")
+            }
+        }
+    }
+
+    /// Expected spot-price multiplier over the planning horizon `[0, h)` —
+    /// what the Initial Mapping / Dynamic Scheduler cost models charge per
+    /// spot VM-second relative to the catalog rate. Exactly 1.0 for the
+    /// default market.
+    pub fn planning_price_factor(&self, horizon_secs: f64) -> f64 {
+        self.price_series().mean_factor(horizon_secs)
+    }
+
+    /// The next instant strictly after `t` at which the spot price changes,
+    /// if any — when admission feasibility of a budget-capped job can next
+    /// change without a capacity release (the workload engine retries
+    /// price-queued jobs at these instants).
+    pub fn next_price_step_after(&self, t: f64) -> Option<f64> {
+        match &self.price {
+            PriceSpec::Constant => None,
+            PriceSpec::Steps(points) => {
+                points.iter().map(|&(at, _)| at).find(|&at| at > t)
+            }
+        }
+    }
+
+    /// Re-anchor this market on a clock whose local t = 0 corresponds to
+    /// cluster instant `offset` — how multi-job workloads share one market
+    /// timeline across jobs admitted at different times: recorded
+    /// interruptions at or before the offset are in the past (dropped),
+    /// price steps collapse to the factor in effect at the offset, and the
+    /// seasonal phase advances. The exponential clock (memoryless) and the
+    /// Weibull hazard (instance-age-driven) are shift-invariant, so the
+    /// default market — and any `offset = 0.0` — is untouched.
+    pub fn shifted(&self, offset: f64) -> MarketSpec {
+        if offset == 0.0 {
+            return self.clone();
+        }
+        let revocation = match &self.revocation {
+            RevocationSpec::Exponential => RevocationSpec::Exponential,
+            w @ RevocationSpec::Weibull { .. } => w.clone(),
+            RevocationSpec::Seasonal { mean_secs, period_secs, amplitude, phase_secs } => {
+                RevocationSpec::Seasonal {
+                    mean_secs: *mean_secs,
+                    period_secs: *period_secs,
+                    amplitude: *amplitude,
+                    phase_secs: phase_secs + offset,
+                }
+            }
+            RevocationSpec::Trace { times } => RevocationSpec::Trace {
+                // Instants at or before the offset can no longer fire
+                // (sampling is strictly-after-now on the local clock).
+                times: times.iter().filter(|&&t| t > offset).map(|&t| t - offset).collect(),
+            },
+        };
+        let price = match &self.price {
+            PriceSpec::Constant => PriceSpec::Constant,
+            PriceSpec::Steps(points) => {
+                // Collapse history into the factor in effect at the offset,
+                // re-anchored as a step at local t = 0.
+                let at_offset = PriceSeries::Steps(points.clone()).factor_at(offset);
+                let mut shifted: Vec<(f64, f64)> = vec![(0.0, at_offset)];
+                shifted.extend(
+                    points.iter().filter(|&&(at, _)| at > offset).map(|&(at, f)| (at - offset, f)),
+                );
+                PriceSpec::Steps(shifted)
+            }
+        };
+        MarketSpec { revocation, price, bid_factor: self.bid_factor }
+    }
+
+    /// Assemble the runtime model. `k_r` is the job's
+    /// `revocation_mean_secs`, consumed only by the exponential default
+    /// (the other processes carry their own parameters).
+    pub fn build(&self, k_r: Option<f64>) -> MarketModel {
+        let revocation: Box<dyn super::RevocationProcess> = match &self.revocation {
+            RevocationSpec::Exponential => match k_r {
+                Some(k) => Box::new(ExponentialProcess::new(k)),
+                None => Box::new(NoRevocations),
+            },
+            RevocationSpec::Weibull { scale_secs, shape } => {
+                // Programmatic-construction guards (TOML parsing already
+                // enforces these): out-of-range parameters would silently
+                // produce garbage samples, so they are programming errors.
+                assert!(
+                    scale_secs.is_finite()
+                        && *scale_secs > 0.0
+                        && shape.is_finite()
+                        && *shape > 0.0,
+                    "weibull scale/shape must be finite and positive"
+                );
+                Box::new(WeibullProcess { scale_secs: *scale_secs, shape: *shape })
+            }
+            RevocationSpec::Seasonal { mean_secs, period_secs, amplitude, phase_secs } => {
+                assert!(
+                    mean_secs.is_finite()
+                        && *mean_secs > 0.0
+                        && period_secs.is_finite()
+                        && *period_secs > 0.0
+                        && (0.0..1.0).contains(amplitude)
+                        && phase_secs.is_finite()
+                        && *phase_secs >= 0.0,
+                    "seasonal parameters out of range (amplitude must be in [0, 1))"
+                );
+                Box::new(SeasonalProcess {
+                    mean_secs: *mean_secs,
+                    period_secs: *period_secs,
+                    amplitude: *amplitude,
+                    phase_secs: *phase_secs,
+                })
+            }
+            RevocationSpec::Trace { times } => {
+                // Same programmatic-construction guard as `price_series`:
+                // out-of-order instants would replay wrongly. (Empty is
+                // fine — `shifted` drops instants that are in the past.)
+                assert!(
+                    times.iter().all(|t| t.is_finite() && *t >= 0.0)
+                        && times.windows(2).all(|w| w[0] < w[1]),
+                    "revocation trace times must be finite, non-negative, strictly increasing"
+                );
+                Box::new(TraceReplay { times: times.clone() })
+            }
+        };
+        MarketModel { revocation, price: self.price_series(), bid_factor: self.bid_factor }
+    }
+
+    /// Parse a `[market]` table. `base` is the spec file's directory, used
+    /// to resolve relative `*_file` references. Rejects unknown keys — and
+    /// parameters belonging to a different revocation/price kind — naming
+    /// the offending key.
+    pub fn from_table(tbl: &Tbl, base: Option<&Path>) -> anyhow::Result<MarketSpec> {
+        let get_str = |key: &str| -> anyhow::Result<Option<&str>> {
+            match tbl.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_str()
+                    .map(Some)
+                    .ok_or_else(|| anyhow::anyhow!("[market] {key} must be a string")),
+            }
+        };
+        let get_pos = |key: &str| -> anyhow::Result<Option<f64>> {
+            match tbl.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v
+                        .as_float()
+                        .ok_or_else(|| anyhow::anyhow!("[market] {key} must be a number"))?;
+                    anyhow::ensure!(
+                        x.is_finite() && x > 0.0,
+                        "[market] {key} must be positive, got {x}"
+                    );
+                    Ok(Some(x))
+                }
+            }
+        };
+        let need_pos = |key: &str, kind: &str| -> anyhow::Result<f64> {
+            get_pos(key)?
+                .ok_or_else(|| anyhow::anyhow!("[market] revocation = \"{kind}\" needs {key}"))
+        };
+        let num_list = |key: &str| -> anyhow::Result<Option<Vec<f64>>> {
+            match tbl.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let items = v.as_array().ok_or_else(|| {
+                        anyhow::anyhow!("[market] {key} must be an array of numbers")
+                    })?;
+                    items
+                        .iter()
+                        .map(|x| {
+                            x.as_float().ok_or_else(|| {
+                                anyhow::anyhow!("[market] {key} entries must be numbers")
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()
+                        .map(Some)
+                }
+            }
+        };
+
+        let rev_kind = get_str("revocation")?.unwrap_or("exponential");
+        let revocation = match rev_kind {
+            "exponential" => RevocationSpec::Exponential,
+            "weibull" => RevocationSpec::Weibull {
+                scale_secs: need_pos("scale_secs", "weibull")?,
+                shape: need_pos("shape", "weibull")?,
+            },
+            "seasonal" => {
+                let amplitude = match tbl.get("amplitude") {
+                    None => 0.0,
+                    Some(v) => v.as_float().ok_or_else(|| {
+                        anyhow::anyhow!("[market] amplitude must be a number")
+                    })?,
+                };
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&amplitude),
+                    "[market] amplitude must be in [0, 1), got {amplitude}"
+                );
+                let phase_secs = match tbl.get("phase_secs") {
+                    None => 0.0,
+                    Some(v) => {
+                        let p = v.as_float().ok_or_else(|| {
+                            anyhow::anyhow!("[market] phase_secs must be a number")
+                        })?;
+                        anyhow::ensure!(
+                            p.is_finite() && p >= 0.0,
+                            "[market] phase_secs must be non-negative, got {p}"
+                        );
+                        p
+                    }
+                };
+                RevocationSpec::Seasonal {
+                    mean_secs: need_pos("mean_secs", "seasonal")?,
+                    period_secs: need_pos("period_secs", "seasonal")?,
+                    amplitude,
+                    phase_secs,
+                }
+            }
+            "trace" => {
+                let inline = num_list("revocation_times")?;
+                let file = get_str("revocation_file")?;
+                anyhow::ensure!(
+                    inline.is_some() != file.is_some(),
+                    "[market] revocation = \"trace\" needs exactly one of \
+                     revocation_times or revocation_file"
+                );
+                let times = match inline {
+                    Some(t) => t,
+                    None => load_revocation_trace(&resolve(base, file.expect("checked above")))?,
+                };
+                validate_trace_times(&times, "revocation_times")?;
+                RevocationSpec::Trace { times }
+            }
+            other => anyhow::bail!(
+                "unknown market revocation {other} (exponential | weibull | seasonal | trace)"
+            ),
+        };
+
+        let price_kind = get_str("price")?.unwrap_or("constant");
+        let price = match price_kind {
+            "constant" => PriceSpec::Constant,
+            "steps" => {
+                let times = num_list("price_times")?;
+                let factors = num_list("price_factors")?;
+                let file = get_str("price_file")?;
+                let points = match (times, factors, file) {
+                    (Some(t), Some(f), None) => {
+                        anyhow::ensure!(
+                            t.len() == f.len(),
+                            "[market] price_times has {} entries but price_factors has {}",
+                            t.len(),
+                            f.len()
+                        );
+                        t.into_iter().zip(f).collect()
+                    }
+                    (None, None, Some(path)) => load_price_trace(&resolve(base, path))?,
+                    _ => anyhow::bail!(
+                        "[market] price = \"steps\" needs either price_times + price_factors \
+                         or price_file"
+                    ),
+                };
+                // Validates ordering/positivity; keep the raw points.
+                PriceSeries::steps(points.clone())?;
+                PriceSpec::Steps(points)
+            }
+            other => anyhow::bail!("unknown market price {other} (constant | steps)"),
+        };
+
+        let bid_factor = get_pos("bid_factor")?;
+
+        // Reject unknown keys — and kind-mismatched parameters — by name.
+        let mut allowed: Vec<&str> = vec!["revocation", "price", "bid_factor"];
+        match rev_kind {
+            "weibull" => allowed.extend(["scale_secs", "shape"]),
+            "seasonal" => {
+                allowed.extend(["mean_secs", "period_secs", "amplitude", "phase_secs"])
+            }
+            "trace" => allowed.extend(["revocation_times", "revocation_file"]),
+            _ => {}
+        }
+        if price_kind == "steps" {
+            allowed.extend(["price_times", "price_factors", "price_file"]);
+        }
+        for key in tbl.keys() {
+            anyhow::ensure!(
+                allowed.contains(&key.as_str()),
+                "unknown key `{key}` in [market] (revocation = \"{rev_kind}\", \
+                 price = \"{price_kind}\" accepts: {})",
+                allowed.join(", ")
+            );
+        }
+
+        Ok(MarketSpec { revocation, price, bid_factor })
+    }
+}
+
+/// Parse the `[[market]]` definitions of a sweep/workload spec into a
+/// name → spec map. Names must be unique and must not shadow the built-in
+/// `"exponential"` default market.
+pub fn named_markets(
+    root: &Tbl,
+    base: Option<&Path>,
+) -> anyhow::Result<BTreeMap<String, MarketSpec>> {
+    let mut out = BTreeMap::new();
+    let Some(tables) = root.get("market") else { return Ok(out) };
+    let tables = tables.as_table_array().ok_or_else(|| {
+        anyhow::anyhow!("[[market]] must be an array of tables (use [[market]], not [market])")
+    })?;
+    for (i, tbl) in tables.iter().enumerate() {
+        let name = tbl
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("[[market]] #{i} needs a `name`"))?
+            .to_string();
+        anyhow::ensure!(
+            name != "exponential",
+            "[[market]] name \"exponential\" is reserved for the built-in default market"
+        );
+        let mut body = tbl.clone();
+        body.remove("name");
+        let spec = MarketSpec::from_table(&body, base)
+            .map_err(|e| anyhow::anyhow!("[[market]] \"{name}\": {e}"))?;
+        anyhow::ensure!(out.insert(name.clone(), spec).is_none(), "duplicate market {name}");
+    }
+    Ok(out)
+}
+
+/// Resolve a market reference from a `markets` grid axis or a per-job
+/// `market = "name"` key: a defined name, or the built-in `"exponential"`.
+pub fn resolve_market(
+    name: &str,
+    defs: &BTreeMap<String, MarketSpec>,
+) -> anyhow::Result<MarketSpec> {
+    if let Some(spec) = defs.get(name) {
+        return Ok(spec.clone());
+    }
+    if name == "exponential" {
+        return Ok(MarketSpec::default());
+    }
+    anyhow::bail!(
+        "unknown market {name} (define it as a [[market]] table; built-in: exponential)"
+    )
+}
+
+fn validate_trace_times(times: &[f64], what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(!times.is_empty(), "[market] {what} is empty");
+    let mut prev = f64::NEG_INFINITY;
+    for &t in times {
+        anyhow::ensure!(
+            t.is_finite() && t >= 0.0,
+            "[market] {what} entry {t} must be finite and non-negative"
+        );
+        anyhow::ensure!(t > prev, "[market] {what} must be strictly increasing (got {t})");
+        prev = t;
+    }
+    Ok(())
+}
+
+/// Resolve a trace-file reference: the spec directory first (shipped configs
+/// reference siblings), then the path as given (crate-root relative).
+fn resolve(base: Option<&Path>, path: &str) -> PathBuf {
+    if let Some(dir) = base {
+        let joined = dir.join(path);
+        if joined.exists() {
+            return joined;
+        }
+    }
+    PathBuf::from(path)
+}
+
+fn read_trace_file(path: &Path) -> anyhow::Result<Tbl> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading market trace {}: {e}", path.display()))?;
+    Ok(tomlmini::parse(&text)?)
+}
+
+/// A revocation trace file: `[[revocation]]` tables with `at_secs`.
+fn load_revocation_trace(path: &Path) -> anyhow::Result<Vec<f64>> {
+    let root = read_trace_file(path)?;
+    let entries = root
+        .get("revocation")
+        .and_then(|v| v.as_table_array())
+        .ok_or_else(|| {
+            anyhow::anyhow!("{}: expected [[revocation]] tables", path.display())
+        })?;
+    entries
+        .iter()
+        .map(|e| {
+            e.get("at_secs").and_then(|v| v.as_float()).ok_or_else(|| {
+                anyhow::anyhow!("{}: every [[revocation]] needs at_secs", path.display())
+            })
+        })
+        .collect()
+}
+
+/// A price trace file (AWS spot-price-history shape): `[[step]]` tables with
+/// `at_secs` and `factor`.
+fn load_price_trace(path: &Path) -> anyhow::Result<Vec<(f64, f64)>> {
+    let root = read_trace_file(path)?;
+    let entries = root.get("step").and_then(|v| v.as_table_array()).ok_or_else(|| {
+        anyhow::anyhow!("{}: expected [[step]] tables", path.display())
+    })?;
+    entries
+        .iter()
+        .map(|e| {
+            let at = e.get("at_secs").and_then(|v| v.as_float());
+            let factor = e.get("factor").and_then(|v| v.as_float());
+            match (at, factor) {
+                (Some(a), Some(f)) => Ok((a, f)),
+                _ => anyhow::bail!(
+                    "{}: every [[step]] needs at_secs and factor",
+                    path.display()
+                ),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> anyhow::Result<MarketSpec> {
+        let root = tomlmini::parse(text).unwrap();
+        MarketSpec::from_table(&root, None)
+    }
+
+    #[test]
+    fn defaults_to_the_historical_market() {
+        let spec = parse("").unwrap();
+        assert!(spec.is_default());
+        assert_eq!(spec.revocation.key(), "exponential");
+        assert_eq!(spec.price.key(), "constant");
+        assert_eq!(spec.planning_price_factor(1e6), 1.0);
+    }
+
+    #[test]
+    fn parses_every_revocation_kind() {
+        let w = parse("revocation = \"weibull\"\nscale_secs = 7200.0\nshape = 0.7\n").unwrap();
+        assert_eq!(w.revocation, RevocationSpec::Weibull { scale_secs: 7200.0, shape: 0.7 });
+        let s = parse(
+            "revocation = \"seasonal\"\nmean_secs = 7200.0\nperiod_secs = 86400.0\namplitude = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            s.revocation,
+            RevocationSpec::Seasonal {
+                mean_secs: 7200.0,
+                period_secs: 86400.0,
+                amplitude: 0.5,
+                phase_secs: 0.0,
+            }
+        );
+        let t = parse("revocation = \"trace\"\nrevocation_times = [100.0, 900.0]\n").unwrap();
+        assert_eq!(t.revocation, RevocationSpec::Trace { times: vec![100.0, 900.0] });
+    }
+
+    #[test]
+    fn parses_price_steps_and_bid() {
+        let spec = parse(
+            "price = \"steps\"\nprice_times = [0.0, 3600.0]\nprice_factors = [1.0, 1.8]\nbid_factor = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(spec.price, PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.8)]));
+        assert_eq!(spec.bid_factor, Some(1.5));
+        // The assembled model revokes at the crossing.
+        let model = spec.build(None);
+        let mut rng = crate::simul::Rng::seeded(1);
+        let at = model.revocation_at(crate::simul::SimTime::ZERO, &mut rng).unwrap();
+        assert_eq!(at.secs(), 3600.0);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_by_name() {
+        let err = parse("oops = 1\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key `oops`"), "{err}");
+        // Parameters of a *different* kind are offending keys too.
+        let err = parse("shape = 2.0\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key `shape`"), "{err}");
+        let err = parse(
+            "revocation = \"weibull\"\nscale_secs = 10.0\nshape = 1.0\nprice_times = [0.0]\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown key `price_times`"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_parameters() {
+        assert!(parse("revocation = \"weibull\"\n").is_err(), "missing params");
+        assert!(parse("revocation = \"weibull\"\nscale_secs = -1.0\nshape = 1.0\n").is_err());
+        assert!(parse(
+            "revocation = \"seasonal\"\nmean_secs = 10.0\nperiod_secs = 10.0\namplitude = 1.0\n"
+        )
+        .is_err());
+        assert!(parse("revocation = \"trace\"\n").is_err(), "no times");
+        assert!(
+            parse("revocation = \"trace\"\nrevocation_times = [5.0, 5.0]\n").is_err(),
+            "non-increasing trace"
+        );
+        assert!(parse("revocation = \"nope\"\n").is_err());
+        assert!(parse("price = \"steps\"\n").is_err(), "no points");
+        assert!(parse(
+            "price = \"steps\"\nprice_times = [0.0, 1.0]\nprice_factors = [1.0]\n"
+        )
+        .is_err());
+        assert!(parse("bid_factor = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn shifted_re_anchors_the_market_on_the_cluster_clock() {
+        let spec = MarketSpec {
+            revocation: RevocationSpec::Trace { times: vec![100.0, 500.0, 900.0] },
+            price: PriceSpec::Steps(vec![(0.0, 1.0), (400.0, 2.0), (800.0, 0.5)]),
+            bid_factor: Some(1.5),
+        };
+        let s = spec.shifted(450.0);
+        // Past interruptions drop; future ones re-anchor on the local clock.
+        assert_eq!(s.revocation, RevocationSpec::Trace { times: vec![50.0, 450.0] });
+        // Price history collapses to the factor in effect at the offset.
+        assert_eq!(s.price, PriceSpec::Steps(vec![(0.0, 2.0), (350.0, 0.5)]));
+        assert_eq!(s.bid_factor, Some(1.5));
+        // Offset 0 and the default market are no-ops.
+        assert_eq!(spec.shifted(0.0), spec);
+        assert!(MarketSpec::default().shifted(1234.5).is_default());
+        // Seasonal advances its phase; exponential is memoryless.
+        let seasonal = MarketSpec {
+            revocation: RevocationSpec::Seasonal {
+                mean_secs: 10.0,
+                period_secs: 20.0,
+                amplitude: 0.5,
+                phase_secs: 5.0,
+            },
+            ..MarketSpec::default()
+        };
+        match seasonal.shifted(7.0).revocation {
+            RevocationSpec::Seasonal { phase_secs, .. } => assert_eq!(phase_secs, 12.0),
+            other => panic!("unexpected revocation spec {other:?}"),
+        }
+    }
+
+    #[test]
+    fn named_markets_resolve_and_reserve_the_default() {
+        let root = tomlmini::parse(
+            r#"
+[[market]]
+name = "volatile"
+price = "steps"
+price_times = [0.0]
+price_factors = [2.0]
+"#,
+        )
+        .unwrap();
+        let defs = named_markets(&root, None).unwrap();
+        assert_eq!(defs.len(), 1);
+        assert!(resolve_market("volatile", &defs).is_ok());
+        assert!(resolve_market("exponential", &defs).unwrap().is_default());
+        assert!(resolve_market("nope", &defs).is_err());
+
+        let reserved = tomlmini::parse("[[market]]\nname = \"exponential\"\n").unwrap();
+        assert!(named_markets(&reserved, None).is_err());
+        let unnamed = tomlmini::parse("[[market]]\nprice = \"constant\"\n").unwrap();
+        assert!(named_markets(&unnamed, None).is_err());
+    }
+
+    #[test]
+    fn trace_files_load_and_resolve_against_base() {
+        let dir = std::env::temp_dir().join(format!("mfls-market-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("price.toml"),
+            "[[step]]\nat_secs = 0.0\nfactor = 1.0\n\n[[step]]\nat_secs = 60.0\nfactor = 1.2\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("revs.toml"),
+            "[[revocation]]\nat_secs = 30.0\n\n[[revocation]]\nat_secs = 90.0\n",
+        )
+        .unwrap();
+        let root = tomlmini::parse(
+            "revocation = \"trace\"\nrevocation_file = \"revs.toml\"\nprice = \"steps\"\nprice_file = \"price.toml\"\n",
+        )
+        .unwrap();
+        let spec = MarketSpec::from_table(&root, Some(&dir)).unwrap();
+        assert_eq!(spec.revocation, RevocationSpec::Trace { times: vec![30.0, 90.0] });
+        assert_eq!(spec.price, PriceSpec::Steps(vec![(0.0, 1.0), (60.0, 1.2)]));
+        // A missing file is a named error, not a panic.
+        let bad = tomlmini::parse(
+            "revocation = \"trace\"\nrevocation_file = \"missing.toml\"\n",
+        )
+        .unwrap();
+        assert!(MarketSpec::from_table(&bad, Some(&dir)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -26,6 +26,15 @@
 //! max_revocations_per_task = [1, 2]  # optional axis form of the scalar cap
 //! budget_round = [1.0, 2.0]    # optional: B_round $ cap per round (Constraint 8)
 //! deadline_round = [600.0]     # optional: T_round seconds per round (Constraint 9)
+//! markets = ["exponential", "volatile"]  # optional: spot-market model per point
+//!
+//! [[market]]                   # named market definitions for the axis
+//! name = "volatile"            # ("exponential" = the built-in default market)
+//! revocation = "trace"
+//! revocation_times = [3600.0, 10800.0]
+//! price = "steps"
+//! price_times = [0.0, 7200.0]
+//! price_factors = [1.0, 1.6]
 //! ```
 //!
 //! Checkpoint-axis semantics (Fig. 2 in one spec, `sweep-fig2.toml`):
@@ -41,6 +50,7 @@ use crate::apps;
 use crate::coordinator::{Scenario, SimConfig, TrialStats};
 use crate::dynsched::DynSchedPolicy;
 use crate::mapping::MapperKind;
+use crate::market::{self, MarketSpec};
 use crate::simul::Rng;
 use crate::util::bench::Table;
 use crate::util::tomlmini::{self, Value};
@@ -75,6 +85,10 @@ pub struct SweepSpec {
     pub budget_round: Option<Vec<f64>>,
     /// Optional axis: per-round deadline `T_round` in seconds.
     pub deadline_round: Option<Vec<f64>>,
+    /// Optional axis: named spot-market models (`markets` keys resolved
+    /// against the `[[market]]` definitions; "exponential" = the built-in
+    /// default). `None` = not swept (every point runs the default market).
+    pub markets: Option<Vec<(String, MarketSpec)>>,
     pub rounds: Option<u32>,
     pub max_revocations_per_task: Option<u32>,
     pub checkpoints: Option<bool>,
@@ -168,6 +182,12 @@ fn bool_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<bool>>> {
 
 impl SweepSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<SweepSpec> {
+        Self::from_toml_with_base(text, None)
+    }
+
+    /// [`Self::from_toml`] with the spec file's directory for resolving
+    /// relative `[[market]]` trace-file references.
+    pub fn from_toml_with_base(text: &str, base: Option<&Path>) -> anyhow::Result<SweepSpec> {
         let root = tomlmini::parse(text)?;
         let grid = root
             .get("grid")
@@ -248,6 +268,19 @@ impl SweepSpec {
         let budget_round = positive_axis("budget_round")?;
         let deadline_round = positive_axis("deadline_round")?;
 
+        // Spot-market axis: names resolved against the [[market]] tables
+        // (plus the built-in "exponential" default market).
+        let market_defs = market::spec::named_markets(&root, base)?;
+        let markets = match str_axis(grid, "markets")? {
+            None => None,
+            Some(names) => Some(
+                names
+                    .into_iter()
+                    .map(|n| market::spec::resolve_market(&n, &market_defs).map(|m| (n, m)))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
+
         // Negative integers must error, not wrap through the `as` casts.
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
             match root.get(key).and_then(|v| v.as_int()) {
@@ -281,6 +314,7 @@ impl SweepSpec {
             max_revocations_axis,
             budget_round,
             deadline_round,
+            markets,
             rounds: get_nonneg("rounds")?.map(|r| r as u32),
             max_revocations_per_task,
             checkpoints: root.get("checkpoints").and_then(|v| v.as_bool()),
@@ -291,7 +325,7 @@ impl SweepSpec {
     pub fn from_file(path: &Path) -> anyhow::Result<SweepSpec> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Self::from_toml(&text)
+        Self::from_toml_with_base(&text, path.parent())
     }
 
     /// Number of grid points (trial count is `n_points() * trials`).
@@ -307,6 +341,7 @@ impl SweepSpec {
             * self.max_revocations_axis.as_ref().map_or(1, |v| v.len())
             * self.budget_round.as_ref().map_or(1, |v| v.len())
             * self.deadline_round.as_ref().map_or(1, |v| v.len())
+            * self.markets.as_ref().map_or(1, |v| v.len())
     }
 
     /// Expand the grid into campaign points. Each trial's seed is derived
@@ -337,6 +372,10 @@ impl SweepSpec {
             Some(v) => v.iter().copied().map(Some).collect(),
             None => vec![None],
         };
+        let market_axis: Vec<Option<&(String, MarketSpec)>> = match &self.markets {
+            Some(v) => v.iter().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for app_name in &self.apps {
@@ -352,28 +391,32 @@ impl SweepSpec {
                                         for &maxrev in &maxrev_axis {
                                             for &budget in &budget_axis {
                                                 for &deadline in &deadline_axis {
-                                                    let seeds: Vec<u64> = (0..self.trials)
-                                                        .map(|_| {
-                                                            let s = root.split_seed(global_trial);
-                                                            global_trial += 1;
-                                                            s
-                                                        })
-                                                        .collect();
-                                                    points.push(self.point(
-                                                        app.clone(),
-                                                        app_name,
-                                                        scenario,
-                                                        k_r,
-                                                        policy,
-                                                        alpha,
-                                                        mapper,
-                                                        ckpt_every,
-                                                        client_ckpt,
-                                                        maxrev,
-                                                        budget,
-                                                        deadline,
-                                                        seeds,
-                                                    ));
+                                                    for &mkt in &market_axis {
+                                                        let seeds: Vec<u64> = (0..self.trials)
+                                                            .map(|_| {
+                                                                let s =
+                                                                    root.split_seed(global_trial);
+                                                                global_trial += 1;
+                                                                s
+                                                            })
+                                                            .collect();
+                                                        points.push(self.point(
+                                                            app.clone(),
+                                                            app_name,
+                                                            scenario,
+                                                            k_r,
+                                                            policy,
+                                                            alpha,
+                                                            mapper,
+                                                            ckpt_every,
+                                                            client_ckpt,
+                                                            maxrev,
+                                                            budget,
+                                                            deadline,
+                                                            mkt,
+                                                            seeds,
+                                                        ));
+                                                    }
                                                 }
                                             }
                                         }
@@ -406,6 +449,7 @@ impl SweepSpec {
         maxrev: Option<u32>,
         budget: Option<f64>,
         deadline: Option<f64>,
+        market: Option<&(String, MarketSpec)>,
         seeds: Vec<u64>,
     ) -> PointSpec {
         let mut cfg = SimConfig::new(app, scenario, self.seed);
@@ -437,6 +481,9 @@ impl SweepSpec {
         if let Some(d) = deadline {
             cfg.deadline_round = d;
         }
+        if let Some((_, spec)) = market {
+            cfg.market = spec.clone();
+        }
         let mut tags = vec![
             ("app".to_string(), app_name.to_string()),
             ("scenario".to_string(), scenario.key().to_string()),
@@ -459,6 +506,9 @@ impl SweepSpec {
         }
         if let Some(d) = deadline {
             tags.push(("deadline_round".to_string(), format!("{d}")));
+        }
+        if let Some((name, _)) = market {
+            tags.push(("market".to_string(), name.clone()));
         }
         PointSpec { tags, cfg, seeds }
     }
@@ -497,7 +547,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push_str(
         "app,scenario,revocation_mean_secs,policy,alpha,mapper,\
          server_ckpt_every,client_checkpoint,max_revocations_per_task,\
-         budget_round,deadline_round,trials",
+         budget_round,deadline_round,market,trials",
     );
     for metric in ["revocations", "fl_exec_secs", "total_secs", "cost"] {
         for stat in ["mean", "stddev", "min", "max", "ci95"] {
@@ -507,7 +557,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push('\n');
     for (p, s) in points.iter().zip(stats) {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
             p.tag("app"),
             p.tag("scenario"),
             p.tag("revocation_mean_secs"),
@@ -519,6 +569,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
             p.tag("max_revocations_per_task"),
             p.tag("budget_round"),
             p.tag("deadline_round"),
+            p.tag("market"),
             s.trials
         ));
         for agg in [&s.revocations, &s.exec_secs, &s.total_secs, &s.cost] {
@@ -770,6 +821,62 @@ alphas = 0.5
             "[grid]\napps = [\"til\"]\nserver_ckpt_every = [-1]\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn markets_axis_expands_resolves_and_tags() {
+        let spec = SweepSpec::from_toml(
+            r#"
+[grid]
+apps = ["til"]
+markets = ["exponential", "volatile"]
+
+[[market]]
+name = "volatile"
+revocation = "trace"
+revocation_times = [3600.0]
+price = "steps"
+price_times = [0.0, 1800.0]
+price_factors = [1.0, 1.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert!(points[0].cfg.market.is_default());
+        assert_eq!(points[0].tag("market"), "exponential");
+        assert_eq!(points[1].tag("market"), "volatile");
+        assert_eq!(
+            points[1].cfg.market.revocation,
+            crate::market::RevocationSpec::Trace { times: vec![3600.0] }
+        );
+        // Unknown names and unknown [[market]] keys are rejected by name.
+        let err = SweepSpec::from_toml("[grid]\napps = [\"til\"]\nmarkets = [\"nope\"]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown market nope"), "{err}");
+        let err = SweepSpec::from_toml(
+            "[grid]\napps = [\"til\"]\n\n[[market]]\nname = \"m\"\nwild = 1\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown key `wild`"), "{err}");
+    }
+
+    #[test]
+    fn unswept_markets_leave_points_and_seeds_untouched() {
+        // A spec without a markets axis must expand to the exact same
+        // points (default market) and seed schedule as before the axis
+        // existed. (Recorded campaigns still refingerprint — the point
+        // fingerprint hashes the full SimConfig, which gained the `market`
+        // field — so old records recompute once, to identical values.)
+        let spec = SweepSpec::from_toml(SPEC).unwrap();
+        assert!(spec.markets.is_none());
+        let points = spec.expand().unwrap();
+        for p in &points {
+            assert!(p.cfg.market.is_default());
+            assert_eq!(p.tag("market"), "", "no market tag when not swept");
+        }
     }
 
     #[test]

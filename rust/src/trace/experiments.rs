@@ -435,6 +435,7 @@ pub fn mapping_comparison() -> (Table, Json) {
             job: &job,
             alpha,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -496,6 +497,7 @@ pub fn alpha_sweep() -> (Table, Json) {
             job: &job,
             alpha,
             market: Market::Spot,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };
@@ -654,6 +656,182 @@ pub fn dynsched_ablation() -> (Table, Json) {
         }
     }
     (t, Json::obj().set("experiment", "dynsched-ablation").set("rows", Json::Arr(rows)))
+}
+
+/// Ablation (ours, closing the ROADMAP "mapper-swap tables" item): every
+/// Initial Mapping implementation — exact, linearized MILP, the greedy
+/// cheapest/fastest baselines, uniform-random, and single-cloud — on the
+/// Table 5 configuration (TIL, all-spot, k_r = 2 h, different-VM policy,
+/// ≤1 revocation per task), isolating how much the exact solver's placement
+/// quality is worth once revocations and replacements are in play.
+pub fn mapper_ablation() -> (Table, Json) {
+    use crate::mapping::MapperKind;
+
+    let points: Vec<PointSpec> = MapperKind::all()
+        .iter()
+        .map(|&kind| {
+            let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 50);
+            cfg.n_rounds = TIL_EXTENDED_ROUNDS;
+            cfg.revocation_mean_secs = Some(7200.0);
+            cfg.dynsched_policy = DynSchedPolicy::different_vm();
+            cfg.max_revocations_per_task = Some(1);
+            cfg.mapper = kind;
+            // Same seed base as the Table 5 driver so the exact-mapper row
+            // lines up with the published table.
+            PointSpec {
+                tags: vec![("mapper".to_string(), kind.key().to_string())],
+                cfg,
+                seeds: (0..TRIALS as u64).map(|t| 50 + t).collect(),
+            }
+        })
+        .collect();
+    let stats_list = sweep::run_campaign(&points, 0).expect("campaign");
+
+    let mut t = Table::new(
+        "Ablation — Initial Mapping modules (TIL, all-spot, k_r = 2h, Table 5 config)",
+        &["Mapper", "Avg # revoc.", "Avg exec. time", "Avg total costs", "Δcost vs exact"],
+    );
+    let mut rows = Vec::new();
+    // Baseline by tag, not position — robust to MapperKind::all() ordering.
+    let exact_cost = points
+        .iter()
+        .zip(&stats_list)
+        .find(|(p, _)| p.tag("mapper") == "exact")
+        .map(|(_, s)| s.cost.mean)
+        .expect("exact mapper in the ablation grid");
+    for (p, stats) in points.iter().zip(&stats_list) {
+        let delta = if p.tag("mapper") == "exact" {
+            "—".to_string()
+        } else {
+            format!("{:+.2}%", (stats.cost.mean - exact_cost) / exact_cost * 100.0)
+        };
+        t.row(&[
+            p.tag("mapper").to_string(),
+            format!("{:.2}", stats.revocations.mean),
+            stats.exec_hms(),
+            format!("${:.2}", stats.cost.mean),
+            delta,
+        ]);
+        rows.push(
+            Json::obj()
+                .set("mapper", p.tag("mapper"))
+                .set("avg_revocations", stats.revocations.mean)
+                .set("avg_total_secs", stats.total_secs.mean)
+                .set("avg_cost", stats.cost.mean)
+                .set("cost_ci95", stats.cost.ci95),
+        );
+    }
+    (t, Json::obj().set("experiment", "mapper-ablation").set("rows", Json::Arr(rows)))
+}
+
+/// Market-sensitivity study (ours): the Table 5 configuration re-run under
+/// different spot-market models — the paper's exponential clock, an
+/// age-dependent Weibull hazard, a diurnal seasonal process, a deterministic
+/// interruption-trace replay, and a volatile price-step market with
+/// bid-priced VMs — quantifying how much the market model (not the
+/// scheduler) drives cost and makespan.
+pub fn market_sensitivity() -> (Table, Json) {
+    use crate::market::{MarketSpec, PriceSpec, RevocationSpec};
+
+    let markets: Vec<(&str, MarketSpec)> = vec![
+        ("exponential", MarketSpec::default()),
+        (
+            "weibull",
+            MarketSpec {
+                revocation: RevocationSpec::Weibull { scale_secs: 7200.0, shape: 0.7 },
+                ..MarketSpec::default()
+            },
+        ),
+        (
+            "seasonal",
+            MarketSpec {
+                revocation: RevocationSpec::Seasonal {
+                    mean_secs: 7200.0,
+                    period_secs: 14_400.0,
+                    amplitude: 0.8,
+                    phase_secs: 0.0,
+                },
+                ..MarketSpec::default()
+            },
+        ),
+        (
+            "trace-replay",
+            MarketSpec {
+                revocation: RevocationSpec::Trace {
+                    times: vec![4000.0, 4300.0, 9000.0, 16_000.0],
+                },
+                ..MarketSpec::default()
+            },
+        ),
+        (
+            "volatile-price",
+            MarketSpec {
+                price: PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.8), (10_800.0, 0.6)]),
+                ..MarketSpec::default()
+            },
+        ),
+        (
+            "bid-priced",
+            MarketSpec {
+                price: PriceSpec::Steps(vec![(0.0, 1.0), (5000.0, 1.6), (9000.0, 1.0)]),
+                bid_factor: Some(1.5),
+                ..MarketSpec::default()
+            },
+        ),
+    ];
+    let points: Vec<PointSpec> = markets
+        .iter()
+        .map(|(name, market)| {
+            let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 50);
+            cfg.n_rounds = TIL_EXTENDED_ROUNDS;
+            cfg.revocation_mean_secs = Some(7200.0);
+            cfg.dynsched_policy = DynSchedPolicy::different_vm();
+            cfg.max_revocations_per_task = Some(1);
+            cfg.market = market.clone();
+            PointSpec {
+                tags: vec![("market".to_string(), name.to_string())],
+                cfg,
+                seeds: (0..TRIALS as u64).map(|t| 50 + t).collect(),
+            }
+        })
+        .collect();
+    let stats_list = sweep::run_campaign(&points, 0).expect("campaign");
+
+    let mut t = Table::new(
+        "Market sensitivity — spot-market models (TIL, all-spot, Table 5 config)",
+        &["Market", "Avg # revoc.", "Avg exec. time", "Avg total costs", "Δcost vs exponential"],
+    );
+    let mut rows = Vec::new();
+    // Baseline by tag, not position (same rationale as mapper_ablation).
+    let base_cost = points
+        .iter()
+        .zip(&stats_list)
+        .find(|(p, _)| p.tag("market") == "exponential")
+        .map(|(_, s)| s.cost.mean)
+        .expect("exponential market in the sensitivity grid");
+    for (p, stats) in points.iter().zip(&stats_list) {
+        let delta = if p.tag("market") == "exponential" {
+            "—".to_string()
+        } else {
+            format!("{:+.2}%", (stats.cost.mean - base_cost) / base_cost * 100.0)
+        };
+        t.row(&[
+            p.tag("market").to_string(),
+            format!("{:.2}", stats.revocations.mean),
+            stats.exec_hms(),
+            format!("${:.2}", stats.cost.mean),
+            delta,
+        ]);
+        rows.push(
+            Json::obj()
+                .set("market", p.tag("market"))
+                .set("avg_revocations", stats.revocations.mean)
+                .set("avg_total_secs", stats.total_secs.mean)
+                .set("avg_cost", stats.cost.mean)
+                .set("cost_ci95", stats.cost.ci95),
+        );
+    }
+    (t, Json::obj().set("experiment", "market-sensitivity").set("rows", Json::Arr(rows)))
 }
 
 /// Table 2 / Table 9 catalog dump.

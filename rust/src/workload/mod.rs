@@ -16,11 +16,18 @@
 //!   it may backfill.
 //! * A job infeasible even on an *idle* environment (its `budget_round` /
 //!   `deadline_round` / the quotas exclude every placement) is rejected at
-//!   arrival.
+//!   arrival — unless its market's price can still change, in which case it
+//!   stays queued and admission is retried at each future price step; only
+//!   a job priced out at every remaining price level is rejected.
 //! * An admitted job runs through the standard [`crate::framework`] pipeline
 //!   with its Initial Mapping pinned to the admission-time solution and its
 //!   Dynamic Scheduler wrapped so replacement candidates are filtered by the
 //!   residual shared quota at the revocation instant.
+//! * All jobs share one market timeline: each admitted job's spot-market
+//!   model is re-anchored on the cluster clock
+//!   ([`crate::market::MarketSpec::shifted`]), so a recorded interruption
+//!   or price step hits every job by its cluster instant, not per-job
+//!   local replays.
 //! * Admission-order causality: a job's execution is a pure function of the
 //!   jobs admitted before it, so the whole workload is reproducible from its
 //!   seeds regardless of host parallelism.
@@ -55,6 +62,36 @@ use crate::mapping::problem::MappingProblem;
 use crate::mapping::MappingSolution;
 use crate::simul::SimTime;
 use crate::sweep::MetricAgg;
+
+/// Expected spot-price multiplier for one job's mapping problem at cluster
+/// instant `at_secs`: the market re-anchored on the shared cluster clock
+/// (see [`crate::market::MarketSpec::shifted`]), averaged over the same
+/// planning horizon `framework::exec` uses
+/// ([`SimConfig::planning_horizon_secs`]). Exactly 1.0 for the default
+/// market.
+fn planning_price_factor_at(cfg: &SimConfig, at_secs: f64) -> f64 {
+    cfg.market.shifted(at_secs).planning_price_factor(cfg.planning_horizon_secs())
+}
+
+/// The record of a job that was never admitted (its budget/deadline/quota
+/// excluded every placement at every reachable price level).
+fn rejected_record(jr: &JobRequest) -> JobRecord {
+    JobRecord {
+        name: jr.name.clone(),
+        arrival_secs: jr.arrival_secs,
+        admitted_at: None,
+        completed_at: None,
+        wait_secs: 0.0,
+        cost: 0.0,
+        revocations: 0,
+        rounds_completed: 0,
+        fl_exec_secs: 0.0,
+        predicted_round_makespan: 0.0,
+        predicted_round_cost: 0.0,
+        server: String::new(),
+        clients: Vec::new(),
+    }
+}
 
 /// One job in a workload: a complete simulator configuration plus its
 /// arrival instant on the shared cluster clock.
@@ -232,16 +269,18 @@ impl DynScheduler for QuotaAwareDynSched {
             candidate_set.iter().copied().filter(|v| !filtered.contains(v)).collect();
         let (selection, inner_set) =
             self.inner.select(p, map, faulty, &filtered, revoked, policy, at);
+        // Candidate set handed back on success: keep quota-blocked types as
+        // candidates for later events (their shortage is transient), but
+        // drop whatever the inner scheduler itself removed — so a
+        // remove-revoked ban is never silently undone.
+        let final_set: Vec<VmTypeId> = candidate_set
+            .iter()
+            .copied()
+            .filter(|v| inner_set.contains(v) || quota_blocked.contains(v))
+            .collect();
         match selection {
             Some(sel) => {
                 ledger.commit(self.job, sel.vm, t);
-                // Keep quota-blocked types as candidates for later events;
-                // drop only what the inner scheduler itself removed.
-                let final_set: Vec<VmTypeId> = candidate_set
-                    .iter()
-                    .copied()
-                    .filter(|v| inner_set.contains(v) || quota_blocked.contains(v))
-                    .collect();
                 (Some(sel), final_set)
             }
             None if !quota_blocked.is_empty() => {
@@ -261,7 +300,7 @@ impl DynScheduler for QuotaAwareDynSched {
                     value: p.objective_value(expected_cost, expected_makespan),
                     candidates_considered: 0,
                 };
-                (Some(sel), candidate_set.to_vec())
+                (Some(sel), final_set)
             }
             None => {
                 // Genuine exhaustion — the inner scheduler saw the full
@@ -427,6 +466,7 @@ impl Workload {
                     job: &profile,
                     alpha: jr.cfg.alpha,
                     market: jr.cfg.scenario.client_market(),
+                    spot_price_factor: planning_price_factor_at(&jr.cfg, t),
                     budget_round: jr.cfg.budget_round,
                     deadline_round: jr.cfg.deadline_round,
                 };
@@ -435,23 +475,20 @@ impl Workload {
                         solo[j] = Some(sol);
                         pending.push(j);
                     }
+                    None if jr.cfg.budget_round.is_finite()
+                        && jr.cfg.market.next_price_step_after(t).is_some() =>
+                    {
+                        // Infeasible at the *current* price level, but the
+                        // price can still change and the job is budget-
+                        // capped (prices enter feasibility only through the
+                        // budget): queue without a solo solution and let
+                        // the price-step retries re-solve at each level.
+                        pending.push(j);
+                    }
                     None => {
-                        // Infeasible even on an idle environment: reject.
-                        records[j] = Some(JobRecord {
-                            name: jr.name.clone(),
-                            arrival_secs: jr.arrival_secs,
-                            admitted_at: None,
-                            completed_at: None,
-                            wait_secs: 0.0,
-                            cost: 0.0,
-                            revocations: 0,
-                            rounds_completed: 0,
-                            fl_exec_secs: 0.0,
-                            predicted_round_makespan: 0.0,
-                            predicted_round_cost: 0.0,
-                            server: String::new(),
-                            clients: Vec::new(),
-                        });
+                        // Infeasible even on an idle environment, at a
+                        // price level that will never change: reject.
+                        records[j] = Some(rejected_record(jr));
                     }
                 }
             }
@@ -467,9 +504,12 @@ impl Workload {
                         .then(a.cmp(&b))
                 }),
                 AdmissionPolicy::ShortestMakespanFirst => order.sort_by(|&a, &b| {
-                    let ma = solo[a].as_ref().expect("pending job has solo solution").eval.makespan;
-                    let mb = solo[b].as_ref().expect("pending job has solo solution").eval.makespan;
-                    ma.total_cmp(&mb).then(a.cmp(&b))
+                    // Jobs queued without a solo solution (priced out at
+                    // arrival) sort last until a price change admits them.
+                    let m = |j: usize| {
+                        solo[j].as_ref().map_or(f64::INFINITY, |s| s.eval.makespan)
+                    };
+                    m(a).total_cmp(&m(b)).then(a.cmp(&b))
                 }),
             }
             let mut admitted_now: Vec<usize> = Vec::new();
@@ -494,6 +534,31 @@ impl Workload {
                 }
             }
             pending.retain(|j| !admitted_now.contains(j));
+
+            // A queued job's admission feasibility can change without a
+            // capacity release when its market's price moves, so always
+            // keep a retry event at the earliest future price step across
+            // pending jobs — a feasible price window between two release
+            // events must not be missed. When no events remain at all and
+            // every pending market is settled, the leftovers are priced
+            // out for good: reject them (their budget excludes every
+            // placement at every remaining price level).
+            if !pending.is_empty() {
+                let next_step = pending
+                    .iter()
+                    .filter_map(|&j| self.jobs[j].cfg.market.next_price_step_after(t))
+                    .fold(f64::INFINITY, f64::min);
+                if next_step.is_finite() {
+                    if !events.iter().any(|e| e.0 == next_step) {
+                        events.push((next_step, None));
+                    }
+                } else if events.is_empty() {
+                    for &j in &pending {
+                        records[j] = Some(rejected_record(&self.jobs[j]));
+                    }
+                    pending.clear();
+                }
+            }
         }
         anyhow::ensure!(
             pending.is_empty(),
@@ -524,32 +589,44 @@ impl Workload {
     ) -> anyhow::Result<Option<(f64, Vec<f64>)>> {
         let jr = &self.jobs[j];
         let contended = ledger.lock().expect("quota ledger poisoned").any_live_after(t);
-        let sol: Option<MappingSolution> = if !contended {
-            // Idle environment: the arrival-time solution is exact (and this
-            // path keeps `Workload::single` bit-identical to `simulate`).
+        // The cached arrival-time solution is exact on an idle environment
+        // as long as nothing repriced since arrival: always at the arrival
+        // instant itself (the `Workload::single` bit-parity path), and at
+        // any instant under a constant-price market (the planning factor is
+        // identically 1.0, so re-solving would reproduce it verbatim).
+        let reuse_solo = !contended
+            && (t == jr.arrival_secs
+                || matches!(jr.cfg.market.price, crate::market::PriceSpec::Constant));
+        let sol: Option<MappingSolution> = if reuse_solo {
             solo[j].clone()
         } else {
-            // Re-solve against the residual capacity: shrink every quota
-            // bound by the ledger's peak usage from `t` on. The reduced
-            // catalog keeps providers/regions/VM types in identical order,
-            // so the slowdown report's index keys carry over unchanged
-            // (same invariant as `coordinator::multijob`).
-            let (pprov, preg) = ledger.lock().expect("quota ledger poisoned").peak_usage(t);
+            // Re-solve at the admission instant: against the residual
+            // capacity when contended (shrink every quota bound by the
+            // ledger's peak usage from `t` on — the reduced catalog keeps
+            // providers/regions/VM types in identical order, so the
+            // slowdown report's index keys carry over unchanged, same
+            // invariant as `coordinator::multijob`), and in any case at
+            // the spot price in effect *now*, not at arrival — a queued
+            // job must not be admitted against a stale price level.
             let mut reduced = catalog.clone();
-            for (pi, prov) in reduced.providers.iter_mut().enumerate() {
-                if let Some(maxg) = prov.max_gpus {
-                    prov.max_gpus = Some(maxg.saturating_sub(pprov[pi].0));
+            if contended {
+                let (pprov, preg) =
+                    ledger.lock().expect("quota ledger poisoned").peak_usage(t);
+                for (pi, prov) in reduced.providers.iter_mut().enumerate() {
+                    if let Some(maxg) = prov.max_gpus {
+                        prov.max_gpus = Some(maxg.saturating_sub(pprov[pi].0));
+                    }
+                    if let Some(maxc) = prov.max_vcpus {
+                        prov.max_vcpus = Some(maxc.saturating_sub(pprov[pi].1));
+                    }
                 }
-                if let Some(maxc) = prov.max_vcpus {
-                    prov.max_vcpus = Some(maxc.saturating_sub(pprov[pi].1));
-                }
-            }
-            for (ri, region) in reduced.regions.iter_mut().enumerate() {
-                if let Some(maxg) = region.max_gpus {
-                    region.max_gpus = Some(maxg.saturating_sub(preg[ri].0));
-                }
-                if let Some(maxc) = region.max_vcpus {
-                    region.max_vcpus = Some(maxc.saturating_sub(preg[ri].1));
+                for (ri, region) in reduced.regions.iter_mut().enumerate() {
+                    if let Some(maxg) = region.max_gpus {
+                        region.max_gpus = Some(maxg.saturating_sub(preg[ri].0));
+                    }
+                    if let Some(maxc) = region.max_vcpus {
+                        region.max_vcpus = Some(maxc.saturating_sub(preg[ri].1));
+                    }
                 }
             }
             let profile = jr.cfg.app.profile();
@@ -559,6 +636,7 @@ impl Workload {
                 job: &profile,
                 alpha: jr.cfg.alpha,
                 market: jr.cfg.scenario.client_market(),
+                spot_price_factor: planning_price_factor_at(&jr.cfg, t),
                 budget_round: jr.cfg.budget_round,
                 deadline_round: jr.cfg.deadline_round,
             };
@@ -586,7 +664,14 @@ impl Workload {
                 offset: t,
             })
             .build();
-        let out = fw.run(&jr.cfg)?;
+        // The job simulates on its own local clock (t = 0 at admission);
+        // re-anchor the market so recorded interruptions, price steps, and
+        // the seasonal phase stay on the shared cluster timeline. A no-op
+        // for the default market and for t = 0 (the `Workload::single`
+        // bit-parity path).
+        let mut run_cfg = jr.cfg.clone();
+        run_cfg.market = jr.cfg.market.shifted(t);
+        let out = fw.run(&run_cfg)?;
         let completion = t + out.total_secs;
         let mut releases: Vec<f64> = Vec::new();
         {

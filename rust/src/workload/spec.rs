@@ -31,6 +31,12 @@
 //! arrivals = ["batch", "poisson"]
 //! budget_round = [1.0, 2.0]    # overrides every job's budget for the point
 //! deadline_round = [600.0]
+//! markets = ["exponential", "volatile"]  # overrides every job's market
+//!
+//! [[market]]                   # named spot-market models; a [[job]] may
+//! name = "volatile"            # also pin one via market = "volatile"
+//! revocation = "trace"
+//! revocation_times = [3600.0]
 //! ```
 //!
 //! Per-trial seeds: trial `k` (global index over the expansion) gets
@@ -43,6 +49,7 @@ use std::path::Path;
 use super::{JobRequest, Workload, WorkloadAgg};
 use crate::coordinator::multijob::AdmissionPolicy;
 use crate::coordinator::JobSpec;
+use crate::market::{self, MarketSpec};
 use crate::simul::{Rng, SimTime};
 use crate::util::bench::Table;
 use crate::util::tomlmini::{self, Value};
@@ -94,6 +101,9 @@ pub struct WorkloadSpec {
     pub arrivals_axis: Option<Vec<ArrivalProcess>>,
     pub budget_axis: Option<Vec<f64>>,
     pub deadline_axis: Option<Vec<f64>>,
+    /// Optional axis: named spot-market models overriding every job's
+    /// market for the point (`None` = not swept).
+    pub markets_axis: Option<Vec<(String, MarketSpec)>>,
 }
 
 /// One expanded campaign point: axis tags plus one fully-seeded [`Workload`]
@@ -169,6 +179,15 @@ fn parse_arrival(
 
 impl WorkloadSpec {
     pub fn from_toml(text: &str) -> anyhow::Result<WorkloadSpec> {
+        Self::from_toml_with_base(text, None)
+    }
+
+    /// [`Self::from_toml`] with the spec file's directory for resolving
+    /// relative `[[market]]` trace-file references.
+    pub fn from_toml_with_base(
+        text: &str,
+        base: Option<&Path>,
+    ) -> anyhow::Result<WorkloadSpec> {
         let root = tomlmini::parse(text)?;
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
             match root.get(key).and_then(|v| v.as_int()) {
@@ -179,7 +198,10 @@ impl WorkloadSpec {
         let trials = get_nonneg("trials")?.unwrap_or(1);
         anyhow::ensure!(trials > 0, "trials must be positive");
 
-        // --- job templates ([[job]] with optional count/name) ---
+        // --- named spot-market definitions ([[market]] tables) ---
+        let market_defs = market::spec::named_markets(&root, base)?;
+
+        // --- job templates ([[job]] with optional count/name/market) ---
         let job_tables = root
             .get("job")
             .and_then(|v| v.as_table_array())
@@ -194,8 +216,24 @@ impl WorkloadSpec {
                      (seeds derive from the workload seed)"
                 );
             }
-            let spec = JobSpec::from_table(tbl)
+            // Per-job market: a name resolved against the [[market]] defs
+            // (stripped before JobSpec parsing, which only accepts tables).
+            let job_market = match tbl.get("market").and_then(|v| v.as_str()) {
+                None => None,
+                Some(name) => Some(
+                    market::spec::resolve_market(name, &market_defs)
+                        .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?,
+                ),
+            };
+            let mut body = tbl.clone();
+            if job_market.is_some() {
+                body.remove("market");
+            }
+            let mut spec = JobSpec::from_table_with_base(&body, base)
                 .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?;
+            if let Some(m) = job_market {
+                spec.config.market = m;
+            }
             let count = match tbl.get("count").and_then(|v| v.as_int()) {
                 None => 1,
                 Some(c) if c >= 1 => c as usize,
@@ -277,6 +315,21 @@ impl WorkloadSpec {
         };
         let budget_axis = float_axis("budget_round")?;
         let deadline_axis = float_axis("deadline_round")?;
+        let markets_axis = match axis_values(grid, "markets") {
+            None => None,
+            Some(items) => Some(
+                items
+                    .into_iter()
+                    .map(|v| {
+                        let name = v
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("grid.markets entries are strings"))?;
+                        market::spec::resolve_market(name, &market_defs)
+                            .map(|m| (name.to_string(), m))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
 
         Ok(WorkloadSpec {
             name: root
@@ -294,13 +347,14 @@ impl WorkloadSpec {
             arrivals_axis,
             budget_axis,
             deadline_axis,
+            markets_axis,
         })
     }
 
     pub fn from_file(path: &Path) -> anyhow::Result<WorkloadSpec> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Self::from_toml(&text)
+        Self::from_toml_with_base(&text, path.parent())
     }
 
     /// Number of campaign points (each runs `trials` workload realizations).
@@ -309,6 +363,7 @@ impl WorkloadSpec {
             * self.arrivals_axis.as_ref().map_or(1, |v| v.len())
             * self.budget_axis.as_ref().map_or(1, |v| v.len())
             * self.deadline_axis.as_ref().map_or(1, |v| v.len())
+            * self.markets_axis.as_ref().map_or(1, |v| v.len())
     }
 
     /// Build one fully-seeded workload realization.
@@ -318,6 +373,7 @@ impl WorkloadSpec {
         arrival: &ArrivalProcess,
         budget: Option<f64>,
         deadline: Option<f64>,
+        market: Option<&MarketSpec>,
         trial_seed: u64,
     ) -> Workload {
         let n = self.jobs.len();
@@ -349,6 +405,9 @@ impl WorkloadSpec {
                 if let Some(d) = deadline {
                     cfg.deadline_round = d;
                 }
+                if let Some(m) = market {
+                    cfg.market = m.clone();
+                }
                 JobRequest { name: tmpl.name.clone(), arrival_secs: times[i], cfg }
             })
             .collect();
@@ -372,30 +431,46 @@ impl WorkloadSpec {
             Some(v) => v.iter().copied().map(Some).collect(),
             None => vec![None],
         };
+        let markets: Vec<Option<&(String, MarketSpec)>> = match &self.markets_axis {
+            Some(v) => v.iter().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for &admission in &admissions {
             for arrival in &arrivals {
                 for &budget in &budgets {
                     for &deadline in &deadlines {
-                        let trials: Vec<Workload> = (0..self.trials)
-                            .map(|_| {
-                                let s = root.split_seed(global_trial);
-                                global_trial += 1;
-                                self.instantiate(admission, arrival, budget, deadline, s)
-                            })
-                            .collect();
-                        let mut tags = vec![
-                            ("admission".to_string(), admission.key().to_string()),
-                            ("arrival".to_string(), arrival.kind_key().to_string()),
-                        ];
-                        if let Some(b) = budget {
-                            tags.push(("budget_round".to_string(), format!("{b}")));
+                        for &mkt in &markets {
+                            let trials: Vec<Workload> = (0..self.trials)
+                                .map(|_| {
+                                    let s = root.split_seed(global_trial);
+                                    global_trial += 1;
+                                    self.instantiate(
+                                        admission,
+                                        arrival,
+                                        budget,
+                                        deadline,
+                                        mkt.map(|(_, m)| m),
+                                        s,
+                                    )
+                                })
+                                .collect();
+                            let mut tags = vec![
+                                ("admission".to_string(), admission.key().to_string()),
+                                ("arrival".to_string(), arrival.kind_key().to_string()),
+                            ];
+                            if let Some(b) = budget {
+                                tags.push(("budget_round".to_string(), format!("{b}")));
+                            }
+                            if let Some(d) = deadline {
+                                tags.push(("deadline_round".to_string(), format!("{d}")));
+                            }
+                            if let Some((name, _)) = mkt {
+                                tags.push(("market".to_string(), name.clone()));
+                            }
+                            points.push(WorkloadPoint { tags, trials });
                         }
-                        if let Some(d) = deadline {
-                            tags.push(("deadline_round".to_string(), format!("{d}")));
-                        }
-                        points.push(WorkloadPoint { tags, trials });
                     }
                 }
             }
@@ -465,7 +540,7 @@ pub fn render_json(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Worklo
 /// Render campaign results as CSV (one row per point).
 pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     let mut out = String::new();
-    out.push_str("admission,arrival,budget_round,deadline_round,trials");
+    out.push_str("admission,arrival,budget_round,deadline_round,market,trials");
     for metric in
         ["makespan_secs", "mean_wait_secs", "total_cost", "admitted", "queued", "rejected"]
     {
@@ -476,11 +551,12 @@ pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     out.push('\n');
     for (p, a) in points.iter().zip(aggs) {
         out.push_str(&format!(
-            "{},{},{},{},{}",
+            "{},{},{},{},{},{}",
             p.tag("admission"),
             p.tag("arrival"),
             p.tag("budget_round"),
             p.tag("deadline_round"),
+            p.tag("market"),
             a.trials
         ));
         for agg in [&a.makespan, &a.mean_wait, &a.total_cost, &a.admitted, &a.queued, &a.rejected]
@@ -628,6 +704,47 @@ budget_round = 5.0
                 }
             }
         }
+    }
+
+    #[test]
+    fn market_definitions_apply_per_job_and_per_point() {
+        let text = r#"
+[[market]]
+name = "volatile"
+revocation = "trace"
+revocation_times = [3600.0]
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+market = "volatile"
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+"#;
+        let spec = WorkloadSpec::from_toml(text).unwrap();
+        use crate::market::RevocationSpec;
+        assert_eq!(
+            spec.jobs[0].cfg.market.revocation,
+            RevocationSpec::Trace { times: vec![3600.0] }
+        );
+        assert!(spec.jobs[1].cfg.market.is_default());
+        // The grid axis overrides every job's market for the point.
+        let gridded = format!("{text}\n[grid]\nmarkets = [\"exponential\", \"volatile\"]\n");
+        let spec = WorkloadSpec::from_toml(&gridded).unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].tag("market"), "exponential");
+        assert_eq!(points[1].tag("market"), "volatile");
+        for j in &points[0].trials[0].jobs {
+            assert!(j.cfg.market.is_default());
+        }
+        for j in &points[1].trials[0].jobs {
+            assert_eq!(j.cfg.market.revocation.key(), "trace");
+        }
+        // Unknown market names are rejected at the job level.
+        assert!(WorkloadSpec::from_toml("[[job]]\napp = \"til\"\nmarket = \"nope\"\n").is_err());
     }
 
     #[test]

@@ -100,6 +100,7 @@ mod legacy {
             job: &job,
             alpha: cfg.alpha,
             market: cfg.scenario.client_market(),
+            spot_price_factor: 1.0,
             budget_round: f64::INFINITY,
             deadline_round: f64::INFINITY,
         };

@@ -158,6 +158,7 @@ fn solvers_agree_on_reduced_cloudlab() {
             job: &job,
             alpha,
             market: Market::OnDemand,
+            spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
         };

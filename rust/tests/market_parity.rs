@@ -1,0 +1,409 @@
+//! Market-subsystem parity and end-to-end tests.
+//!
+//! The hard guarantee: the **default market** (constant price + exponential
+//! `k_r` revocations) reproduces the pre-market `coordinator::simulate`
+//! outputs bit-identically — the revocation draw comes from the same stream
+//! position with the same expression, and constant-price billing is the
+//! historical fixed-rate arithmetic (the frozen pre-refactor simulator in
+//! `tests/framework_parity.rs` pins the same thing from the event-loop
+//! side). On top of that: non-default markets run end-to-end through the
+//! campaign engine with segment-accurate billing and the same
+//! byte-identical-across-`--jobs` determinism sweeps already guarantee.
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{simulate, JobSpec, Scenario, SimConfig, SimOutcome};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::market::{MarketSpec, PriceSpec, RevocationSpec};
+use multi_fedls::sweep::{self, SweepSpec};
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+    assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.vm_cost.to_bits(), b.vm_cost.to_bits());
+    assert_eq!(a.egress_cost.to_bits(), b.egress_cost.to_bits());
+    assert_eq!(a.n_revocations, b.n_revocations);
+    assert_eq!(a.rounds_completed, b.rounds_completed);
+    assert_eq!(a.initial_server, b.initial_server);
+    assert_eq!(a.initial_clients, b.initial_clients);
+}
+
+/// Table 5's grid base (the heaviest spot/revocation path).
+fn table5_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+    cfg.n_rounds = 40;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    cfg
+}
+
+#[test]
+fn explicit_default_market_is_bit_identical_to_the_implicit_one() {
+    // A spec that spells the default market out (exponential + constant
+    // price + no bid) must not change a single bit of any outcome vs a
+    // config that never mentions markets — across spot revocations,
+    // replacements, and billing.
+    for seed in [50, 60] {
+        let implicit = table5_cfg(seed);
+        let mut explicit = table5_cfg(seed);
+        explicit.market = MarketSpec {
+            revocation: RevocationSpec::Exponential,
+            price: PriceSpec::Constant,
+            bid_factor: None,
+        };
+        assert!(explicit.market.is_default());
+        let a = simulate(&implicit).unwrap();
+        let b = simulate(&explicit).unwrap();
+        assert_outcomes_identical(&a, &b);
+        assert!(a.n_revocations > 0, "config must actually exercise the spot path");
+    }
+}
+
+#[test]
+fn price_steps_bill_segment_accurately_end_to_end() {
+    // Hand-computable fixture: all-spot, revocations disabled, so every VM
+    // is provisioned at t = 0 and terminated together at t = end. With a
+    // one-step doubling at T, the spot bill must be exactly
+    //   vm_cost_const + rate_sum · (end − T),   rate_sum = vm_cost_const/end
+    // and the timeline (prices never change time) must match bit for bit.
+    let mut base = SimConfig::new(apps::til(), Scenario::AllSpot, 42);
+    base.checkpoints_enabled = false;
+    let const_run = simulate(&base).unwrap();
+    assert_eq!(const_run.n_revocations, 0);
+    let end = const_run.total_secs;
+    let t_step = end * 0.25;
+
+    let mut stepped = base.clone();
+    stepped.market = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.0), (t_step, 2.0)]),
+        ..MarketSpec::default()
+    };
+    let step_run = simulate(&stepped).unwrap();
+    // Same placement and timeline (planning sees a scaled spot rate, but
+    // the uniform-ish factor does not dethrone the optimal placement).
+    assert_eq!(step_run.initial_server, const_run.initial_server);
+    assert_eq!(step_run.initial_clients, const_run.initial_clients);
+    assert_eq!(step_run.total_secs.to_bits(), const_run.total_secs.to_bits());
+    assert_eq!(step_run.egress_cost.to_bits(), const_run.egress_cost.to_bits());
+    let rate_sum = const_run.vm_cost / end;
+    let expected = const_run.vm_cost + rate_sum * (end - t_step);
+    assert!(
+        (step_run.vm_cost - expected).abs() < 1e-9,
+        "segment-accurate bill: got {}, expected {expected}",
+        step_run.vm_cost
+    );
+
+    // A flat 1.25× series scales the whole spot bill by exactly 1.25.
+    let mut flat = base.clone();
+    flat.market = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.25)]),
+        ..MarketSpec::default()
+    };
+    let flat_run = simulate(&flat).unwrap();
+    assert_eq!(flat_run.total_secs.to_bits(), const_run.total_secs.to_bits());
+    assert!((flat_run.vm_cost - 1.25 * const_run.vm_cost).abs() < 1e-9);
+}
+
+#[test]
+fn on_demand_jobs_are_immune_to_the_price_series() {
+    // An all-on-demand run must be bit-identical under any price series.
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllOnDemand, 42);
+    cfg.checkpoints_enabled = false;
+    let plain = simulate(&cfg).unwrap();
+    let mut priced = cfg.clone();
+    priced.market = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 9.0), (100.0, 0.01)]),
+        ..MarketSpec::default()
+    };
+    let wild = simulate(&priced).unwrap();
+    assert_outcomes_identical(&plain, &wild);
+}
+
+#[test]
+fn bid_priced_spot_vms_are_revoked_at_the_price_crossing() {
+    // Process revocations off (k_r = None); the only revocation source is
+    // the price stepping over the 1.5× bid — and it must actually fire.
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 42);
+    cfg.n_rounds = 20;
+    cfg.checkpoints_enabled = true;
+    cfg.market = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.0), (4000.0, 1.8)]),
+        bid_factor: Some(1.5),
+        ..MarketSpec::default()
+    };
+    let out = simulate(&cfg).unwrap();
+    assert!(out.n_revocations >= 1, "the crossing must revoke someone");
+    assert!(
+        out.events.iter().any(|e| (e.at.secs() - 4000.0).abs() < 1e-9
+            && e.what.starts_with("revocation:")),
+        "a revocation lands exactly on the crossing instant"
+    );
+    assert_eq!(out.rounds_completed, 20, "the dynamic scheduler recovers");
+    // Determinism: the bid market is a pure function of the config.
+    let again = simulate(&cfg).unwrap();
+    assert_outcomes_identical(&out, &again);
+}
+
+#[test]
+fn weibull_and_seasonal_markets_run_deterministically() {
+    for market in [
+        MarketSpec {
+            revocation: RevocationSpec::Weibull { scale_secs: 7200.0, shape: 0.7 },
+            ..MarketSpec::default()
+        },
+        MarketSpec {
+            revocation: RevocationSpec::Seasonal {
+                mean_secs: 5000.0,
+                period_secs: 10_000.0,
+                amplitude: 0.8,
+                phase_secs: 0.0,
+            },
+            ..MarketSpec::default()
+        },
+    ] {
+        let mut cfg = table5_cfg(50);
+        cfg.market = market;
+        let a = simulate(&cfg).unwrap();
+        let b = simulate(&cfg).unwrap();
+        assert_outcomes_identical(&a, &b);
+        assert_eq!(a.rounds_completed, 40);
+    }
+}
+
+/// Satellite guarantee: trace-replay and seasonal market campaigns produce
+/// byte-identical campaign JSON across `--jobs 1` and `--jobs 4` — the same
+/// determinism contract every sweep already has.
+#[test]
+fn market_campaigns_are_byte_identical_across_worker_counts() {
+    let spec = SweepSpec::from_toml(
+        r#"
+name = "market-determinism"
+trials = 2
+seed = 7
+rounds = 20
+max_revocations_per_task = 1
+
+[grid]
+apps = ["til"]
+scenarios = ["all-spot"]
+revocation_mean_secs = [7200.0]
+policies = ["different-vm"]
+markets = ["exponential", "replay", "diurnal"]
+
+[[market]]
+name = "replay"
+revocation = "trace"
+revocation_times = [3000.0, 3400.0, 9000.0]
+price = "steps"
+price_times = [0.0, 5000.0]
+price_factors = [1.0, 1.6]
+
+[[market]]
+name = "diurnal"
+revocation = "seasonal"
+mean_secs = 7200.0
+period_secs = 14400.0
+amplitude = 0.7
+"#,
+    )
+    .unwrap();
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 3);
+
+    let s1 = sweep::run_campaign(&points, 1).unwrap();
+    let s4 = sweep::run_campaign(&points, 4).unwrap();
+    let j1 = sweep::spec::render_json(&spec, &points, &s1).to_string_pretty();
+    let j4 = sweep::spec::render_json(&spec, &points, &s4).to_string_pretty();
+    assert_eq!(j1, j4, "campaign JSON must be byte-identical across --jobs");
+    let c1 = sweep::spec::render_csv(&points, &s1);
+    let c4 = sweep::spec::render_csv(&points, &s4);
+    assert_eq!(c1, c4);
+    assert!(c1.lines().next().unwrap().contains(",market,"), "market column rendered");
+
+    // The trace-replay point actually revoked something (instants land
+    // inside the execution window) and costs diverge from the default
+    // market — the campaign exercised the new subsystem, not a no-op path.
+    let replay = &s1[1];
+    assert!(replay.revocations.mean > 0.0, "trace instants must hit the run");
+    assert_ne!(
+        s1[0].cost.mean.to_bits(),
+        replay.cost.mean.to_bits(),
+        "replay market must reprice the campaign"
+    );
+}
+
+#[test]
+fn workload_market_campaign_runs_end_to_end() {
+    // The multi-job engine under a markets grid axis: named trace-replay
+    // market vs the default, byte-identical across worker counts, with the
+    // recorded interruption actually revoking a running job's VM (which
+    // returns its capacity to the shared quota ledger).
+    use multi_fedls::workload::{spec as wspec, WorkloadSpec};
+    let spec = WorkloadSpec::from_toml(
+        r#"
+name = "wl-market"
+seed = 4
+trials = 2
+
+[[market]]
+name = "replay"
+revocation = "trace"
+revocation_times = [1500.0]
+
+[[job]]
+app = "til-aws-gcp"
+count = 2
+rounds = 3
+scenario = "all-spot"
+checkpoints = false
+
+[grid]
+markets = ["exponential", "replay"]
+"#,
+    )
+    .unwrap();
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 2);
+    let a = wspec::run_points(&points, 1).unwrap();
+    let b = wspec::run_points(&points, 4).unwrap();
+    let ja = wspec::render_json(&spec, &points, &a).to_string_pretty();
+    let jb = wspec::render_json(&spec, &points, &b).to_string_pretty();
+    assert_eq!(ja, jb, "workload market campaign must be --jobs invariant");
+    // Every job completes in both points; the replay point sees the
+    // recorded interruption.
+    assert_eq!(a[0].admitted.mean, 2.0);
+    assert_eq!(a[1].admitted.mean, 2.0);
+    let replay_revocations: f64 = a[1].jobs.iter().map(|j| j.revocations.mean).sum();
+    assert!(replay_revocations > 0.0, "the recorded interruption must fire");
+}
+
+#[test]
+fn price_spiked_job_queues_until_the_price_drops() {
+    // A budget-capped pure-cost job (α = 1) arrives while the spot price is
+    // spiked 4×: no placement fits the budget at that price, so it queues
+    // (not rejected) and is admitted at the recorded step where the market
+    // settles; under a market that never settles it is rejected instead.
+    use multi_fedls::workload::{spec as wspec, WorkloadSpec};
+    let mut probe = SimConfig::new(apps::til_aws_gcp(), Scenario::AllSpot, 1);
+    probe.checkpoints_enabled = false;
+    probe.alpha = 1.0; // the mapper returns the cheapest placement
+    let baseline = simulate(&probe).unwrap();
+    // Feasible at the base price, infeasible under any placement at 4×.
+    let budget = baseline.predicted_round_cost * 1.05;
+    let spec_for = |price_times: &str, price_factors: &str| {
+        format!(
+            r#"
+name = "wl-price-queue"
+seed = 2
+
+[[market]]
+name = "spiky"
+price = "steps"
+price_times = [{price_times}]
+price_factors = [{price_factors}]
+
+[arrival]
+kind = "trace"
+times = [100.0]
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+scenario = "all-spot"
+checkpoints = false
+alpha = 1.0
+market = "spiky"
+budget_round = {budget}
+"#
+        )
+    };
+    // Spike until t = 3000, then back to the base price.
+    let spec = WorkloadSpec::from_toml(&spec_for("0.0, 3000.0", "4.0, 1.0")).unwrap();
+    let aggs = wspec::run_points(&spec.expand().unwrap(), 1).unwrap();
+    assert_eq!(aggs[0].rejected.mean, 0.0, "spiked arrival must queue, not reject");
+    assert_eq!(aggs[0].admitted.mean, 1.0);
+    assert!(aggs[0].mean_wait.mean > 2000.0, "admitted at the price step, not at arrival");
+
+    // A market that stays spiked forever prices the job out for good.
+    let spec = WorkloadSpec::from_toml(&spec_for("0.0", "4.0")).unwrap();
+    let aggs = wspec::run_points(&spec.expand().unwrap(), 1).unwrap();
+    assert_eq!(aggs[0].rejected.mean, 1.0);
+}
+
+#[test]
+fn workload_markets_share_the_cluster_clock() {
+    // Two identical jobs arriving at cluster 0 and 4000 under one recorded
+    // interruption at cluster 1500: it hits the early job's VMs, but is in
+    // the past for the late job — whose local market is re-anchored on the
+    // shared timeline at admission (`MarketSpec::shifted`), not replayed
+    // from its own local zero.
+    use multi_fedls::workload::{spec as wspec, WorkloadSpec};
+    let spec = WorkloadSpec::from_toml(
+        r#"
+name = "wl-clock"
+seed = 1
+
+[[market]]
+name = "replay"
+revocation = "trace"
+revocation_times = [1500.0]
+
+[arrival]
+kind = "trace"
+times = [0.0, 4000.0]
+
+[[job]]
+app = "til-aws-gcp"
+count = 2
+rounds = 3
+scenario = "all-spot"
+checkpoints = false
+market = "replay"
+"#,
+    )
+    .unwrap();
+    let points = spec.expand().unwrap();
+    let aggs = wspec::run_points(&points, 1).unwrap();
+    let jobs = &aggs[0].jobs;
+    assert_eq!(jobs.len(), 2);
+    assert!(jobs[0].revocations.mean > 0.0, "cluster-1500 interruption hits the early job");
+    assert_eq!(jobs[1].revocations.mean, 0.0, "cluster 1500 is in the late job's past");
+}
+
+#[test]
+fn shipped_market_specs_parse_and_run() {
+    // The CI smoke spec (named markets + trace files resolved relative to
+    // configs/) and the seasonal job spec must load and execute.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let spec = SweepSpec::from_file(&dir.join("market-smoke.toml")).unwrap();
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 2);
+    assert_eq!(points[1].tag("market"), "volatile");
+    assert_eq!(points[1].cfg.market.revocation.key(), "trace");
+    assert_eq!(points[1].cfg.market.bid_factor, Some(1.2));
+    let stats = sweep::run_campaign(&points, 0).unwrap();
+    assert!(stats[1].revocations.mean > 0.0, "the recorded interruptions fire");
+
+    let job = JobSpec::from_file(&dir.join("job-til-seasonal.toml")).unwrap();
+    assert_eq!(job.config.market.revocation.key(), "seasonal");
+}
+
+#[test]
+fn job_spec_market_tables_parse_and_reject_unknown_keys() {
+    let spec = JobSpec::from_toml(
+        "app = \"til\"\n\n[market]\nrevocation = \"weibull\"\nscale_secs = 7200.0\nshape = 0.7\n",
+    )
+    .unwrap();
+    assert_eq!(
+        spec.config.market.revocation,
+        RevocationSpec::Weibull { scale_secs: 7200.0, shape: 0.7 }
+    );
+    // Unknown keys inside [market] are named in the error.
+    let err = JobSpec::from_toml("app = \"til\"\n\n[market]\nwhoops = 3\n")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown key `whoops`"), "{err}");
+    // Named-market references belong to workload specs.
+    assert!(JobSpec::from_toml("app = \"til\"\nmarket = \"volatile\"\n").is_err());
+}
