@@ -64,14 +64,19 @@ fn main() {
         clients: vec![mc.catalog.vm_by_id("vm126").unwrap(); 4],
     };
     let all: Vec<_> = mc.catalog.vm_ids().collect();
+    let market = multi_fedls::market::MarketSpec::default();
     bench("dynsched::select_instance", Duration::from_secs(2), 100, || {
         black_box(multi_fedls::dynsched::select_instance(
-            &p,
-            &map,
-            multi_fedls::dynsched::FaultyTask::Client(0),
-            &all,
-            map.clients[0],
-            multi_fedls::dynsched::DynSchedPolicy::different_vm(),
+            &multi_fedls::dynsched::RevocationCtx {
+                problem: &p,
+                map: &map,
+                faulty: multi_fedls::dynsched::FaultyTask::Client(0),
+                candidates: &all,
+                revoked: map.clients[0],
+                policy: multi_fedls::dynsched::DynSchedPolicy::different_vm(),
+                at: multi_fedls::simul::SimTime::ZERO,
+                market: multi_fedls::market::MarketView::new(&market),
+            },
         ));
     });
 }

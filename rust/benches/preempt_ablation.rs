@@ -1,0 +1,8 @@
+//! Regenerates the workload-scheduling ablation: no-preempt vs
+//! priority-preempt vs fair-share on a contended AWS+GCP workload (four
+//! GPU-bound low-priority jobs plus one high-priority late arrival).
+fn main() {
+    let (table, json) = multi_fedls::trace::preempt_ablation();
+    table.print();
+    println!("{}", json.to_string_compact());
+}

@@ -1,4 +1,4 @@
-//! Plugging a custom Initial Mapping module into the `Framework` pipeline.
+//! Plugging custom modules into the `Framework` pipeline.
 //!
 //! Implements `InitialMapper` for a "cost-only" policy that reuses the
 //! exact solver with the cost/makespan weight forced to α = 1.0 — i.e. a
@@ -7,15 +7,25 @@
 //! three stacks: the default exact mapper, the custom module, and the
 //! built-in cheapest-rate baseline selected by `MapperKind`.
 //!
+//! Also implements a custom `DynScheduler` against the `RevocationCtx`
+//! context struct: the single argument carries the mapping problem, the
+//! current placement, the revocation instant, and a read-only `MarketView`
+//! of the job's price series, so a replacement policy can be market-aware
+//! without any signature change — here, restarts during a spot price spike
+//! ban the revoked type even when the configured policy would allow it.
+//!
 //! ```bash
 //! cargo run --release --example custom_mapper
 //! ```
 
 use multi_fedls::apps;
+use multi_fedls::cloud::VmTypeId;
 use multi_fedls::coordinator::{Scenario, SimConfig, SimOutcome};
-use multi_fedls::framework::{Framework, InitialMapper};
+use multi_fedls::dynsched::{self, DynSchedPolicy, RevocationCtx, Selection};
+use multi_fedls::framework::{DynScheduler, Framework, InitialMapper};
 use multi_fedls::mapping::problem::MappingProblem;
 use multi_fedls::mapping::{self, MapperKind, MappingSolution};
+use multi_fedls::market::{MarketSpec, PriceSpec};
 use multi_fedls::simul::SimTime;
 
 /// A drop-in Initial Mapping module: exact solve with α pinned to 1.0
@@ -43,6 +53,28 @@ impl InitialMapper for CostOnlyMapper {
         // comparable with the other mappers.
         let eval = p.evaluate(&sol.mapping);
         Some(MappingSolution { mapping: sol.mapping, eval, nodes: sol.nodes })
+    }
+}
+
+/// A drop-in Dynamic Scheduler: Algorithm 3, but price-aware — when the
+/// spot price at the revocation instant has spiked above 1.2× the base
+/// rate, the revoked type is removed from the candidate set regardless of
+/// the configured policy (a spiking type is the likeliest next eviction).
+/// `RevocationCtx` is `Copy`, so overriding one field is one struct literal.
+struct PriceAwareDynSched;
+
+impl DynScheduler for PriceAwareDynSched {
+    fn name(&self) -> &'static str {
+        "price-aware"
+    }
+
+    fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+        let policy = if ctx.market.price_factor_at(ctx.at) > 1.2 {
+            DynSchedPolicy::different_vm()
+        } else {
+            ctx.policy
+        };
+        dynsched::select_instance(&RevocationCtx { policy, ..*ctx })
     }
 }
 
@@ -82,5 +114,20 @@ fn main() -> anyhow::Result<()> {
         default_out.total_cost - custom_out.total_cost,
         (custom_out.fl_exec_secs - default_out.fl_exec_secs) / default_out.fl_exec_secs * 100.0
     );
+
+    // 4. A custom Dynamic Scheduler on a spot run with a price spike: the
+    //    context struct hands the policy the price series (`ctx.market`),
+    //    so replacements made during the spike ban the revoked type.
+    let mut spot_cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 42);
+    spot_cfg.checkpoints_enabled = false;
+    spot_cfg.revocation_mean_secs = Some(7200.0);
+    spot_cfg.dynsched_policy = DynSchedPolicy::same_vm_allowed();
+    spot_cfg.market = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.5)]),
+        ..MarketSpec::default()
+    };
+    let spot_out = Framework::builder().dynsched(PriceAwareDynSched).build().run(&spot_cfg)?;
+    report("price-aware spot", &spot_out);
+    println!("spot run saw {} revocation(s) under the price-aware policy", spot_out.n_revocations);
     Ok(())
 }

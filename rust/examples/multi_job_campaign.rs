@@ -12,7 +12,7 @@
 //! ```
 
 use multi_fedls::apps;
-use multi_fedls::coordinator::multijob::AdmissionPolicy;
+use multi_fedls::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
 use multi_fedls::coordinator::{Scenario, SimConfig};
 use multi_fedls::simul::SimTime;
 use multi_fedls::workload::{JobRequest, Workload};
@@ -24,22 +24,23 @@ fn jobs() -> Vec<JobRequest> {
         let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllSpot, 100 + i);
         cfg.revocation_mean_secs = Some(7200.0);
         cfg.max_revocations_per_task = Some(1);
-        out.push(JobRequest {
-            name: format!("prod-{i}"),
-            arrival_secs: 600.0 * i as f64,
-            cfg,
-        });
+        out.push(JobRequest::new(format!("prod-{i}"), 600.0 * i as f64, cfg));
     }
     // One on-demand job that must finish each round within 20 minutes.
     let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, 200);
     cfg.checkpoints_enabled = false;
     cfg.deadline_round = 1200.0;
-    out.push(JobRequest { name: "batch".into(), arrival_secs: 300.0, cfg });
+    out.push(JobRequest::new("batch", 300.0, cfg));
     out
 }
 
 fn run(admission: AdmissionPolicy) -> anyhow::Result<()> {
-    let workload = Workload { name: "example".into(), jobs: jobs(), admission };
+    let workload = Workload {
+        name: "example".into(),
+        jobs: jobs(),
+        admission,
+        scheduler: SchedulerPolicy::NoPreempt,
+    };
     let out = workload.run()?;
     println!("=== admission = {admission:?} ===");
     println!(

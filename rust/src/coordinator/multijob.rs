@@ -44,6 +44,42 @@ impl AdmissionPolicy {
     }
 }
 
+/// Workload-level dynamic-scheduling policy: what the workload engine may
+/// do *beyond* ordering admissions when quota is short. Selects one of the
+/// built-in [`crate::workload::WorkloadScheduler`] implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerPolicy {
+    /// Admit-and-run-to-completion (the pre-preemption engine, bit-identical).
+    #[default]
+    NoPreempt,
+    /// Higher-priority queued jobs may checkpoint-preempt the
+    /// lowest-priority running job when the quota is short; preempted jobs
+    /// resume from their freshest checkpoint, not from scratch.
+    PriorityPreempt,
+    /// Deficit-weighted round-robin over tenants at every release event.
+    FairShare,
+}
+
+impl SchedulerPolicy {
+    /// Stable config-file key (workload specs and grid axes).
+    pub fn key(self) -> &'static str {
+        match self {
+            SchedulerPolicy::NoPreempt => "no-preempt",
+            SchedulerPolicy::PriorityPreempt => "priority-preempt",
+            SchedulerPolicy::FairShare => "fair-share",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<SchedulerPolicy> {
+        match key {
+            "no-preempt" => Some(SchedulerPolicy::NoPreempt),
+            "priority-preempt" => Some(SchedulerPolicy::PriorityPreempt),
+            "fair-share" => Some(SchedulerPolicy::FairShare),
+            _ => None,
+        }
+    }
+}
+
 /// One admitted job: its placement plus the quota it holds.
 #[derive(Debug, Clone)]
 pub struct AdmittedJob {

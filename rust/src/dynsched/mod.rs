@@ -22,6 +22,8 @@
 use crate::cloud::VmTypeId;
 use crate::mapping::problem::MappingProblem;
 use crate::mapping::rank;
+use crate::market::MarketView;
+use crate::simul::SimTime;
 
 /// Which task failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +56,38 @@ impl DynSchedPolicy {
     pub fn same_vm_allowed() -> Self {
         Self { remove_revoked: false }
     }
+}
+
+/// Everything a Dynamic Scheduler may consult when picking a replacement
+/// for one revoked task — the single argument of
+/// [`crate::framework::DynScheduler::select`] and [`select_instance`].
+///
+/// A context struct instead of positional arguments so the API can grow
+/// without breaking every implementation: `at` (the revocation instant) and
+/// `market` (read access to the job's price series, the first step toward
+/// market-aware replacement policies) were both later additions that now
+/// ride along for free. All fields are borrows or `Copy`, and the struct
+/// itself is `Copy`, so wrappers can cheaply re-issue a context with one
+/// field swapped (`RevocationCtx { candidates: &filtered, ..*ctx }` — how
+/// the workload engine's quota filter narrows the candidate set).
+#[derive(Clone, Copy)]
+pub struct RevocationCtx<'a> {
+    /// The job's mapping problem (catalog snapshot, slowdowns, objective).
+    pub problem: &'a MappingProblem<'a>,
+    /// Where every task currently runs.
+    pub map: &'a CurrentMap,
+    /// Which task was revoked.
+    pub faulty: FaultyTask,
+    /// The task's current candidate set `I_t`.
+    pub candidates: &'a [VmTypeId],
+    /// The revoked VM type.
+    pub revoked: VmTypeId,
+    /// Algorithm 3's behaviour knobs.
+    pub policy: DynSchedPolicy,
+    /// The revocation instant on the caller's simulation clock.
+    pub at: SimTime,
+    /// Read-only view of the job's spot market (same clock as `at`).
+    pub market: MarketView<'a>,
 }
 
 /// Algorithm 1: Makespan Re-calculation.
@@ -139,23 +173,17 @@ pub struct Selection {
 
 /// Algorithm 3: Instance Selection.
 ///
-/// `candidate_set` is `I_t`, the current candidate instances for the task
+/// `ctx.candidates` is `I_t`, the current candidate instances for the task
 /// (initially all catalog VMs; shrinks as types are removed after
 /// revocations when the policy says so). Returns the chosen VM and the new
 /// candidate set (with the revoked VM removed if the policy demands it), or
 /// None when the set is exhausted.
-pub fn select_instance(
-    p: &MappingProblem,
-    map: &CurrentMap,
-    t: FaultyTask,
-    candidate_set: &[VmTypeId],
-    revoked: VmTypeId,
-    policy: DynSchedPolicy,
-) -> (Option<Selection>, Vec<VmTypeId>) {
-    let set: Vec<VmTypeId> = if policy.remove_revoked {
-        candidate_set.iter().copied().filter(|&v| v != revoked).collect()
+pub fn select_instance(ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+    let (p, map, t) = (ctx.problem, ctx.map, ctx.faulty);
+    let set: Vec<VmTypeId> = if ctx.policy.remove_revoked {
+        ctx.candidates.iter().copied().filter(|&v| v != ctx.revoked).collect()
     } else {
-        candidate_set.to_vec()
+        ctx.candidates.to_vec()
     };
     // Minimize the weighted objective with the shared first-wins comparator
     // (same tie-break as the Initial Mapping baselines' rankings). Each
@@ -184,6 +212,12 @@ mod tests {
     use crate::cloud::Market;
     use crate::mapping::problem::testutil::*;
     use crate::mapping::problem::MappingProblem;
+    use crate::market::MarketSpec;
+
+    /// The default (constant-price) market every unit test runs under.
+    fn default_market() -> MarketSpec {
+        MarketSpec::default()
+    }
 
     fn setup() -> (crate::cloudsim::MultiCloud, crate::presched::SlowdownReport, crate::mapping::problem::JobProfile) {
         let mc = cloudlab_sim();
@@ -270,28 +304,33 @@ mod tests {
         let map = til_map(&mc);
         let all: Vec<_> = mc.catalog.vm_ids().collect();
 
+        let market = default_market();
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
-        let (sel, new_set) = select_instance(
-            &p,
-            &map,
-            FaultyTask::Client(0),
-            &all,
-            vm126,
-            DynSchedPolicy::different_vm(),
-        );
+        let (sel, new_set) = select_instance(&RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Client(0),
+            candidates: &all,
+            revoked: vm126,
+            policy: DynSchedPolicy::different_vm(),
+            at: SimTime::ZERO,
+            market: MarketView::new(&market),
+        });
         let sel = sel.unwrap();
         assert_eq!(mc.catalog.vm(sel.vm).id, "vm138", "client restart VM");
         assert!(!new_set.contains(&vm126));
 
         let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
-        let (sel, _) = select_instance(
-            &p,
-            &map,
-            FaultyTask::Server,
-            &all,
-            vm121,
-            DynSchedPolicy::different_vm(),
-        );
+        let (sel, _) = select_instance(&RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Server,
+            candidates: &all,
+            revoked: vm121,
+            policy: DynSchedPolicy::different_vm(),
+            at: SimTime::ZERO,
+            market: MarketView::new(&market),
+        });
         let sel = sel.unwrap();
         // The paper reports the server restarting on vm212; with the
         // published Table 3/4 slowdowns, vm124 (vm121's same-price twin in
@@ -310,15 +349,18 @@ mod tests {
         let p = problem(&mc, &sl, &job);
         let map = til_map(&mc);
         let all: Vec<_> = mc.catalog.vm_ids().collect();
+        let market = default_market();
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
-        let (sel, new_set) = select_instance(
-            &p,
-            &map,
-            FaultyTask::Client(0),
-            &all,
-            vm126,
-            DynSchedPolicy::same_vm_allowed(),
-        );
+        let (sel, new_set) = select_instance(&RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Client(0),
+            candidates: &all,
+            revoked: vm126,
+            policy: DynSchedPolicy::same_vm_allowed(),
+            at: SimTime::ZERO,
+            market: MarketView::new(&market),
+        });
         assert_eq!(sel.unwrap().vm, vm126);
         assert_eq!(new_set.len(), all.len());
     }
@@ -330,12 +372,21 @@ mod tests {
         let map = til_map(&mc);
         let mut set: Vec<_> = mc.catalog.vm_ids().collect();
         let policy = DynSchedPolicy::different_vm();
+        let market = default_market();
         let n0 = set.len();
         // Three successive client revocations, each removing the chosen VM.
         let mut revoked = mc.catalog.vm_by_id("vm126").unwrap();
         for k in 1..=3 {
-            let (sel, new_set) =
-                select_instance(&p, &map, FaultyTask::Client(0), &set, revoked, policy);
+            let (sel, new_set) = select_instance(&RevocationCtx {
+                problem: &p,
+                map: &map,
+                faulty: FaultyTask::Client(0),
+                candidates: &set,
+                revoked,
+                policy,
+                at: SimTime::ZERO,
+                market: MarketView::new(&market),
+            });
             set = new_set;
             assert_eq!(set.len(), n0 - k);
             revoked = sel.unwrap().vm;
@@ -347,15 +398,18 @@ mod tests {
         let (mc, sl, job) = setup();
         let p = problem(&mc, &sl, &job);
         let map = til_map(&mc);
+        let market = default_market();
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
-        let (sel, set) = select_instance(
-            &p,
-            &map,
-            FaultyTask::Client(0),
-            &[vm126],
-            vm126,
-            DynSchedPolicy::different_vm(),
-        );
+        let (sel, set) = select_instance(&RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Client(0),
+            candidates: &[vm126],
+            revoked: vm126,
+            policy: DynSchedPolicy::different_vm(),
+            at: SimTime::ZERO,
+            market: MarketView::new(&market),
+        });
         assert!(sel.is_none());
         assert!(set.is_empty());
     }
@@ -366,15 +420,18 @@ mod tests {
         let p = problem(&mc, &sl, &job);
         let map = til_map(&mc);
         let all: Vec<_> = mc.catalog.vm_ids().collect();
+        let market = default_market();
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
-        let (sel, set) = select_instance(
-            &p,
-            &map,
-            FaultyTask::Client(0),
-            &all,
-            vm126,
-            DynSchedPolicy::different_vm(),
-        );
+        let (sel, set) = select_instance(&RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Client(0),
+            candidates: &all,
+            revoked: vm126,
+            policy: DynSchedPolicy::different_vm(),
+            at: SimTime::ZERO,
+            market: MarketView::new(&market),
+        });
         let sel = sel.unwrap();
         for &vm in &set {
             let m = recompute_makespan(&p, &map, FaultyTask::Client(0), vm);

@@ -15,8 +15,9 @@
 use crate::cloud::VmTypeId;
 use crate::cloudsim::{MultiCloud, VmId};
 use crate::coordinator::sim::{environment_for, SimConfig, SimEvent, SimOutcome};
-use crate::dynsched::{CurrentMap, FaultyTask};
+use crate::dynsched::{CurrentMap, FaultyTask, RevocationCtx};
 use crate::mapping::problem::{JobProfile, Mapping, MappingProblem};
+use crate::market::MarketView;
 use crate::presched::SlowdownReport;
 use crate::simul::SimTime;
 
@@ -32,6 +33,26 @@ struct TaskState {
 
 /// Run one simulated Multi-FedLS execution through `fw`'s module stack.
 pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+    run_stop(fw, cfg, None).map(|(out, _)| out)
+}
+
+/// [`run`] with an optional preemption instant: with `stop_secs = Some(s)`
+/// the execution halts at simulated instant `s` if the job is still running
+/// then (the workload engine's checkpoint-preempt hook). The Fault Tolerance
+/// module plans the surviving round from the freshest checkpoint — exactly
+/// the server-loss restore path (§4.3) — so the returned outcome's
+/// `rounds_completed` is the checkpointed progress a later resume starts
+/// from. Every live VM is terminated (and billed) at the preemption instant.
+/// Returns the outcome plus the rounds of progress the preemption discarded
+/// (completed work past the last surviving checkpoint).
+///
+/// With `stop_secs = None` the stop checks never fire and the arithmetic is
+/// bit-identical to the unstoppable path.
+pub(super) fn run_stop(
+    fw: &Framework,
+    cfg: &SimConfig,
+    stop_secs: Option<f64>,
+) -> anyhow::Result<(SimOutcome, u32)> {
     let (catalog, ground_truth) = environment_for(&cfg.app);
     // Assemble the spot-market model (the default: exponential k_r
     // revocations at constant price, bit-identical to the historical inline
@@ -122,8 +143,20 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
     // Freshest server-side checkpoint round (replicated → survives loss).
     let mut server_ckpt_round = 0u32;
     let mut safety = 0usize;
+    let stop = stop_secs.map(SimTime::from_secs);
+    let mut preempted = false;
 
     while completed < cfg.n_rounds {
+        // Preemption instant reached (including mid-boot: `now` may already
+        // sit past the stop after the initial provisioning or a replacement
+        // boot): halt before starting another round.
+        if let Some(s) = stop {
+            if now >= s {
+                now = s;
+                preempted = true;
+                break;
+            }
+        }
         safety += 1;
         anyhow::ensure!(safety < 200_000, "simulation did not converge (runaway revocations)");
         let round = completed + 1;
@@ -132,22 +165,46 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
         let duration = round_duration(cfg, &mc, slowdowns, &job, fw.ft(), &server, &clients);
         let end = now + duration;
 
-        // Earliest spot revocation strictly before the round completes.
-        let mut hit: Option<(SimTime, FaultyTask)> = None;
-        let consider =
-            |at: Option<SimTime>, task: FaultyTask, hit: &mut Option<(SimTime, FaultyTask)>| {
-                if let Some(t) = at {
-                    if t > now && t <= end {
-                        let better = hit.map_or(true, |(bt, _)| t < bt);
-                        if better {
-                            *hit = Some((t, task));
+        // Earliest spot revocation strictly before the round completes —
+        // collecting *every* task hit at that instant, so co-timed evictions
+        // (one trace instant or bid crossing hitting several VMs at once)
+        // are processed as a single batched event instead of all but the
+        // first silently absorbing into the replacement's boot wait.
+        let mut hit: Option<(SimTime, Vec<FaultyTask>)> = None;
+        let consider = |at: Option<SimTime>,
+                        task: FaultyTask,
+                        hit: &mut Option<(SimTime, Vec<FaultyTask>)>| {
+            if let Some(t) = at {
+                if t > now && t <= end {
+                    match hit.as_mut() {
+                        Some((bt, tasks)) if t < *bt => {
+                            *bt = t;
+                            tasks.clear();
+                            tasks.push(task);
                         }
+                        Some((bt, tasks)) if t == *bt => tasks.push(task),
+                        Some(_) => {}
+                        None => *hit = Some((t, vec![task])),
                     }
                 }
-            };
+            }
+        };
         consider(mc.instance(server.instance).revocation_at, FaultyTask::Server, &mut hit);
         for (i, c) in clients.iter().enumerate() {
             consider(mc.instance(c.instance).revocation_at, FaultyTask::Client(i), &mut hit);
+        }
+
+        // Preemption cuts the round short: if nothing (round end or
+        // revocation) happens at or before the stop instant, the in-flight
+        // work is abandoned there and the FT restore plans the surviving
+        // round.
+        if let Some(s) = stop {
+            let next = hit.as_ref().map_or(end, |(t, _)| *t);
+            if next > s {
+                now = s;
+                preempted = true;
+                break;
+            }
         }
 
         match hit {
@@ -169,115 +226,156 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
                     mc.charge_egress(now, c.vm_type, m.c_train_gb + m.c_test_gb, "client msgs");
                 }
             }
-            Some((t_rev, faulty)) => {
-                // Revocation interrupts the round; the round's work is lost.
+            Some((t_rev, faulty_tasks)) => {
+                // Revocations interrupt the round; the round's work is lost.
+                // Every task hit at `t_rev` is revoked and rescheduled in
+                // consider-order (server first, then clients by index), so
+                // later replacement choices see earlier ones in the current
+                // map; the round resumes after the slowest replacement
+                // boots (boots overlap).
                 now = t_rev;
-                n_revocations += 1;
-                let current_map = CurrentMap {
-                    server: server.vm_type,
-                    clients: clients.iter().map(|c| c.vm_type).collect(),
-                };
-                let (task_name, old_type, set): (String, VmTypeId, &mut Vec<VmTypeId>) = match faulty
-                {
-                    FaultyTask::Server => ("server".into(), server.vm_type, &mut server_set),
-                    FaultyTask::Client(i) => {
-                        (format!("client-{i}"), clients[i].vm_type, &mut client_sets[i])
-                    }
-                };
-                // Revoke in the platform (blocks the type per policy).
-                let inst = match faulty {
-                    FaultyTask::Server => server.instance,
-                    FaultyTask::Client(i) => clients[i].instance,
-                };
-                mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
-                events.push(SimEvent {
-                    at: now,
-                    what: format!(
-                        "revocation: {task_name} on {} during round {round}",
-                        mc.catalog.vm(old_type).id
-                    ),
-                });
-
-                // Dynamic Scheduler picks the replacement.
-                let (selection, new_set) = fw.dynsched().select(
-                    &problem,
-                    &current_map,
-                    faulty,
-                    set,
-                    old_type,
-                    cfg.dynsched_policy,
-                    now,
-                );
-                *set = new_set;
-                let sel = selection
-                    .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
-
-                // Provision the replacement; everyone waits for its boot
-                // (the server requires all clients each round, §4.3). When
-                // the per-task revocation cap is reached the replacement is
-                // not re-exposed to the Poisson process (§5.6.1's observed
-                // "at most one revocation per task" regime).
-                let task_idx = match faulty {
-                    FaultyTask::Server => 0,
-                    FaultyTask::Client(i) => i + 1,
-                };
-                revocations_per_task[task_idx] += 1;
-                let allow_more = cfg
-                    .max_revocations_per_task
-                    .map_or(true, |cap| revocations_per_task[task_idx] < cap);
-                let new_inst = mc.provision_with(
-                    now,
-                    sel.vm,
-                    match faulty {
-                        FaultyTask::Server => server_market,
-                        FaultyTask::Client(_) => client_market,
-                    },
-                    allow_more,
-                )?;
-                let boot_done = mc.instance(new_inst).ready_at;
-                events.push(SimEvent {
-                    at: now,
-                    what: format!(
-                        "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
-                        mc.catalog.vm(sel.vm).id,
-                        sel.value,
-                        boot_done.hms()
-                    ),
-                });
-                match faulty {
-                    FaultyTask::Server => {
-                        server = TaskState {
-                            vm_type: sel.vm,
-                            instance: new_inst,
-                            rounds_on_instance: 0,
+                if faulty_tasks.len() > 1 {
+                    events.push(SimEvent {
+                        at: now,
+                        what: format!(
+                            "batched event: {} co-timed revocations",
+                            faulty_tasks.len()
+                        ),
+                    });
+                }
+                let mut boot_max = now;
+                for faulty in faulty_tasks {
+                    n_revocations += 1;
+                    let current_map = CurrentMap {
+                        server: server.vm_type,
+                        clients: clients.iter().map(|c| c.vm_type).collect(),
+                    };
+                    let (task_name, old_type, set): (String, VmTypeId, &mut Vec<VmTypeId>) =
+                        match faulty {
+                            FaultyTask::Server => {
+                                ("server".into(), server.vm_type, &mut server_set)
+                            }
+                            FaultyTask::Client(i) => {
+                                (format!("client-{i}"), clients[i].vm_type, &mut client_sets[i])
+                            }
                         };
-                        // Recovery (§4.3): the FT module plans the restore
-                        // round from the freshest checkpoint available.
-                        let restore = fw.ft().restore_round(cfg, completed, server_ckpt_round);
-                        if restore < completed {
-                            events.push(SimEvent {
-                                at: now,
-                                what: format!(
-                                    "server restore from round {restore} (lost {} rounds)",
-                                    completed - restore
-                                ),
-                            });
-                            completed = restore;
+                    // Revoke in the platform (blocks the type per policy).
+                    let inst = match faulty {
+                        FaultyTask::Server => server.instance,
+                        FaultyTask::Client(i) => clients[i].instance,
+                    };
+                    mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
+                    events.push(SimEvent {
+                        at: now,
+                        what: format!(
+                            "revocation: {task_name} on {} during round {round}",
+                            mc.catalog.vm(old_type).id
+                        ),
+                    });
+
+                    // Dynamic Scheduler picks the replacement.
+                    let (selection, new_set) = fw.dynsched().select(&RevocationCtx {
+                        problem: &problem,
+                        map: &current_map,
+                        faulty,
+                        candidates: set,
+                        revoked: old_type,
+                        policy: cfg.dynsched_policy,
+                        at: now,
+                        market: MarketView::new(&cfg.market),
+                    });
+                    *set = new_set;
+                    let sel = selection
+                        .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
+
+                    // Provision the replacement; everyone waits for its boot
+                    // (the server requires all clients each round, §4.3).
+                    // When the per-task revocation cap is reached the
+                    // replacement is not re-exposed to the Poisson process
+                    // (§5.6.1's observed "at most one revocation per task"
+                    // regime).
+                    let task_idx = match faulty {
+                        FaultyTask::Server => 0,
+                        FaultyTask::Client(i) => i + 1,
+                    };
+                    revocations_per_task[task_idx] += 1;
+                    let allow_more = cfg
+                        .max_revocations_per_task
+                        .map_or(true, |cap| revocations_per_task[task_idx] < cap);
+                    let new_inst = mc.provision_with(
+                        now,
+                        sel.vm,
+                        match faulty {
+                            FaultyTask::Server => server_market,
+                            FaultyTask::Client(_) => client_market,
+                        },
+                        allow_more,
+                    )?;
+                    let boot_done = mc.instance(new_inst).ready_at;
+                    boot_max = boot_max.max(boot_done);
+                    events.push(SimEvent {
+                        at: now,
+                        what: format!(
+                            "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
+                            mc.catalog.vm(sel.vm).id,
+                            sel.value,
+                            boot_done.hms()
+                        ),
+                    });
+                    match faulty {
+                        FaultyTask::Server => {
+                            server = TaskState {
+                                vm_type: sel.vm,
+                                instance: new_inst,
+                                rounds_on_instance: 0,
+                            };
+                            // Recovery (§4.3): the FT module plans the
+                            // restore round from the freshest checkpoint
+                            // available.
+                            let restore = fw.ft().restore_round(cfg, completed, server_ckpt_round);
+                            if restore < completed {
+                                events.push(SimEvent {
+                                    at: now,
+                                    what: format!(
+                                        "server restore from round {restore} (lost {} rounds)",
+                                        completed - restore
+                                    ),
+                                });
+                                completed = restore;
+                            }
+                        }
+                        FaultyTask::Client(i) => {
+                            clients[i] = TaskState {
+                                vm_type: sel.vm,
+                                instance: new_inst,
+                                rounds_on_instance: 0,
+                            };
                         }
                     }
-                    FaultyTask::Client(i) => {
-                        clients[i] = TaskState {
-                            vm_type: sel.vm,
-                            instance: new_inst,
-                            rounds_on_instance: 0,
-                        };
-                    }
+                    mc.mark_running(new_inst);
                 }
-                // Other tasks idle (and bill) until the replacement is up.
-                now = boot_done;
-                mc.mark_running(new_inst);
+                // Other tasks idle (and bill) until every replacement is up.
+                now = boot_max;
             }
         }
+    }
+
+    // Checkpoint-preemption epilogue: the FT module plans the surviving
+    // round exactly as it would after a server loss — with client
+    // checkpoints every round nothing is lost; server-only checkpointing
+    // falls back to the last periodic save; no FT restarts from scratch.
+    let mut rounds_lost = 0u32;
+    if preempted {
+        let restore = fw.ft().restore_round(cfg, completed, server_ckpt_round);
+        rounds_lost = completed - restore;
+        completed = restore;
+        events.push(SimEvent {
+            at: now,
+            what: format!(
+                "preempted at {} (checkpointed progress: round {completed}, {rounds_lost} lost)",
+                now.hms()
+            ),
+        });
     }
 
     let fl_end = now;
@@ -286,10 +384,18 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
     for id in live {
         mc.terminate(now, id);
     }
-    events.push(SimEvent { at: now, what: "all rounds complete; VMs terminated".into() });
+    events.push(SimEvent {
+        at: now,
+        what: if preempted {
+            "preemption teardown; VMs terminated".into()
+        } else {
+            "all rounds complete; VMs terminated".into()
+        },
+    });
 
-    Ok(SimOutcome {
-        fl_exec_secs: fl_end - fl_start,
+    let fl_exec_secs = if preempted { (fl_end - fl_start).max(0.0) } else { fl_end - fl_start };
+    let outcome = SimOutcome {
+        fl_exec_secs,
         total_secs: now.secs(),
         total_cost: mc.total_cost(now),
         vm_cost: mc.ledger.vm_cost(now),
@@ -305,7 +411,8 @@ pub(super) fn run(fw: &Framework, cfg: &SimConfig) -> anyhow::Result<SimOutcome>
         events,
         predicted_round_makespan: sol.eval.makespan,
         predicted_round_cost: sol.eval.total_cost,
-    })
+    };
+    Ok((outcome, rounds_lost))
 }
 
 /// Duration of one FL round for the current placement, including first-round

@@ -90,6 +90,19 @@ impl Framework {
         exec::run(self, cfg)
     }
 
+    /// Execute one configuration, halting at simulated instant `stop_secs`
+    /// if the job is still running then — the checkpoint-preempt hook the
+    /// workload engine's preemptive scheduling policies use. The Fault
+    /// Tolerance module plans the surviving round from the freshest
+    /// checkpoint (the §4.3 restore path), every live VM is terminated and
+    /// billed at the stop instant, and the outcome's `rounds_completed` is
+    /// the checkpointed progress a resume continues from. Returns the
+    /// outcome plus the completed rounds the preemption discarded (0 with
+    /// client checkpoints on — a resumed job re-executes nothing).
+    pub fn run_until(&self, cfg: &SimConfig, stop_secs: f64) -> anyhow::Result<(SimOutcome, u32)> {
+        exec::run_stop(self, cfg, Some(stop_secs))
+    }
+
     pub(crate) fn pre_sched(&self) -> &dyn PreScheduling {
         self.pre_sched.as_ref()
     }

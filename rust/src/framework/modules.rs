@@ -20,7 +20,7 @@ use std::sync::Arc;
 use crate::cloud::VmTypeId;
 use crate::cloudsim::MultiCloud;
 use crate::coordinator::sim::SimConfig;
-use crate::dynsched::{self, CurrentMap, DynSchedPolicy, FaultyTask, Selection};
+use crate::dynsched::{self, RevocationCtx, Selection};
 use crate::mapping::problem::{Mapping, MappingProblem};
 use crate::mapping::{self, MapperKind, MappingSolution};
 use crate::presched::{PreScheduler, SlowdownReport};
@@ -317,22 +317,22 @@ impl FaultTolerance for NoFt {
 // ---------------------------------------------------------------------------
 
 /// Picks the replacement VM for a revoked task, returning the selection and
-/// the task's updated candidate set. `at` is the simulated instant of the
-/// revocation, so implementations can consult time-dependent shared state
-/// (the workload engine's shared quota ledger competes replacement choices
-/// across concurrent jobs through it).
+/// the task's updated candidate set.
+///
+/// The single [`RevocationCtx`] argument carries the whole decision state —
+/// problem, current placement, faulty task, candidate set, revoked type,
+/// policy, the revocation instant, and a read-only
+/// [`crate::market::MarketView`] of the job's price series — so
+/// implementations can be time- and market-aware
+/// without the trait growing a new positional parameter for every addition.
+/// Wrappers narrow the context instead of re-plumbing arguments (the
+/// workload engine's quota filter re-issues the ctx with a filtered
+/// candidate set). `InitialMapper` and `FaultTolerance` keep their short
+/// positional signatures (≤ 3 arguments each); they get the same treatment
+/// the day they grow past that.
 pub trait DynScheduler: Send + Sync {
     fn name(&self) -> &'static str;
-    fn select(
-        &self,
-        p: &MappingProblem,
-        map: &CurrentMap,
-        faulty: FaultyTask,
-        candidate_set: &[VmTypeId],
-        revoked: VmTypeId,
-        policy: DynSchedPolicy,
-        at: crate::simul::SimTime,
-    ) -> (Option<Selection>, Vec<VmTypeId>);
+    fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>);
 }
 
 /// Algorithms 1–3 (the paper's Dynamic Scheduler): re-compute makespan and
@@ -343,17 +343,8 @@ impl DynScheduler for PaperDynSched {
     fn name(&self) -> &'static str {
         "algorithms-1-3"
     }
-    fn select(
-        &self,
-        p: &MappingProblem,
-        map: &CurrentMap,
-        faulty: FaultyTask,
-        candidate_set: &[VmTypeId],
-        revoked: VmTypeId,
-        policy: DynSchedPolicy,
-        _at: crate::simul::SimTime,
-    ) -> (Option<Selection>, Vec<VmTypeId>) {
-        dynsched::select_instance(p, map, faulty, candidate_set, revoked, policy)
+    fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+        dynsched::select_instance(ctx)
     }
 }
 
@@ -366,16 +357,8 @@ impl DynScheduler for RestartSameType {
     fn name(&self) -> &'static str {
         "restart-same-type"
     }
-    fn select(
-        &self,
-        p: &MappingProblem,
-        map: &CurrentMap,
-        faulty: FaultyTask,
-        candidate_set: &[VmTypeId],
-        revoked: VmTypeId,
-        _policy: DynSchedPolicy,
-        _at: crate::simul::SimTime,
-    ) -> (Option<Selection>, Vec<VmTypeId>) {
+    fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+        let (p, map, faulty, revoked) = (ctx.problem, ctx.map, ctx.faulty, ctx.revoked);
         let expected_makespan = dynsched::recompute_makespan(p, map, faulty, revoked);
         let expected_cost = dynsched::recompute_cost(p, map, faulty, revoked, expected_makespan);
         let selection = Selection {
@@ -385,6 +368,6 @@ impl DynScheduler for RestartSameType {
             value: p.objective_value(expected_cost, expected_makespan),
             candidates_considered: 1,
         };
-        (Some(selection), candidate_set.to_vec())
+        (Some(selection), ctx.candidates.to_vec())
     }
 }

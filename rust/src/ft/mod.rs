@@ -17,6 +17,13 @@
 //! In the simulated pipeline this model is consulted through the pluggable
 //! `FaultTolerance` trait (`crate::framework::modules`); [`FtConfig`] is
 //! the configuration the default `PaperFt` module prices from.
+//!
+//! The same checkpoint/restore path also backs **workload-level
+//! preemption** (`crate::workload::sched`): when the `priority-preempt`
+//! scheduler evicts a running job, the victim's completed rounds are
+//! restored exactly as after a revocation-driven server restart — with
+//! client checkpoints on it resumes with zero rounds lost, with only
+//! server checkpoints it falls back to the last X-round save.
 
 pub mod checkpoint;
 

@@ -47,7 +47,9 @@
 //!   ([`mapping::rank`]).
 //! * [`fl`] — a Flower-like Cross-Silo FL runtime (rounds, FedAvg, messages).
 //! * [`ft`] — Fault Tolerance (§4.3): monitoring + checkpointing.
-//! * [`dynsched`] — Dynamic Scheduler (§4.4): Algorithms 1–3.
+//! * [`dynsched`] — Dynamic Scheduler (§4.4): Algorithms 1–3, built around
+//!   the [`dynsched::RevocationCtx`] context struct (placement + market view
+//!   at the revocation instant).
 //! * [`framework`] — the composable pipeline: the four module traits, their
 //!   built-in implementations, the builder, the event-loop core, and the
 //!   shared environment cache.
@@ -60,7 +62,10 @@
 //!   (batch/Poisson/trace), admission policies, per-job budget/deadline
 //!   constraints, and a discrete-event engine that drives every admitted job
 //!   through the framework pipeline against one shared quota ledger
-//!   ([`workload::Workload::single`] is the degenerate one-job case).
+//!   ([`workload::Workload::single`] is the degenerate one-job case) — plus
+//!   workload-level dynamic scheduling ([`workload::sched`]): per-job
+//!   priorities and tenants, checkpoint-preemption, and cross-tenant
+//!   fair-share, pluggable via [`workload::WorkloadScheduler`].
 //! * [`sweep`] — the parallel experiment-campaign engine: declarative config
 //!   grids fanned out across an OS-thread worker pool, deterministically,
 //!   with persisted, resumable results ([`sweep::persist`]).

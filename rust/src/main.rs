@@ -86,7 +86,7 @@ USAGE:
                     [--results DIR] [--resume] [--no-persist]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
-  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|market-sensitivity|all> [--json]
+  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|all> [--json]
 ";
 
 fn main() {
@@ -467,6 +467,10 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             let (t, j) = trace::mapper_ablation();
             render(t, j);
         }
+        "preempt-ablation" => {
+            let (t, j) = trace::preempt_ablation();
+            render(t, j);
+        }
         "market-sensitivity" => {
             let (t, j) = trace::market_sensitivity();
             render(t, j);
@@ -487,6 +491,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
                 trace::multijob,
                 trace::dynsched_ablation,
                 trace::mapper_ablation,
+                trace::preempt_ablation,
                 trace::market_sensitivity,
             ] {
                 let (t, _) = f();

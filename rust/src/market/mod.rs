@@ -19,11 +19,18 @@
 //!   ([`crate::mapping::MappingProblem::rate_per_sec`]).
 //! * Bid-priced VMs — with a `bid_factor`, a spot VM is additionally
 //!   revoked at the first price step that exceeds its bid (the
-//!   price-threshold market mode). Co-timed evictions follow the engine's
-//!   established one-revocation-per-event semantics: when one crossing
-//!   outbids several VMs at the same instant, the earliest-considered task
-//!   is evicted and the others absorb into the replacement's boot wait —
-//!   exactly as coinciding trace instants do (see [`TraceReplay`]).
+//!   price-threshold market mode). Co-timed evictions are processed as one
+//!   *batched* revocation event: when a crossing outbids several VMs at the
+//!   same instant — or a recorded trace instant hits every co-provisioned
+//!   VM at once (see [`TraceReplay`]) — each hit task is revoked and
+//!   rescheduled at that instant (server considered first, then clients in
+//!   index order, so earlier replacement choices are visible to later
+//!   ones), and the round resumes after the *slowest* replacement boots.
+//!
+//! [`MarketView`] is the read-only handle scheduling modules get through
+//! [`crate::dynsched::RevocationCtx`]: price factors and upcoming steps are
+//! visible to replacement decisions (market-aware scheduling), but the
+//! revocation process and its RNG stream are not.
 //!
 //! [`MarketSpec`] (in [`spec`]) is the declarative form carried by
 //! `SimConfig` and parsed from `[market]` / `[[market]]` TOML tables (job
@@ -93,9 +100,71 @@ impl MarketModel {
     }
 }
 
+/// Read-only market access for scheduling modules (carried by
+/// [`crate::dynsched::RevocationCtx`]): the declarative price side of a
+/// job's [`MarketSpec`], on the same clock the caller's `at` instants use.
+/// Deliberately excludes the revocation process — a scheduler may price
+/// candidates against the series, but never peek at future failures.
+#[derive(Debug, Clone, Copy)]
+pub struct MarketView<'a> {
+    spec: &'a MarketSpec,
+}
+
+impl<'a> MarketView<'a> {
+    pub fn new(spec: &'a MarketSpec) -> MarketView<'a> {
+        MarketView { spec }
+    }
+
+    /// The underlying declarative spec.
+    pub fn spec(&self) -> &'a MarketSpec {
+        self.spec
+    }
+
+    /// Spot-price multiplier in effect at `at` (1.0 for a constant market).
+    pub fn price_factor_at(&self, at: SimTime) -> f64 {
+        self.spec.price_series().factor_at(at.secs())
+    }
+
+    /// Expected spot-price multiplier over `[0, horizon_secs)` — the same
+    /// factor the Initial Mapping charged at planning time.
+    pub fn planning_price_factor(&self, horizon_secs: f64) -> f64 {
+        self.spec.planning_price_factor(horizon_secs)
+    }
+
+    /// The next instant strictly after `at` at which the price changes.
+    pub fn next_price_step_after(&self, at: SimTime) -> Option<SimTime> {
+        self.spec.next_price_step_after(at.secs()).map(SimTime::from_secs)
+    }
+
+    /// The bid threshold of a price-threshold market, if any.
+    pub fn bid_factor(&self) -> Option<f64> {
+        self.spec.bid_factor
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn market_view_exposes_price_side_only() {
+        let spec = MarketSpec {
+            revocation: RevocationSpec::Exponential,
+            price: PriceSpec::Steps(vec![(0.0, 1.0), (100.0, 1.5)]),
+            bid_factor: Some(2.0),
+        };
+        let view = MarketView::new(&spec);
+        assert_eq!(view.price_factor_at(SimTime::ZERO), 1.0);
+        assert_eq!(view.price_factor_at(SimTime::from_secs(150.0)), 1.5);
+        assert_eq!(view.next_price_step_after(SimTime::ZERO).unwrap().secs(), 100.0);
+        assert_eq!(view.bid_factor(), Some(2.0));
+        assert!(view.planning_price_factor(200.0) > 1.0);
+        // The default market reads as the constant factor everywhere.
+        let dflt = MarketSpec::default();
+        let view = MarketView::new(&dflt);
+        assert_eq!(view.price_factor_at(SimTime::from_secs(1e9)), 1.0);
+        assert!(view.next_price_step_after(SimTime::ZERO).is_none());
+    }
 
     #[test]
     fn from_revocation_preserves_legacy_semantics() {

@@ -283,6 +283,7 @@ impl CampaignStore {
             ("admitted", &agg.admitted),
             ("queued", &agg.queued),
             ("rejected", &agg.rejected),
+            ("preemptions", &agg.preemptions),
         ] {
             metrics.push(agg_table(name, a));
         }
@@ -296,6 +297,7 @@ impl CampaignStore {
                 ("completion", &j.completion),
                 ("cost", &j.cost),
                 ("revocations", &j.revocations),
+                ("preemptions", &j.preemptions),
             ] {
                 flatten_agg(&mut row, m, a);
             }
@@ -334,6 +336,7 @@ impl CampaignStore {
                 completion: read_flat_agg(row, "completion")?,
                 cost: read_flat_agg(row, "cost")?,
                 revocations: read_flat_agg(row, "revocations")?,
+                preemptions: read_flat_agg(row, "preemptions")?,
             });
         }
         Some(crate::workload::WorkloadAgg {
@@ -344,6 +347,7 @@ impl CampaignStore {
             admitted: *by_name.get("admitted")?,
             queued: *by_name.get("queued")?,
             rejected: *by_name.get("rejected")?,
+            preemptions: *by_name.get("preemptions")?,
             jobs,
         })
     }
@@ -565,12 +569,14 @@ mod tests {
             admitted: mk(2.0),
             queued: mk(0.0),
             rejected: mk(0.0),
+            preemptions: mk(1.0),
             jobs: vec![crate::workload::JobAgg {
                 name: "til-0".into(),
                 wait: mk(0.5),
                 completion: mk(900.0),
                 cost: mk(1.75),
                 revocations: mk(0.0),
+                preemptions: mk(1.0),
             }],
         };
         store.save_workload_point(0, &points[0], &agg).unwrap();
@@ -581,6 +587,7 @@ mod tests {
             (&loaded.mean_wait, &agg.mean_wait),
             (&loaded.total_cost, &agg.total_cost),
             (&loaded.admitted, &agg.admitted),
+            (&loaded.preemptions, &agg.preemptions),
         ] {
             assert_eq!(a.mean.to_bits(), b.mean.to_bits());
             assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());

@@ -166,6 +166,25 @@ fn uint_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<u32>>> {
     }
 }
 
+/// Signed-integer axis (e.g. the workload grid's `priorities`, which may
+/// legitimately be negative).
+pub(crate) fn int_axis(
+    grid: &BTreeMap<String, Value>,
+    key: &str,
+) -> anyhow::Result<Option<Vec<i64>>> {
+    match axis(grid, key) {
+        None => Ok(None),
+        Some(items) => items
+            .into_iter()
+            .map(|v| {
+                v.as_int()
+                    .ok_or_else(|| anyhow::anyhow!("grid.{key} entries must be integers"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
 fn bool_axis(grid: &Tbl, key: &str) -> anyhow::Result<Option<Vec<bool>>> {
     match axis(grid, key) {
         None => Ok(None),

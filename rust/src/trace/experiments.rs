@@ -658,6 +658,87 @@ pub fn dynsched_ablation() -> (Table, Json) {
     (t, Json::obj().set("experiment", "dynsched-ablation").set("rows", Json::Arr(rows)))
 }
 
+/// Ablation (ours, closing the ROADMAP "workload-level dynamic scheduling"
+/// item): one contended workload — four low-priority jobs whose per-round
+/// deadline forces GPU placements (saturating the 8 AWS+GCP GPUs from
+/// t = 0) plus a priority-10 job arriving mid-execution — run under every
+/// workload scheduling policy. Isolates what checkpoint-preemption buys the
+/// high-priority job (wait time) against what it costs the preempted victim
+/// (rounds lost — zero with client checkpoints on, the §4.3 restore path).
+pub fn preempt_ablation() -> (Table, Json) {
+    use crate::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
+    use crate::framework::EnvCache;
+    use crate::workload::{JobRequest, Workload};
+    use std::sync::Arc;
+
+    let gpu_job = |seed: u64| {
+        let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, seed);
+        cfg.deadline_round = 4000.0; // CPU types are ~20x slower: GPUs only
+        cfg
+    };
+    let build = |scheduler: SchedulerPolicy| {
+        let mut jobs: Vec<JobRequest> = (0..4)
+            .map(|i| {
+                let mut j = JobRequest::new(format!("low-{i}"), 0.0, gpu_job(10 + i as u64));
+                j.tenant = if i < 2 { "acme".into() } else { "zeta".into() };
+                j
+            })
+            .collect();
+        let mut hi = JobRequest::new("high", 3000.0, gpu_job(99));
+        hi.priority = 10;
+        hi.tenant = "acme".into();
+        jobs.push(hi);
+        Workload {
+            name: "preempt-ablation".into(),
+            jobs,
+            admission: AdmissionPolicy::Fifo,
+            scheduler,
+        }
+    };
+
+    let cache = Arc::new(EnvCache::new());
+    let mut t = Table::new(
+        "Ablation — workload scheduling policies (contended AWS+GCP GPUs)",
+        &[
+            "Scheduler",
+            "Makespan",
+            "Mean wait (s)",
+            "High-pri wait (s)",
+            "Total costs",
+            "Preempt.",
+            "Rounds lost",
+        ],
+    );
+    let mut rows = Vec::new();
+    for policy in
+        [SchedulerPolicy::NoPreempt, SchedulerPolicy::PriorityPreempt, SchedulerPolicy::FairShare]
+    {
+        let out = build(policy).run_with_cache(&cache).expect("workload");
+        let hi = out.jobs.iter().find(|j| j.name == "high").expect("high-priority job");
+        let rounds_lost: u32 = out.jobs.iter().map(|j| j.rounds_lost).sum();
+        t.row(&[
+            policy.key().into(),
+            SimTime::from_secs(out.stats.makespan_secs).hms(),
+            format!("{:.0}", out.stats.mean_wait_secs),
+            format!("{:.0}", hi.wait_secs),
+            format!("${:.2}", out.stats.total_cost),
+            format!("{}", out.stats.preemptions),
+            format!("{rounds_lost}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("scheduler", policy.key())
+                .set("makespan_secs", out.stats.makespan_secs)
+                .set("mean_wait_secs", out.stats.mean_wait_secs)
+                .set("high_pri_wait_secs", hi.wait_secs)
+                .set("total_cost", out.stats.total_cost)
+                .set("preemptions", u64::from(out.stats.preemptions))
+                .set("rounds_lost", u64::from(rounds_lost)),
+        );
+    }
+    (t, Json::obj().set("experiment", "preempt-ablation").set("rows", Json::Arr(rows)))
+}
+
 /// Ablation (ours, closing the ROADMAP "mapper-swap tables" item): every
 /// Initial Mapping implementation — exact, linearized MILP, the greedy
 /// cheapest/fastest baselines, uniform-random, and single-cloud — on the

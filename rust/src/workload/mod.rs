@@ -9,11 +9,22 @@
 //!
 //! Engine semantics (all deterministic):
 //!
-//! * Jobs are admitted greedily in policy order ([`AdmissionPolicy`]): a job
-//!   whose mapping is infeasible under the residual quota stays queued and
+//! * Jobs are admitted greedily in the order a pluggable
+//!   [`WorkloadScheduler`] chooses (built-ins: [`sched::NoPreempt`],
+//!   [`sched::PriorityPreempt`], [`sched::FairShare`] — selected by
+//!   [`SchedulerPolicy`], base order by [`AdmissionPolicy`]): a job whose
+//!   mapping is infeasible under the residual quota stays queued and
 //!   re-solves whenever capacity is released (a job completes, or a spot
 //!   revocation inside a running job returns a VM to the pool); jobs behind
 //!   it may backfill.
+//! * Under a preemptive scheduler, a queued job that still does not fit may
+//!   checkpoint-preempt a running victim: the victim's reservations are
+//!   truncated at the preemption instant, its committed prefix is replayed
+//!   through [`Framework::run_until`] (the Fault Tolerance module plans the
+//!   resume round from the freshest checkpoint — the §4.3 restore path), and
+//!   the victim re-queues with only its *remaining* rounds, so it resumes
+//!   rather than restarts. Preemptions, revocations, and admissions all
+//!   compose on the one discrete-event timeline against the shared ledger.
 //! * A job infeasible even on an *idle* environment (its `budget_round` /
 //!   `deadline_round` / the quotas exclude every placement) is rejected at
 //!   arrival — unless its market's price can still change, in which case it
@@ -43,24 +54,27 @@
 //! `multi-fedls workload --spec` TOML (arrival processes, per-job overrides,
 //! campaign grids over admission/arrival/budget/deadline axes).
 
+pub mod sched;
 pub mod spec;
 
+pub use sched::{JobView, RunningView, SchedCtx, WorkloadScheduler};
 pub use spec::{ArrivalProcess, WorkloadPoint, WorkloadSpec};
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::cloud::quota::QuotaTracker;
 use crate::cloud::{Catalog, VmTypeId};
 use crate::cloudsim::{MultiCloud, RevocationModel};
-use crate::coordinator::multijob::AdmissionPolicy;
+use crate::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
 use crate::coordinator::sim::{environment_for, SimConfig};
-use crate::dynsched::{self, CurrentMap, DynSchedPolicy, FaultyTask, Selection};
+use crate::dynsched::{self, RevocationCtx, Selection};
 use crate::framework::{
     modules, CachedPreSched, DynScheduler, EnvCache, FixedMapper, Framework, PaperDynSched,
 };
 use crate::mapping::problem::MappingProblem;
 use crate::mapping::MappingSolution;
-use crate::simul::SimTime;
+use crate::presched::SlowdownReport;
 use crate::sweep::MetricAgg;
 
 /// Expected spot-price multiplier for one job's mapping problem at cluster
@@ -90,24 +104,43 @@ fn rejected_record(jr: &JobRequest) -> JobRecord {
         predicted_round_cost: 0.0,
         server: String::new(),
         clients: Vec::new(),
+        preemptions: 0,
+        rounds_lost: 0,
     }
 }
 
 /// One job in a workload: a complete simulator configuration plus its
-/// arrival instant on the shared cluster clock.
+/// arrival instant on the shared cluster clock, its scheduling priority,
+/// and its owning tenant.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
     pub name: String,
     pub arrival_secs: f64,
+    /// Scheduling priority — higher is more important. Only consulted by
+    /// priority-aware [`WorkloadScheduler`]s; may be negative. Default 0.
+    pub priority: i64,
+    /// Owning tenant for cross-tenant fairness (empty = default tenant).
+    pub tenant: String,
     pub cfg: SimConfig,
 }
 
-/// A set of jobs sharing one multi-cloud, with an admission policy.
+impl JobRequest {
+    /// A job with default priority (0) in the default tenant.
+    pub fn new(name: impl Into<String>, arrival_secs: f64, cfg: SimConfig) -> JobRequest {
+        JobRequest { name: name.into(), arrival_secs, priority: 0, tenant: String::new(), cfg }
+    }
+}
+
+/// A set of jobs sharing one multi-cloud, with an admission policy and a
+/// workload-level dynamic-scheduling policy.
 #[derive(Debug, Clone)]
 pub struct Workload {
     pub name: String,
     pub jobs: Vec<JobRequest>,
     pub admission: AdmissionPolicy,
+    /// Which built-in [`WorkloadScheduler`] drives admission passes (custom
+    /// implementations go through [`Workload::run_scheduled`]).
+    pub scheduler: SchedulerPolicy,
 }
 
 /// One committed reservation: `job` holds one VM of type `vm` over
@@ -234,15 +267,24 @@ impl QuotaLedger {
 /// workload's residual shared quota: the revoked VM's capacity returns to
 /// the pool at the revocation instant, candidates that do not fit the
 /// residual quota (given every other job's committed reservations) are
-/// filtered out before the inner scheduler ranks them, and the chosen
-/// replacement is committed back to the ledger. Types skipped only because
-/// of a transient quota shortage stay in the task's candidate set.
+/// filtered out before the inner scheduler ranks them (the context is
+/// re-issued with the narrowed set — `RevocationCtx` is `Copy` precisely so
+/// wrappers can do this), and the chosen replacement is committed back to
+/// the ledger. Types skipped only because of a transient quota shortage
+/// stay in the task's candidate set.
+///
+/// Every `(selection, candidate set)` the wrapper returns is also appended
+/// to `log`: should the job later be checkpoint-preempted, the engine
+/// re-runs its committed prefix with a [`ScriptedDynSched`] that replays
+/// this log verbatim — reproducing the exact execution without consulting
+/// (or perturbing) the by-then-different ledger.
 struct QuotaAwareDynSched {
     inner: Arc<dyn DynScheduler>,
     ledger: Arc<Mutex<QuotaLedger>>,
     job: usize,
     /// Cluster-clock offset of this job's simulation (its admission time).
     offset: f64,
+    log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>>,
 }
 
 impl DynScheduler for QuotaAwareDynSched {
@@ -250,35 +292,28 @@ impl DynScheduler for QuotaAwareDynSched {
         "quota-aware"
     }
 
-    fn select(
-        &self,
-        p: &MappingProblem,
-        map: &CurrentMap,
-        faulty: FaultyTask,
-        candidate_set: &[VmTypeId],
-        revoked: VmTypeId,
-        policy: DynSchedPolicy,
-        at: SimTime,
-    ) -> (Option<Selection>, Vec<VmTypeId>) {
-        let t = self.offset + at.secs();
+    fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+        let (p, map, faulty, revoked) = (ctx.problem, ctx.map, ctx.faulty, ctx.revoked);
+        let t = self.offset + ctx.at.secs();
         let mut ledger = self.ledger.lock().expect("quota ledger poisoned");
         ledger.release_one(self.job, revoked, t);
         let filtered: Vec<VmTypeId> =
-            candidate_set.iter().copied().filter(|&v| ledger.fits(&[v], t)).collect();
+            ctx.candidates.iter().copied().filter(|&v| ledger.fits(&[v], t)).collect();
         let quota_blocked: Vec<VmTypeId> =
-            candidate_set.iter().copied().filter(|v| !filtered.contains(v)).collect();
+            ctx.candidates.iter().copied().filter(|v| !filtered.contains(v)).collect();
         let (selection, inner_set) =
-            self.inner.select(p, map, faulty, &filtered, revoked, policy, at);
+            self.inner.select(&RevocationCtx { candidates: &filtered, ..*ctx });
         // Candidate set handed back on success: keep quota-blocked types as
         // candidates for later events (their shortage is transient), but
         // drop whatever the inner scheduler itself removed — so a
         // remove-revoked ban is never silently undone.
-        let final_set: Vec<VmTypeId> = candidate_set
+        let final_set: Vec<VmTypeId> = ctx
+            .candidates
             .iter()
             .copied()
             .filter(|v| inner_set.contains(v) || quota_blocked.contains(v))
             .collect();
-        match selection {
+        let result = match selection {
             Some(sel) => {
                 ledger.commit(self.job, sel.vm, t);
                 (Some(sel), final_set)
@@ -308,7 +343,38 @@ impl DynScheduler for QuotaAwareDynSched {
                 // fails exactly like `coordinator::simulate` would.
                 (None, inner_set)
             }
-        }
+        };
+        self.log.lock().expect("selection log poisoned").push(result.clone());
+        result
+    }
+}
+
+/// Replays a recorded selection log verbatim, ignoring the context: how a
+/// checkpoint-preempted job's committed prefix is re-executed. The original
+/// run's replacement choices were a pure function of the simulation's RNG
+/// stream and the ledger state *at that time*; replaying them (instead of
+/// re-deciding against today's ledger) reproduces the prefix exactly.
+struct ScriptedDynSched {
+    script: Vec<(Option<Selection>, Vec<VmTypeId>)>,
+    next: Mutex<usize>,
+}
+
+impl ScriptedDynSched {
+    fn new(script: Vec<(Option<Selection>, Vec<VmTypeId>)>) -> ScriptedDynSched {
+        ScriptedDynSched { script, next: Mutex::new(0) }
+    }
+}
+
+impl DynScheduler for ScriptedDynSched {
+    fn name(&self) -> &'static str {
+        "scripted-replay"
+    }
+
+    fn select(&self, _ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
+        let mut next = self.next.lock().expect("script cursor poisoned");
+        let entry = self.script.get(*next).cloned().unwrap_or((None, Vec::new()));
+        *next += 1;
+        entry
     }
 }
 
@@ -329,6 +395,11 @@ pub struct JobRecord {
     pub predicted_round_cost: f64,
     pub server: String,
     pub clients: Vec<String>,
+    /// Times this job was checkpoint-preempted by the workload scheduler.
+    pub preemptions: u32,
+    /// Completed rounds the preemptions discarded (0 with client
+    /// checkpoints on — a resumed job re-executes nothing).
+    pub rounds_lost: u32,
 }
 
 /// Workload-level summary metrics of one execution.
@@ -344,6 +415,8 @@ pub struct WorkloadStats {
     /// Jobs whose budget/deadline/quota excluded every placement outright.
     pub rejected: usize,
     pub total_cost: f64,
+    /// Total checkpoint-preemptions across all jobs (0 under `NoPreempt`).
+    pub preemptions: u32,
 }
 
 impl WorkloadStats {
@@ -355,7 +428,9 @@ impl WorkloadStats {
         let mut queued = 0usize;
         let mut rejected = 0usize;
         let mut total_cost = 0.0;
+        let mut preemptions = 0u32;
         for r in records {
+            preemptions += r.preemptions;
             match r.admitted_at {
                 Some(_) => {
                     admitted += 1;
@@ -377,6 +452,7 @@ impl WorkloadStats {
             queued,
             rejected,
             total_cost,
+            preemptions,
         }
     }
 }
@@ -400,8 +476,9 @@ impl Workload {
         let name = cfg.app.name.to_string();
         Workload {
             name: name.clone(),
-            jobs: vec![JobRequest { name, arrival_secs: 0.0, cfg }],
+            jobs: vec![JobRequest::new(name, 0.0, cfg)],
             admission: AdmissionPolicy::Fifo,
+            scheduler: SchedulerPolicy::NoPreempt,
         }
     }
 
@@ -413,6 +490,17 @@ impl Workload {
     /// Execute the workload; Pre-Scheduling reports come from (and feed)
     /// the shared `cache`, so campaigns measure each environment once.
     pub fn run_with_cache(&self, cache: &Arc<EnvCache>) -> anyhow::Result<WorkloadOutcome> {
+        self.run_scheduled(sched::scheduler_for(self.scheduler).as_ref(), cache)
+    }
+
+    /// Execute the workload under an arbitrary [`WorkloadScheduler`]
+    /// implementation — the extension point for custom policies beyond the
+    /// [`SchedulerPolicy`] built-ins.
+    pub fn run_scheduled(
+        &self,
+        scheduler: &dyn WorkloadScheduler,
+        cache: &Arc<EnvCache>,
+    ) -> anyhow::Result<WorkloadOutcome> {
         anyhow::ensure!(!self.jobs.is_empty(), "workload has no jobs");
         let (catalog, ground_truth) = environment_for(&self.jobs[0].cfg.app);
         for j in &self.jobs {
@@ -435,21 +523,110 @@ impl Workload {
         let ledger = Arc::new(Mutex::new(QuotaLedger::new(catalog.clone())));
 
         let n = self.jobs.len();
-        let mut records: Vec<Option<JobRecord>> = vec![None; n];
-        let mut solo: Vec<Option<MappingSolution>> = vec![None; n];
-        let mut pending: Vec<usize> = Vec::new();
-        // (time, Some(job) = arrival | None = capacity-release trigger).
-        let mut events: Vec<(f64, Option<usize>)> =
-            self.jobs.iter().enumerate().map(|(i, j)| (j.arrival_secs, Some(i))).collect();
+        let mut eng = Engine {
+            w: self,
+            sched: scheduler,
+            catalog,
+            slowdowns,
+            ledger,
+            cache: cache.clone(),
+            records: vec![None; n],
+            solo: vec![None; n],
+            state: vec![JobState::default(); n],
+            running: Vec::new(),
+            pending: Vec::new(),
+            events: self
+                .jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| (j.arrival_secs, Ev::Arrival(i)))
+                .collect(),
+        };
+        eng.run()?;
 
-        while !events.is_empty() {
-            let t = events.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
+        let jobs: Vec<JobRecord> =
+            eng.records.into_iter().map(|r| r.expect("every job recorded")).collect();
+        let reservations =
+            eng.ledger.lock().expect("quota ledger poisoned").reservations.clone();
+        let stats = WorkloadStats::from_records(&jobs);
+        Ok(WorkloadOutcome { jobs, reservations, stats })
+    }
+}
+
+/// One engine event on the cluster clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Job arrival.
+    Arrival(usize),
+    /// Capacity owned by a job returns to the pool (a revocation release or
+    /// the job's completion) — removable should the owner be preempted.
+    Capacity(usize),
+    /// Price-step retry for queued jobs.
+    PriceStep,
+}
+
+/// Cross-segment progress of one job: what earlier (checkpoint-preempted)
+/// admission segments already banked. All-zero for a never-preempted job, so
+/// every accumulator sum below is the identity on the NoPreempt path.
+#[derive(Debug, Clone, Default)]
+struct JobState {
+    rounds_done: u32,
+    acc_cost: f64,
+    acc_revocations: u32,
+    acc_fl_secs: f64,
+    preemptions: u32,
+    rounds_lost: u32,
+    first_admitted_at: Option<f64>,
+    /// Admission-time facts frozen at the *first* admission — a resumed
+    /// segment must not overwrite them.
+    first_pred: Option<FirstSegment>,
+}
+
+#[derive(Debug, Clone)]
+struct FirstSegment {
+    predicted_round_makespan: f64,
+    predicted_round_cost: f64,
+    server: String,
+    clients: Vec<String>,
+}
+
+/// One admitted, not-yet-completed job segment: everything needed to replay
+/// its committed prefix if a preemptive scheduler truncates it.
+struct RunningSeg {
+    job: usize,
+    admitted_at: f64,
+    completion: f64,
+    run_cfg: SimConfig,
+    sol: MappingSolution,
+    log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>>,
+}
+
+/// One workload execution in flight (see module docs for semantics).
+struct Engine<'e> {
+    w: &'e Workload,
+    sched: &'e dyn WorkloadScheduler,
+    catalog: Catalog,
+    slowdowns: Arc<SlowdownReport>,
+    ledger: Arc<Mutex<QuotaLedger>>,
+    cache: Arc<EnvCache>,
+    records: Vec<Option<JobRecord>>,
+    solo: Vec<Option<MappingSolution>>,
+    state: Vec<JobState>,
+    running: Vec<RunningSeg>,
+    pending: Vec<usize>,
+    events: Vec<(f64, Ev)>,
+}
+
+impl Engine<'_> {
+    fn run(&mut self) -> anyhow::Result<()> {
+        while !self.events.is_empty() {
+            let t = self.events.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
             // Drain every event at exactly `t`, then run one admission pass.
             let mut arrivals: Vec<usize> = Vec::new();
             let mut k = 0;
-            while k < events.len() {
-                if events[k].0 == t {
-                    if let (_, Some(job)) = events.swap_remove(k) {
+            while k < self.events.len() {
+                if self.events[k].0 == t {
+                    if let (_, Ev::Arrival(job)) = self.events.swap_remove(k) {
                         arrivals.push(job);
                     }
                 } else {
@@ -458,137 +635,301 @@ impl Workload {
             }
             arrivals.sort_unstable();
             for j in arrivals {
-                let jr = &self.jobs[j];
-                let profile = jr.cfg.app.profile();
-                let p = MappingProblem {
-                    catalog: &catalog,
-                    slowdowns: slowdowns.as_ref(),
-                    job: &profile,
-                    alpha: jr.cfg.alpha,
-                    market: jr.cfg.scenario.client_market(),
-                    spot_price_factor: planning_price_factor_at(&jr.cfg, t),
-                    budget_round: jr.cfg.budget_round,
-                    deadline_round: jr.cfg.deadline_round,
-                };
-                match modules::mapper_for(jr.cfg.mapper).map(&p) {
-                    Some(sol) => {
-                        solo[j] = Some(sol);
-                        pending.push(j);
-                    }
-                    None if jr.cfg.budget_round.is_finite()
-                        && jr.cfg.market.next_price_step_after(t).is_some() =>
-                    {
-                        // Infeasible at the *current* price level, but the
-                        // price can still change and the job is budget-
-                        // capped (prices enter feasibility only through the
-                        // budget): queue without a solo solution and let
-                        // the price-step retries re-solve at each level.
-                        pending.push(j);
-                    }
-                    None => {
-                        // Infeasible even on an idle environment, at a
-                        // price level that will never change: reject.
-                        records[j] = Some(rejected_record(jr));
-                    }
-                }
+                self.arrive(j, t);
             }
+            self.admission_pass(t)?;
+            self.schedule_price_retry(t);
+        }
+        anyhow::ensure!(
+            self.pending.is_empty(),
+            "workload engine stalled with {} queued jobs",
+            self.pending.len()
+        );
+        Ok(())
+    }
 
-            // Admission pass in policy order; later jobs may backfill past a
-            // blocked one (greedy, like the static multijob planner).
-            let mut order = pending.clone();
-            match self.admission {
-                AdmissionPolicy::Fifo => order.sort_by(|&a, &b| {
-                    self.jobs[a]
-                        .arrival_secs
-                        .total_cmp(&self.jobs[b].arrival_secs)
-                        .then(a.cmp(&b))
-                }),
-                AdmissionPolicy::ShortestMakespanFirst => order.sort_by(|&a, &b| {
-                    // Jobs queued without a solo solution (priced out at
-                    // arrival) sort last until a price change admits them.
-                    let m = |j: usize| {
-                        solo[j].as_ref().map_or(f64::INFINITY, |s| s.eval.makespan)
+    fn arrive(&mut self, j: usize, t: f64) {
+        let jr = &self.w.jobs[j];
+        let profile = jr.cfg.app.profile();
+        let p = MappingProblem {
+            catalog: &self.catalog,
+            slowdowns: self.slowdowns.as_ref(),
+            job: &profile,
+            alpha: jr.cfg.alpha,
+            market: jr.cfg.scenario.client_market(),
+            spot_price_factor: planning_price_factor_at(&jr.cfg, t),
+            budget_round: jr.cfg.budget_round,
+            deadline_round: jr.cfg.deadline_round,
+        };
+        match modules::mapper_for(jr.cfg.mapper).map(&p) {
+            Some(sol) => {
+                self.solo[j] = Some(sol);
+                self.pending.push(j);
+            }
+            None if jr.cfg.budget_round.is_finite()
+                && jr.cfg.market.next_price_step_after(t).is_some() =>
+            {
+                // Infeasible at the *current* price level, but the price
+                // can still change and the job is budget-capped (prices
+                // enter feasibility only through the budget): queue without
+                // a solo solution and let the price-step retries re-solve
+                // at each level.
+                self.pending.push(j);
+            }
+            None => {
+                // Infeasible even on an idle environment, at a price level
+                // that will never change: reject.
+                self.records[j] = Some(rejected_record(jr));
+            }
+        }
+    }
+
+    /// One admission pass at instant `t`: queued jobs attempt admission in
+    /// the scheduler's order (later jobs may backfill past a blocked one,
+    /// greedy like the static multijob planner); a blocked job may
+    /// checkpoint-preempt victims the scheduler nominates.
+    fn admission_pass(&mut self, t: f64) -> anyhow::Result<()> {
+        self.running.retain(|r| r.completion > t);
+        let order = {
+            let (jobs_v, running_v, service) = self.sched_views(t);
+            let ctx = SchedCtx {
+                now: t,
+                admission: self.w.admission,
+                jobs: &jobs_v,
+                pending: &self.pending,
+                running: &running_v,
+                tenant_service: &service,
+            };
+            self.sched.admission_order(&ctx)
+        };
+        let mut admitted_now: Vec<usize> = Vec::new();
+        for j in order {
+            if self.try_admit(j, t)? {
+                admitted_now.push(j);
+                continue;
+            }
+            // Preemption is only attempted for jobs feasible on an idle
+            // environment — their blocker is capacity, not price/budget,
+            // so freeing a victim's quota can actually help.
+            if self.solo[j].is_none() {
+                continue;
+            }
+            let mut excluded: Vec<usize> = Vec::new();
+            loop {
+                let victim = {
+                    let (jobs_v, running_v, service) = self.sched_views(t);
+                    let ctx = SchedCtx {
+                        now: t,
+                        admission: self.w.admission,
+                        jobs: &jobs_v,
+                        pending: &self.pending,
+                        running: &running_v,
+                        tenant_service: &service,
                     };
-                    m(a).total_cmp(&m(b)).then(a.cmp(&b))
-                }),
-            }
-            let mut admitted_now: Vec<usize> = Vec::new();
-            for j in order {
-                if let Some((completion, releases)) = self.try_admit(
-                    j,
-                    t,
-                    &catalog,
-                    slowdowns.as_ref(),
-                    &solo,
-                    &ledger,
-                    cache,
-                    &mut records,
-                )? {
+                    self.sched.preemption_victim(&ctx, j, &excluded)
+                };
+                let Some(victim) = victim else { break };
+                // Trial: truncate the victim's reservations at `t` and see
+                // whether the freed quota admits `j`. Admission failure is
+                // side-effect free, so a failed trial restores the ledger
+                // and excludes the victim.
+                let snapshot =
+                    self.ledger.lock().expect("quota ledger poisoned").reservations.clone();
+                self.truncate_reservations(victim, t);
+                if self.try_admit(j, t)? {
+                    self.finalize_preemption(victim, t)?;
                     admitted_now.push(j);
-                    for rt in releases {
-                        if rt > t {
-                            events.push((rt, None));
-                        }
-                    }
-                    events.push((completion, None));
+                    break;
+                }
+                self.ledger.lock().expect("quota ledger poisoned").reservations = snapshot;
+                excluded.push(victim);
+            }
+        }
+        self.pending.retain(|j| !admitted_now.contains(j));
+        Ok(())
+    }
+
+    /// A queued job's admission feasibility can change without a capacity
+    /// release when its market's price moves, so always keep a retry event
+    /// at the earliest future price step across pending jobs — a feasible
+    /// price window between two release events must not be missed. When no
+    /// events remain at all and every pending market is settled, the
+    /// leftovers are priced out for good: reject them (their budget
+    /// excludes every placement at every remaining price level).
+    fn schedule_price_retry(&mut self, t: f64) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let next_step = self
+            .pending
+            .iter()
+            .filter_map(|&j| self.w.jobs[j].cfg.market.next_price_step_after(t))
+            .fold(f64::INFINITY, f64::min);
+        if next_step.is_finite() {
+            if !self.events.iter().any(|e| e.0 == next_step) {
+                self.events.push((next_step, Ev::PriceStep));
+            }
+        } else if self.events.is_empty() {
+            let leftovers: Vec<usize> = self.pending.drain(..).collect();
+            for j in leftovers {
+                self.reject(j);
+            }
+        }
+    }
+
+    /// Final rejection of a queued job. A checkpoint-preempted job that
+    /// lands here keeps its actual spend and checkpointed progress (it did
+    /// run), just no completion.
+    fn reject(&mut self, j: usize) {
+        let jr = &self.w.jobs[j];
+        let st = &self.state[j];
+        self.records[j] = Some(match st.first_admitted_at {
+            None => rejected_record(jr),
+            Some(first_t) => {
+                let fp =
+                    st.first_pred.clone().expect("admitted jobs have a first segment");
+                JobRecord {
+                    name: jr.name.clone(),
+                    arrival_secs: jr.arrival_secs,
+                    admitted_at: Some(first_t),
+                    completed_at: None,
+                    wait_secs: first_t - jr.arrival_secs,
+                    cost: st.acc_cost,
+                    revocations: st.acc_revocations,
+                    rounds_completed: st.rounds_done,
+                    fl_exec_secs: st.acc_fl_secs,
+                    predicted_round_makespan: fp.predicted_round_makespan,
+                    predicted_round_cost: fp.predicted_round_cost,
+                    server: fp.server,
+                    clients: fp.clients,
+                    preemptions: st.preemptions,
+                    rounds_lost: st.rounds_lost,
                 }
             }
-            pending.retain(|j| !admitted_now.contains(j));
+        });
+    }
 
-            // A queued job's admission feasibility can change without a
-            // capacity release when its market's price moves, so always
-            // keep a retry event at the earliest future price step across
-            // pending jobs — a feasible price window between two release
-            // events must not be missed. When no events remain at all and
-            // every pending market is settled, the leftovers are priced
-            // out for good: reject them (their budget excludes every
-            // placement at every remaining price level).
-            if !pending.is_empty() {
-                let next_step = pending
-                    .iter()
-                    .filter_map(|&j| self.jobs[j].cfg.market.next_price_step_after(t))
-                    .fold(f64::INFINITY, f64::min);
-                if next_step.is_finite() {
-                    if !events.iter().any(|e| e.0 == next_step) {
-                        events.push((next_step, None));
-                    }
-                } else if events.is_empty() {
-                    for &j in &pending {
-                        records[j] = Some(rejected_record(&self.jobs[j]));
-                    }
-                    pending.clear();
+    /// The scheduler-facing snapshot of the workload at instant `t`.
+    fn sched_views(&self, t: f64) -> (Vec<JobView>, Vec<RunningView>, Vec<(String, f64)>) {
+        let jobs: Vec<JobView> = self
+            .w
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, jr)| JobView {
+                name: jr.name.clone(),
+                arrival_secs: jr.arrival_secs,
+                priority: jr.priority,
+                tenant: jr.tenant.clone(),
+                solo_makespan: self.solo[i].as_ref().map(|s| s.eval.makespan),
+            })
+            .collect();
+        let running: Vec<RunningView> = self
+            .running
+            .iter()
+            .filter(|r| r.completion > t)
+            .map(|r| RunningView {
+                job: r.job,
+                priority: self.w.jobs[r.job].priority,
+                tenant: self.w.jobs[r.job].tenant.clone(),
+                admitted_at: r.admitted_at,
+                completion_at: r.completion,
+            })
+            .collect();
+        // Weighted service per tenant: committed reservation VM·seconds up
+        // to `t`, divided by the tenant's weight (1 + its highest
+        // non-negative job priority — higher-priority tenants are entitled
+        // to proportionally more of the shared quota).
+        let mut service: BTreeMap<String, f64> = BTreeMap::new();
+        for jr in &self.w.jobs {
+            service.entry(jr.tenant.clone()).or_insert(0.0);
+        }
+        {
+            let lg = self.ledger.lock().expect("quota ledger poisoned");
+            for r in &lg.reservations {
+                let end = r.end.min(t);
+                if end > r.start {
+                    *service
+                        .get_mut(&self.w.jobs[r.job].tenant)
+                        .expect("tenant seeded above") += end - r.start;
                 }
             }
         }
-        anyhow::ensure!(
-            pending.is_empty(),
-            "workload engine stalled with {} queued jobs",
-            pending.len()
-        );
+        let service: Vec<(String, f64)> = service
+            .into_iter()
+            .map(|(tenant, s)| {
+                let top = self
+                    .w
+                    .jobs
+                    .iter()
+                    .filter(|j| j.tenant == tenant)
+                    .map(|j| j.priority.max(0))
+                    .max()
+                    .unwrap_or(0);
+                (tenant, s / (1.0 + top as f64))
+            })
+            .collect();
+        (jobs, running, service)
+    }
 
-        let jobs: Vec<JobRecord> =
-            records.into_iter().map(|r| r.expect("every job recorded")).collect();
-        let reservations = ledger.lock().expect("quota ledger poisoned").reservations.clone();
-        let stats = WorkloadStats::from_records(&jobs);
-        Ok(WorkloadOutcome { jobs, reservations, stats })
+    /// Close the victim's reservation timeline at the preemption instant:
+    /// future reservations vanish, live ones end at `t`.
+    fn truncate_reservations(&self, victim: usize, t: f64) {
+        let mut lg = self.ledger.lock().expect("quota ledger poisoned");
+        lg.reservations.retain(|r| !(r.job == victim && r.start >= t));
+        for r in lg.reservations.iter_mut() {
+            if r.job == victim && r.end > t {
+                r.end = t;
+            }
+        }
+    }
+
+    /// Account a successful preemption: replay the victim's committed
+    /// prefix up to `t` through [`Framework::run_until`] (same pinned
+    /// mapping, same seed, recorded replacement choices — the Fault
+    /// Tolerance module plans the resume round from the freshest
+    /// checkpoint), bank the partial outcome, and re-queue the victim with
+    /// only its remaining rounds.
+    fn finalize_preemption(&mut self, victim: usize, t: f64) -> anyhow::Result<()> {
+        let pos = self
+            .running
+            .iter()
+            .position(|r| r.job == victim)
+            .expect("preemption victim is running");
+        let seg = self.running.swap_remove(pos);
+        let script = seg.log.lock().expect("selection log poisoned").clone();
+        let fw = Framework::builder()
+            .pre_sched(CachedPreSched::new(self.cache.clone()))
+            .mapper(FixedMapper::new(seg.sol))
+            .dynsched(ScriptedDynSched::new(script))
+            .build();
+        let (out, lost) = fw.run_until(&seg.run_cfg, t - seg.admitted_at)?;
+        let st = &mut self.state[victim];
+        st.rounds_done += out.rounds_completed;
+        st.acc_cost += out.total_cost;
+        st.acc_revocations += out.n_revocations;
+        st.acc_fl_secs += out.fl_exec_secs;
+        st.preemptions += 1;
+        st.rounds_lost += lost;
+        // The victim's completion (and any later capacity releases) belong
+        // to the pruned timeline.
+        self.events
+            .retain(|&(at, ev)| !(matches!(ev, Ev::Capacity(o) if o == victim) && at > t));
+        self.records[victim] = None;
+        self.pending.push(victim);
+        Ok(())
     }
 
     /// Try to admit job `j` at instant `t` against the residual quota.
-    /// Returns `Some((completion_time, capacity_release_times))` on success.
-    #[allow(clippy::too_many_arguments)]
-    fn try_admit(
-        &self,
-        j: usize,
-        t: f64,
-        catalog: &Catalog,
-        slowdowns: &crate::presched::SlowdownReport,
-        solo: &[Option<MappingSolution>],
-        ledger: &Arc<Mutex<QuotaLedger>>,
-        cache: &Arc<EnvCache>,
-        records: &mut [Option<JobRecord>],
-    ) -> anyhow::Result<Option<(f64, Vec<f64>)>> {
-        let jr = &self.jobs[j];
-        let contended = ledger.lock().expect("quota ledger poisoned").any_live_after(t);
+    /// Failure is side-effect free.
+    fn try_admit(&mut self, j: usize, t: f64) -> anyhow::Result<bool> {
+        let jr = &self.w.jobs[j];
+        // Effective segment config: only the rounds earlier (preempted)
+        // segments have not already checkpointed — the identity for a
+        // never-preempted job.
+        let mut eff_cfg = jr.cfg.clone();
+        eff_cfg.n_rounds = jr.cfg.n_rounds - self.state[j].rounds_done;
+        let contended = self.ledger.lock().expect("quota ledger poisoned").any_live_after(t);
         // The cached arrival-time solution is exact on an idle environment
         // as long as nothing repriced since arrival: always at the arrival
         // instant itself (the `Workload::single` bit-parity path), and at
@@ -598,7 +939,7 @@ impl Workload {
             && (t == jr.arrival_secs
                 || matches!(jr.cfg.market.price, crate::market::PriceSpec::Constant));
         let sol: Option<MappingSolution> = if reuse_solo {
-            solo[j].clone()
+            self.solo[j].clone()
         } else {
             // Re-solve at the admission instant: against the residual
             // capacity when contended (shrink every quota bound by the
@@ -608,10 +949,10 @@ impl Workload {
             // invariant as `coordinator::multijob`), and in any case at
             // the spot price in effect *now*, not at arrival — a queued
             // job must not be admitted against a stale price level.
-            let mut reduced = catalog.clone();
+            let mut reduced = self.catalog.clone();
             if contended {
                 let (pprov, preg) =
-                    ledger.lock().expect("quota ledger poisoned").peak_usage(t);
+                    self.ledger.lock().expect("quota ledger poisoned").peak_usage(t);
                 for (pi, prov) in reduced.providers.iter_mut().enumerate() {
                     if let Some(maxg) = prov.max_gpus {
                         prov.max_gpus = Some(maxg.saturating_sub(pprov[pi].0));
@@ -632,36 +973,39 @@ impl Workload {
             let profile = jr.cfg.app.profile();
             let p = MappingProblem {
                 catalog: &reduced,
-                slowdowns,
+                slowdowns: self.slowdowns.as_ref(),
                 job: &profile,
                 alpha: jr.cfg.alpha,
                 market: jr.cfg.scenario.client_market(),
-                spot_price_factor: planning_price_factor_at(&jr.cfg, t),
+                spot_price_factor: planning_price_factor_at(&eff_cfg, t),
                 budget_round: jr.cfg.budget_round,
                 deadline_round: jr.cfg.deadline_round,
             };
             modules::mapper_for(jr.cfg.mapper).map(&p)
         };
-        let Some(sol) = sol else { return Ok(None) };
+        let Some(sol) = sol else { return Ok(false) };
         let mut vms = sol.mapping.clients.clone();
         vms.push(sol.mapping.server);
         {
-            let mut lg = ledger.lock().expect("quota ledger poisoned");
+            let mut lg = self.ledger.lock().expect("quota ledger poisoned");
             if !lg.fits(&vms, t) {
-                return Ok(None);
+                return Ok(false);
             }
             for &vm in &vms {
                 lg.commit(j, vm, t);
             }
         }
+        let log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
         let fw = Framework::builder()
-            .pre_sched(CachedPreSched::new(cache.clone()))
+            .pre_sched(CachedPreSched::new(self.cache.clone()))
             .mapper(FixedMapper::new(sol.clone()))
             .dynsched(QuotaAwareDynSched {
                 inner: Arc::new(PaperDynSched),
-                ledger: ledger.clone(),
+                ledger: self.ledger.clone(),
                 job: j,
                 offset: t,
+                log: log.clone(),
             })
             .build();
         // The job simulates on its own local clock (t = 0 at admission);
@@ -669,13 +1013,13 @@ impl Workload {
         // the seasonal phase stay on the shared cluster timeline. A no-op
         // for the default market and for t = 0 (the `Workload::single`
         // bit-parity path).
-        let mut run_cfg = jr.cfg.clone();
+        let mut run_cfg = eff_cfg;
         run_cfg.market = jr.cfg.market.shifted(t);
         let out = fw.run(&run_cfg)?;
         let completion = t + out.total_secs;
         let mut releases: Vec<f64> = Vec::new();
         {
-            let mut lg = ledger.lock().expect("quota ledger poisoned");
+            let mut lg = self.ledger.lock().expect("quota ledger poisoned");
             lg.end_job(j, completion);
             for r in lg.reservations.iter() {
                 if r.job == j && r.end < completion {
@@ -683,22 +1027,45 @@ impl Workload {
                 }
             }
         }
-        records[j] = Some(JobRecord {
+        for rt in releases {
+            if rt > t {
+                self.events.push((rt, Ev::Capacity(j)));
+            }
+        }
+        self.events.push((completion, Ev::Capacity(j)));
+        let st = &mut self.state[j];
+        if st.first_admitted_at.is_none() {
+            st.first_admitted_at = Some(t);
+        }
+        if st.first_pred.is_none() {
+            st.first_pred = Some(FirstSegment {
+                predicted_round_makespan: out.predicted_round_makespan,
+                predicted_round_cost: out.predicted_round_cost,
+                server: out.initial_server.clone(),
+                clients: out.initial_clients.clone(),
+            });
+        }
+        let first_t = st.first_admitted_at.expect("just set");
+        let fp = st.first_pred.clone().expect("just set");
+        self.records[j] = Some(JobRecord {
             name: jr.name.clone(),
             arrival_secs: jr.arrival_secs,
-            admitted_at: Some(t),
+            admitted_at: Some(first_t),
             completed_at: Some(completion),
-            wait_secs: t - jr.arrival_secs,
-            cost: out.total_cost,
-            revocations: out.n_revocations,
-            rounds_completed: out.rounds_completed,
-            fl_exec_secs: out.fl_exec_secs,
-            predicted_round_makespan: out.predicted_round_makespan,
-            predicted_round_cost: out.predicted_round_cost,
-            server: out.initial_server.clone(),
-            clients: out.initial_clients.clone(),
+            wait_secs: first_t - jr.arrival_secs,
+            cost: st.acc_cost + out.total_cost,
+            revocations: st.acc_revocations + out.n_revocations,
+            rounds_completed: st.rounds_done + out.rounds_completed,
+            fl_exec_secs: st.acc_fl_secs + out.fl_exec_secs,
+            predicted_round_makespan: fp.predicted_round_makespan,
+            predicted_round_cost: fp.predicted_round_cost,
+            server: fp.server,
+            clients: fp.clients,
+            preemptions: st.preemptions,
+            rounds_lost: st.rounds_lost,
         });
-        Ok(Some((completion, releases)))
+        self.running.push(RunningSeg { job: j, admitted_at: t, completion, run_cfg, sol, log });
+        Ok(true)
     }
 }
 
@@ -723,6 +1090,7 @@ pub struct WorkloadAgg {
     pub admitted: MetricAgg,
     pub queued: MetricAgg,
     pub rejected: MetricAgg,
+    pub preemptions: MetricAgg,
     pub jobs: Vec<JobAgg>,
 }
 
@@ -735,6 +1103,7 @@ pub struct JobAgg {
     pub completion: MetricAgg,
     pub cost: MetricAgg,
     pub revocations: MetricAgg,
+    pub preemptions: MetricAgg,
 }
 
 impl WorkloadAgg {
@@ -755,6 +1124,7 @@ impl WorkloadAgg {
                 completion: jcol(&|r| r.completed_at.unwrap_or(0.0)),
                 cost: jcol(&|r| r.cost),
                 revocations: jcol(&|r| r.revocations as f64),
+                preemptions: jcol(&|r| r.preemptions as f64),
             });
         }
         WorkloadAgg {
@@ -765,6 +1135,7 @@ impl WorkloadAgg {
             admitted: col(&|o| o.stats.admitted as f64),
             queued: col(&|o| o.stats.queued as f64),
             rejected: col(&|o| o.stats.rejected as f64),
+            preemptions: col(&|o| o.stats.preemptions as f64),
             jobs,
         }
     }
@@ -788,13 +1159,10 @@ mod tests {
             jobs: cfgs
                 .into_iter()
                 .enumerate()
-                .map(|(i, cfg)| JobRequest {
-                    name: format!("job-{i}"),
-                    arrival_secs: 0.0,
-                    cfg,
-                })
+                .map(|(i, cfg)| JobRequest::new(format!("job-{i}"), 0.0, cfg))
                 .collect(),
             admission: AdmissionPolicy::Fifo,
+            scheduler: SchedulerPolicy::NoPreempt,
         }
     }
 

@@ -1,0 +1,334 @@
+//! Workload-level dynamic-scheduling policies.
+//!
+//! A [`WorkloadScheduler`] decides, at every admission pass of the workload
+//! engine, (a) the order in which queued jobs attempt admission and (b)
+//! whether a queued job that does not fit the residual quota may
+//! checkpoint-preempt a running one. Policies are pure functions of a
+//! [`SchedCtx`] — an extensible context struct in the same style as
+//! [`crate::dynsched::RevocationCtx`], so growing the information a policy
+//! may consult never breaks implementors.
+//!
+//! Three built-in policies ([`scheduler_for`]):
+//!
+//! * [`NoPreempt`] — the pre-preemption engine verbatim: admission order is
+//!   the [`AdmissionPolicy`] sort, nothing is ever preempted. Bit-identical
+//!   to the engine before preemption existed (`tests/workload_parity.rs`).
+//! * [`PriorityPreempt`] — queued jobs attempt admission highest-priority
+//!   first (stable over the admission sort), and a queued job that does not
+//!   fit may checkpoint-preempt the *lowest*-priority running job whose
+//!   priority is strictly below its own. Strict inequality rules out
+//!   preemption ping-pong: a resumed job can never preempt its preemptor.
+//! * [`FairShare`] — deficit-weighted round-robin over tenants: tenants are
+//!   ordered by normalized service received so far (VM·seconds divided by
+//!   tenant weight), and one job per tenant is drawn per cycle, so a tenant
+//!   that has consumed less of the shared quota gets the next admission
+//!   slot. Never preempts.
+
+use crate::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
+
+/// Static facts about one workload job (indexed like `Workload::jobs`).
+#[derive(Debug, Clone)]
+pub struct JobView {
+    pub name: String,
+    pub arrival_secs: f64,
+    /// Scheduling priority (higher = more important).
+    pub priority: i64,
+    /// Owning tenant (empty = the default tenant).
+    pub tenant: String,
+    /// Idle-environment makespan estimate; `None` while priced out.
+    pub solo_makespan: Option<f64>,
+}
+
+/// One currently running job segment (admitted, not yet completed).
+#[derive(Debug, Clone)]
+pub struct RunningView {
+    pub job: usize,
+    pub priority: i64,
+    pub tenant: String,
+    /// Cluster instant this segment was admitted.
+    pub admitted_at: f64,
+    /// Cluster instant it will complete if left alone.
+    pub completion_at: f64,
+}
+
+/// Everything a workload scheduler may consult at one admission pass.
+///
+/// Like [`crate::dynsched::RevocationCtx`], this is an extensible context
+/// struct: new fields are additive and existing policies keep compiling.
+pub struct SchedCtx<'a> {
+    /// The cluster instant of this admission pass.
+    pub now: f64,
+    /// The workload's base admission order (FIFO / SJF).
+    pub admission: AdmissionPolicy,
+    /// All workload jobs, by index.
+    pub jobs: &'a [JobView],
+    /// Indices of jobs currently queued for admission.
+    pub pending: &'a [usize],
+    /// Jobs currently running (completion strictly after `now`).
+    pub running: &'a [RunningView],
+    /// Weighted service received per tenant up to `now`: committed
+    /// reservation VM·seconds divided by the tenant's weight
+    /// (`1 + max(0, highest job priority in the tenant)`), sorted by tenant
+    /// name. Every tenant in the workload appears, with 0.0 if unserved.
+    pub tenant_service: &'a [(String, f64)],
+}
+
+impl SchedCtx<'_> {
+    fn service_of(&self, tenant: &str) -> f64 {
+        self.tenant_service
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map_or(0.0, |(_, s)| *s)
+    }
+}
+
+/// A workload-level dynamic-scheduling policy (see module docs).
+pub trait WorkloadScheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The order in which queued jobs attempt admission at this pass.
+    /// Jobs later in the order may backfill past blocked earlier ones.
+    fn admission_order(&self, ctx: &SchedCtx<'_>) -> Vec<usize>;
+
+    /// A running job to checkpoint-preempt so queued `job` can start, or
+    /// `None` to give up. `excluded` lists victims already tried at this
+    /// pass whose capacity did not make `job` fit.
+    fn preemption_victim(&self, ctx: &SchedCtx<'_>, job: usize, excluded: &[usize])
+        -> Option<usize>;
+}
+
+/// The base [`AdmissionPolicy`] sort — exactly the pre-preemption engine's
+/// admission pass order (FIFO: by arrival then index; SJF: by idle-env
+/// makespan then index, priced-out jobs last).
+fn policy_order(ctx: &SchedCtx<'_>) -> Vec<usize> {
+    let mut order = ctx.pending.to_vec();
+    match ctx.admission {
+        AdmissionPolicy::Fifo => order.sort_by(|&a, &b| {
+            ctx.jobs[a]
+                .arrival_secs
+                .total_cmp(&ctx.jobs[b].arrival_secs)
+                .then(a.cmp(&b))
+        }),
+        AdmissionPolicy::ShortestMakespanFirst => order.sort_by(|&a, &b| {
+            let m = |j: usize| ctx.jobs[j].solo_makespan.unwrap_or(f64::INFINITY);
+            m(a).total_cmp(&m(b)).then(a.cmp(&b))
+        }),
+    }
+    order
+}
+
+/// Admit-and-run-to-completion: the pre-preemption engine, bit-identical.
+pub struct NoPreempt;
+
+impl WorkloadScheduler for NoPreempt {
+    fn name(&self) -> &'static str {
+        "no-preempt"
+    }
+
+    fn admission_order(&self, ctx: &SchedCtx<'_>) -> Vec<usize> {
+        policy_order(ctx)
+    }
+
+    fn preemption_victim(&self, _: &SchedCtx<'_>, _: usize, _: &[usize]) -> Option<usize> {
+        None
+    }
+}
+
+/// Higher priority admits first and may checkpoint-preempt strictly lower
+/// priority when the quota is short.
+pub struct PriorityPreempt;
+
+impl WorkloadScheduler for PriorityPreempt {
+    fn name(&self) -> &'static str {
+        "priority-preempt"
+    }
+
+    fn admission_order(&self, ctx: &SchedCtx<'_>) -> Vec<usize> {
+        let mut order = policy_order(ctx);
+        // Stable: equal priorities keep the base admission order, so a
+        // uniform-priority workload reproduces NoPreempt exactly.
+        order.sort_by_key(|&j| std::cmp::Reverse(ctx.jobs[j].priority));
+        order
+    }
+
+    fn preemption_victim(
+        &self,
+        ctx: &SchedCtx<'_>,
+        job: usize,
+        excluded: &[usize],
+    ) -> Option<usize> {
+        let mine = ctx.jobs[job].priority;
+        ctx.running
+            .iter()
+            .filter(|r| r.priority < mine && !excluded.contains(&r.job))
+            // Lowest priority first; ties prefer the most recently admitted
+            // segment (least sunk progress), then the highest index —
+            // deterministic regardless of registry order.
+            .min_by(|a, b| {
+                a.priority
+                    .cmp(&b.priority)
+                    .then(b.admitted_at.total_cmp(&a.admitted_at))
+                    .then(b.job.cmp(&a.job))
+            })
+            .map(|r| r.job)
+    }
+}
+
+/// Deficit-weighted round-robin over tenants; never preempts.
+pub struct FairShare;
+
+impl WorkloadScheduler for FairShare {
+    fn name(&self) -> &'static str {
+        "fair-share"
+    }
+
+    fn admission_order(&self, ctx: &SchedCtx<'_>) -> Vec<usize> {
+        let base = policy_order(ctx);
+        // Distinct tenants with queued jobs, most underserved first (ties
+        // by tenant name — deterministic).
+        let mut tenants: Vec<&str> = Vec::new();
+        for &j in &base {
+            let t = ctx.jobs[j].tenant.as_str();
+            if !tenants.contains(&t) {
+                tenants.push(t);
+            }
+        }
+        tenants.sort_by(|a, b| {
+            ctx.service_of(a).total_cmp(&ctx.service_of(b)).then(a.cmp(b))
+        });
+        // One job per tenant per cycle, each tenant's queue in base order.
+        let mut queues: Vec<std::collections::VecDeque<usize>> = tenants
+            .iter()
+            .map(|t| base.iter().copied().filter(|&j| ctx.jobs[j].tenant == *t).collect())
+            .collect();
+        let mut order = Vec::with_capacity(base.len());
+        while order.len() < base.len() {
+            for q in queues.iter_mut() {
+                if let Some(j) = q.pop_front() {
+                    order.push(j);
+                }
+            }
+        }
+        order
+    }
+
+    fn preemption_victim(&self, _: &SchedCtx<'_>, _: usize, _: &[usize]) -> Option<usize> {
+        None
+    }
+}
+
+/// The built-in scheduler for a [`SchedulerPolicy`] key.
+pub fn scheduler_for(policy: SchedulerPolicy) -> Box<dyn WorkloadScheduler> {
+    match policy {
+        SchedulerPolicy::NoPreempt => Box::new(NoPreempt),
+        SchedulerPolicy::PriorityPreempt => Box::new(PriorityPreempt),
+        SchedulerPolicy::FairShare => Box::new(FairShare),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs() -> Vec<JobView> {
+        let mk = |name: &str, arrival: f64, priority: i64, tenant: &str| JobView {
+            name: name.into(),
+            arrival_secs: arrival,
+            priority,
+            tenant: tenant.into(),
+            solo_makespan: Some(100.0),
+        };
+        vec![
+            mk("a", 0.0, 0, "acme"),
+            mk("b", 1.0, 5, "acme"),
+            mk("c", 2.0, 0, "zeta"),
+            mk("d", 3.0, 5, "zeta"),
+        ]
+    }
+
+    fn ctx<'a>(
+        jobs: &'a [JobView],
+        pending: &'a [usize],
+        running: &'a [RunningView],
+        service: &'a [(String, f64)],
+    ) -> SchedCtx<'a> {
+        SchedCtx {
+            now: 10.0,
+            admission: AdmissionPolicy::Fifo,
+            jobs,
+            pending,
+            running,
+            tenant_service: service,
+        }
+    }
+
+    #[test]
+    fn no_preempt_is_the_admission_sort() {
+        let jobs = jobs();
+        let pending = vec![3, 1, 0, 2];
+        let c = ctx(&jobs, &pending, &[], &[]);
+        assert_eq!(NoPreempt.admission_order(&c), vec![0, 1, 2, 3]);
+        assert_eq!(NoPreempt.preemption_victim(&c, 1, &[]), None);
+    }
+
+    #[test]
+    fn priority_preempt_orders_high_priority_first_stably() {
+        let jobs = jobs();
+        let pending = vec![3, 1, 0, 2];
+        let c = ctx(&jobs, &pending, &[], &[]);
+        // Priority 5 jobs (b, d) first in arrival order, then a, c.
+        assert_eq!(PriorityPreempt.admission_order(&c), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn priority_preempt_picks_lowest_priority_victim_and_respects_exclusions() {
+        let jobs = jobs();
+        let running = vec![
+            RunningView {
+                job: 0,
+                priority: 0,
+                tenant: "acme".into(),
+                admitted_at: 0.0,
+                completion_at: 50.0,
+            },
+            RunningView {
+                job: 2,
+                priority: 0,
+                tenant: "zeta".into(),
+                admitted_at: 2.0,
+                completion_at: 60.0,
+            },
+        ];
+        let pending = vec![1];
+        let c = ctx(&jobs, &pending, &running, &[]);
+        // Tie on priority: the most recently admitted segment loses.
+        assert_eq!(PriorityPreempt.preemption_victim(&c, 1, &[]), Some(2));
+        assert_eq!(PriorityPreempt.preemption_victim(&c, 1, &[2]), Some(0));
+        assert_eq!(PriorityPreempt.preemption_victim(&c, 1, &[2, 0]), None);
+        // Equal priority is never preempted (strict inequality).
+        assert_eq!(PriorityPreempt.preemption_victim(&c, 0, &[]), None);
+    }
+
+    #[test]
+    fn fair_share_round_robins_underserved_tenant_first() {
+        let jobs = jobs();
+        let pending = vec![0, 1, 2, 3];
+        let service = vec![("acme".to_string(), 500.0), ("zeta".to_string(), 0.0)];
+        let c = ctx(&jobs, &pending, &[], &service);
+        // zeta is underserved: its jobs lead each round-robin cycle.
+        assert_eq!(FairShare.admission_order(&c), vec![2, 0, 3, 1]);
+        assert_eq!(FairShare.preemption_victim(&c, 1, &[]), None);
+    }
+
+    #[test]
+    fn fair_share_single_tenant_reduces_to_admission_sort() {
+        let mut jobs = jobs();
+        for j in jobs.iter_mut() {
+            j.tenant = "only".into();
+        }
+        let pending = vec![3, 1, 0, 2];
+        let service = vec![("only".to_string(), 123.0)];
+        let c = ctx(&jobs, &pending, &[], &service);
+        assert_eq!(FairShare.admission_order(&c), vec![0, 1, 2, 3]);
+    }
+}

@@ -11,6 +11,7 @@
 //! trials = 3                   # independent workload realizations
 //! workers = 4                  # optional default worker count (CLI --jobs wins)
 //! admission = "fifo"           # fifo | sjf (default fifo)
+//! scheduler = "no-preempt"     # no-preempt | priority-preempt | fair-share
 //!
 //! [arrival]                    # omit for batch (everything arrives at t=0)
 //! kind = "poisson"             # batch | poisson | trace
@@ -22,15 +23,19 @@
 //! count = 2                    # replicate this template (default 1)
 //! rounds = 10
 //! scenario = "all-on-demand"
+//! priority = 5                 # scheduling priority (default 0, may be negative)
+//! tenant = "acme"              # owning tenant for fair-share (default "")
 //! budget_round = 2.5           # optional per-round constraints
 //! deadline_round = 900.0
 //! # ...every job-spec key except `seed`/`trials` (workload-level concerns)
 //!
 //! [grid]                       # optional campaign axes (cartesian product)
 //! admissions = ["fifo", "sjf"]
+//! schedulers = ["no-preempt", "priority-preempt"]
 //! arrivals = ["batch", "poisson"]
 //! budget_round = [1.0, 2.0]    # overrides every job's budget for the point
 //! deadline_round = [600.0]
+//! priorities = [0, 5]          # overrides every job's priority for the point
 //! markets = ["exponential", "volatile"]  # overrides every job's market
 //!
 //! [[market]]                   # named spot-market models; a [[job]] may
@@ -47,7 +52,7 @@
 use std::path::Path;
 
 use super::{JobRequest, Workload, WorkloadAgg};
-use crate::coordinator::multijob::AdmissionPolicy;
+use crate::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
 use crate::coordinator::JobSpec;
 use crate::market::{self, MarketSpec};
 use crate::simul::{Rng, SimTime};
@@ -82,6 +87,8 @@ impl ArrivalProcess {
 #[derive(Debug, Clone)]
 pub struct JobTemplate {
     pub name: String,
+    pub priority: i64,
+    pub tenant: String,
     pub cfg: crate::coordinator::SimConfig,
 }
 
@@ -94,13 +101,17 @@ pub struct WorkloadSpec {
     /// Default worker count; the CLI `--jobs` flag overrides it.
     pub workers: Option<usize>,
     pub admission: AdmissionPolicy,
+    pub scheduler: SchedulerPolicy,
     pub arrival: ArrivalProcess,
     /// After `count` expansion: the concrete job list of every trial.
     pub jobs: Vec<JobTemplate>,
     pub admissions_axis: Option<Vec<AdmissionPolicy>>,
+    pub schedulers_axis: Option<Vec<SchedulerPolicy>>,
     pub arrivals_axis: Option<Vec<ArrivalProcess>>,
     pub budget_axis: Option<Vec<f64>>,
     pub deadline_axis: Option<Vec<f64>>,
+    /// Optional axis: override every job's priority for the point.
+    pub priorities_axis: Option<Vec<i64>>,
     /// Optional axis: named spot-market models overriding every job's
     /// market for the point (`None` = not swept).
     pub markets_axis: Option<Vec<(String, MarketSpec)>>,
@@ -244,10 +255,23 @@ impl WorkloadSpec {
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string())
                 .unwrap_or_else(|| spec.config.app.name.to_string());
+            // Workload-scheduling attributes (not JobSpec config keys):
+            // priority may be negative, tenant defaults to "".
+            let priority = tbl.get("priority").and_then(|v| v.as_int()).unwrap_or(0);
+            let tenant = tbl
+                .get("tenant")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
             for k in 0..count {
                 let name =
                     if count == 1 { base_name.clone() } else { format!("{base_name}-{k}") };
-                jobs.push(JobTemplate { name, cfg: spec.config.clone() });
+                jobs.push(JobTemplate {
+                    name,
+                    priority,
+                    tenant: tenant.clone(),
+                    cfg: spec.config.clone(),
+                });
             }
         }
 
@@ -263,6 +287,14 @@ impl WorkloadSpec {
             None => AdmissionPolicy::Fifo,
             Some(k) => AdmissionPolicy::from_key(k)
                 .ok_or_else(|| anyhow::anyhow!("unknown admission policy {k} (fifo | sjf)"))?,
+        };
+        let scheduler = match root.get("scheduler").and_then(|v| v.as_str()) {
+            None => SchedulerPolicy::NoPreempt,
+            Some(k) => SchedulerPolicy::from_key(k).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scheduler policy {k} (no-preempt | priority-preempt | fair-share)"
+                )
+            })?,
         };
 
         // --- optional grid axes ---
@@ -315,6 +347,25 @@ impl WorkloadSpec {
         };
         let budget_axis = float_axis("budget_round")?;
         let deadline_axis = float_axis("deadline_round")?;
+        let schedulers_axis = match axis_values(grid, "schedulers") {
+            None => None,
+            Some(items) => Some(
+                items
+                    .into_iter()
+                    .map(|v| {
+                        v.as_str().and_then(SchedulerPolicy::from_key).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "grid.schedulers: no-preempt | priority-preempt | fair-share"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
+        let priorities_axis = match grid {
+            None => None,
+            Some(g) => crate::sweep::spec::int_axis(g, "priorities")?,
+        };
         let markets_axis = match axis_values(grid, "markets") {
             None => None,
             Some(items) => Some(
@@ -341,12 +392,15 @@ impl WorkloadSpec {
             trials: trials as usize,
             workers: get_nonneg("workers")?.map(|w| w as usize),
             admission,
+            scheduler,
             arrival,
             jobs,
             admissions_axis,
+            schedulers_axis,
             arrivals_axis,
             budget_axis,
             deadline_axis,
+            priorities_axis,
             markets_axis,
         })
     }
@@ -360,19 +414,24 @@ impl WorkloadSpec {
     /// Number of campaign points (each runs `trials` workload realizations).
     pub fn n_points(&self) -> usize {
         self.admissions_axis.as_ref().map_or(1, |v| v.len())
+            * self.schedulers_axis.as_ref().map_or(1, |v| v.len())
             * self.arrivals_axis.as_ref().map_or(1, |v| v.len())
             * self.budget_axis.as_ref().map_or(1, |v| v.len())
             * self.deadline_axis.as_ref().map_or(1, |v| v.len())
+            * self.priorities_axis.as_ref().map_or(1, |v| v.len())
             * self.markets_axis.as_ref().map_or(1, |v| v.len())
     }
 
     /// Build one fully-seeded workload realization.
+    #[allow(clippy::too_many_arguments)]
     fn instantiate(
         &self,
         admission: AdmissionPolicy,
+        scheduler: SchedulerPolicy,
         arrival: &ArrivalProcess,
         budget: Option<f64>,
         deadline: Option<f64>,
+        priority: Option<i64>,
         market: Option<&MarketSpec>,
         trial_seed: u64,
     ) -> Workload {
@@ -408,10 +467,16 @@ impl WorkloadSpec {
                 if let Some(m) = market {
                     cfg.market = m.clone();
                 }
-                JobRequest { name: tmpl.name.clone(), arrival_secs: times[i], cfg }
+                JobRequest {
+                    name: tmpl.name.clone(),
+                    arrival_secs: times[i],
+                    priority: priority.unwrap_or(tmpl.priority),
+                    tenant: tmpl.tenant.clone(),
+                    cfg,
+                }
             })
             .collect();
-        Workload { name: self.name.clone(), jobs, admission }
+        Workload { name: self.name.clone(), jobs, admission, scheduler }
     }
 
     /// Expand the grid into campaign points. Seeds (and therefore Poisson
@@ -421,6 +486,8 @@ impl WorkloadSpec {
         let root = Rng::seeded(self.seed);
         let admissions: Vec<AdmissionPolicy> =
             self.admissions_axis.clone().unwrap_or_else(|| vec![self.admission]);
+        let schedulers: Vec<SchedulerPolicy> =
+            self.schedulers_axis.clone().unwrap_or_else(|| vec![self.scheduler]);
         let arrivals: Vec<ArrivalProcess> =
             self.arrivals_axis.clone().unwrap_or_else(|| vec![self.arrival.clone()]);
         let budgets: Vec<Option<f64>> = match &self.budget_axis {
@@ -431,6 +498,10 @@ impl WorkloadSpec {
             Some(v) => v.iter().copied().map(Some).collect(),
             None => vec![None],
         };
+        let priorities: Vec<Option<i64>> = match &self.priorities_axis {
+            Some(v) => v.iter().copied().map(Some).collect(),
+            None => vec![None],
+        };
         let markets: Vec<Option<&(String, MarketSpec)>> = match &self.markets_axis {
             Some(v) => v.iter().map(Some).collect(),
             None => vec![None],
@@ -438,38 +509,63 @@ impl WorkloadSpec {
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for &admission in &admissions {
-            for arrival in &arrivals {
-                for &budget in &budgets {
-                    for &deadline in &deadlines {
-                        for &mkt in &markets {
-                            let trials: Vec<Workload> = (0..self.trials)
-                                .map(|_| {
-                                    let s = root.split_seed(global_trial);
-                                    global_trial += 1;
-                                    self.instantiate(
-                                        admission,
-                                        arrival,
-                                        budget,
-                                        deadline,
-                                        mkt.map(|(_, m)| m),
-                                        s,
-                                    )
-                                })
-                                .collect();
-                            let mut tags = vec![
-                                ("admission".to_string(), admission.key().to_string()),
-                                ("arrival".to_string(), arrival.kind_key().to_string()),
-                            ];
-                            if let Some(b) = budget {
-                                tags.push(("budget_round".to_string(), format!("{b}")));
+            for &scheduler in &schedulers {
+                for arrival in &arrivals {
+                    for &budget in &budgets {
+                        for &deadline in &deadlines {
+                            for &priority in &priorities {
+                                for &mkt in &markets {
+                                    let trials: Vec<Workload> = (0..self.trials)
+                                        .map(|_| {
+                                            let s = root.split_seed(global_trial);
+                                            global_trial += 1;
+                                            self.instantiate(
+                                                admission,
+                                                scheduler,
+                                                arrival,
+                                                budget,
+                                                deadline,
+                                                priority,
+                                                mkt.map(|(_, m)| m),
+                                                s,
+                                            )
+                                        })
+                                        .collect();
+                                    let mut tags = vec![
+                                        (
+                                            "admission".to_string(),
+                                            admission.key().to_string(),
+                                        ),
+                                        (
+                                            "scheduler".to_string(),
+                                            scheduler.key().to_string(),
+                                        ),
+                                        (
+                                            "arrival".to_string(),
+                                            arrival.kind_key().to_string(),
+                                        ),
+                                    ];
+                                    if let Some(b) = budget {
+                                        tags.push((
+                                            "budget_round".to_string(),
+                                            format!("{b}"),
+                                        ));
+                                    }
+                                    if let Some(d) = deadline {
+                                        tags.push((
+                                            "deadline_round".to_string(),
+                                            format!("{d}"),
+                                        ));
+                                    }
+                                    if let Some(pr) = priority {
+                                        tags.push(("priority".to_string(), format!("{pr}")));
+                                    }
+                                    if let Some((name, _)) = mkt {
+                                        tags.push(("market".to_string(), name.clone()));
+                                    }
+                                    points.push(WorkloadPoint { tags, trials });
+                                }
                             }
-                            if let Some(d) = deadline {
-                                tags.push(("deadline_round".to_string(), format!("{d}")));
-                            }
-                            if let Some((name, _)) = mkt {
-                                tags.push(("market".to_string(), name.clone()));
-                            }
-                            points.push(WorkloadPoint { tags, trials });
                         }
                     }
                 }
@@ -506,6 +602,7 @@ fn job_json(j: &super::JobAgg) -> Json {
         .set("completion_secs", j.completion.json())
         .set("cost", j.cost.json())
         .set("revocations", j.revocations.json())
+        .set("preemptions", j.preemptions.json())
 }
 
 /// Render campaign results as JSON. Deliberately excludes the worker count
@@ -526,6 +623,7 @@ pub fn render_json(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Worklo
                 .set("admitted", a.admitted.json())
                 .set("queued", a.queued.json())
                 .set("rejected", a.rejected.json())
+                .set("preemptions", a.preemptions.json())
                 .set("jobs", Json::Arr(a.jobs.iter().map(job_json).collect()))
         })
         .collect();
@@ -540,10 +638,16 @@ pub fn render_json(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Worklo
 /// Render campaign results as CSV (one row per point).
 pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     let mut out = String::new();
-    out.push_str("admission,arrival,budget_round,deadline_round,market,trials");
-    for metric in
-        ["makespan_secs", "mean_wait_secs", "total_cost", "admitted", "queued", "rejected"]
-    {
+    out.push_str("admission,scheduler,arrival,budget_round,deadline_round,priority,market,trials");
+    for metric in [
+        "makespan_secs",
+        "mean_wait_secs",
+        "total_cost",
+        "admitted",
+        "queued",
+        "rejected",
+        "preemptions",
+    ] {
         for stat in ["mean", "stddev", "min", "max", "ci95"] {
             out.push_str(&format!(",{metric}_{stat}"));
         }
@@ -551,16 +655,25 @@ pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     out.push('\n');
     for (p, a) in points.iter().zip(aggs) {
         out.push_str(&format!(
-            "{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{}",
             p.tag("admission"),
+            p.tag("scheduler"),
             p.tag("arrival"),
             p.tag("budget_round"),
             p.tag("deadline_round"),
+            p.tag("priority"),
             p.tag("market"),
             a.trials
         ));
-        for agg in [&a.makespan, &a.mean_wait, &a.total_cost, &a.admitted, &a.queued, &a.rejected]
-        {
+        for agg in [
+            &a.makespan,
+            &a.mean_wait,
+            &a.total_cost,
+            &a.admitted,
+            &a.queued,
+            &a.rejected,
+            &a.preemptions,
+        ] {
             out.push_str(&format!(
                 ",{},{},{},{},{}",
                 agg.mean, agg.stddev, agg.min, agg.max, agg.ci95
@@ -583,10 +696,12 @@ pub fn render_table(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Workl
         ),
         &[
             "Admission",
+            "Scheduler",
             "Arrival",
             "B_round",
             "T_round",
             "Adm/Q/Rej",
+            "Preempt",
             "Makespan",
             "Mean wait",
             "Total cost ($)",
@@ -597,10 +712,12 @@ pub fn render_table(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Workl
         let d = p.tag("deadline_round");
         t.row(&[
             p.tag("admission").to_string(),
+            p.tag("scheduler").to_string(),
             p.tag("arrival").to_string(),
             if b.is_empty() { "∞".into() } else { b.to_string() },
             if d.is_empty() { "∞".into() } else { d.to_string() },
             format!("{:.1}/{:.1}/{:.1}", a.admitted.mean, a.queued.mean, a.rejected.mean),
+            format!("{:.1}", a.preemptions.mean),
             SimTime::from_secs(a.makespan.mean).hms(),
             SimTime::from_secs(a.mean_wait.mean).hms(),
             format!("{:.2} ±{:.2}", a.total_cost.mean, a.total_cost.ci95),
@@ -777,6 +894,59 @@ rounds = 2
             WorkloadSpec::from_toml("[[job]]\napp = \"til\"\n\n[grid]\nbudget_round = [-1.0]\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn scheduler_priority_and_tenant_keys() {
+        let text = r#"
+scheduler = "priority-preempt"
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+priority = 10
+tenant = "acme"
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+"#;
+        let spec = WorkloadSpec::from_toml(text).unwrap();
+        assert_eq!(spec.scheduler, SchedulerPolicy::PriorityPreempt);
+        assert_eq!(spec.jobs[0].priority, 10);
+        assert_eq!(spec.jobs[0].tenant, "acme");
+        assert_eq!(spec.jobs[1].priority, 0, "priority defaults to 0");
+        assert_eq!(spec.jobs[1].tenant, "", "tenant defaults to empty");
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].tag("scheduler"), "priority-preempt");
+        let w = &points[0].trials[0];
+        assert_eq!(w.scheduler, SchedulerPolicy::PriorityPreempt);
+        assert_eq!(w.jobs[0].priority, 10);
+        assert_eq!(w.jobs[0].tenant, "acme");
+
+        // Grid axes: schedulers × priorities (expansion order puts the
+        // scheduler axis outside the priority axis).
+        let gridded = format!(
+            "{text}\n[grid]\nschedulers = [\"no-preempt\", \"fair-share\"]\npriorities = [0, 5]\n"
+        );
+        let spec = WorkloadSpec::from_toml(&gridded).unwrap();
+        assert_eq!(spec.n_points(), 4);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].tag("scheduler"), "no-preempt");
+        assert_eq!(points[0].tag("priority"), "0");
+        assert_eq!(points[3].tag("scheduler"), "fair-share");
+        assert_eq!(points[3].tag("priority"), "5");
+        // The priorities axis overrides every job's priority for the point.
+        for j in &points[3].trials[0].jobs {
+            assert_eq!(j.priority, 5);
+        }
+        assert!(
+            WorkloadSpec::from_toml("scheduler = \"weird\"\n[[job]]\napp = \"til\"\n").is_err()
+        );
+        assert!(WorkloadSpec::from_toml(
+            "[[job]]\napp = \"til\"\n\n[grid]\nschedulers = [\"weird\"]\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Batched multi-revocation regression (trace replay).
+//!
+//! A recorded trace instant hits every co-provisioned spot VM at once: all
+//! tasks sample the same next interruption time at provisioning. The event
+//! loop must process the co-timed evictions as ONE batched event — every hit
+//! task revoked and rescheduled at that instant, the round resuming after
+//! the slowest replacement boots. The pre-fix single-hit loop processed only
+//! the earliest revocation per round scan and then skipped the rest forever
+//! (their instants were no longer strictly in the future), silently leaving
+//! revoked VMs "running" and under-counting revocations — these tests pin
+//! the corrected behaviour and its makespan.
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{simulate, Scenario, SimConfig};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::market::{MarketSpec, RevocationSpec};
+
+/// TIL on AWS+GCP, all-spot, with one recorded interruption instant that
+/// lands mid-execution (rounds are ~700 s, boot a few minutes — t = 2000 s
+/// falls inside an early round for every seed).
+fn traced_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllSpot, seed);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.market = MarketSpec {
+        revocation: RevocationSpec::Trace { times: vec![2000.0] },
+        ..MarketSpec::default()
+    };
+    cfg
+}
+
+#[test]
+fn co_timed_trace_instant_revokes_every_task_in_one_batched_event() {
+    let out = simulate(&traced_cfg(7)).unwrap();
+    // Server + both clients were provisioned before t = 2000 and all sample
+    // the same trace instant: all three must actually be revoked — none
+    // absorbed into another replacement's boot wait.
+    assert_eq!(out.n_revocations, 3, "every co-timed task is revoked");
+    assert_eq!(out.rounds_completed, 10, "the job still completes all rounds");
+    // One batched event, and all three revocations share its instant.
+    let batched: Vec<_> = out
+        .events
+        .iter()
+        .filter(|e| e.what.contains("batched event: 3 co-timed revocations"))
+        .collect();
+    assert_eq!(batched.len(), 1, "exactly one batched-revocation event");
+    let at = batched[0].at;
+    let rev_instants: Vec<_> = out
+        .events
+        .iter()
+        .filter(|e| e.what.starts_with("revocation:"))
+        .map(|e| e.at)
+        .collect();
+    assert_eq!(rev_instants.len(), 3);
+    for t in rev_instants {
+        assert_eq!(t.secs().to_bits(), at.secs().to_bits(), "co-timed, not serialized");
+    }
+    assert_eq!(at.secs(), 2000.0);
+}
+
+#[test]
+fn batched_revocation_makespan_is_pinned() {
+    // The corrected makespan: deterministic trace → bit-reproducible, and
+    // one shared stall — the job pays the replacements' overlapping boots
+    // once, not a serialized stall per revoked task.
+    let a = simulate(&traced_cfg(7)).unwrap();
+    let b = simulate(&traced_cfg(7)).unwrap();
+    assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+
+    // Against the no-revocation baseline the batched stall costs extra time
+    // (replacement boots + the interrupted round's re-execution) but far
+    // less than re-running the job: a serialized-absorption bug would
+    // either under-count revocations (caught above) or triple the stall.
+    let mut calm = traced_cfg(7);
+    calm.market = MarketSpec::default(); // exponential; k_r = None → no failures
+    let baseline = simulate(&calm).unwrap();
+    assert_eq!(baseline.n_revocations, 0);
+    assert!(a.total_secs > baseline.total_secs, "the batched event stalls the round");
+    assert!(
+        a.total_secs - baseline.total_secs < baseline.total_secs,
+        "one batched stall, not a per-task serialized restart ({} vs {})",
+        a.total_secs,
+        baseline.total_secs
+    );
+}

@@ -231,14 +231,16 @@ mod legacy {
                         ),
                     });
 
-                    let (selection, new_set) = dynsched::select_instance(
-                        &problem,
-                        &current_map,
+                    let (selection, new_set) = dynsched::select_instance(&dynsched::RevocationCtx {
+                        problem: &problem,
+                        map: &current_map,
                         faulty,
-                        set,
-                        old_type,
-                        cfg.dynsched_policy,
-                    );
+                        candidates: set,
+                        revoked: old_type,
+                        policy: cfg.dynsched_policy,
+                        at: now,
+                        market: multi_fedls::market::MarketView::new(&cfg.market),
+                    });
                     *set = new_set;
                     let sel = selection
                         .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;

@@ -1,4 +1,5 @@
-//! Parity + safety for the first-class Workload API:
+//! Parity + safety for the first-class Workload API and its dynamic
+//! scheduler:
 //!
 //! 1. `Workload::single(cfg)` must reproduce `coordinator::sim::simulate`
 //!    bit-for-bit on the Table 5/6 configurations (every scalar outcome,
@@ -7,13 +8,21 @@
 //!    exceed any provider/region GPU or vCPU quota at *any* simulated
 //!    instant — verified by sweeping the full reservation timeline with the
 //!    independent `cloud::quota` checker, not the engine's own ledger logic.
+//! 3. Preemption invariants: `PriorityPreempt` with uniform priorities and
+//!    `FairShare` with a single tenant are bit-identical to `NoPreempt`
+//!    (which is itself the pre-preemption engine); a checkpoint-preempted
+//!    job resumes from its checkpointed progress instead of restarting; and
+//!    the quota oracle holds under the preemptive policies too.
+
+use std::sync::Arc;
 
 use multi_fedls::apps;
 use multi_fedls::cloud::quota::assignment_fits;
-use multi_fedls::coordinator::multijob::AdmissionPolicy;
+use multi_fedls::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
 use multi_fedls::coordinator::{simulate, Scenario, SimConfig};
 use multi_fedls::dynsched::DynSchedPolicy;
-use multi_fedls::workload::{JobRequest, Workload};
+use multi_fedls::framework::EnvCache;
+use multi_fedls::workload::{run_trials, JobRequest, Workload, WorkloadOutcome};
 
 /// Table 5's grid base: TIL, 80 rounds, all-spot, k_r = 2 h, restart on a
 /// different VM type, at most one revocation per task.
@@ -53,10 +62,13 @@ fn workload_single_is_bit_identical_to_simulate_on_table_5_6() {
         assert_eq!(j.predicted_round_cost.to_bits(), direct.predicted_round_cost.to_bits());
         assert_eq!(j.server, direct.initial_server);
         assert_eq!(j.clients, direct.initial_clients);
+        assert_eq!(j.preemptions, 0);
+        assert_eq!(j.rounds_lost, 0);
         // Workload-level stats are consistent with the single outcome.
         assert_eq!(out.stats.admitted, 1);
         assert_eq!(out.stats.queued, 0);
         assert_eq!(out.stats.rejected, 0);
+        assert_eq!(out.stats.preemptions, 0);
         assert_eq!(out.stats.total_cost.to_bits(), direct.total_cost.to_bits());
     }
 }
@@ -78,7 +90,7 @@ fn workload_single_is_deterministic_across_runs() {
 /// Sweep the full reservation timeline and assert every instant satisfies
 /// the provider/region quota bounds, using the planning-time checker that
 /// the engine's ledger does NOT use for this purpose (independent oracle).
-fn assert_quota_never_exceeded(out: &multi_fedls::workload::WorkloadOutcome) {
+fn assert_quota_never_exceeded(out: &WorkloadOutcome) {
     let catalog = multi_fedls::cloud::tables::aws_gcp();
     // Usage only changes at reservation boundaries: check every start
     // instant plus the midpoint of every consecutive-boundary gap.
@@ -119,14 +131,15 @@ fn contended_spot_workload(n_jobs: usize, stagger: f64) -> Workload {
             cfg.n_rounds = 20;
             cfg.revocation_mean_secs = Some(3600.0);
             cfg.dynsched_policy = DynSchedPolicy::different_vm();
-            JobRequest {
-                name: format!("job-{i}"),
-                arrival_secs: stagger * i as f64,
-                cfg,
-            }
+            JobRequest::new(format!("job-{i}"), stagger * i as f64, cfg)
         })
         .collect();
-    Workload { name: "contended".into(), jobs, admission: AdmissionPolicy::Fifo }
+    Workload {
+        name: "contended".into(),
+        jobs,
+        admission: AdmissionPolicy::Fifo,
+        scheduler: SchedulerPolicy::NoPreempt,
+    }
 }
 
 #[test]
@@ -192,4 +205,167 @@ fn budget_deadline_plumbing_reaches_the_solver_end_to_end() {
     let j = &out.jobs[0];
     assert!(j.predicted_round_cost <= 5.0 + 1e-9);
     assert!(j.predicted_round_makespan <= 3600.0 + 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Preemption invariants (workload-level dynamic scheduling)
+// ---------------------------------------------------------------------------
+
+fn assert_outcomes_bit_identical(a: &WorkloadOutcome, b: &WorkloadOutcome) {
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(ja.name, jb.name);
+        assert_eq!(ja.admitted_at.map(f64::to_bits), jb.admitted_at.map(f64::to_bits));
+        assert_eq!(ja.completed_at.map(f64::to_bits), jb.completed_at.map(f64::to_bits));
+        assert_eq!(ja.wait_secs.to_bits(), jb.wait_secs.to_bits());
+        assert_eq!(ja.cost.to_bits(), jb.cost.to_bits());
+        assert_eq!(ja.revocations, jb.revocations);
+        assert_eq!(ja.rounds_completed, jb.rounds_completed);
+        assert_eq!(ja.fl_exec_secs.to_bits(), jb.fl_exec_secs.to_bits());
+        assert_eq!(ja.server, jb.server);
+        assert_eq!(ja.clients, jb.clients);
+        assert_eq!(ja.preemptions, jb.preemptions);
+        assert_eq!(ja.rounds_lost, jb.rounds_lost);
+    }
+    assert_eq!(a.reservations.len(), b.reservations.len());
+    for (ra, rb) in a.reservations.iter().zip(&b.reservations) {
+        assert_eq!(ra.job, rb.job);
+        assert_eq!(ra.vm, rb.vm);
+        assert_eq!(ra.start.to_bits(), rb.start.to_bits());
+        assert_eq!(ra.end.to_bits(), rb.end.to_bits());
+    }
+    assert_eq!(a.stats.total_cost.to_bits(), b.stats.total_cost.to_bits());
+    assert_eq!(a.stats.makespan_secs.to_bits(), b.stats.makespan_secs.to_bits());
+    assert_eq!(a.stats.preemptions, b.stats.preemptions);
+}
+
+#[test]
+fn uniform_priority_priority_preempt_is_bit_identical_to_no_preempt() {
+    // With every priority equal, PriorityPreempt's admission sort is stable
+    // over the base order and no victim ever has strictly lower priority, so
+    // the whole execution must be bit-identical to NoPreempt — on both the
+    // staggered and the batch contention scenarios.
+    for (n, stagger) in [(4, 600.0), (5, 0.0)] {
+        let base = contended_spot_workload(n, stagger);
+        let mut pp = base.clone();
+        pp.scheduler = SchedulerPolicy::PriorityPreempt;
+        let a = base.run().unwrap();
+        let b = pp.run().unwrap();
+        assert_eq!(b.stats.preemptions, 0);
+        assert_outcomes_bit_identical(&a, &b);
+    }
+}
+
+#[test]
+fn single_tenant_fair_share_is_bit_identical_to_no_preempt() {
+    // All jobs in one (default) tenant: round-robin over a single tenant
+    // queue reproduces the base admission order exactly.
+    for (n, stagger) in [(4, 600.0), (5, 0.0)] {
+        let base = contended_spot_workload(n, stagger);
+        let mut fs = base.clone();
+        fs.scheduler = SchedulerPolicy::FairShare;
+        let a = base.run().unwrap();
+        let b = fs.run().unwrap();
+        assert_eq!(b.stats.preemptions, 0);
+        assert_outcomes_bit_identical(&a, &b);
+    }
+}
+
+/// Four low-priority jobs whose deadline forces 2 GPU clients each (the CPU
+/// types are ~20x slower, far past the per-round deadline), saturating all
+/// 8 GPUs of the AWS+GCP environment from t = 0; one high-priority job
+/// arrives mid-execution with the same GPU-only deadline.
+fn preemption_workload() -> Workload {
+    let gpu_job = |seed: u64| {
+        let mut cfg = SimConfig::new(apps::til_aws_gcp(), Scenario::AllOnDemand, seed);
+        cfg.deadline_round = 4000.0; // excludes every CPU-client placement
+        cfg
+    };
+    let mut jobs: Vec<JobRequest> = (0..4)
+        .map(|i| JobRequest::new(format!("low-{i}"), 0.0, gpu_job(10 + i as u64)))
+        .collect();
+    let mut hi = JobRequest::new("high", 3000.0, gpu_job(99));
+    hi.priority = 10;
+    jobs.push(hi);
+    Workload {
+        name: "preempt".into(),
+        jobs,
+        admission: AdmissionPolicy::Fifo,
+        scheduler: SchedulerPolicy::PriorityPreempt,
+    }
+}
+
+#[test]
+fn priority_preemption_checkpoints_victim_and_resumes_it() {
+    let out = preemption_workload().run().unwrap();
+    // The high-priority job cannot fit (all GPUs busy, CPU placements are
+    // past its deadline), so exactly one victim is checkpoint-preempted.
+    assert_eq!(out.stats.preemptions, 1, "expected exactly one preemption");
+    let hi = &out.jobs[4];
+    assert_eq!(hi.admitted_at, Some(3000.0), "high-priority admits at its arrival");
+    assert_eq!(hi.preemptions, 0);
+    assert!(hi.completed_at.is_some());
+    // The victim is the most recently admitted lowest-priority job (index
+    // tie-break: highest index), and it RESUMES: with client checkpoints on
+    // (the default), no completed round is lost, and it still finishes all
+    // its rounds — strictly fewer rounds re-executed than a cold restart.
+    let victim = &out.jobs[3];
+    assert_eq!(victim.preemptions, 1);
+    assert_eq!(victim.rounds_lost, 0, "client checkpoints every round → nothing lost");
+    assert!(victim.completed_at.is_some(), "preempted job must eventually complete");
+    assert_eq!(victim.rounds_completed, 10);
+    assert!(
+        victim.completed_at.unwrap() > hi.completed_at.unwrap(),
+        "victim resumed after being preempted by the high-priority job"
+    );
+    // Everyone else ran undisturbed.
+    for j in &out.jobs[..3] {
+        assert_eq!(j.preemptions, 0);
+        assert_eq!(j.rounds_completed, 10);
+    }
+    assert_eq!(out.stats.admitted, 5);
+    assert_eq!(out.stats.rejected, 0);
+    // Quota safety holds through the preemption: the victim's truncated
+    // reservations and the preemptor's new ones never overlap over-quota.
+    assert_quota_never_exceeded(&out);
+}
+
+#[test]
+fn preemptive_policies_preserve_quota_safety_and_determinism() {
+    // Mixed priorities + tenants + spot revocations under both preemptive
+    // policies: the independent quota oracle must hold at every instant and
+    // the execution must be bit-reproducible.
+    for scheduler in [SchedulerPolicy::PriorityPreempt, SchedulerPolicy::FairShare] {
+        let mut w = contended_spot_workload(5, 300.0);
+        for (i, j) in w.jobs.iter_mut().enumerate() {
+            j.priority = (i % 3) as i64;
+            j.tenant = if i % 2 == 0 { "acme".into() } else { "zeta".into() };
+        }
+        w.scheduler = scheduler;
+        let a = w.run().unwrap();
+        assert_quota_never_exceeded(&a);
+        let b = w.run().unwrap();
+        assert_outcomes_bit_identical(&a, &b);
+    }
+}
+
+#[test]
+fn workload_campaign_is_bit_identical_across_worker_counts() {
+    // The same trial list through 1 worker and 4 workers must produce
+    // bit-identical outcomes in input order — preemptive policies included.
+    let trials: Vec<Workload> = vec![
+        contended_spot_workload(4, 600.0),
+        preemption_workload(),
+        {
+            let mut w = contended_spot_workload(5, 0.0);
+            w.scheduler = SchedulerPolicy::FairShare;
+            w
+        },
+    ];
+    let seq = run_trials(&trials, 1, &Arc::new(EnvCache::new())).unwrap();
+    let par = run_trials(&trials, 4, &Arc::new(EnvCache::new())).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_outcomes_bit_identical(a, b);
+    }
 }
