@@ -156,6 +156,7 @@ impl Catalog {
             m.get(k).and_then(|v| v.as_int()).map(|i| i as u32)
         }
 
+        t::reject_unknown_keys(&root, &["name", "provider", "region", "vm"], "catalog")?;
         let name = root
             .get("name")
             .and_then(|v| v.as_str())
@@ -167,6 +168,18 @@ impl Catalog {
             .and_then(|v| v.as_table_array())
             .ok_or_else(|| anyhow::anyhow!("missing [[provider]] sections"))?
         {
+            t::reject_unknown_keys(
+                p,
+                &[
+                    "name",
+                    "egress_cost_per_gb",
+                    "revocation_notice_secs",
+                    "boot_time_secs",
+                    "max_gpus",
+                    "max_vcpus",
+                ],
+                "[[provider]]",
+            )?;
             providers.push(ProviderSpec {
                 name: need_str(p, "name")?,
                 egress_cost_per_gb: need_f64(p, "egress_cost_per_gb")?,
@@ -182,6 +195,7 @@ impl Catalog {
             .and_then(|v| v.as_table_array())
             .ok_or_else(|| anyhow::anyhow!("missing [[region]] sections"))?
         {
+            t::reject_unknown_keys(r, &["name", "provider", "max_gpus", "max_vcpus"], "[[region]]")?;
             let pname = need_str(r, "provider")?;
             let provider = providers
                 .iter()
@@ -200,6 +214,21 @@ impl Catalog {
             .and_then(|v| v.as_table_array())
             .ok_or_else(|| anyhow::anyhow!("missing [[vm]] sections"))?
         {
+            t::reject_unknown_keys(
+                v,
+                &[
+                    "id",
+                    "hw_name",
+                    "region",
+                    "vcpus",
+                    "gpus",
+                    "gpu_model",
+                    "ram_gb",
+                    "on_demand_hourly",
+                    "spot_hourly",
+                ],
+                "[[vm]]",
+            )?;
             let rname = need_str(v, "region")?;
             let region = regions
                 .iter()

@@ -19,7 +19,7 @@ pub mod billing;
 pub mod network;
 pub mod vm;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cloud::quota::{QuotaError, QuotaTracker};
 use crate::cloud::tables::GroundTruth;
@@ -61,11 +61,11 @@ pub struct MultiCloud {
     pub ledger: Ledger,
     market: MarketModel,
     rng: Rng,
-    instances: HashMap<VmId, VmInstance>,
+    instances: BTreeMap<VmId, VmInstance>,
     next_vm: u64,
     /// Instance types currently blocked from re-allocation in a region
     /// (AWS behaviour after a spot revocation, §4.4 / [47]).
-    blocked: std::collections::HashSet<(VmTypeId, RegionId)>,
+    blocked: std::collections::BTreeSet<(VmTypeId, RegionId)>,
 }
 
 impl MultiCloud {
@@ -100,9 +100,9 @@ impl MultiCloud {
             ledger,
             market,
             rng: Rng::seeded(seed),
-            instances: HashMap::new(),
+            instances: BTreeMap::new(),
             next_vm: 0,
-            blocked: std::collections::HashSet::new(),
+            blocked: std::collections::BTreeSet::new(),
         }
     }
 

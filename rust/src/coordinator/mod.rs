@@ -129,6 +129,28 @@ impl JobSpec {
         base: Option<&std::path::Path>,
     ) -> anyhow::Result<JobSpec> {
         use crate::dynsched::DynSchedPolicy;
+        crate::util::tomlmini::reject_unknown_keys(
+            root,
+            &[
+                "app",
+                "rounds",
+                "alpha",
+                "scenario",
+                "mapper",
+                "revocation_mean_secs",
+                "remove_revoked_type",
+                "checkpoints",
+                "client_checkpoint",
+                "server_ckpt_every",
+                "max_revocations_per_task",
+                "budget_round",
+                "deadline_round",
+                "seed",
+                "trials",
+                "market",
+            ],
+            "job spec",
+        )?;
         let app_name = root
             .get("app")
             .and_then(|v| v.as_str())

@@ -10,7 +10,7 @@
 //! one instance, turning N-trials-per-environment re-measurement into a
 //! single measurement per campaign.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -21,13 +21,13 @@ use crate::presched::{self, PreScheduler, SlowdownReport};
 /// measurement runs under the map lock so each environment is measured
 /// exactly once even when many workers miss simultaneously.
 pub struct EnvCache {
-    reports: Mutex<HashMap<String, Arc<SlowdownReport>>>,
+    reports: Mutex<BTreeMap<String, Arc<SlowdownReport>>>,
     computations: AtomicUsize,
 }
 
 impl EnvCache {
     pub fn new() -> EnvCache {
-        EnvCache { reports: Mutex::new(HashMap::new()), computations: AtomicUsize::new(0) }
+        EnvCache { reports: Mutex::new(BTreeMap::new()), computations: AtomicUsize::new(0) }
     }
 
     /// The report for `mc`'s environment: served from cache when the

@@ -70,6 +70,10 @@
 //!   grids fanned out across an OS-thread worker pool, deterministically,
 //!   with persisted, resumable results ([`sweep::persist`]).
 //! * [`trace`] — experiment recording and table rendering.
+//! * [`lint`] — the dependency-free determinism & invariant linter behind
+//!   `multi-fedls lint` (hash-iter / wall-clock / float-eq / spec-unwrap /
+//!   unknown-key rules plus `lint:allow` annotations), also enforced by
+//!   `cargo test` and CI.
 
 pub mod apps;
 pub mod cloud;
@@ -79,6 +83,7 @@ pub mod dynsched;
 pub mod fl;
 pub mod framework;
 pub mod ft;
+pub mod lint;
 pub mod mapping;
 pub mod market;
 pub mod presched;

@@ -1,0 +1,327 @@
+//! Determinism & invariant lint pass (`multi-fedls lint`).
+//!
+//! The repo's core guarantee — bit-identical campaign output for any
+//! `--jobs` worker count, resume byte-parity, reproducible Fig. 2 /
+//! Table 5 regenerations — used to rest on convention alone. This module
+//! makes it structural, in the style of rustc's `src/tools/tidy`: a
+//! dependency-free static-analysis pass (hand-rolled tokenizer in
+//! [`scan`], no `syn`; the offline build allows `anyhow` only) with a
+//! rule registry ([`RULES`]) and three frontends that all call
+//! [`lint_tree`]:
+//!
+//! 1. `multi-fedls lint [--json] [--src DIR]` — the CLI (nonzero exit on
+//!    any violation, machine-readable with `--json`);
+//! 2. `rust/tests/lint.rs` — a `#[test]` so plain offline `cargo test`
+//!    gates every commit;
+//! 3. the `determinism lint` CI job.
+//!
+//! ## The rules
+//!
+//! * **hash-iter** — bans `HashMap`/`HashSet` in the simulation-state
+//!   modules (`cloudsim`, `presched`, `framework`, `workload`, `market`,
+//!   `sweep`, `dynsched`, `mapping`). Hash iteration order is randomized
+//!   per process, so a map whose order reaches output, fingerprints, or
+//!   RNG consumption silently breaks run-to-run and `--jobs` parity. Use
+//!   `BTreeMap`/`BTreeSet` or a sorted collect.
+//! * **wall-clock** — bans `Instant::now`, `SystemTime::now`, and
+//!   `thread_rng` everywhere except `util::bench` (measures real elapsed
+//!   time by design) and `coordinator::real` (reports real round
+//!   timings). Simulated paths take time from the discrete-event clock
+//!   and randomness from the seeded `simul::Rng`; callers that need real
+//!   timings inject a clock handle (see `fl::FlConfig::clock`).
+//! * **float-eq** — bans bare `==`/`!=` against float literals in
+//!   `solver`, `mapping`, and `cloudsim::billing`, where costs are
+//!   compared with the repo-wide 1e-9 epsilon convention
+//!   (`(a - b).abs() < 1e-9`). Exact-representation luck is not a
+//!   contract; epsilon comparisons are.
+//! * **spec-unwrap** — bans `unwrap()`/`expect(`/panicking macros in the
+//!   TOML-parse paths (`*/spec.rs`, `cloud/catalog.rs`) where user-written
+//!   config input flows: a malformed spec must come back as an `anyhow`
+//!   error naming the offending key, never a panic.
+//! * **unknown-key** — every spec-table parser file must call the shared
+//!   `util::tomlmini::reject_unknown_keys` helper, so typo'd keys are
+//!   rejected by name instead of silently ignored.
+//!
+//! Test code (`#[cfg(test)]` regions) is exempt from hash-iter, float-eq,
+//! and spec-unwrap — tests may hash-dedup, compare exact floats, and
+//! unwrap freely.
+//!
+//! ## Allow annotations
+//!
+//! A rule is suppressed for one line by a comment on that line or the
+//! line directly above, of the form `lint:allow(hash-iter) -- keyed by
+//! opaque id, order never observed` (i.e. `lint:allow(<rule>)`, then
+//! ` -- `, then a free-text reason). The reason is **mandatory**: a
+//! reason-less or malformed annotation is itself reported under the
+//! `allow-syntax` rule and does not suppress anything, so it can never
+//! pass CI. Prefer fixing the violation; annotate only when the flagged
+//! pattern is provably harmless and say why.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+use crate::util::json::Json;
+
+/// One finding: a rule fired at `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Registry name of the rule (e.g. `hash-iter`).
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Registry entry: rule name + one-line rationale (shown by the CLI).
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// Every rule the pass knows, including the `allow-syntax` meta-rule that
+/// polices the annotations themselves.
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        name: "hash-iter",
+        summary: "no HashMap/HashSet in simulation-state modules \
+                  (iteration order reaches output/RNG)",
+    },
+    RuleInfo {
+        name: "wall-clock",
+        summary: "no Instant::now/SystemTime::now/thread_rng outside \
+                  util::bench and coordinator::real",
+    },
+    RuleInfo {
+        name: "float-eq",
+        summary: "no bare ==/!= on float literals in solver/mapping/\
+                  cloudsim::billing (1e-9 epsilon convention)",
+    },
+    RuleInfo {
+        name: "spec-unwrap",
+        summary: "no unwrap/expect/panics in TOML-parse paths \
+                  (*/spec.rs, cloud/catalog.rs)",
+    },
+    RuleInfo {
+        name: "unknown-key",
+        summary: "every spec-table parser calls the shared \
+                  tomlmini::reject_unknown_keys helper",
+    },
+    RuleInfo {
+        name: "allow-syntax",
+        summary: "allow annotations must name a known rule and carry a \
+                  `-- <reason>` string",
+    },
+];
+
+/// A parsed, well-formed allow annotation.
+struct Allow {
+    line: usize,
+    rule: String,
+}
+
+/// Lint one file's source under its `src/`-relative path. Applies every
+/// rule, then filters findings suppressed by a well-formed allow
+/// annotation on the same line or the line directly above; malformed
+/// annotations come back as `allow-syntax` findings.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Violation> {
+    let scanned = scan::scan(text);
+    let (allows, mut violations) = parse_allows(rel_path, &scanned);
+    for v in rules::check_all(rel_path, &scanned) {
+        let suppressed =
+            allows.iter().any(|a| a.rule == v.rule && (a.line == v.line || a.line + 1 == v.line));
+        if !suppressed {
+            violations.push(v);
+        }
+    }
+    violations.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    violations
+}
+
+/// Extract allow annotations from `//` comments. An annotation is a
+/// comment whose body (after the comment markers) starts with
+/// `lint:allow(`; prose that merely mentions the syntax mid-sentence or
+/// in backticks is ignored.
+fn parse_allows(rel: &str, scanned: &scan::FileScan) -> (Vec<Allow>, Vec<Violation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    let mut syntax_err = |line: usize, message: String| {
+        bad.push(Violation { rule: "allow-syntax", file: rel.to_string(), line, message });
+    };
+    for c in &scanned.comments {
+        let body = c.text.trim_start_matches('/').trim_start_matches('!').trim_start();
+        let Some(rest) = body.strip_prefix("lint:allow") else { continue };
+        let Some(rest) = rest.strip_prefix('(') else {
+            syntax_err(c.line, "malformed allow annotation: expected `lint:allow(<rule>)`".into());
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            syntax_err(c.line, "malformed allow annotation: missing `)`".into());
+            continue;
+        };
+        let rule_name = rest[..close].trim();
+        if !RULES.iter().any(|r| r.name == rule_name) {
+            syntax_err(c.line, format!("allow annotation names unknown rule `{rule_name}`"));
+            continue;
+        }
+        let after = rest[close + 1..].trim_start();
+        match after.strip_prefix("--").map(str::trim) {
+            Some(reason) if !reason.is_empty() => {
+                allows.push(Allow { line: c.line, rule: rule_name.to_string() });
+            }
+            _ => syntax_err(
+                c.line,
+                format!(
+                    "allow annotation without a reason — write \
+                     `lint:allow({rule_name}) -- <why this is safe>`"
+                ),
+            ),
+        }
+    }
+    (allows, bad)
+}
+
+/// Result of linting a whole source tree.
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Machine-readable shape for `multi-fedls lint --json`.
+    pub fn to_json(&self) -> Json {
+        let violations: Vec<Json> = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::obj()
+                    .set("rule", v.rule)
+                    .set("file", v.file.as_str())
+                    .set("line", v.line)
+                    .set("message", v.message.as_str())
+            })
+            .collect();
+        let rules: Vec<Json> = RULES
+            .iter()
+            .map(|r| Json::obj().set("name", r.name).set("summary", r.summary))
+            .collect();
+        Json::obj()
+            .set("files_scanned", self.files_scanned)
+            .set("violations", Json::Arr(violations))
+            .set("rules", Json::Arr(rules))
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, in sorted path
+/// order so output is deterministic).
+pub fn lint_tree(src_root: &Path) -> anyhow::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        violations.extend(lint_source(&rel, &text));
+    }
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport { files_scanned: files.len(), violations })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries = std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_on_same_or_previous_line_suppresses() {
+        let src = "// lint:allow(hash-iter) -- keyed by opaque id, order never observed\n\
+                   fn f() { let m = HashMap::new(); }\n";
+        assert!(lint_source("cloudsim/fake.rs", src).is_empty());
+        let trailing = "fn f() { let m = HashMap::new(); } \
+                        // lint:allow(hash-iter) -- order never observed\n";
+        assert!(lint_source("cloudsim/fake.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "// lint:allow(wall-clock) -- wrong rule\n\
+                   fn f() { let m = HashMap::new(); }\n";
+        let v = lint_source("cloudsim/fake.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "hash-iter");
+    }
+
+    #[test]
+    fn reasonless_allow_is_flagged_and_inert() {
+        let src = "// lint:allow(hash-iter)\nfn f() { let m = HashMap::new(); }\n";
+        let rules_hit: Vec<_> = lint_source("cloudsim/fake.rs", src)
+            .into_iter()
+            .map(|v| v.rule)
+            .collect();
+        assert!(rules_hit.contains(&"allow-syntax"));
+        assert!(rules_hit.contains(&"hash-iter"));
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_flagged() {
+        let src = "// lint:allow(no-such-rule) -- whatever\nfn f() {}\n";
+        let v = lint_source("cloudsim/fake.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "allow-syntax");
+    }
+
+    #[test]
+    fn prose_mentioning_the_syntax_is_ignored() {
+        // Doc prose that cites the annotation form mid-sentence (e.g. in
+        // backticks) must not parse as an annotation.
+        let src = "//! Suppress with `lint:allow(hash-iter) -- reason` comments.\nfn f() {}\n";
+        assert!(lint_source("cloudsim/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn display_format_is_file_line_rule() {
+        let v = Violation {
+            rule: "hash-iter",
+            file: "cloudsim/fake.rs".to_string(),
+            line: 7,
+            message: "msg".to_string(),
+        };
+        assert_eq!(v.to_string(), "cloudsim/fake.rs:7: [hash-iter] msg");
+    }
+}

@@ -1,0 +1,333 @@
+//! The lint rules.
+//!
+//! Each rule is a plain function over the masked view of one file
+//! ([`scan::FileScan`]) plus its path *relative to `src/`* (e.g.
+//! `cloudsim/mod.rs`) — the path decides which rules apply, so the rules
+//! are trivially testable against inline fixtures under any fake path.
+//! Matching is lexical (substring with identifier boundaries) on code that
+//! has strings and comments already blanked out, which is exactly the
+//! rustc-`tidy` trade-off: no type information, near-zero false positives
+//! in practice, and the `lint:allow` escape hatch for the rest.
+
+use super::scan::FileScan;
+use super::Violation;
+
+/// Modules whose state reaches campaign output, fingerprints, or RNG
+/// consumption: map iteration order here must be deterministic.
+pub const HASH_ITER_MODULES: [&str; 8] =
+    ["cloudsim", "presched", "framework", "workload", "market", "sweep", "dynsched", "mapping"];
+
+/// The only files allowed to read wall-clock time or OS randomness: the
+/// bench harness (measures real elapsed time by design) and the
+/// real-compute coordinator (reports real round timings).
+pub const WALL_CLOCK_EXEMPT: [&str; 2] = ["util/bench.rs", "coordinator/real.rs"];
+
+/// Files where solver/billing costs live: bare float `==`/`!=` here must
+/// use the 1e-9 epsilon convention instead.
+pub const FLOAT_EQ_MODULES: [&str; 2] = ["solver", "mapping"];
+pub const FLOAT_EQ_FILES: [&str; 1] = ["cloudsim/billing.rs"];
+
+/// TOML-parse paths where user-written spec input flows: parse errors must
+/// be `anyhow` errors naming the offending key, never panics.
+pub const SPEC_PARSE_FILES: [&str; 4] =
+    ["market/spec.rs", "sweep/spec.rs", "workload/spec.rs", "cloud/catalog.rs"];
+
+/// Files hosting a spec-table parser, each of which must call the shared
+/// `tomlmini::reject_unknown_keys` helper at least once.
+pub const UNKNOWN_KEY_FILES: [&str; 5] = [
+    "market/spec.rs",
+    "sweep/spec.rs",
+    "workload/spec.rs",
+    "cloud/catalog.rs",
+    "coordinator/mod.rs",
+];
+
+/// Run every rule over one scanned file. Allow-annotation filtering
+/// happens in the caller ([`super::lint_source`]).
+pub fn check_all(rel: &str, scan: &FileScan) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_hash_iter(rel, scan, &mut out);
+    check_wall_clock(rel, scan, &mut out);
+    check_float_eq(rel, scan, &mut out);
+    check_spec_unwrap(rel, scan, &mut out);
+    check_unknown_key(rel, scan, &mut out);
+    out
+}
+
+/// `hash-iter`: no `HashMap`/`HashSet` in simulation-state modules.
+fn check_hash_iter(rel: &str, scan: &FileScan, out: &mut Vec<Violation>) {
+    let module = top_module(rel);
+    if !HASH_ITER_MODULES.contains(&module) {
+        return;
+    }
+    for (idx, code) in scan.code_lines.iter().enumerate() {
+        let line = idx + 1;
+        if scan.is_test_line(line) {
+            continue;
+        }
+        for tok in ["HashMap", "HashSet"] {
+            if find_token(code, tok).is_some() {
+                out.push(Violation {
+                    rule: "hash-iter",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{tok}` in simulation-state module `{module}` — iteration \
+                         order is nondeterministic and can reach output or RNG \
+                         consumption; use BTreeMap/BTreeSet or a sorted collect"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `wall-clock`: no `Instant::now` / `SystemTime::now` / `thread_rng`
+/// outside the bench harness and the real-compute coordinator.
+fn check_wall_clock(rel: &str, scan: &FileScan, out: &mut Vec<Violation>) {
+    if WALL_CLOCK_EXEMPT.contains(&rel) {
+        return;
+    }
+    for (idx, code) in scan.code_lines.iter().enumerate() {
+        let line = idx + 1;
+        for tok in ["Instant::now", "SystemTime::now", "thread_rng"] {
+            if find_token(code, tok).is_some() {
+                out.push(Violation {
+                    rule: "wall-clock",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{tok}` outside util::bench / coordinator::real — wall \
+                         time and OS randomness break run-to-run reproducibility; \
+                         inject a clock handle or use the seeded simul::Rng"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `float-eq`: no bare `==`/`!=` against a float literal in solver /
+/// mapping / cloudsim::billing — the 1e-9 epsilon convention applies.
+fn check_float_eq(rel: &str, scan: &FileScan, out: &mut Vec<Violation>) {
+    if !FLOAT_EQ_MODULES.contains(&top_module(rel)) && !FLOAT_EQ_FILES.contains(&rel) {
+        return;
+    }
+    for (idx, code) in scan.code_lines.iter().enumerate() {
+        let line = idx + 1;
+        if scan.is_test_line(line) {
+            continue;
+        }
+        if let Some(lit) = float_literal_compare(code) {
+            out.push(Violation {
+                rule: "float-eq",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "bare `==`/`!=` against float literal `{lit}` — costs are \
+                     compared with the 1e-9 epsilon convention: \
+                     `(a - b).abs() < 1e-9` (or `> 1e-9` for inequality)"
+                ),
+            });
+        }
+    }
+}
+
+/// `spec-unwrap`: no `unwrap()` / `expect(` / panicking macros in
+/// TOML-parse paths — user input flows there.
+fn check_spec_unwrap(rel: &str, scan: &FileScan, out: &mut Vec<Violation>) {
+    if !(rel.ends_with("/spec.rs") || SPEC_PARSE_FILES.contains(&rel)) {
+        return;
+    }
+    const TOKENS: [&str; 6] =
+        [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    for (idx, code) in scan.code_lines.iter().enumerate() {
+        let line = idx + 1;
+        if scan.is_test_line(line) {
+            continue;
+        }
+        for tok in TOKENS {
+            if find_token(code, tok).is_some() {
+                out.push(Violation {
+                    rule: "spec-unwrap",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{tok}` in a TOML-parse path — user-written spec input \
+                         flows here; return an anyhow error naming the offending \
+                         key instead of panicking"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `unknown-key`: every spec-table parser file must call the shared
+/// `tomlmini::reject_unknown_keys` helper somewhere in production code.
+fn check_unknown_key(rel: &str, scan: &FileScan, out: &mut Vec<Violation>) {
+    if !UNKNOWN_KEY_FILES.contains(&rel) {
+        return;
+    }
+    let calls_helper = scan.code_lines.iter().enumerate().any(|(idx, code)| {
+        !scan.is_test_line(idx + 1) && find_token(code, "reject_unknown_keys").is_some()
+    });
+    if !calls_helper {
+        out.push(Violation {
+            rule: "unknown-key",
+            file: rel.to_string(),
+            line: 1,
+            message: "spec-table parser never calls the shared \
+                      `tomlmini::reject_unknown_keys` helper — every parsed table \
+                      must reject unknown keys by name"
+                .to_string(),
+        });
+    }
+}
+
+/// First path component with a `.rs` suffix stripped: `cloudsim/mod.rs` →
+/// `cloudsim`, `main.rs` → `main`.
+fn top_module(rel: &str) -> &str {
+    let first = rel.split('/').next().unwrap_or(rel);
+    first.strip_suffix(".rs").unwrap_or(first)
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Substring search with identifier boundaries on both ends (so `HashMap`
+/// does not match `MyHashMapLike`). Token edges that are not identifier
+/// chars (`.`, `(`, `:`) make the corresponding boundary check a no-op.
+fn find_token(code: &str, tok: &str) -> Option<usize> {
+    let cb = code.as_bytes();
+    let tb = tok.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok).map(|p| p + start) {
+        let ok_before = pos == 0
+            || !is_ident_char(cb[pos - 1])
+            || !is_ident_char(tb[0]);
+        let end = pos + tb.len();
+        let ok_after = end >= cb.len()
+            || !is_ident_char(cb[end])
+            || !is_ident_char(tb[tb.len() - 1]);
+        if ok_before && ok_after {
+            return Some(pos);
+        }
+        start = pos + 1;
+    }
+    None
+}
+
+/// Scan one masked line for `==` / `!=` with a float literal on either
+/// side; returns the literal. Heuristic: a float literal starts with an
+/// ASCII digit and contains a `.` (or carries an explicit `f32`/`f64`
+/// suffix) — identifier operands are never flagged, so epsilon-style
+/// comparisons and integer comparisons pass untouched.
+fn float_literal_compare(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut k = 0;
+    while k + 1 < n {
+        let (is_eq, is_ne) = (b[k] == b'=' && b[k + 1] == b'=', b[k] == b'!' && b[k + 1] == b'=');
+        if !is_eq && !is_ne {
+            k += 1;
+            continue;
+        }
+        // Exclude `<=`, `>=`, `=>`, `===`-like runs and compound operators.
+        if is_eq {
+            let bad_before =
+                k > 0 && matches!(b[k - 1], b'=' | b'!' | b'<' | b'>' | b'+' | b'-' | b'*' | b'/' | b'%' | b'&' | b'|' | b'^');
+            let bad_after = k + 2 < n && b[k + 2] == b'=';
+            if bad_before || bad_after {
+                k += 2;
+                continue;
+            }
+        }
+        let left = operand_before(b, k);
+        let right = operand_after(b, k + 2);
+        for word in [left, right].into_iter().flatten() {
+            if is_float_literal(&word) {
+                return Some(word);
+            }
+        }
+        k += 2;
+    }
+    None
+}
+
+fn operand_before(b: &[u8], op_start: usize) -> Option<String> {
+    let mut j = op_start;
+    while j > 0 && b[j - 1] == b' ' {
+        j -= 1;
+    }
+    let end = j;
+    while j > 0 && (is_ident_char(b[j - 1]) || b[j - 1] == b'.') {
+        j -= 1;
+    }
+    (j < end).then(|| String::from_utf8_lossy(&b[j..end]).into_owned())
+}
+
+fn operand_after(b: &[u8], mut j: usize) -> Option<String> {
+    let n = b.len();
+    while j < n && b[j] == b' ' {
+        j += 1;
+    }
+    if j < n && b[j] == b'-' {
+        j += 1; // unary minus on a literal
+    }
+    let start = j;
+    while j < n && (is_ident_char(b[j]) || b[j] == b'.') {
+        j += 1;
+    }
+    (j > start).then(|| String::from_utf8_lossy(&b[start..j]).into_owned())
+}
+
+fn is_float_literal(word: &str) -> bool {
+    let Some(first) = word.bytes().next() else {
+        return false;
+    };
+    first.is_ascii_digit()
+        && (word.contains('.') || word.ends_with("f32") || word.ends_with("f64"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    fn hits(rel: &str, src: &str) -> Vec<String> {
+        check_all(rel, &scan(src)).into_iter().map(|v| v.rule.to_string()).collect()
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("let m = HashMap::new();", "HashMap").is_some());
+        assert!(find_token("let m = MyHashMapLike::new();", "HashMap").is_none());
+        assert!(find_token("x.unwrap_or(0)", ".unwrap()").is_none());
+        assert!(find_token("x.unwrap()", ".unwrap()").is_some());
+    }
+
+    #[test]
+    fn float_compare_detection() {
+        assert!(float_literal_compare("if x == 1.0 {").is_some());
+        assert!(float_literal_compare("if 0.5 != y {").is_some());
+        assert!(float_literal_compare("if x == -2.5 {").is_some());
+        assert!(float_literal_compare("if x == 1f64 {").is_some());
+        assert!(float_literal_compare("if n == 10 {").is_none());
+        assert!(float_literal_compare("if a == b {").is_none());
+        assert!(float_literal_compare("if x <= 1.0 {").is_none());
+        assert!(float_literal_compare("if x >= 1.0 {").is_none());
+        assert!(float_literal_compare("let f = |x| x == other;").is_none());
+        assert!(float_literal_compare("(a - b).abs() < 1e-9").is_none());
+    }
+
+    #[test]
+    fn module_scoping() {
+        assert_eq!(top_module("cloudsim/mod.rs"), "cloudsim");
+        assert_eq!(top_module("main.rs"), "main");
+        assert!(hits("cloudsim/fake.rs", "fn f() { let m = HashMap::new(); }\n")
+            .contains(&"hash-iter".to_string()));
+        assert!(hits("data/fake.rs", "fn f() { let m = HashMap::new(); }\n").is_empty());
+    }
+}

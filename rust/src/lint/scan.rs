@@ -1,0 +1,337 @@
+//! Lexical scanner for the lint pass.
+//!
+//! A hand-rolled tokenizer (no `syn` — the offline build allows `anyhow`
+//! only) that walks a Rust source file once and produces a *masked* view of
+//! it: string contents, char-literal contents, and both comment forms are
+//! blanked to spaces while everything else is kept verbatim, with newlines
+//! preserved so line numbers map 1:1 onto the original file. Rules then
+//! match plain substrings against the masked code without false positives
+//! from prose, doc comments, or test fixtures embedded in string literals.
+//!
+//! Handled literal forms:
+//!
+//! * `// line comments` (captured separately — `lint:allow` annotations
+//!   live here) and nested `/* block comments */`;
+//! * `"strings"` with `\` escapes, including multi-line strings;
+//! * raw strings `r"…"` / `r#"…"#` (any number of hashes) and their
+//!   byte-string variants `b"…"` / `br#"…"#`;
+//! * char literals `'c'`, `'\n'`, `'\u{1F600}'` — disambiguated from
+//!   lifetimes (`'a`, `'static`), which stay part of the code.
+//!
+//! The scanner also marks every line that falls inside a
+//! `#[cfg(test)] mod … { … }` region (tracked by brace depth on the masked
+//! code), so rules that only guard production paths can skip test code.
+
+/// One `//` comment, with the 1-indexed line it starts on.
+pub struct LineComment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// The masked view of one source file.
+pub struct FileScan {
+    /// Masked source, split into lines (index 0 = line 1). Strings, char
+    /// literals, and comments are blanked; code is verbatim.
+    pub code_lines: Vec<String>,
+    /// `test_line[i]` — line `i + 1` is inside a `#[cfg(test)]` region.
+    pub test_line: Vec<bool>,
+    /// Every `//` comment in the file (annotation parsing happens upstream).
+    pub comments: Vec<LineComment>,
+}
+
+impl FileScan {
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_line.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Scan `text` into its masked view. Total: one pass over the chars, then
+/// one pass over the masked lines for `#[cfg(test)]` regions.
+pub fn scan(text: &str) -> FileScan {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(text.len());
+    let mut comments: Vec<LineComment> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    // True when the previous code char could end an identifier — used to
+    // tell a raw-string prefix `r"` from an identifier ending in `r`.
+    let mut prev_ident = false;
+
+    while i < n {
+        let c = chars[i];
+
+        // `//` line comment — captured for annotation parsing, masked out.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut txt = String::new();
+            while i < n && chars[i] != '\n' {
+                txt.push(chars[i]);
+                code.push(' ');
+                i += 1;
+            }
+            comments.push(LineComment { line, text: txt });
+            prev_ident = false;
+            continue;
+        }
+
+        // `/* … */` block comment, nesting allowed (as in Rust).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            code.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    mask_char(&mut code, chars[i], &mut line);
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // Raw (byte) strings: r"…", r#"…"#, br"…", br#"…"#.
+        if !prev_ident && (c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r')) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                for k in i..=j {
+                    code.push(chars[k]); // keep the r#…" prefix as code
+                }
+                i = j + 1;
+                loop {
+                    if i >= n {
+                        break;
+                    }
+                    if chars[i] == '"' {
+                        let mut k = i + 1;
+                        let mut h = 0usize;
+                        while k < n && h < hashes && chars[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            code.push('"');
+                            for _ in 0..hashes {
+                                code.push('#');
+                            }
+                            i = k;
+                            break;
+                        }
+                    }
+                    mask_char(&mut code, chars[i], &mut line);
+                    i += 1;
+                }
+                prev_ident = false;
+                continue;
+            }
+            // Not a raw string after all: fall through, treat as plain code.
+        }
+
+        // Ordinary (byte) string literal.
+        if c == '"' || (c == 'b' && !prev_ident && i + 1 < n && chars[i + 1] == '"') {
+            if c == 'b' {
+                code.push('b');
+                i += 1;
+            }
+            code.push('"');
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d == '\\' && i + 1 < n {
+                    // Mask the escape pair, keeping line counts for `\` at
+                    // end-of-line string continuations.
+                    mask_char(&mut code, chars[i], &mut line);
+                    mask_char(&mut code, chars[i + 1], &mut line);
+                    i += 2;
+                    continue;
+                }
+                if d == '"' {
+                    code.push('"');
+                    i += 1;
+                    break;
+                }
+                mask_char(&mut code, d, &mut line);
+                i += 1;
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\'', '\u{…}'.
+                code.push('\'');
+                i += 1;
+                while i < n {
+                    let d = chars[i];
+                    if d == '\\' && i + 1 < n {
+                        code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if d == '\'' {
+                        code.push('\'');
+                        i += 1;
+                        break;
+                    }
+                    mask_char(&mut code, d, &mut line);
+                    i += 1;
+                }
+            } else if i + 2 < n && chars[i + 1] != '\'' && chars[i + 2] == '\'' {
+                // Simple one-char literal 'x' (covers '"' and non-ASCII).
+                code.push('\'');
+                code.push(' ');
+                code.push('\'');
+                i += 3;
+            } else {
+                // A lifetime ('a, 'static) — the quote and the following
+                // identifier chars are ordinary code.
+                code.push('\'');
+                i += 1;
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // Plain code char.
+        code.push(c);
+        if c == '\n' {
+            line += 1;
+            prev_ident = false;
+        } else {
+            prev_ident = c.is_ascii_alphanumeric() || c == '_';
+        }
+        i += 1;
+    }
+
+    let code_lines: Vec<String> = code.lines().map(str::to_string).collect();
+    let test_line = mark_test_lines(&code_lines);
+    FileScan { code_lines, test_line, comments }
+}
+
+/// Mask one literal/comment char: newlines survive (they carry line
+/// structure), everything else becomes a space.
+fn mask_char(code: &mut String, c: char, line: &mut usize) {
+    if c == '\n' {
+        code.push('\n');
+        *line += 1;
+    } else {
+        code.push(' ');
+    }
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` regions by tracking brace
+/// depth on the masked code: the attribute arms a pending flag, the next
+/// `{` opens the region, and it closes when depth returns to its start.
+fn mark_test_lines(code_lines: &[String]) -> Vec<bool> {
+    let mut out = vec![false; code_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region_floor: Option<i64> = None;
+    for (idx, l) in code_lines.iter().enumerate() {
+        if region_floor.is_none() && l.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if region_floor.is_some() || pending {
+            out[idx] = true;
+        }
+        for ch in l.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        region_floor = Some(depth - 1);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(floor) = region_floor {
+                        if depth <= floor {
+                            region_floor = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let src = "let a = \"HashMap\"; // HashMap here\nlet b = 1; /* HashMap */\n";
+        let s = scan(src);
+        assert!(!s.code_lines[0].contains("HashMap"));
+        assert!(!s.code_lines[1].contains("HashMap"));
+        assert!(s.code_lines[0].contains("let a ="));
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].line, 1);
+        assert!(s.comments[0].text.contains("HashMap here"));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_multiline() {
+        let src = "let a = r#\"Instant::now\nline2 HashMap\"#;\nlet c = 2;\n";
+        let s = scan(src);
+        assert!(!s.code_lines[0].contains("Instant::now"));
+        assert!(!s.code_lines[1].contains("HashMap"));
+        assert!(s.code_lines[2].contains("let c = 2;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // '"' must not open a string; 'a is a lifetime, not a char literal.
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\"'; let h = \"HashMap\"; q }\n";
+        let s = scan(src);
+        assert!(!s.code_lines[0].contains("HashMap"));
+        assert!(s.code_lines[0].contains("fn f<'a>"));
+        assert!(s.code_lines[0].contains("char"));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let src = "let nl = '\\n'; let quote = '\\''; let x = \"ok\";\n";
+        let s = scan(src);
+        assert!(s.code_lines[0].contains("let nl ="));
+        assert!(!s.code_lines[0].contains("ok"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner HashMap */ still comment */ let x = 1;\n";
+        let s = scan(src);
+        assert!(!s.code_lines[0].contains("HashMap"));
+        assert!(s.code_lines[0].contains("let x = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn prod2() {}\n";
+        let s = scan(src);
+        assert!(!s.is_test_line(1));
+        assert!(s.is_test_line(2));
+        assert!(s.is_test_line(3));
+        assert!(s.is_test_line(4));
+        assert!(s.is_test_line(5));
+        assert!(!s.is_test_line(6));
+    }
+}

@@ -11,6 +11,7 @@
 //!                   [--results DIR] [--resume] [--no-persist]
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
+//! multi-fedls lint [--json] [--src DIR]        determinism & invariant lint pass
 //! ```
 
 use std::collections::HashMap;
@@ -87,6 +88,7 @@ USAGE:
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
   multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|all> [--json]
+  multi-fedls lint [--json] [--src DIR]
 ";
 
 fn main() {
@@ -106,6 +108,7 @@ fn main() {
         "workload" => cmd_workload(&args),
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -134,6 +137,37 @@ fn env_by_name(name: &str) -> anyhow::Result<MultiCloud> {
         )),
         other => anyhow::bail!("unknown environment {other} (cloudlab | aws-gcp)"),
     }
+}
+
+/// `multi-fedls lint` — run the determinism & invariant pass over the
+/// crate's `src/` (auto-discovered from the cwd, or `--src DIR`).
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let src_root = match args.get("src") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => ["src", "rust/src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            .ok_or_else(|| {
+                anyhow::anyhow!("cannot find the crate's src/; run from the repo or rust/ root, or pass --src DIR")
+            })?,
+    };
+    let report = multi_fedls::lint::lint_tree(&src_root)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        for v in &report.violations {
+            println!("{v}");
+        }
+        println!(
+            "{} file(s) scanned, {} rule(s), {} violation(s)",
+            report.files_scanned,
+            multi_fedls::lint::RULES.len(),
+            report.violations.len()
+        );
+    }
+    anyhow::ensure!(report.is_clean(), "{} lint violation(s)", report.violations.len());
+    Ok(())
 }
 
 fn cmd_catalog(args: &Args) -> anyhow::Result<()> {

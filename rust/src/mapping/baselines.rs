@@ -115,16 +115,16 @@ pub fn single_cloud(p: &MappingProblem, provider: Option<ProviderId>) -> Option<
 }
 
 fn remap_slowdowns(p: &MappingProblem, sub: &crate::cloud::Catalog) -> crate::presched::SlowdownReport {
-    use std::collections::HashMap;
-    let mut exec_slowdown = HashMap::new();
-    let mut dummy_runs = HashMap::new();
+    use std::collections::BTreeMap;
+    let mut exec_slowdown = BTreeMap::new();
+    let mut dummy_runs = BTreeMap::new();
     for v in sub.vm_ids() {
         let orig = p.catalog.vm_by_id(&sub.vm(v).id).unwrap();
         exec_slowdown.insert(v, p.slowdowns.sl_inst(orig));
         dummy_runs.insert(v, p.slowdowns.dummy_runs[&orig]);
     }
-    let mut comm_slowdown = HashMap::new();
-    let mut comm_runs = HashMap::new();
+    let mut comm_slowdown = BTreeMap::new();
+    let mut comm_runs = BTreeMap::new();
     for a in sub.region_ids() {
         for b in sub.region_ids() {
             let oa = p.catalog.region_by_name(&sub.region(a).name).unwrap();

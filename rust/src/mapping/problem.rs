@@ -112,7 +112,10 @@ impl<'a> MappingProblem<'a> {
     /// own market tag).
     pub fn rate_for(&self, vm: VmTypeId, market: Market) -> f64 {
         let base = self.catalog.vm(vm).cost_per_sec(market);
-        if market == Market::Spot && self.spot_price_factor != 1.0 {
+        // Epsilon comparison (repo-wide 1e-9 convention): exactly-1.0
+        // factors take the untouched-rate branch, so the default market
+        // stays bit-identical to the historical arithmetic.
+        if market == Market::Spot && (self.spot_price_factor - 1.0).abs() > 1e-9 {
             base * self.spot_price_factor
         } else {
             base
@@ -123,7 +126,7 @@ impl<'a> MappingProblem<'a> {
     /// bound under the expected spot price).
     pub fn max_rate_per_sec(&self) -> f64 {
         let base = self.catalog.max_cost_per_sec(self.market);
-        if self.market == Market::Spot && self.spot_price_factor != 1.0 {
+        if self.market == Market::Spot && (self.spot_price_factor - 1.0).abs() > 1e-9 {
             base * self.spot_price_factor
         } else {
             base

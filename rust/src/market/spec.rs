@@ -112,6 +112,7 @@ impl MarketSpec {
         match &self.price {
             PriceSpec::Constant => PriceSeries::Constant,
             PriceSpec::Steps(points) => {
+                // lint:allow(spec-unwrap) -- programmatic-construction guard, not a parse path: TOML-parsed steps are validated in from_table
                 PriceSeries::steps(points.clone()).expect("invalid price steps")
             }
         }
@@ -332,14 +333,13 @@ impl MarketSpec {
             "trace" => {
                 let inline = num_list("revocation_times")?;
                 let file = get_str("revocation_file")?;
-                anyhow::ensure!(
-                    inline.is_some() != file.is_some(),
-                    "[market] revocation = \"trace\" needs exactly one of \
-                     revocation_times or revocation_file"
-                );
-                let times = match inline {
-                    Some(t) => t,
-                    None => load_revocation_trace(&resolve(base, file.expect("checked above")))?,
+                let times = match (inline, file) {
+                    (Some(times), None) => times,
+                    (None, Some(path)) => load_revocation_trace(&resolve(base, path))?,
+                    _ => anyhow::bail!(
+                        "[market] revocation = \"trace\" needs exactly one of \
+                         revocation_times or revocation_file"
+                    ),
                 };
                 validate_trace_times(&times, "revocation_times")?;
                 RevocationSpec::Trace { times }
@@ -394,14 +394,11 @@ impl MarketSpec {
         if price_kind == "steps" {
             allowed.extend(["price_times", "price_factors", "price_file"]);
         }
-        for key in tbl.keys() {
-            anyhow::ensure!(
-                allowed.contains(&key.as_str()),
-                "unknown key `{key}` in [market] (revocation = \"{rev_kind}\", \
-                 price = \"{price_kind}\" accepts: {})",
-                allowed.join(", ")
-            );
-        }
+        tomlmini::reject_unknown_keys(
+            tbl,
+            &allowed,
+            &format!("[market] (revocation = \"{rev_kind}\", price = \"{price_kind}\")"),
+        )?;
 
         Ok(MarketSpec { revocation, price, bid_factor })
     }

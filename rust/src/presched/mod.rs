@@ -22,7 +22,7 @@
 //! in-memory through `crate::framework::EnvCache`, keyed by the same
 //! [`fingerprint`].
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::cloud::tables::{DUMMY_TEST_GB, DUMMY_TRAIN_GB};
@@ -49,13 +49,13 @@ pub struct CommRun {
 #[derive(Debug, Clone)]
 pub struct SlowdownReport {
     /// Raw dummy measurements per VM type (Table 3's time columns).
-    pub dummy_runs: HashMap<VmTypeId, DummyRun>,
+    pub dummy_runs: BTreeMap<VmTypeId, DummyRun>,
     /// Raw exchange measurements per region pair (Table 4's time columns).
-    pub comm_runs: HashMap<(RegionId, RegionId), CommRun>,
+    pub comm_runs: BTreeMap<(RegionId, RegionId), CommRun>,
     /// `sl_inst` per VM type.
-    pub exec_slowdown: HashMap<VmTypeId, f64>,
+    pub exec_slowdown: BTreeMap<VmTypeId, f64>,
     /// `sl_comm` per (unordered, canonicalized) region pair.
-    pub comm_slowdown: HashMap<(RegionId, RegionId), f64>,
+    pub comm_slowdown: BTreeMap<(RegionId, RegionId), f64>,
     pub baseline_vm: VmTypeId,
     pub baseline_pair: (RegionId, RegionId),
     /// Fingerprint of the environment this report was measured on.
@@ -118,7 +118,7 @@ impl<'a> PreScheduler<'a> {
         let gt = self.cloud.ground_truth();
 
         // --- execution: two dummy rounds per VM type ---
-        let mut dummy_runs = HashMap::new();
+        let mut dummy_runs = BTreeMap::new();
         for vm in cat.vm_ids() {
             let d = gt.dummy_times(&cat.vm(vm).id);
             dummy_runs.insert(
@@ -141,7 +141,7 @@ impl<'a> PreScheduler<'a> {
             .collect();
 
         // --- communication: exchange the dummy volumes on every pair ---
-        let mut comm_runs = HashMap::new();
+        let mut comm_runs = BTreeMap::new();
         for a in cat.region_ids() {
             for b in cat.region_ids() {
                 let key = canon(a, b);
@@ -206,7 +206,9 @@ pub mod cache {
             cat.region(report.baseline_pair.0).name,
             cat.region(report.baseline_pair.1).name
         );
-        for (vm, d) in sorted(&report.dummy_runs) {
+        // BTreeMap iterates in ascending key order, so the cache file is
+        // byte-identical to what the former sort-by-key emitted.
+        for (vm, d) in &report.dummy_runs {
             let _ = writeln!(out, "\n[[exec]]");
             let _ = writeln!(out, "vm = \"{}\"", cat.vm(*vm).id);
             let _ = writeln!(
@@ -215,7 +217,7 @@ pub mod cache {
                 d.train_r1, d.train_r2, d.test_r1, d.test_r2
             );
         }
-        for ((a, b), c) in sorted(&report.comm_runs) {
+        for ((a, b), c) in &report.comm_runs {
             let _ = writeln!(out, "\n[[comm]]");
             let _ = writeln!(
                 out,
@@ -227,12 +229,6 @@ pub mod cache {
         }
         std::fs::write(path, out)?;
         Ok(())
-    }
-
-    fn sorted<K: Ord + Copy, V>(m: &HashMap<K, V>) -> Vec<(&K, &V)> {
-        let mut v: Vec<_> = m.iter().collect();
-        v.sort_by_key(|(k, _)| **k);
-        v
     }
 
     /// Load a cached report; returns None when missing or stale (fingerprint
@@ -263,7 +259,7 @@ pub mod cache {
             cat.region_by_name(pair[1].as_str().unwrap_or_default())
                 .ok_or_else(|| anyhow::anyhow!("bad baseline region"))?,
         );
-        let mut dummy_runs = HashMap::new();
+        let mut dummy_runs = BTreeMap::new();
         if let Some(execs) = root.get("exec").and_then(|v| v.as_table_array()) {
             for e in execs {
                 let vm = cat
@@ -281,7 +277,7 @@ pub mod cache {
                 );
             }
         }
-        let mut comm_runs = HashMap::new();
+        let mut comm_runs = BTreeMap::new();
         if let Some(comms) = root.get("comm").and_then(|v| v.as_table_array()) {
             for c in comms {
                 let pair = c["pair"].as_array().ok_or_else(|| anyhow::anyhow!("bad pair"))?;

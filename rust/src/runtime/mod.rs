@@ -14,6 +14,7 @@ pub use manifest::{AppArtifacts, Manifest};
 pub use trainer::PjrtTrainer;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A PJRT CPU engine hosting compiled executables.
@@ -25,8 +26,11 @@ pub struct Engine {
     inner: Arc<Mutex<EngineInner>>,
     /// Compiled-executable cache: every client shares one compilation per
     /// artifact (PJRT compilation of the interpret-mode Pallas HLO is the
-    /// expensive part of startup).
-    cache: Arc<Mutex<std::collections::HashMap<std::path::PathBuf, Executable>>>,
+    /// expensive part of startup). A BTreeMap so anything derived from the
+    /// cache (debug dumps, future eviction) iterates deterministically.
+    cache: Arc<Mutex<std::collections::BTreeMap<std::path::PathBuf, Executable>>>,
+    hits: Arc<AtomicUsize>,
+    misses: Arc<AtomicUsize>,
 }
 
 struct EngineInner {
@@ -61,16 +65,38 @@ impl Engine {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
         Ok(Engine {
             inner: Arc::new(Mutex::new(EngineInner { client })),
-            cache: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            cache: Arc::new(Mutex::new(std::collections::BTreeMap::new())),
+            hits: Arc::new(AtomicUsize::new(0)),
+            misses: Arc::new(AtomicUsize::new(0)),
         })
+    }
+
+    /// Cache hits so far (shared across clones of this engine).
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    /// Cache misses (= compilations) so far. Deterministic for any number
+    /// of concurrent clients: compilation happens under the cache lock, so
+    /// each artifact is a miss exactly once.
+    pub fn cache_misses(&self) -> usize {
+        self.misses.load(Ordering::SeqCst)
     }
 
     /// Load an HLO-text artifact and compile it for this engine (cached:
     /// repeated loads of the same path reuse the compiled executable).
     pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<Executable> {
-        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+        // Hold the cache lock across the compile (the framework::EnvCache
+        // pattern): concurrent loads of the same artifact see exactly one
+        // miss and never compile twice, so hit/miss counts are identical
+        // for any worker count. Compilation is already serialized by the
+        // engine mutex, so this costs no parallelism.
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(path) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
             return Ok(exe.clone());
         }
+        self.misses.fetch_add(1, Ordering::SeqCst);
         anyhow::ensure!(path.exists(), "artifact {} missing — run `make artifacts`", path.display());
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
@@ -86,14 +112,19 @@ impl Engine {
             inner: Arc::new(Mutex::new(ExecutableInner { exe })),
             name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
         };
-        self.cache.lock().unwrap().insert(path.to_path_buf(), executable.clone());
+        cache.insert(path.to_path_buf(), executable.clone());
         Ok(executable)
     }
 }
 
 impl Clone for Engine {
     fn clone(&self) -> Self {
-        Engine { inner: self.inner.clone(), cache: self.cache.clone() }
+        Engine {
+            inner: self.inner.clone(),
+            cache: self.cache.clone(),
+            hits: self.hits.clone(),
+            misses: self.misses.clone(),
+        }
     }
 }
 
@@ -178,6 +209,37 @@ ENTRY main {
             .unwrap_err()
             .to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    /// The EnvCache-shaped counter assertion: compilation happens under
+    /// the cache lock, so no matter how many workers race on the same
+    /// artifact, it is a miss exactly once — counts are identical across
+    /// worker counts (the `--jobs 1/4` invariant).
+    #[test]
+    fn cache_counters_identical_across_worker_counts() {
+        let run = |workers: usize| -> (usize, usize) {
+            let engine = Engine::cpu().unwrap();
+            let path = write_tmp(&format!("add-cache-{workers}.hlo.txt"), ADD_HLO);
+            let mut joins = Vec::new();
+            for _ in 0..workers {
+                let engine = engine.clone();
+                let path = path.clone();
+                joins.push(std::thread::spawn(move || {
+                    engine.load_hlo_text(&path).unwrap();
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+            std::fs::remove_file(path).ok();
+            (engine.cache_hits(), engine.cache_misses())
+        };
+        let (hits1, misses1) = run(1);
+        let (hits4, misses4) = run(4);
+        assert_eq!(misses1, 1);
+        assert_eq!(misses4, 1, "artifact must compile exactly once under contention");
+        assert_eq!(hits1 + misses1, 1);
+        assert_eq!(hits4 + misses4, 4);
     }
 
     #[test]

@@ -208,10 +208,36 @@ impl SweepSpec {
     /// relative `[[market]]` trace-file references.
     pub fn from_toml_with_base(text: &str, base: Option<&Path>) -> anyhow::Result<SweepSpec> {
         let root = tomlmini::parse(text)?;
+        tomlmini::reject_unknown_keys(
+            &root,
+            &[
+                "name", "trials", "seed", "rounds", "max_revocations_per_task", "checkpoints",
+                "jobs", "grid", "market",
+            ],
+            "sweep spec",
+        )?;
         let grid = root
             .get("grid")
             .and_then(|v| v.as_table())
             .ok_or_else(|| anyhow::anyhow!("sweep spec missing [grid] section"))?;
+        tomlmini::reject_unknown_keys(
+            grid,
+            &[
+                "apps",
+                "scenarios",
+                "revocation_mean_secs",
+                "policies",
+                "alphas",
+                "mappers",
+                "server_ckpt_every",
+                "client_checkpoint",
+                "max_revocations_per_task",
+                "budget_round",
+                "deadline_round",
+                "markets",
+            ],
+            "sweep [grid]",
+        )?;
 
         let apps = str_axis(grid, "apps")?
             .ok_or_else(|| anyhow::anyhow!("grid.apps is required (e.g. [\"til\"])"))?;

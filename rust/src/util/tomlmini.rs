@@ -289,6 +289,28 @@ fn write_value(v: &Value) -> String {
     }
 }
 
+/// Reject keys of `tbl` that are not in `allowed`, naming the offending
+/// key and the accepting context (e.g. `[market]`, `job spec`) plus the
+/// full accepted set — so a typo'd config key fails loudly instead of
+/// being silently ignored.
+///
+/// This is the shared validation helper every spec-table parser must call;
+/// the `unknown-key` lint rule enforces its presence in each parser file.
+pub fn reject_unknown_keys(
+    tbl: &BTreeMap<String, Value>,
+    allowed: &[&str],
+    ctx: &str,
+) -> anyhow::Result<()> {
+    for key in tbl.keys() {
+        anyhow::ensure!(
+            allowed.contains(&key.as_str()),
+            "unknown key `{key}` in {ctx} (accepted keys: {})",
+            allowed.join(", ")
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,5 +410,16 @@ id = 1
         assert_eq!(root["a"].as_int(), Some(-4));
         assert_eq!(root["b"].as_int(), Some(1000));
         assert_eq!(root["c"].as_float(), Some(-0.5));
+    }
+
+    #[test]
+    fn reject_unknown_keys_names_key_context_and_accepted_set() {
+        let root = parse("app = \"til\"\noops = 1\n").unwrap();
+        let err = reject_unknown_keys(&root, &["app", "rounds"], "job spec").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key `oops`"), "{msg}");
+        assert!(msg.contains("job spec"), "{msg}");
+        assert!(msg.contains("app, rounds"), "{msg}");
+        assert!(reject_unknown_keys(&root, &["app", "oops"], "job spec").is_ok());
     }
 }

@@ -200,6 +200,14 @@ impl WorkloadSpec {
         base: Option<&Path>,
     ) -> anyhow::Result<WorkloadSpec> {
         let root = tomlmini::parse(text)?;
+        tomlmini::reject_unknown_keys(
+            &root,
+            &[
+                "name", "seed", "trials", "workers", "admission", "scheduler", "arrival", "job",
+                "grid", "market",
+            ],
+            "workload spec",
+        )?;
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
             match root.get(key).and_then(|v| v.as_int()) {
                 Some(x) if x < 0 => anyhow::bail!("{key} must be non-negative, got {x}"),
@@ -240,6 +248,12 @@ impl WorkloadSpec {
             if job_market.is_some() {
                 body.remove("market");
             }
+            // Workload-template attributes live on the [[job]] table, not in
+            // the job config — strip them before the shared JobSpec parse,
+            // which rejects unknown keys.
+            for template_key in ["count", "name", "priority", "tenant"] {
+                body.remove(template_key);
+            }
             let mut spec = JobSpec::from_table_with_base(&body, base)
                 .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?;
             if let Some(m) = job_market {
@@ -277,6 +291,11 @@ impl WorkloadSpec {
 
         // --- arrival process ---
         let arrival_tbl = root.get("arrival").and_then(|v| v.as_table());
+        if let Some(tbl) = arrival_tbl {
+            // `times` and `mean_secs` stay accepted for every kind: a
+            // `[grid] arrivals` axis re-parses this table under each kind.
+            tomlmini::reject_unknown_keys(tbl, &["kind", "mean_secs", "times"], "[arrival]")?;
+        }
         let kind = arrival_tbl
             .and_then(|t| t.get("kind"))
             .and_then(|v| v.as_str())
@@ -299,6 +318,21 @@ impl WorkloadSpec {
 
         // --- optional grid axes ---
         let grid = root.get("grid").and_then(|v| v.as_table());
+        if let Some(tbl) = grid {
+            tomlmini::reject_unknown_keys(
+                tbl,
+                &[
+                    "admissions",
+                    "schedulers",
+                    "arrivals",
+                    "budget_round",
+                    "deadline_round",
+                    "priorities",
+                    "markets",
+                ],
+                "workload [grid]",
+            )?;
+        }
         let admissions_axis = match axis_values(grid, "admissions") {
             None => None,
             Some(items) => Some(

@@ -1,0 +1,202 @@
+//! The `#[test]` frontend of the determinism & invariant lint pass, plus
+//! fixture-driven self-tests: for each rule, a positive hit, an
+//! allow-annotation suppression, and string/comment false-positive
+//! immunity. The meta-test at the bottom asserts the repo itself is
+//! lint-clean, so plain offline `cargo test` gates every commit exactly
+//! like `multi-fedls lint` and CI do.
+
+use multi_fedls::lint::{lint_source, lint_tree, RULES};
+
+/// Rule names hit for `src` under the fake `src/`-relative path `rel`.
+fn rules_hit(rel: &str, src: &str) -> Vec<&'static str> {
+    lint_source(rel, src).into_iter().map(|v| v.rule).collect()
+}
+
+// --- hash-iter -----------------------------------------------------------
+
+#[test]
+fn hash_iter_fires_in_simulation_state_modules() {
+    let src = "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+    assert_eq!(rules_hit("cloudsim/fake.rs", src), ["hash-iter"]);
+    assert_eq!(rules_hit("presched/fake.rs", src), ["hash-iter"]);
+    let set = "fn f() { let s = std::collections::HashSet::<u32>::new(); }\n";
+    assert_eq!(rules_hit("sweep/fake.rs", set), ["hash-iter"]);
+    // BTreeMap is the fix, and out-of-scope modules are untouched.
+    assert!(rules_hit("cloudsim/fake.rs", "fn f() { let m = BTreeMap::new(); }\n").is_empty());
+    assert!(rules_hit("data/fake.rs", src).is_empty());
+}
+
+#[test]
+fn hash_iter_allow_and_test_exemptions() {
+    let allowed = "// lint:allow(hash-iter) -- keyed by opaque id, order never observed\n\
+                   fn f() { let m = HashMap::new(); }\n";
+    assert!(rules_hit("cloudsim/fake.rs", allowed).is_empty());
+    let in_tests = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let m = HashMap::new(); }\n}\n";
+    assert!(rules_hit("cloudsim/fake.rs", in_tests).is_empty());
+}
+
+#[test]
+fn hash_iter_ignores_strings_and_comments() {
+    let src = "fn f() { let s = \"HashMap::new()\"; } // a HashMap in prose\n\
+               /* HashMap in a block comment */\n\
+               fn g() { let r = r#\"HashSet too\"#; }\n";
+    assert!(rules_hit("cloudsim/fake.rs", src).is_empty());
+}
+
+// --- wall-clock ----------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_everywhere_but_the_exempt_files() {
+    for tok in ["std::time::Instant::now()", "SystemTime::now()", "rand::thread_rng()"] {
+        let src = format!("fn f() {{ let t = {tok}; }}\n");
+        assert_eq!(rules_hit("workload/engine.rs", &src), ["wall-clock"], "{tok}");
+        assert_eq!(rules_hit("fl/mod.rs", &src), ["wall-clock"], "{tok}");
+        // The two sanctioned homes of real time / OS randomness.
+        assert!(rules_hit("util/bench.rs", &src).is_empty(), "{tok}");
+        assert!(rules_hit("coordinator/real.rs", &src).is_empty(), "{tok}");
+    }
+}
+
+#[test]
+fn wall_clock_allow_and_immunity() {
+    let allowed = "fn f() { let t = Instant::now(); } // lint:allow(wall-clock) -- boot-time banner only, never reaches results\n";
+    assert!(rules_hit("cloudsim/fake.rs", allowed).is_empty());
+    let in_string = "fn f() { let s = \"Instant::now\"; }\n// Instant::now in a comment\n";
+    assert!(rules_hit("cloudsim/fake.rs", in_string).is_empty());
+}
+
+// --- float-eq ------------------------------------------------------------
+
+#[test]
+fn float_eq_fires_on_bare_literal_compares() {
+    assert_eq!(rules_hit("mapping/fake.rs", "fn f(x: f64) -> bool { x == 1.0 }\n"), ["float-eq"]);
+    assert_eq!(rules_hit("solver/fake.rs", "fn f(x: f64) -> bool { 0.5 != x }\n"), ["float-eq"]);
+    assert_eq!(
+        rules_hit("cloudsim/billing.rs", "fn f(x: f64) -> bool { x != -2.0 }\n"),
+        ["float-eq"]
+    );
+}
+
+#[test]
+fn float_eq_epsilon_ints_and_scope_are_clean() {
+    // The epsilon convention, integer compares, and identifier-vs-identifier
+    // compares all pass; so does float `==` outside the costed modules.
+    assert!(rules_hit("mapping/fake.rs", "fn f(x: f64) -> bool { (x - 1.0).abs() < 1e-9 }\n")
+        .is_empty());
+    assert!(rules_hit("mapping/fake.rs", "fn f(n: u32) -> bool { n == 10 }\n").is_empty());
+    assert!(rules_hit("mapping/fake.rs", "fn f(a: f64, b: f64) -> bool { a == b }\n").is_empty());
+    assert!(rules_hit("data/fake.rs", "fn f(x: f64) -> bool { x == 1.0 }\n").is_empty());
+}
+
+#[test]
+fn float_eq_allow_and_test_exemptions() {
+    let allowed = "// lint:allow(float-eq) -- sentinel compare against an exact bit pattern\n\
+                   fn f(x: f64) -> bool { x == 1.0 }\n";
+    assert!(rules_hit("mapping/fake.rs", allowed).is_empty());
+    let in_tests = "#[cfg(test)]\nmod tests {\n    fn t(x: f64) -> bool { x == 1.0 }\n}\n";
+    assert!(rules_hit("mapping/fake.rs", in_tests).is_empty());
+    let in_string = "fn f() { let s = \"x == 1.0\"; }\n";
+    assert!(rules_hit("mapping/fake.rs", in_string).is_empty());
+}
+
+// --- spec-unwrap ---------------------------------------------------------
+
+#[test]
+fn spec_unwrap_fires_in_parse_paths() {
+    let rej = "fn p(t: &Tbl) { reject_unknown_keys(t, &[], \"x\").ok(); }\n";
+    for tok in ["v.unwrap()", "v.expect(\"k\")", "panic!(\"k\")", "unreachable!()"] {
+        let src = format!("{rej}fn f(v: Option<u32>) {{ let _ = {tok}; }}\n");
+        assert_eq!(rules_hit("market/spec.rs", &src), ["spec-unwrap"], "{tok}");
+        assert_eq!(rules_hit("cloud/catalog.rs", &src), ["spec-unwrap"], "{tok}");
+    }
+}
+
+#[test]
+fn spec_unwrap_fallbacks_tests_and_scope_are_clean() {
+    let rej = "fn p(t: &Tbl) { reject_unknown_keys(t, &[], \"x\").ok(); }\n";
+    // unwrap_or / unwrap_or_else are fine (no panic), as is unwrap outside
+    // the parse-path files and inside #[cfg(test)].
+    let src = format!("{rej}fn f(v: Option<u32>) -> u32 {{ v.unwrap_or(0) }}\n");
+    assert!(rules_hit("market/spec.rs", &src).is_empty());
+    assert!(rules_hit("cloudsim/fake.rs", "fn f(v: Option<u32>) { v.unwrap(); }\n").is_empty());
+    let in_tests =
+        format!("{rej}#[cfg(test)]\nmod tests {{\n    fn t(v: Option<u32>) {{ v.unwrap(); }}\n}}\n");
+    assert!(rules_hit("market/spec.rs", &in_tests).is_empty());
+}
+
+#[test]
+fn spec_unwrap_allow_and_immunity() {
+    let rej = "fn p(t: &Tbl) { reject_unknown_keys(t, &[], \"x\").ok(); }\n";
+    let allowed = format!(
+        "{rej}// lint:allow(spec-unwrap) -- validated two lines up, cannot be None\n\
+         fn f(v: Option<u32>) {{ v.unwrap(); }}\n"
+    );
+    assert!(rules_hit("market/spec.rs", &allowed).is_empty());
+    let in_string = format!("{rej}fn f() {{ let s = \".unwrap() panic!(\"; }}\n");
+    assert!(rules_hit("market/spec.rs", &in_string).is_empty());
+}
+
+// --- unknown-key ---------------------------------------------------------
+
+#[test]
+fn unknown_key_requires_the_shared_helper() {
+    let without = "fn parse(t: &Tbl) -> Result<()> { Ok(()) }\n";
+    let v = lint_source("sweep/spec.rs", without);
+    assert_eq!(v.len(), 1);
+    assert_eq!((v[0].rule, v[0].line), ("unknown-key", 1));
+    let with = "fn parse(t: &Tbl) -> Result<()> { reject_unknown_keys(t, &[\"a\"], \"x\") }\n";
+    assert!(lint_source("sweep/spec.rs", with).is_empty());
+    // A helper call that only exists in test code does not count.
+    let test_only = "fn parse(t: &Tbl) -> Result<()> { Ok(()) }\n\
+                     #[cfg(test)]\nmod tests {\n    fn t() { reject_unknown_keys; }\n}\n";
+    assert_eq!(rules_hit("sweep/spec.rs", test_only), ["unknown-key"]);
+    // Files that are not spec parsers are out of scope.
+    assert!(lint_source("cloudsim/fake.rs", without).is_empty());
+}
+
+#[test]
+fn unknown_key_allow_suppresses_on_line_one() {
+    let src = "// lint:allow(unknown-key) -- free-form table, forwarded verbatim\n\
+               fn parse(t: &Tbl) -> Result<()> { Ok(()) }\n";
+    assert!(lint_source("sweep/spec.rs", src).is_empty());
+}
+
+// --- allow-syntax + registry --------------------------------------------
+
+#[test]
+fn reasonless_allow_fails_and_does_not_suppress() {
+    let src = "// lint:allow(hash-iter)\nfn f() { let m = HashMap::new(); }\n";
+    let mut hit = rules_hit("cloudsim/fake.rs", src);
+    hit.sort_unstable();
+    assert_eq!(hit, ["allow-syntax", "hash-iter"]);
+}
+
+#[test]
+fn registry_covers_the_five_rules_plus_meta() {
+    let names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+    assert_eq!(
+        names,
+        ["hash-iter", "wall-clock", "float-eq", "spec-unwrap", "unknown-key", "allow-syntax"]
+    );
+}
+
+// --- the gate ------------------------------------------------------------
+
+/// The repo itself must be lint-clean: this is the `cargo test` frontend
+/// of `multi-fedls lint` (CI runs the CLI as well).
+#[test]
+fn repo_is_lint_clean() {
+    let src_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&src_root).expect("scanning rust/src");
+    assert!(report.files_scanned > 40, "walker found only {} files", report.files_scanned);
+    assert!(
+        report.violations.is_empty(),
+        "lint violations:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
