@@ -40,6 +40,7 @@ fn main() {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         bench(&format!("mapping::exact {name}"), Duration::from_secs(2), 20, || {
             black_box(multi_fedls::mapping::exact::solve(&p));
@@ -58,6 +59,7 @@ fn main() {
         spot_price_factor: 1.0,
         budget_round: 1e9,
         deadline_round: 1e9,
+        outlook: None,
     };
     let map = multi_fedls::dynsched::CurrentMap {
         server: mc.catalog.vm_by_id("vm121").unwrap(),
@@ -75,6 +77,7 @@ fn main() {
                 revoked: map.clients[0],
                 policy: multi_fedls::dynsched::DynSchedPolicy::different_vm(),
                 at: multi_fedls::simul::SimTime::ZERO,
+                remaining_secs: 0.0,
                 market: multi_fedls::market::MarketView::new(&market),
             },
         ));

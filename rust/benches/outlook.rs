@@ -1,0 +1,47 @@
+//! Outlook subsystem benchmarks: query latency for the forecast primitives
+//! (windowed expected price, integrated-hazard survival, deferral search)
+//! plus the outlook-ablation study regen (3-trial averages).
+use std::time::Duration;
+
+use multi_fedls::market::{MarketSpec, PriceSpec, RevocationSpec};
+use multi_fedls::outlook::{MarketOutlook, OutlookSpec};
+use multi_fedls::util::bench::{bench, black_box};
+
+fn main() {
+    let (table, json) = multi_fedls::trace::outlook_ablation();
+    table.print();
+    println!("{}", json.to_string_compact());
+
+    // A busy price series (96 steps ≈ a day at 15-min granularity) under a
+    // seasonal hazard: the worst realistic case for every query primitive.
+    let steps: Vec<(f64, f64)> =
+        (0..96).map(|i| (i as f64 * 900.0, 1.0 + 0.5 * f64::from(i % 7))).collect();
+    let market = MarketSpec {
+        price: PriceSpec::Steps(steps),
+        revocation: RevocationSpec::Seasonal {
+            mean_secs: 7200.0,
+            period_secs: 14_400.0,
+            amplitude: 0.8,
+            phase_secs: 0.0,
+        },
+        ..MarketSpec::default()
+    };
+    let spec = OutlookSpec { enabled: true, horizon_secs: Some(14_400.0), bid_risk: 0.1, defer: true };
+    let o = MarketOutlook::new(&market, Some(7200.0), spec, 7200.0);
+
+    bench("outlook::expected_price_factor", Duration::from_secs(2), 1000, || {
+        black_box(o.expected_price_factor(1234.5, 14_400.0));
+    });
+    bench("outlook::survival", Duration::from_secs(2), 1000, || {
+        black_box(o.survival(1234.5, 1234.5 + 14_400.0));
+    });
+    bench("outlook::expected_revocations", Duration::from_secs(2), 1000, || {
+        black_box(o.expected_revocations(0.0, 86_400.0));
+    });
+    bench("outlook::advise_bid", Duration::from_secs(2), 1000, || {
+        black_box(o.advise_bid(1234.5, 14_400.0));
+    });
+    bench("outlook::best_start_offset", Duration::from_secs(2), 200, || {
+        black_box(o.best_start_offset(21_600.0, 14_400.0));
+    });
+}

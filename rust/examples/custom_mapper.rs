@@ -47,12 +47,18 @@ impl InitialMapper for CostOnlyMapper {
             spot_price_factor: p.spot_price_factor,
             budget_round: p.budget_round,
             deadline_round: p.deadline_round,
+            outlook: p.outlook,
         };
         let sol = mapping::exact::solve(&cost_only)?;
         // Re-evaluate under the caller's α so reported objectives stay
         // comparable with the other mappers.
         let eval = p.evaluate(&sol.mapping);
-        Some(MappingSolution { mapping: sol.mapping, eval, nodes: sol.nodes })
+        Some(MappingSolution {
+            mapping: sol.mapping,
+            eval,
+            nodes: sol.nodes,
+            defer_secs: sol.defer_secs,
+        })
     }
 }
 

@@ -100,6 +100,11 @@ pub fn run_trials_with_jobs(
 /// revocation = "seasonal"       # paper's exponential k_r at constant price;
 /// mean_secs = 7200.0            # see crate::market::spec for every key)
 /// period_secs = 86400.0
+///
+/// [outlook]                     # optional market-aware planning (omit =
+/// horizon = 14400.0             # the flat expected-factor path; see
+/// bid_risk = 0.1                # crate::outlook::spec for every key)
+/// defer = true
 /// ```
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -148,6 +153,7 @@ impl JobSpec {
                 "seed",
                 "trials",
                 "market",
+                "outlook",
             ],
             "job spec",
         )?;
@@ -221,6 +227,20 @@ impl JobSpec {
                  (use a [market] table here)"
             ),
             Some(_) => anyhow::bail!("[market] must be a table"),
+        }
+        // Market outlook: an `[outlook]` table (job specs) — a bare string
+        // is a named-outlook reference, which only workload specs can
+        // resolve.
+        match root.get("outlook") {
+            None => {}
+            Some(crate::util::tomlmini::Value::Table(tbl)) => {
+                config.outlook = crate::outlook::OutlookSpec::from_table(tbl)?;
+            }
+            Some(crate::util::tomlmini::Value::Str(name)) => anyhow::bail!(
+                "outlook = \"{name}\" by name is only valid inside workload [[job]] tables \
+                 (use an [outlook] table here)"
+            ),
+            Some(_) => anyhow::bail!("[outlook] must be a table"),
         }
         let trials = get_nonneg("trials")?.unwrap_or(1) as usize;
         Ok(JobSpec { config, trials })

@@ -158,6 +158,7 @@ impl<'a> MultiJobScheduler<'a> {
             spot_price_factor: 1.0,
             budget_round: f64::INFINITY,
             deadline_round: f64::INFINITY,
+            outlook: None,
         };
         // First try the unconstrained optimum: often it fits.
         if let Some(sol) = crate::mapping::exact::solve(&p) {
@@ -205,6 +206,7 @@ impl<'a> MultiJobScheduler<'a> {
                 spot_price_factor: 1.0,
                 budget_round: f64::INFINITY,
                 deadline_round: f64::INFINITY,
+                outlook: None,
             };
             if let Some(sol) = crate::mapping::exact::solve(&p2) {
                 // Translate ids (same order: reduced keeps all vm_types).
@@ -244,6 +246,7 @@ impl<'a> MultiJobScheduler<'a> {
                         spot_price_factor: 1.0,
                         budget_round: f64::INFINITY,
                         deadline_round: f64::INFINITY,
+                        outlook: None,
                     };
                     let m = crate::mapping::exact::solve(&p)
                         .map(|s| s.eval.makespan)

@@ -23,6 +23,7 @@ use crate::dynsched::DynSchedPolicy;
 use crate::ft::FtConfig;
 use crate::mapping::MapperKind;
 use crate::market::MarketSpec;
+use crate::outlook::OutlookSpec;
 use crate::simul::SimTime;
 
 /// Market scenario (§5.6): which tasks ride spot VMs.
@@ -93,6 +94,14 @@ pub struct SimConfig {
     /// bid threshold (the `[market]` job-spec table / `markets` sweep axis).
     /// The default reproduces the paper's fixed-rate Poisson market.
     pub market: MarketSpec,
+    /// Market-outlook configuration (the `[outlook]` job-spec table /
+    /// `outlooks` sweep axis): when enabled, the planning stack consults a
+    /// [`crate::outlook::MarketOutlook`] built from [`SimConfig::market`] —
+    /// windowed candidate pricing in the Dynamic Scheduler and (with
+    /// `defer = true`) delayed-start decisions in the Initial Mapping. The
+    /// disabled default keeps every consumer on the flat expected-factor
+    /// path, bit-identical to the outlook-less planner.
+    pub outlook: OutlookSpec,
     /// Which Initial Mapping implementation to use (module selection; the
     /// `mapper` job-spec key / `mappers` sweep axis).
     pub mapper: MapperKind,
@@ -122,6 +131,7 @@ impl SimConfig {
             scenario,
             revocation_mean_secs: None,
             market: MarketSpec::default(),
+            outlook: OutlookSpec::default(),
             mapper: MapperKind::Exact,
             dynsched_policy: DynSchedPolicy::same_vm_allowed(),
             ft: FtConfig::default(),

@@ -86,6 +86,11 @@ pub struct RevocationCtx<'a> {
     pub policy: DynSchedPolicy,
     /// The revocation instant on the caller's simulation clock.
     pub at: SimTime,
+    /// Estimated seconds of FL work remaining at `at` (rounds left ×
+    /// expected round makespan). Outlook-aware selection prices candidates
+    /// over `[at, at + remaining_secs)`; 0.0 when the caller has no
+    /// estimate (falls back to the instantaneous factor).
+    pub remaining_secs: f64,
     /// Read-only view of the job's spot market (same clock as `at`).
     pub market: MarketView<'a>,
 }
@@ -179,7 +184,13 @@ pub struct Selection {
 /// candidate set (with the revoked VM removed if the policy demands it), or
 /// None when the set is exhausted.
 pub fn select_instance(ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
-    let (p, map, t) = (ctx.problem, ctx.map, ctx.faulty);
+    let (map, t) = (ctx.map, ctx.faulty);
+    // Outlook-aware pricing: with a MarketOutlook on the problem, charge
+    // candidates the expected factor over the remaining-rounds window
+    // `[at, at + remaining_secs)` instead of the flat planning factor.
+    // `windowed` is the identity without an outlook, keeping the default
+    // path bit-identical.
+    let p = &ctx.problem.windowed(ctx.at.secs(), ctx.remaining_secs);
     let set: Vec<VmTypeId> = if ctx.policy.remove_revoked {
         ctx.candidates.iter().copied().filter(|&v| v != ctx.revoked).collect()
     } else {
@@ -240,6 +251,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         }
     }
 
@@ -314,6 +326,7 @@ mod tests {
             revoked: vm126,
             policy: DynSchedPolicy::different_vm(),
             at: SimTime::ZERO,
+            remaining_secs: 0.0,
             market: MarketView::new(&market),
         });
         let sel = sel.unwrap();
@@ -329,6 +342,7 @@ mod tests {
             revoked: vm121,
             policy: DynSchedPolicy::different_vm(),
             at: SimTime::ZERO,
+            remaining_secs: 0.0,
             market: MarketView::new(&market),
         });
         let sel = sel.unwrap();
@@ -359,6 +373,7 @@ mod tests {
             revoked: vm126,
             policy: DynSchedPolicy::same_vm_allowed(),
             at: SimTime::ZERO,
+            remaining_secs: 0.0,
             market: MarketView::new(&market),
         });
         assert_eq!(sel.unwrap().vm, vm126);
@@ -385,6 +400,7 @@ mod tests {
                 revoked,
                 policy,
                 at: SimTime::ZERO,
+                remaining_secs: 0.0,
                 market: MarketView::new(&market),
             });
             set = new_set;
@@ -408,6 +424,7 @@ mod tests {
             revoked: vm126,
             policy: DynSchedPolicy::different_vm(),
             at: SimTime::ZERO,
+            remaining_secs: 0.0,
             market: MarketView::new(&market),
         });
         assert!(sel.is_none());
@@ -430,6 +447,7 @@ mod tests {
             revoked: vm126,
             policy: DynSchedPolicy::different_vm(),
             at: SimTime::ZERO,
+            remaining_secs: 0.0,
             market: MarketView::new(&market),
         });
         let sel = sel.unwrap();

@@ -60,6 +60,18 @@ pub(super) fn run_stop(
     // horizon, which the mapping/dynsched cost models charge per spot
     // VM-second. Exactly 1.0 for the default market.
     let spot_price_factor = cfg.market.planning_price_factor(cfg.planning_horizon_secs());
+    // Market outlook (opt-in via `[outlook]`): closed-form price/revocation
+    // forecasts consumed by the mapper (windowed costs, deferred starts) and
+    // the Dynamic Scheduler (remaining-horizon pricing). `None` keeps every
+    // consumer on the flat expected-factor path above, bit for bit.
+    let outlook = cfg.outlook.enabled.then(|| {
+        crate::outlook::MarketOutlook::new(
+            &cfg.market,
+            cfg.revocation_mean_secs,
+            cfg.outlook.clone(),
+            cfg.planning_horizon_secs(),
+        )
+    });
     let mut mc = MultiCloud::with_market(
         catalog,
         ground_truth,
@@ -87,6 +99,7 @@ pub(super) fn run_stop(
         spot_price_factor,
         budget_round: cfg.budget_round,
         deadline_round: cfg.deadline_round,
+        outlook: outlook.as_ref(),
     };
     let mapper = fw.mapper_for(cfg);
     let sol = mapper
@@ -103,6 +116,21 @@ pub(super) fn run_stop(
             sol.eval.total_cost
         ),
     });
+
+    // Deferred start (outlook `defer = true`): the mapper judged a later
+    // provisioning instant cheaper in expectation and the deadline slack
+    // allows it, so the job idles (unbilled — nothing is provisioned yet)
+    // until the chosen start offset.
+    if sol.defer_secs > 0.0 {
+        now = SimTime::from_secs(sol.defer_secs);
+        events.push(SimEvent {
+            at: now,
+            what: format!(
+                "outlook: provisioning deferred {:.0}s past the price spike",
+                sol.defer_secs
+            ),
+        });
+    }
 
     // --- provision all tasks (boot in parallel) ---
     let server_market = cfg.scenario.server_market();
@@ -273,7 +301,12 @@ pub(super) fn run_stop(
                         ),
                     });
 
-                    // Dynamic Scheduler picks the replacement.
+                    // Dynamic Scheduler picks the replacement. With an
+                    // outlook, candidates are priced over the actual
+                    // remaining-rounds window rather than the planning-wide
+                    // expected factor.
+                    let remaining_secs =
+                        (cfg.n_rounds - completed) as f64 * sol.eval.makespan;
                     let (selection, new_set) = fw.dynsched().select(&RevocationCtx {
                         problem: &problem,
                         map: &current_map,
@@ -282,7 +315,8 @@ pub(super) fn run_stop(
                         revoked: old_type,
                         policy: cfg.dynsched_policy,
                         at: now,
-                        market: MarketView::new(&cfg.market),
+                        remaining_secs,
+                        market: MarketView::with_outlook(&cfg.market, outlook.as_ref()),
                     });
                     *set = new_set;
                     let sel = selection

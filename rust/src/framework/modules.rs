@@ -91,7 +91,8 @@ fn solution_from(p: &MappingProblem, mapping: Mapping) -> Option<MappingSolution
     if !eval.feasible {
         return None;
     }
-    Some(MappingSolution { mapping, eval, nodes: 0 })
+    let defer_secs = p.defer_secs(eval.makespan);
+    Some(MappingSolution { mapping, eval, nodes: 0, defer_secs })
 }
 
 /// The structured exact MILP solver (the paper's production path).

@@ -45,6 +45,13 @@
 //!   with exact and baseline solvers, module selection
 //!   ([`mapping::MapperKind`]) and the shared ranking helpers
 //!   ([`mapping::rank`]).
+//! * [`outlook`] — market forecasting: a per-job [`outlook::MarketOutlook`]
+//!   with exact windowed price integrals, closed-form revocation hazards
+//!   (survival / expected revocations), bid advice and deferral — consumed
+//!   by the mappers (delayed-start decisions), the Dynamic Scheduler
+//!   (remaining-horizon candidate pricing) and the workload engine's
+//!   admission retries; configured via `[outlook]` tables and the
+//!   `outlooks` grid axis (off by default, bit-identical parity).
 //! * [`fl`] — a Flower-like Cross-Silo FL runtime (rounds, FedAvg, messages).
 //! * [`ft`] — Fault Tolerance (§4.3): monitoring + checkpointing.
 //! * [`dynsched`] — Dynamic Scheduler (§4.4): Algorithms 1–3, built around
@@ -86,6 +93,7 @@ pub mod ft;
 pub mod lint;
 pub mod mapping;
 pub mod market;
+pub mod outlook;
 pub mod presched;
 pub mod solver;
 pub mod cloudsim;

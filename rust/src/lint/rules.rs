@@ -14,8 +14,17 @@ use super::Violation;
 
 /// Modules whose state reaches campaign output, fingerprints, or RNG
 /// consumption: map iteration order here must be deterministic.
-pub const HASH_ITER_MODULES: [&str; 8] =
-    ["cloudsim", "presched", "framework", "workload", "market", "sweep", "dynsched", "mapping"];
+pub const HASH_ITER_MODULES: [&str; 9] = [
+    "cloudsim",
+    "presched",
+    "framework",
+    "workload",
+    "market",
+    "sweep",
+    "dynsched",
+    "mapping",
+    "outlook",
+];
 
 /// The only files allowed to read wall-clock time or OS randomness: the
 /// bench harness (measures real elapsed time by design) and the
@@ -34,12 +43,13 @@ pub const SPEC_PARSE_FILES: [&str; 4] =
 
 /// Files hosting a spec-table parser, each of which must call the shared
 /// `tomlmini::reject_unknown_keys` helper at least once.
-pub const UNKNOWN_KEY_FILES: [&str; 5] = [
+pub const UNKNOWN_KEY_FILES: [&str; 6] = [
     "market/spec.rs",
     "sweep/spec.rs",
     "workload/spec.rs",
     "cloud/catalog.rs",
     "coordinator/mod.rs",
+    "outlook/spec.rs",
 ];
 
 /// Run every rule over one scanned file. Allow-annotation filtering

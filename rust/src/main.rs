@@ -87,7 +87,7 @@ USAGE:
                     [--results DIR] [--resume] [--no-persist]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
-  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|all> [--json]
+  multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|outlook-ablation|all> [--json]
   multi-fedls lint [--json] [--src DIR]
 ";
 
@@ -227,6 +227,7 @@ fn cmd_map(args: &Args) -> anyhow::Result<()> {
             .map(|s| s.parse())
             .transpose()?
             .unwrap_or(f64::INFINITY),
+        outlook: None,
     };
     let mapper_kind = match args.get("mapper") {
         Some(k) => multi_fedls::mapping::MapperKind::from_key(k)
@@ -509,6 +510,10 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             let (t, j) = trace::market_sensitivity();
             render(t, j);
         }
+        "outlook-ablation" => {
+            let (t, j) = trace::outlook_ablation();
+            render(t, j);
+        }
         "all" => {
             for f in [
                 trace::table3 as fn() -> (multi_fedls::util::bench::Table, multi_fedls::util::Json),
@@ -527,6 +532,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
                 trace::mapper_ablation,
                 trace::preempt_ablation,
                 trace::market_sensitivity,
+                trace::outlook_ablation,
             ] {
                 let (t, _) = f();
                 t.print();

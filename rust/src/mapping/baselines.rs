@@ -91,6 +91,7 @@ pub fn single_cloud(p: &MappingProblem, provider: Option<ProviderId>) -> Option<
             spot_price_factor: p.spot_price_factor,
             budget_round: p.budget_round,
             deadline_round: p.deadline_round,
+            outlook: p.outlook,
         };
         if let Some(sol) = super::exact::solve(&sub) {
             // Translate back to original ids.
@@ -179,6 +180,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         }
     }
 

@@ -31,6 +31,12 @@ pub struct MappingSolution {
     pub eval: Evaluation,
     /// Nodes explored by the inner quota B&B (for benchmarking).
     pub nodes: usize,
+    /// Provisioning deferral advised by the market outlook
+    /// ([`MappingProblem::defer_secs`]): delay the job start by this many
+    /// seconds to dodge an upcoming price spike. 0.0 — the only value
+    /// without a `defer = true` outlook — means start immediately;
+    /// `framework::exec` honors a positive value as a delayed-start event.
+    pub defer_secs: f64,
 }
 
 /// Solve the Initial Mapping exactly. Returns None when no placement meets
@@ -127,7 +133,8 @@ pub fn solve(p: &MappingProblem) -> Option<MappingSolution> {
                 Some(b) => eval.objective < b.eval.objective - 1e-12,
             };
             if better {
-                best = Some(MappingSolution { mapping, eval, nodes: nodes_total });
+                let defer_secs = p.defer_secs(eval.makespan);
+                best = Some(MappingSolution { mapping, eval, nodes: nodes_total, defer_secs });
             }
         }
     }
@@ -234,6 +241,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         }
     }
 
@@ -388,6 +396,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let sol = solve(&p).expect("feasible");
         let mut vms = sol.mapping.clients.clone();
@@ -426,6 +435,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let sol = solve(&p).expect("feasible");
         assert_eq!(mc.catalog.vm(sol.mapping.server).id, "vm313");

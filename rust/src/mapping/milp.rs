@@ -297,6 +297,7 @@ mod tests {
                 spot_price_factor: 1.0,
                 budget_round: 1e9,
                 deadline_round: 1e9,
+                outlook: None,
             };
             let exact = crate::mapping::exact::solve(&p).expect("exact feasible");
             let milp = solve(&p).expect("milp feasible");
@@ -323,6 +324,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 100.0, // forces GPU VM despite pure-cost α
+            outlook: None,
         };
         let got = solve(&p);
         match (got, crate::mapping::exact::solve(&p)) {
@@ -353,6 +355,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let min_cost = crate::mapping::exact::solve(&base(1.0)).unwrap().eval.total_cost;
         let min_makespan = crate::mapping::exact::solve(&base(0.0)).unwrap().eval.makespan;
@@ -387,6 +390,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e-9,
             deadline_round: 1e9,
+            outlook: None,
         };
         assert!(solve(&p).is_none());
         assert!(crate::mapping::exact::solve(&p).is_none());
@@ -420,6 +424,7 @@ mod tests {
                     spot_price_factor: 1.0,
                     budget_round: 1e9,
                     deadline_round: 1e9,
+                    outlook: None,
                 };
                 let exact = crate::mapping::exact::solve(&p);
                 let milp = solve(&p);

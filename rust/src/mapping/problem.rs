@@ -7,6 +7,7 @@
 
 use crate::cloud::quota::assignment_fits;
 use crate::cloud::{Catalog, Market, ProviderId, VmTypeId};
+use crate::outlook::MarketOutlook;
 use crate::presched::SlowdownReport;
 
 /// Message sizes of the FL job, in GB (Table 1's `size(...)` entries).
@@ -80,6 +81,7 @@ pub struct Evaluation {
 }
 
 /// The full problem instance handed to the solvers.
+#[derive(Clone, Copy)]
 pub struct MappingProblem<'a> {
     pub catalog: &'a Catalog,
     pub slowdowns: &'a SlowdownReport,
@@ -96,6 +98,10 @@ pub struct MappingProblem<'a> {
     pub budget_round: f64,
     /// `T_round`: deadline for a single round, seconds.
     pub deadline_round: f64,
+    /// Market forecast for outlook-aware planning (`None` = the flat
+    /// expected-factor path, bit-identical to the historical planner).
+    /// Enables [`Self::windowed`] re-pricing and [`Self::defer_secs`].
+    pub outlook: Option<&'a MarketOutlook>,
 }
 
 impl<'a> MappingProblem<'a> {
@@ -245,6 +251,44 @@ impl<'a> MappingProblem<'a> {
     pub fn objective_value(&self, total_cost: f64, makespan: f64) -> f64 {
         self.alpha * total_cost / self.cost_max() + (1.0 - self.alpha) * makespan / self.t_max()
     }
+
+    /// The same problem re-priced for the concrete window `[t, t+h)`: the
+    /// flat horizon-wide `spot_price_factor` is replaced by the outlook's
+    /// exact integral over the window, so costs reflect what this window
+    /// actually pays. Without an outlook (or on a constant-price market,
+    /// where the windowed factor is exactly 1.0 and `rate_for` takes the
+    /// untouched-rate branch) the returned problem prices identically to
+    /// `self` — the outlook-off parity anchor for the Dynamic Scheduler's
+    /// remaining-horizon candidate pricing.
+    pub fn windowed(&self, t: f64, h: f64) -> MappingProblem<'a> {
+        match self.outlook {
+            Some(o) => {
+                MappingProblem { spot_price_factor: o.expected_price_factor(t, h), ..*self }
+            }
+            None => *self,
+        }
+    }
+
+    /// How long provisioning should be deferred (from the job-local t = 0)
+    /// to dodge an upcoming price spike: 0.0 — start now — unless this is a
+    /// spot planning problem with a `defer = true` outlook and waiting for a
+    /// later price step is strictly cheaper over the whole run. The delay is
+    /// capped by the outlook horizon and by the deadline slack
+    /// `(T_round − t_m) · n_rounds`, so an admitted deferral can never push
+    /// any round past its deadline.
+    pub fn defer_secs(&self, round_makespan: f64) -> f64 {
+        let Some(o) = self.outlook else { return 0.0 };
+        if self.market != Market::Spot || !o.defers() || !(round_makespan > 0.0) {
+            return 0.0;
+        }
+        let n_rounds = self.job.n_rounds as f64;
+        let slack = if self.deadline_round.is_finite() {
+            ((self.deadline_round - round_makespan) * n_rounds).max(0.0)
+        } else {
+            f64::INFINITY
+        };
+        o.best_start_offset(round_makespan * n_rounds, o.horizon_secs().min(slack))
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +339,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
         // 2765.4 × 0.045 ≈ 124 s per round.
@@ -317,6 +362,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
         let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
@@ -340,6 +386,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
         let vm121 = mc.catalog.vm_by_id("vm121").unwrap();
@@ -372,6 +419,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         // Any mapping's objective is within [0, 1] by the Eq. 7 bounds.
         for server in mc.catalog.vm_ids() {
@@ -404,6 +452,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 0.01, // absurdly small
             deadline_round: 1e9,
+            outlook: None,
         };
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
         let mapping = Mapping { server: vm126, clients: vec![vm126; 4], market: Market::OnDemand };
@@ -430,6 +479,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let ev = free.evaluate(&mapping);
         assert!(ev.feasible);
@@ -469,6 +519,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let fast = Mapping { server: vm126, clients: vec![vm126; 4], market: Market::OnDemand };
         let cheap = Mapping { server: vm114, clients: vec![vm114; 4], market: Market::OnDemand };
@@ -500,6 +551,7 @@ mod tests {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let p_spot = MappingProblem { market: Market::Spot, ..p_od };
         let vm126 = mc.catalog.vm_by_id("vm126").unwrap();

@@ -104,20 +104,40 @@ impl MarketModel {
 /// [`crate::dynsched::RevocationCtx`]): the declarative price side of a
 /// job's [`MarketSpec`], on the same clock the caller's `at` instants use.
 /// Deliberately excludes the revocation process — a scheduler may price
-/// candidates against the series, but never peek at future failures.
+/// candidates against the series, but never peek at future failures. (The
+/// optional [`MarketOutlook`] exposes only closed-form *expectations* of
+/// that process, never its sampled instants, so the boundary holds.)
 #[derive(Debug, Clone, Copy)]
 pub struct MarketView<'a> {
     spec: &'a MarketSpec,
+    outlook: Option<&'a crate::outlook::MarketOutlook>,
 }
 
 impl<'a> MarketView<'a> {
     pub fn new(spec: &'a MarketSpec) -> MarketView<'a> {
-        MarketView { spec }
+        MarketView { spec, outlook: None }
+    }
+
+    /// A view upgraded with the job's [`MarketOutlook`]: replacement
+    /// selection can price candidates over their actual remaining horizon
+    /// instead of the flat expected factor.
+    ///
+    /// [`MarketOutlook`]: crate::outlook::MarketOutlook
+    pub fn with_outlook(
+        spec: &'a MarketSpec,
+        outlook: Option<&'a crate::outlook::MarketOutlook>,
+    ) -> MarketView<'a> {
+        MarketView { spec, outlook }
     }
 
     /// The underlying declarative spec.
     pub fn spec(&self) -> &'a MarketSpec {
         self.spec
+    }
+
+    /// The job's market outlook, when outlook-aware scheduling is on.
+    pub fn outlook(&self) -> Option<&'a crate::outlook::MarketOutlook> {
+        self.outlook
     }
 
     /// Spot-price multiplier in effect at `at` (1.0 for a constant market).

@@ -45,20 +45,21 @@ impl PriceSeries {
     }
 
     /// Multiplier in effect at instant `t` (the last step at or before `t`;
-    /// 1.0 before the first step).
+    /// 1.0 before the first step). Binary search over the validated
+    /// strictly-increasing step times — this is the outlook's window-integral
+    /// hot path, queried per candidate per revocation.
     pub fn factor_at(&self, t: f64) -> f64 {
         match self {
             PriceSeries::Constant => 1.0,
             PriceSeries::Steps(points) => {
-                let mut f = 1.0;
-                for &(at, factor) in points {
-                    if at <= t {
-                        f = factor;
-                    } else {
-                        break;
-                    }
+                // partition_point keeps the left-closed edge semantics of the
+                // former linear scan: a step at exactly `t` is in effect.
+                let idx = points.partition_point(|&(at, _)| at <= t);
+                if idx == 0 {
+                    1.0
+                } else {
+                    points[idx - 1].1
                 }
-                f
             }
         }
     }
@@ -163,6 +164,41 @@ mod tests {
         let late = PriceSeries::steps(vec![(50.0, 3.0)]).unwrap();
         assert_eq!(late.factor_at(0.0), 1.0);
         assert_eq!(late.factor_at(49.0), 1.0);
+    }
+
+    #[test]
+    fn binary_search_lookup_matches_the_linear_scan_bit_for_bit() {
+        // Regression for the partition_point rewrite of `factor_at`: pin it
+        // against the former linear scan at every step edge, just around the
+        // edges, and well outside the trace — identical bits everywhere.
+        let linear_scan = |points: &[(f64, f64)], t: f64| -> f64 {
+            let mut f = 1.0;
+            for &(at, factor) in points {
+                if at <= t {
+                    f = factor;
+                } else {
+                    break;
+                }
+            }
+            f
+        };
+        let points = vec![(0.0, 1.0), (100.0, 2.0), (300.0, 0.5), (1e6, 3.25)];
+        let s = PriceSeries::steps(points.clone()).unwrap();
+        let mut probes: Vec<f64> = vec![-1.0, -1e-9, 1e9, f64::INFINITY];
+        for &(at, _) in &points {
+            probes.extend([at - 1e-9, at, at + 1e-9, at + 50.0]);
+        }
+        for t in probes {
+            assert_eq!(
+                s.factor_at(t).to_bits(),
+                linear_scan(&points, t).to_bits(),
+                "divergence at t={t}"
+            );
+        }
+        // A series starting after t=0 still reads 1.0 before its first step.
+        let late = PriceSeries::steps(vec![(50.0, 3.0)]).unwrap();
+        assert_eq!(late.factor_at(49.999).to_bits(), 1.0f64.to_bits());
+        assert_eq!(late.factor_at(50.0).to_bits(), 3.0f64.to_bits());
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Market forecasting: turn a job's [`MarketSpec`] into a queryable
+//! [`MarketOutlook`].
+//!
+//! The PR 4 spot-market subsystem gave every planner a single flat
+//! `spot_price_factor` — the price series time-averaged over the whole
+//! planning horizon — even when the configured [`PriceSeries`] has known
+//! steps and the revocation process a time-varying hazard. The outlook
+//! closes that gap with three families of queries, all closed-form and
+//! deterministic (no sampling, no RNG):
+//!
+//! * **Windowed expected price** — [`MarketOutlook::expected_price_factor`]
+//!   integrates the price series exactly over any `[t, t+h)` window, so a
+//!   consumer can price a candidate over its *actual* remaining horizon
+//!   instead of the job-wide average.
+//! * **Survival / expected revocations** —
+//!   [`MarketOutlook::integrated_hazard`] evaluates `Λ(a, b) = ∫ λ` for
+//!   every revocation kind (exponential, Weibull and seasonal closed forms,
+//!   trace counting), giving [`MarketOutlook::survival`]
+//!   `S = exp(-Λ)` and [`MarketOutlook::expected_revocations`] without
+//!   touching the simulation's RNG streams.
+//! * **Bid advice / deferral** — [`MarketOutlook::advise_bid`] finds the
+//!   cheapest bid factor whose eviction probability over an estimated
+//!   makespan stays under the configured `bid_risk`, and
+//!   [`MarketOutlook::best_start_offset`] finds the provisioning delay
+//!   (among upcoming price-step instants) that minimizes the expected price
+//!   over the job's duration — the `defer` decision surfaced in
+//!   [`crate::mapping::MappingSolution`] and honored by `framework::exec`.
+//!
+//! Consumers (all gated on [`OutlookSpec::enabled`], so the outlook-off
+//! default stays bit-identical to the flat expected-factor path —
+//! `tests/outlook_parity.rs`):
+//!
+//! 1. [`crate::mapping::MappingProblem`] carries `Option<&MarketOutlook>`;
+//!    [`crate::mapping::MappingProblem::defer_secs`] turns deadline slack
+//!    into a delayed-start decision.
+//! 2. [`crate::dynsched`] receives the outlook through
+//!    [`crate::market::MarketView`] and prices each replacement candidate
+//!    over the job's remaining-rounds window.
+//! 3. The workload engine's admission retry loop asks
+//!    [`MarketOutlook::next_price_event_after`] instead of its ad-hoc
+//!    next-price-step probe.
+//!
+//! Like the [`crate::market`] revocation processes, the closed forms here
+//! are pinned against the sampling implementations by tests: the seasonal
+//! hazard is the same expression `SeasonalProcess` inverts, and the Weibull
+//! hazard matches the inverse-CDF sampler's distribution.
+
+pub mod spec;
+
+pub use spec::{named_outlooks, resolve_outlook, OutlookSpec};
+
+use crate::market::{MarketSpec, PriceSeries, PriceSpec, RevocationSpec};
+
+/// A queryable forecast of one job's spot market: exact windowed price
+/// integrals, closed-form revocation hazards, and bid/deferral advice.
+/// Built once per job from its (possibly admission-shifted) [`MarketSpec`];
+/// owns its data, so consumers can hold plain references.
+#[derive(Debug, Clone)]
+pub struct MarketOutlook {
+    market: MarketSpec,
+    /// The job's `revocation_mean_secs` (`k_r`) — consumed only by the
+    /// exponential default; other processes carry their own parameters.
+    k_r: Option<f64>,
+    spec: OutlookSpec,
+    /// Fallback forecast window when the spec pins no `horizon`.
+    default_horizon_secs: f64,
+    price: PriceSeries,
+}
+
+impl MarketOutlook {
+    pub fn new(
+        market: &MarketSpec,
+        k_r: Option<f64>,
+        spec: OutlookSpec,
+        default_horizon_secs: f64,
+    ) -> MarketOutlook {
+        let price = market.price_series();
+        MarketOutlook { market: market.clone(), k_r, spec, default_horizon_secs, price }
+    }
+
+    /// The configuration this outlook was built under.
+    pub fn spec(&self) -> &OutlookSpec {
+        &self.spec
+    }
+
+    /// The forecast window: the spec's `horizon`, or the job's planning
+    /// horizon when unset.
+    pub fn horizon_secs(&self) -> f64 {
+        self.spec.horizon_secs.unwrap_or(self.default_horizon_secs)
+    }
+
+    /// Whether deferral advice may move a job's start (`defer = true`).
+    pub fn defers(&self) -> bool {
+        self.spec.defer
+    }
+
+    /// Spot-price multiplier in effect at instant `t`.
+    pub fn price_factor_at(&self, t: f64) -> f64 {
+        self.price.factor_at(t)
+    }
+
+    /// Expected (time-averaged) price factor over `[t, t+h)`, integrating
+    /// the series exactly across its steps. The constant series is exactly
+    /// 1.0 — the same bits the flat expected-factor path uses — and a
+    /// degenerate window falls back to the instantaneous factor.
+    pub fn expected_price_factor(&self, t: f64, h: f64) -> f64 {
+        match &self.price {
+            PriceSeries::Constant => 1.0,
+            series => {
+                if h.is_finite() && h > 0.0 {
+                    series.weighted_secs(t, t + h) / h
+                } else {
+                    series.factor_at(t)
+                }
+            }
+        }
+    }
+
+    /// Integrated revocation hazard `Λ(a, b) = ∫_a^b λ(t) dt` for a spot VM
+    /// provisioned at instant `a`, in closed form:
+    ///
+    /// * exponential — `(b-a)/k_r` (0 when revocations are off);
+    /// * Weibull — `((b-a)/λ)^k` (the hazard is *age*-driven: the VM is age
+    ///   0 at `a`);
+    /// * seasonal — the same closed form [`SeasonalProcess`] inverts,
+    ///   `((b-a) + A/ω·(cos ω(a+φ) − cos ω(b+φ)))/mean`, on the job-local
+    ///   clock (phase already folded in);
+    /// * trace — the number of recorded instants in `(a, b]` (a VM
+    ///   provisioned exactly at an instant survives it).
+    ///
+    /// [`SeasonalProcess`]: crate::market::SeasonalProcess
+    pub fn integrated_hazard(&self, a: f64, b: f64) -> f64 {
+        if b <= a {
+            return 0.0;
+        }
+        match &self.market.revocation {
+            RevocationSpec::Exponential => match self.k_r {
+                Some(k) => (b - a) / k,
+                None => 0.0,
+            },
+            RevocationSpec::Weibull { scale_secs, shape } => ((b - a) / scale_secs).powf(*shape),
+            RevocationSpec::Seasonal { mean_secs, period_secs, amplitude, phase_secs } => {
+                let w = std::f64::consts::TAU / period_secs;
+                let (pa, pb) = (a + phase_secs, b + phase_secs);
+                let sine_term = amplitude / w * ((w * pa).cos() - (w * pb).cos());
+                ((pb - pa) + sine_term) / mean_secs
+            }
+            RevocationSpec::Trace { times } => {
+                times.iter().filter(|&&at| at > a && at <= b).count() as f64
+            }
+        }
+    }
+
+    /// Probability that a spot VM provisioned at `a` is still alive at `b`:
+    /// `exp(-Λ(a, b))` for the stochastic processes; 0/1 for the
+    /// deterministic trace replay.
+    pub fn survival(&self, a: f64, b: f64) -> f64 {
+        match &self.market.revocation {
+            RevocationSpec::Trace { .. } => {
+                if self.integrated_hazard(a, b) > 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            _ => (-self.integrated_hazard(a, b)).exp(),
+        }
+    }
+
+    /// Expected number of revocation events hitting a task that keeps a
+    /// spot VM provisioned (and replaced in place) over `[a, b)` — the
+    /// integrated hazard itself, by the time-rescaling property.
+    pub fn expected_revocations(&self, a: f64, b: f64) -> f64 {
+        self.integrated_hazard(a, b)
+    }
+
+    /// Cheapest bid factor for a spot VM provisioned at `at` that keeps its
+    /// eviction probability over the next `duration_secs` within the
+    /// configured `bid_risk`. Price-driven eviction is deterministic given
+    /// the series (a step with `factor > bid` inside the window evicts with
+    /// certainty), so the advised bid is the maximum factor reached during
+    /// the window; `None` when the revocation process alone already exceeds
+    /// the risk ceiling — no bid level can help.
+    pub fn advise_bid(&self, at: f64, duration_secs: f64) -> Option<f64> {
+        let end = at + duration_secs.max(0.0);
+        if 1.0 - self.survival(at, end) > self.spec.bid_risk + 1e-9 {
+            return None;
+        }
+        let mut bid = self.price_factor_at(at);
+        if let PriceSpec::Steps(points) = &self.market.price {
+            for &(step_at, factor) in points {
+                if step_at > at && step_at < end {
+                    bid = bid.max(factor);
+                }
+            }
+        }
+        Some(bid)
+    }
+
+    /// The provisioning delay (from the job-local t = 0) minimizing the
+    /// expected price factor over a run of `duration_secs`, considering
+    /// starting now or at any upcoming price-step instant within
+    /// `max_delay_secs`. Returns 0.0 unless some deferral is *strictly*
+    /// cheaper (beyond the repo-wide 1e-9 epsilon); ties keep the earliest
+    /// start. Constant-price markets always return 0.0, which keeps
+    /// outlook-on runs on such markets bit-identical to outlook-off
+    /// (`tests/outlook_parity.rs`).
+    pub fn best_start_offset(&self, duration_secs: f64, max_delay_secs: f64) -> f64 {
+        if !(max_delay_secs > 0.0) || !(duration_secs > 0.0) || !duration_secs.is_finite() {
+            return 0.0;
+        }
+        let PriceSpec::Steps(points) = &self.market.price else { return 0.0 };
+        let mut best_at = 0.0;
+        let mut best_cost = self.expected_price_factor(0.0, duration_secs);
+        for &(at, _) in points {
+            if at <= 0.0 {
+                continue;
+            }
+            if at > max_delay_secs {
+                break;
+            }
+            let cost = self.expected_price_factor(at, duration_secs);
+            if cost < best_cost - 1e-9 {
+                best_at = at;
+                best_cost = cost;
+            }
+        }
+        best_at
+    }
+
+    /// The next instant strictly after `t` at which the price changes —
+    /// when a budget-capped job's admission feasibility can next change
+    /// without a capacity release (the workload engine's retry instants).
+    pub fn next_price_event_after(&self, t: f64) -> Option<f64> {
+        self.market.next_price_step_after(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SeasonalProcess;
+    use crate::simul::{Rng, SimTime};
+
+    fn steps_market() -> MarketSpec {
+        MarketSpec {
+            price: PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.8), (10_800.0, 0.6)]),
+            ..MarketSpec::default()
+        }
+    }
+
+    fn outlook(market: MarketSpec, k_r: Option<f64>) -> MarketOutlook {
+        MarketOutlook::new(&market, k_r, OutlookSpec::default(), 86_400.0)
+    }
+
+    #[test]
+    fn expected_price_integrates_windows_exactly() {
+        let o = outlook(steps_market(), None);
+        // [0, 7200): 3600·1.0 + 3600·1.8 over 7200 s.
+        assert!((o.expected_price_factor(0.0, 7200.0) - 1.4).abs() < 1e-12);
+        // A window entirely inside one step is that step's factor.
+        assert!((o.expected_price_factor(4000.0, 1000.0) - 1.8).abs() < 1e-12);
+        assert!((o.expected_price_factor(20_000.0, 5000.0) - 0.6).abs() < 1e-12);
+        // Degenerate windows fall back to the instantaneous factor.
+        assert!((o.expected_price_factor(5000.0, 0.0) - 1.8).abs() < 1e-12);
+        assert!((o.expected_price_factor(5000.0, f64::INFINITY) - 1.8).abs() < 1e-12);
+        // The constant series is exactly 1.0 (bit-level parity anchor).
+        let c = outlook(MarketSpec::default(), Some(7200.0));
+        assert_eq!(c.expected_price_factor(123.4, 5678.9).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn exponential_hazard_matches_k_r() {
+        let o = outlook(MarketSpec::default(), Some(7200.0));
+        assert!((o.integrated_hazard(0.0, 7200.0) - 1.0).abs() < 1e-12);
+        assert!((o.survival(0.0, 7200.0) - (-1.0f64).exp()).abs() < 1e-12);
+        assert_eq!(o.expected_revocations(500.0, 500.0), 0.0);
+        // Revocations off: certain survival.
+        let off = outlook(MarketSpec::default(), None);
+        assert_eq!(off.integrated_hazard(0.0, 1e6), 0.0);
+        assert_eq!(off.survival(0.0, 1e6), 1.0);
+    }
+
+    #[test]
+    fn weibull_hazard_matches_the_sampler_distribution() {
+        // P(life > x) = exp(-(x/λ)^k): compare the closed form against the
+        // empirical survival of the inverse-CDF sampler.
+        let market = MarketSpec {
+            revocation: RevocationSpec::Weibull { scale_secs: 5000.0, shape: 0.7 },
+            ..MarketSpec::default()
+        };
+        let o = outlook(market, None);
+        let proc_ = crate::market::WeibullProcess { scale_secs: 5000.0, shape: 0.7 };
+        let mut rng = Rng::seeded(13);
+        let n = 40_000;
+        let x = 4000.0;
+        let alive = (0..n)
+            .filter(|_| {
+                proc_.sample(SimTime::ZERO, &mut rng).unwrap().secs() > x
+            })
+            .count() as f64
+            / n as f64;
+        let want = o.survival(0.0, x);
+        assert!((alive - want).abs() < 0.01, "empirical={alive} closed-form={want}");
+    }
+
+    #[test]
+    fn seasonal_hazard_is_the_process_closed_form() {
+        // Pin the outlook's seasonal Λ to the expression SeasonalProcess
+        // inverts: a sample at hazard-inversion precision must satisfy
+        // Λ(t0, sample) = E for the same RNG stream.
+        let market = MarketSpec {
+            revocation: RevocationSpec::Seasonal {
+                mean_secs: 3600.0,
+                period_secs: 7200.0,
+                amplitude: 0.8,
+                phase_secs: 250.0,
+            },
+            ..MarketSpec::default()
+        };
+        let o = outlook(market, None);
+        let proc_ = SeasonalProcess {
+            mean_secs: 3600.0,
+            period_secs: 7200.0,
+            amplitude: 0.8,
+            phase_secs: 250.0,
+        };
+        let mut a = Rng::seeded(17);
+        let mut b = Rng::seeded(17);
+        for _ in 0..50 {
+            let now = 500.0;
+            let got = proc_.sample(SimTime::from_secs(now), &mut a).unwrap();
+            let e = -b.next_f64_open().ln();
+            // The outlook works on the job-local clock: its phase handling
+            // must line up with the process's `now + phase` anchoring.
+            let lambda = o.integrated_hazard(now, got.secs());
+            assert!((lambda - e).abs() < 1e-6, "Λ={lambda} vs E={e}");
+        }
+    }
+
+    #[test]
+    fn trace_hazard_counts_instants_and_survival_is_deterministic() {
+        let market = MarketSpec {
+            revocation: RevocationSpec::Trace { times: vec![100.0, 500.0, 900.0] },
+            ..MarketSpec::default()
+        };
+        let o = outlook(market, None);
+        assert_eq!(o.expected_revocations(0.0, 1000.0), 3.0);
+        assert_eq!(o.expected_revocations(100.0, 500.0), 1.0, "(a, b] window");
+        assert_eq!(o.survival(0.0, 50.0), 1.0);
+        assert_eq!(o.survival(0.0, 100.0), 0.0);
+        assert_eq!(o.survival(900.0, 2000.0), 1.0, "trace exhausted");
+    }
+
+    #[test]
+    fn bid_advice_covers_the_window_or_declines() {
+        let spec = OutlookSpec { bid_risk: 0.5, ..OutlookSpec::default() };
+        let o = MarketOutlook::new(&steps_market(), Some(1e9), spec, 86_400.0);
+        // Window [0, 5000) spans the 1.8 spike: the cheapest safe bid rides
+        // just at the spike.
+        assert_eq!(o.advise_bid(0.0, 5000.0), Some(1.8));
+        // A window inside the first step never sees the spike.
+        assert_eq!(o.advise_bid(0.0, 3600.0), Some(1.0));
+        // Provisioned during the spike, headed into the cheap regime.
+        assert_eq!(o.advise_bid(4000.0, 10_000.0), Some(1.8));
+        // A hazard above the risk ceiling cannot be bid away.
+        let risky = MarketOutlook::new(
+            &steps_market(),
+            Some(100.0),
+            OutlookSpec { bid_risk: 0.01, ..OutlookSpec::default() },
+            86_400.0,
+        );
+        assert_eq!(risky.advise_bid(0.0, 5000.0), None);
+    }
+
+    #[test]
+    fn deferral_waits_out_a_spike_only_when_allowed_by_slack() {
+        let o = outlook(steps_market(), None);
+        // A 4000 s run started now straddles the 1.8 spike; started at the
+        // 10 800 s step it rides the 0.6 regime throughout.
+        let off = o.best_start_offset(4000.0, 20_000.0);
+        assert_eq!(off, 10_800.0);
+        // Not enough slack to reach the cheap regime: starting now (1.0
+        // first) still beats starting at the spike step.
+        assert_eq!(o.best_start_offset(4000.0, 5000.0), 0.0);
+        // Degenerate inputs and constant markets never defer.
+        assert_eq!(o.best_start_offset(0.0, 20_000.0), 0.0);
+        assert_eq!(o.best_start_offset(4000.0, 0.0), 0.0);
+        let c = outlook(MarketSpec::default(), Some(7200.0));
+        assert_eq!(c.best_start_offset(4000.0, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn horizon_defaults_to_the_planning_horizon() {
+        let o = MarketOutlook::new(
+            &MarketSpec::default(),
+            None,
+            OutlookSpec { enabled: true, ..OutlookSpec::default() },
+            12_345.0,
+        );
+        assert_eq!(o.horizon_secs(), 12_345.0);
+        let pinned = MarketOutlook::new(
+            &MarketSpec::default(),
+            None,
+            OutlookSpec { enabled: true, horizon_secs: Some(60.0), ..OutlookSpec::default() },
+            12_345.0,
+        );
+        assert_eq!(pinned.horizon_secs(), 60.0);
+        assert_eq!(pinned.next_price_event_after(0.0), None);
+        let s = outlook(steps_market(), None);
+        assert_eq!(s.next_price_event_after(0.0), Some(3600.0));
+        assert_eq!(s.next_price_event_after(10_800.0), None);
+    }
+}

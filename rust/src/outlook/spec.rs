@@ -1,0 +1,194 @@
+//! Declarative outlook configuration: the `[outlook]` job-spec table and
+//! the `[[outlook]]` named definitions of sweep/workload specs.
+//!
+//! ```toml
+//! [outlook]              # job spec: one table (presence turns it on)
+//! horizon = 14400.0      # forecast window, seconds (default: the job's
+//!                        # planning horizon, n_rounds × baseline round)
+//! bid_risk = 0.1         # max acceptable eviction probability for
+//!                        # [`MarketOutlook::advise_bid`], in [0, 1]
+//! defer = true           # let the mapper delay provisioning past a spike
+//! ```
+//!
+//! Sweep and workload specs define *named* outlooks as `[[outlook]]` tables
+//! (same keys plus `name`) and select them per grid point via the
+//! `outlooks` axis; `"off"` is the reserved built-in name for the disabled
+//! default. Unknown keys are rejected by name, matching the rest of the
+//! spec validation.
+//!
+//! [`MarketOutlook`]: super::MarketOutlook
+
+use std::collections::BTreeMap;
+
+use crate::util::tomlmini::{self, Value};
+
+type Tbl = BTreeMap<String, Value>;
+
+/// Market-outlook configuration carried by
+/// [`crate::coordinator::SimConfig`]. The default (`enabled = false`) keeps
+/// every consumer on the flat expected-factor path, bit-identical to the
+/// outlook-less planner (`tests/outlook_parity.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutlookSpec {
+    /// Whether the planning stack consults a [`super::MarketOutlook`] at
+    /// all. Set by the presence of an `[outlook]` table.
+    pub enabled: bool,
+    /// Forecast window in seconds; `None` = the job's planning horizon.
+    pub horizon_secs: Option<f64>,
+    /// Eviction-probability ceiling for the bid advisor, in [0, 1].
+    pub bid_risk: f64,
+    /// Allow the Initial Mapping to defer provisioning past an upcoming
+    /// price spike when the deadline slack allows.
+    pub defer: bool,
+}
+
+impl Default for OutlookSpec {
+    fn default() -> Self {
+        OutlookSpec { enabled: false, horizon_secs: None, bid_risk: 0.1, defer: false }
+    }
+}
+
+impl OutlookSpec {
+    /// Parse an `[outlook]` table. Presence of the table enables the
+    /// outlook; rejects unknown keys and out-of-range parameters by name.
+    pub fn from_table(tbl: &Tbl) -> anyhow::Result<OutlookSpec> {
+        let horizon_secs = match tbl.get("horizon") {
+            None => None,
+            Some(v) => {
+                let h = v
+                    .as_float()
+                    .ok_or_else(|| anyhow::anyhow!("[outlook] horizon must be a number"))?;
+                anyhow::ensure!(
+                    h.is_finite() && h > 0.0,
+                    "[outlook] horizon must be positive, got {h}"
+                );
+                Some(h)
+            }
+        };
+        let bid_risk = match tbl.get("bid_risk") {
+            None => OutlookSpec::default().bid_risk,
+            Some(v) => {
+                let r = v
+                    .as_float()
+                    .ok_or_else(|| anyhow::anyhow!("[outlook] bid_risk must be a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&r),
+                    "[outlook] bid_risk must be in [0, 1], got {r}"
+                );
+                r
+            }
+        };
+        let defer = match tbl.get("defer") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("[outlook] defer must be a boolean"))?,
+        };
+        tomlmini::reject_unknown_keys(tbl, &["horizon", "bid_risk", "defer"], "[outlook]")?;
+        Ok(OutlookSpec { enabled: true, horizon_secs, bid_risk, defer })
+    }
+}
+
+/// Parse the `[[outlook]]` definitions of a sweep/workload spec into a
+/// name → spec map. Names must be unique and must not shadow the built-in
+/// `"off"` default.
+pub fn named_outlooks(root: &Tbl) -> anyhow::Result<BTreeMap<String, OutlookSpec>> {
+    let mut out = BTreeMap::new();
+    let Some(tables) = root.get("outlook") else { return Ok(out) };
+    let tables = tables.as_table_array().ok_or_else(|| {
+        anyhow::anyhow!("[[outlook]] must be an array of tables (use [[outlook]], not [outlook])")
+    })?;
+    for (i, tbl) in tables.iter().enumerate() {
+        let name = tbl
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("[[outlook]] #{i} needs a `name`"))?
+            .to_string();
+        anyhow::ensure!(
+            name != "off",
+            "[[outlook]] name \"off\" is reserved for the built-in disabled default"
+        );
+        let mut body = tbl.clone();
+        body.remove("name");
+        let spec = OutlookSpec::from_table(&body)
+            .map_err(|e| anyhow::anyhow!("[[outlook]] \"{name}\": {e}"))?;
+        anyhow::ensure!(out.insert(name.clone(), spec).is_none(), "duplicate outlook {name}");
+    }
+    Ok(out)
+}
+
+/// Resolve an outlook reference from an `outlooks` grid axis or a per-job
+/// `outlook = "name"` key: a defined name, or the built-in `"off"`.
+pub fn resolve_outlook(
+    name: &str,
+    defs: &BTreeMap<String, OutlookSpec>,
+) -> anyhow::Result<OutlookSpec> {
+    if let Some(spec) = defs.get(name) {
+        return Ok(spec.clone());
+    }
+    if name == "off" {
+        return Ok(OutlookSpec::default());
+    }
+    anyhow::bail!("unknown outlook {name} (define it as a [[outlook]] table; built-in: off)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> anyhow::Result<OutlookSpec> {
+        OutlookSpec::from_table(&tomlmini::parse(text).unwrap())
+    }
+
+    #[test]
+    fn default_is_disabled_and_table_presence_enables() {
+        let dflt = OutlookSpec::default();
+        assert!(!dflt.enabled && !dflt.defer && dflt.horizon_secs.is_none());
+        let spec = parse("").unwrap();
+        assert!(spec.enabled, "an empty [outlook] table still turns the outlook on");
+        assert_eq!(spec.horizon_secs, None);
+        assert_eq!(spec.bid_risk, dflt.bid_risk);
+    }
+
+    #[test]
+    fn parses_all_keys() {
+        let spec = parse("horizon = 7200.0\nbid_risk = 0.25\ndefer = true\n").unwrap();
+        assert_eq!(spec.horizon_secs, Some(7200.0));
+        assert_eq!(spec.bid_risk, 0.25);
+        assert!(spec.defer);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_ranges() {
+        let err = parse("horizion = 10.0\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key `horizion`"), "{err}");
+        assert!(parse("horizon = 0.0\n").is_err());
+        assert!(parse("horizon = -5.0\n").is_err());
+        assert!(parse("bid_risk = 1.5\n").is_err());
+        assert!(parse("bid_risk = -0.1\n").is_err());
+        assert!(parse("defer = 1.0\n").is_err(), "defer must be a boolean");
+    }
+
+    #[test]
+    fn named_outlooks_resolve_and_reserve_off() {
+        let root = tomlmini::parse(
+            "[[outlook]]\nname = \"aware\"\nhorizon = 3600.0\ndefer = true\n",
+        )
+        .unwrap();
+        let defs = named_outlooks(&root).unwrap();
+        assert_eq!(defs.len(), 1);
+        assert!(resolve_outlook("aware", &defs).unwrap().defer);
+        assert!(!resolve_outlook("off", &defs).unwrap().enabled);
+        assert!(resolve_outlook("nope", &defs).is_err());
+
+        let reserved = tomlmini::parse("[[outlook]]\nname = \"off\"\n").unwrap();
+        assert!(named_outlooks(&reserved).is_err());
+        let unnamed = tomlmini::parse("[[outlook]]\ndefer = true\n").unwrap();
+        assert!(named_outlooks(&unnamed).is_err());
+        let dup = tomlmini::parse(
+            "[[outlook]]\nname = \"a\"\n\n[[outlook]]\nname = \"a\"\n",
+        )
+        .unwrap();
+        assert!(named_outlooks(&dup).is_err());
+    }
+}

@@ -27,6 +27,7 @@
 //! budget_round = [1.0, 2.0]    # optional: B_round $ cap per round (Constraint 8)
 //! deadline_round = [600.0]     # optional: T_round seconds per round (Constraint 9)
 //! markets = ["exponential", "volatile"]  # optional: spot-market model per point
+//! outlooks = ["off", "aware"]  # optional: market-outlook config per point
 //!
 //! [[market]]                   # named market definitions for the axis
 //! name = "volatile"            # ("exponential" = the built-in default market)
@@ -35,6 +36,11 @@
 //! price = "steps"
 //! price_times = [0.0, 7200.0]
 //! price_factors = [1.0, 1.6]
+//!
+//! [[outlook]]                  # named outlook definitions for the axis
+//! name = "aware"               # ("off" = the built-in disabled default)
+//! horizon = 14400.0
+//! defer = true
 //! ```
 //!
 //! Checkpoint-axis semantics (Fig. 2 in one spec, `sweep-fig2.toml`):
@@ -51,6 +57,7 @@ use crate::coordinator::{Scenario, SimConfig, TrialStats};
 use crate::dynsched::DynSchedPolicy;
 use crate::mapping::MapperKind;
 use crate::market::{self, MarketSpec};
+use crate::outlook::{self, OutlookSpec};
 use crate::simul::Rng;
 use crate::util::bench::Table;
 use crate::util::tomlmini::{self, Value};
@@ -89,6 +96,10 @@ pub struct SweepSpec {
     /// against the `[[market]]` definitions; "exponential" = the built-in
     /// default). `None` = not swept (every point runs the default market).
     pub markets: Option<Vec<(String, MarketSpec)>>,
+    /// Optional axis: named market-outlook configurations (`outlooks` keys
+    /// resolved against the `[[outlook]]` definitions; "off" = the built-in
+    /// disabled default). `None` = not swept (every point runs outlook-off).
+    pub outlooks: Option<Vec<(String, OutlookSpec)>>,
     pub rounds: Option<u32>,
     pub max_revocations_per_task: Option<u32>,
     pub checkpoints: Option<bool>,
@@ -212,7 +223,7 @@ impl SweepSpec {
             &root,
             &[
                 "name", "trials", "seed", "rounds", "max_revocations_per_task", "checkpoints",
-                "jobs", "grid", "market",
+                "jobs", "grid", "market", "outlook",
             ],
             "sweep spec",
         )?;
@@ -235,6 +246,7 @@ impl SweepSpec {
                 "budget_round",
                 "deadline_round",
                 "markets",
+                "outlooks",
             ],
             "sweep [grid]",
         )?;
@@ -326,6 +338,19 @@ impl SweepSpec {
             ),
         };
 
+        // Market-outlook axis: names resolved against the [[outlook]] tables
+        // (plus the built-in "off" disabled default).
+        let outlook_defs = outlook::named_outlooks(&root)?;
+        let outlooks = match str_axis(grid, "outlooks")? {
+            None => None,
+            Some(names) => Some(
+                names
+                    .into_iter()
+                    .map(|n| outlook::resolve_outlook(&n, &outlook_defs).map(|o| (n, o)))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
+
         // Negative integers must error, not wrap through the `as` casts.
         let get_nonneg = |key: &str| -> anyhow::Result<Option<i64>> {
             match root.get(key).and_then(|v| v.as_int()) {
@@ -360,6 +385,7 @@ impl SweepSpec {
             budget_round,
             deadline_round,
             markets,
+            outlooks,
             rounds: get_nonneg("rounds")?.map(|r| r as u32),
             max_revocations_per_task,
             checkpoints: root.get("checkpoints").and_then(|v| v.as_bool()),
@@ -387,6 +413,7 @@ impl SweepSpec {
             * self.budget_round.as_ref().map_or(1, |v| v.len())
             * self.deadline_round.as_ref().map_or(1, |v| v.len())
             * self.markets.as_ref().map_or(1, |v| v.len())
+            * self.outlooks.as_ref().map_or(1, |v| v.len())
     }
 
     /// Expand the grid into campaign points. Each trial's seed is derived
@@ -421,8 +448,22 @@ impl SweepSpec {
             Some(v) => v.iter().map(Some).collect(),
             None => vec![None],
         };
+        let outlook_axis: Vec<Option<&(String, OutlookSpec)>> = match &self.outlooks {
+            Some(v) => v.iter().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
+        let trials = self.trials;
+        let mut next_seeds = move || -> Vec<u64> {
+            (0..trials)
+                .map(|_| {
+                    let s = root.split_seed(global_trial);
+                    global_trial += 1;
+                    s
+                })
+                .collect()
+        };
         for app_name in &self.apps {
             let app = apps::by_name(app_name)
                 .ok_or_else(|| anyhow::anyhow!("unknown app {app_name}"))?;
@@ -437,30 +478,26 @@ impl SweepSpec {
                                             for &budget in &budget_axis {
                                                 for &deadline in &deadline_axis {
                                                     for &mkt in &market_axis {
-                                                        let seeds: Vec<u64> = (0..self.trials)
-                                                            .map(|_| {
-                                                                let s =
-                                                                    root.split_seed(global_trial);
-                                                                global_trial += 1;
-                                                                s
-                                                            })
-                                                            .collect();
-                                                        points.push(self.point(
-                                                            app.clone(),
-                                                            app_name,
-                                                            scenario,
-                                                            k_r,
-                                                            policy,
-                                                            alpha,
-                                                            mapper,
-                                                            ckpt_every,
-                                                            client_ckpt,
-                                                            maxrev,
-                                                            budget,
-                                                            deadline,
-                                                            mkt,
-                                                            seeds,
-                                                        ));
+                                                        for &olk in &outlook_axis {
+                                                            let seeds = next_seeds();
+                                                            points.push(self.point(
+                                                                app.clone(),
+                                                                app_name,
+                                                                scenario,
+                                                                k_r,
+                                                                policy,
+                                                                alpha,
+                                                                mapper,
+                                                                ckpt_every,
+                                                                client_ckpt,
+                                                                maxrev,
+                                                                budget,
+                                                                deadline,
+                                                                mkt,
+                                                                olk,
+                                                                seeds,
+                                                            ));
+                                                        }
                                                     }
                                                 }
                                             }
@@ -495,6 +532,7 @@ impl SweepSpec {
         budget: Option<f64>,
         deadline: Option<f64>,
         market: Option<&(String, MarketSpec)>,
+        outlook: Option<&(String, OutlookSpec)>,
         seeds: Vec<u64>,
     ) -> PointSpec {
         let mut cfg = SimConfig::new(app, scenario, self.seed);
@@ -529,6 +567,9 @@ impl SweepSpec {
         if let Some((_, spec)) = market {
             cfg.market = spec.clone();
         }
+        if let Some((_, spec)) = outlook {
+            cfg.outlook = spec.clone();
+        }
         let mut tags = vec![
             ("app".to_string(), app_name.to_string()),
             ("scenario".to_string(), scenario.key().to_string()),
@@ -554,6 +595,9 @@ impl SweepSpec {
         }
         if let Some((name, _)) = market {
             tags.push(("market".to_string(), name.clone()));
+        }
+        if let Some((name, _)) = outlook {
+            tags.push(("outlook".to_string(), name.clone()));
         }
         PointSpec { tags, cfg, seeds }
     }
@@ -592,7 +636,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push_str(
         "app,scenario,revocation_mean_secs,policy,alpha,mapper,\
          server_ckpt_every,client_checkpoint,max_revocations_per_task,\
-         budget_round,deadline_round,market,trials",
+         budget_round,deadline_round,market,outlook,trials",
     );
     for metric in ["revocations", "fl_exec_secs", "total_secs", "cost"] {
         for stat in ["mean", "stddev", "min", "max", "ci95"] {
@@ -602,7 +646,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
     out.push('\n');
     for (p, s) in points.iter().zip(stats) {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             p.tag("app"),
             p.tag("scenario"),
             p.tag("revocation_mean_secs"),
@@ -615,6 +659,7 @@ pub fn render_csv(points: &[PointSpec], stats: &[TrialStats]) -> String {
             p.tag("budget_round"),
             p.tag("deadline_round"),
             p.tag("market"),
+            p.tag("outlook"),
             s.trials
         ));
         for agg in [&s.revocations, &s.exec_secs, &s.total_secs, &s.cost] {
@@ -906,6 +951,39 @@ price_factors = [1.0, 1.5]
         .unwrap_err()
         .to_string();
         assert!(err.contains("unknown key `wild`"), "{err}");
+    }
+
+    #[test]
+    fn outlooks_axis_expands_resolves_and_tags() {
+        let spec = SweepSpec::from_toml(
+            r#"
+[grid]
+apps = ["til"]
+outlooks = ["off", "aware"]
+
+[[outlook]]
+name = "aware"
+horizon = 3600.0
+defer = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert!(!points[0].cfg.outlook.enabled);
+        assert_eq!(points[0].tag("outlook"), "off");
+        assert!(points[1].cfg.outlook.enabled && points[1].cfg.outlook.defer);
+        assert_eq!(points[1].tag("outlook"), "aware");
+        // Unknown names are rejected; unswept specs stay outlook-off.
+        let err = SweepSpec::from_toml("[grid]\napps = [\"til\"]\noutlooks = [\"nope\"]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown outlook nope"), "{err}");
+        let plain = SweepSpec::from_toml("[grid]\napps = [\"til\"]\n").unwrap();
+        assert!(plain.outlooks.is_none());
+        let p = plain.expand().unwrap();
+        assert!(!p[0].cfg.outlook.enabled);
+        assert_eq!(p[0].tag("outlook"), "", "no outlook tag when not swept");
     }
 
     #[test]

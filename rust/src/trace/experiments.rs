@@ -438,6 +438,7 @@ pub fn mapping_comparison() -> (Table, Json) {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let exact = crate::mapping::exact::solve(&p).unwrap();
         t.row(&[
@@ -500,6 +501,7 @@ pub fn alpha_sweep() -> (Table, Json) {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let sol = crate::mapping::exact::solve(&p).expect("feasible");
         let mut names: Vec<String> = sol
@@ -913,6 +915,87 @@ pub fn market_sensitivity() -> (Table, Json) {
         );
     }
     (t, Json::obj().set("experiment", "market-sensitivity").set("rows", Json::Arr(rows)))
+}
+
+/// Outlook ablation (ours): the Table 5 configuration on a volatile
+/// price-step market (1.0× → 1.8× spike at 1 h → 0.6× trough at 3 h), run
+/// outlook-off, outlook-aware without deferral (windowed candidate pricing
+/// only), and outlook-aware with deferral — isolating how much of the
+/// saving comes from pricing replacements over the remaining-rounds window
+/// versus waiting out the spike before provisioning at all.
+pub fn outlook_ablation() -> (Table, Json) {
+    use crate::market::{MarketSpec, PriceSpec};
+    use crate::outlook::OutlookSpec;
+
+    let volatile = MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.8), (10_800.0, 0.6)]),
+        ..MarketSpec::default()
+    };
+    let variants: Vec<(&str, OutlookSpec)> = vec![
+        ("off", OutlookSpec::default()),
+        (
+            "windowed",
+            OutlookSpec { enabled: true, horizon_secs: Some(14_400.0), bid_risk: 0.1, defer: false },
+        ),
+        (
+            "defer",
+            OutlookSpec { enabled: true, horizon_secs: Some(14_400.0), bid_risk: 0.1, defer: true },
+        ),
+    ];
+    let points: Vec<PointSpec> = variants
+        .iter()
+        .map(|(name, outlook)| {
+            let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, 50);
+            cfg.n_rounds = TIL_EXTENDED_ROUNDS;
+            cfg.revocation_mean_secs = Some(7200.0);
+            cfg.dynsched_policy = DynSchedPolicy::different_vm();
+            cfg.max_revocations_per_task = Some(1);
+            cfg.market = volatile.clone();
+            cfg.outlook = outlook.clone();
+            PointSpec {
+                tags: vec![("outlook".to_string(), name.to_string())],
+                cfg,
+                seeds: (0..TRIALS as u64).map(|t| 50 + t).collect(),
+            }
+        })
+        .collect();
+    let stats_list = sweep::run_campaign(&points, 0).expect("campaign");
+
+    let mut t = Table::new(
+        "Ablation — market outlook (TIL, all-spot, volatile price steps, Table 5 config)",
+        &["Outlook", "Avg # revoc.", "Avg exec. time", "Avg total costs", "Δcost vs off"],
+    );
+    let mut rows = Vec::new();
+    // Baseline by tag, not position (same rationale as mapper_ablation).
+    let off_cost = points
+        .iter()
+        .zip(&stats_list)
+        .find(|(p, _)| p.tag("outlook") == "off")
+        .map(|(_, s)| s.cost.mean)
+        .expect("outlook-off baseline in the ablation grid");
+    for (p, stats) in points.iter().zip(&stats_list) {
+        let delta = if p.tag("outlook") == "off" {
+            "—".to_string()
+        } else {
+            format!("{:+.2}%", (stats.cost.mean - off_cost) / off_cost * 100.0)
+        };
+        t.row(&[
+            p.tag("outlook").to_string(),
+            format!("{:.2}", stats.revocations.mean),
+            stats.exec_hms(),
+            format!("${:.2}", stats.cost.mean),
+            delta,
+        ]);
+        rows.push(
+            Json::obj()
+                .set("outlook", p.tag("outlook"))
+                .set("avg_revocations", stats.revocations.mean)
+                .set("avg_total_secs", stats.total_secs.mean)
+                .set("avg_cost", stats.cost.mean)
+                .set("cost_ci95", stats.cost.ci95),
+        );
+    }
+    (t, Json::obj().set("experiment", "outlook-ablation").set("rows", Json::Arr(rows)))
 }
 
 /// Table 2 / Table 9 catalog dump.

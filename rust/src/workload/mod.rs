@@ -74,17 +74,39 @@ use crate::framework::{
 };
 use crate::mapping::problem::MappingProblem;
 use crate::mapping::MappingSolution;
+use crate::outlook::MarketOutlook;
 use crate::presched::SlowdownReport;
 use crate::sweep::MetricAgg;
+
+/// The job's [`MarketOutlook`] on the shared cluster clock, when its
+/// `[outlook]` table is enabled. The workload layers consult it for
+/// admission pricing and price-step retry events instead of their ad-hoc
+/// market probes; `None` (the default) keeps both on the original path.
+fn outlook_for(cfg: &SimConfig) -> Option<MarketOutlook> {
+    cfg.outlook.enabled.then(|| {
+        MarketOutlook::new(
+            &cfg.market,
+            cfg.revocation_mean_secs,
+            cfg.outlook.clone(),
+            cfg.planning_horizon_secs(),
+        )
+    })
+}
 
 /// Expected spot-price multiplier for one job's mapping problem at cluster
 /// instant `at_secs`: the market re-anchored on the shared cluster clock
 /// (see [`crate::market::MarketSpec::shifted`]), averaged over the same
 /// planning horizon `framework::exec` uses
 /// ([`SimConfig::planning_horizon_secs`]). Exactly 1.0 for the default
-/// market.
+/// market. With an outlook the window is the configured forecast horizon,
+/// integrated by the same closed form.
 fn planning_price_factor_at(cfg: &SimConfig, at_secs: f64) -> f64 {
-    cfg.market.shifted(at_secs).planning_price_factor(cfg.planning_horizon_secs())
+    match outlook_for(cfg) {
+        Some(o) => o.expected_price_factor(at_secs, o.horizon_secs()),
+        None => {
+            cfg.market.shifted(at_secs).planning_price_factor(cfg.planning_horizon_secs())
+        }
+    }
 }
 
 /// The record of a job that was never admitted (its budget/deadline/quota
@@ -660,6 +682,7 @@ impl Engine<'_> {
             spot_price_factor: planning_price_factor_at(&jr.cfg, t),
             budget_round: jr.cfg.budget_round,
             deadline_round: jr.cfg.deadline_round,
+            outlook: None,
         };
         match modules::mapper_for(jr.cfg.mapper).map(&p) {
             Some(sol) => {
@@ -667,7 +690,10 @@ impl Engine<'_> {
                 self.pending.push(j);
             }
             None if jr.cfg.budget_round.is_finite()
-                && jr.cfg.market.next_price_step_after(t).is_some() =>
+                && match outlook_for(&jr.cfg) {
+                    Some(o) => o.next_price_event_after(t).is_some(),
+                    None => jr.cfg.market.next_price_step_after(t).is_some(),
+                } =>
             {
                 // Infeasible at the *current* price level, but the price
                 // can still change and the job is budget-capped (prices
@@ -763,7 +789,13 @@ impl Engine<'_> {
         let next_step = self
             .pending
             .iter()
-            .filter_map(|&j| self.w.jobs[j].cfg.market.next_price_step_after(t))
+            .filter_map(|&j| {
+                let cfg = &self.w.jobs[j].cfg;
+                match outlook_for(cfg) {
+                    Some(o) => o.next_price_event_after(t),
+                    None => cfg.market.next_price_step_after(t),
+                }
+            })
             .fold(f64::INFINITY, f64::min);
         if next_step.is_finite() {
             if !self.events.iter().any(|e| e.0 == next_step) {
@@ -980,6 +1012,7 @@ impl Engine<'_> {
                 spot_price_factor: planning_price_factor_at(&eff_cfg, t),
                 budget_round: jr.cfg.budget_round,
                 deadline_round: jr.cfg.deadline_round,
+                outlook: None,
             };
             modules::mapper_for(jr.cfg.mapper).map(&p)
         };

@@ -27,6 +27,7 @@
 //! tenant = "acme"              # owning tenant for fair-share (default "")
 //! budget_round = 2.5           # optional per-round constraints
 //! deadline_round = 900.0
+//! outlook = "aware"            # named market outlook (or an inline [job.outlook])
 //! # ...every job-spec key except `seed`/`trials` (workload-level concerns)
 //!
 //! [grid]                       # optional campaign axes (cartesian product)
@@ -37,11 +38,17 @@
 //! deadline_round = [600.0]
 //! priorities = [0, 5]          # overrides every job's priority for the point
 //! markets = ["exponential", "volatile"]  # overrides every job's market
+//! outlooks = ["off", "aware"]  # overrides every job's market outlook
 //!
 //! [[market]]                   # named spot-market models; a [[job]] may
 //! name = "volatile"            # also pin one via market = "volatile"
 //! revocation = "trace"
 //! revocation_times = [3600.0]
+//!
+//! [[outlook]]                  # named market outlooks; a [[job]] may also
+//! name = "aware"               # pin one via outlook = "aware" ("off" =
+//! horizon = 14400.0            # the built-in disabled default)
+//! defer = true
 //! ```
 //!
 //! Per-trial seeds: trial `k` (global index over the expansion) gets
@@ -55,6 +62,7 @@ use super::{JobRequest, Workload, WorkloadAgg};
 use crate::coordinator::multijob::{AdmissionPolicy, SchedulerPolicy};
 use crate::coordinator::JobSpec;
 use crate::market::{self, MarketSpec};
+use crate::outlook::{self, OutlookSpec};
 use crate::simul::{Rng, SimTime};
 use crate::util::bench::Table;
 use crate::util::tomlmini::{self, Value};
@@ -115,6 +123,9 @@ pub struct WorkloadSpec {
     /// Optional axis: named spot-market models overriding every job's
     /// market for the point (`None` = not swept).
     pub markets_axis: Option<Vec<(String, MarketSpec)>>,
+    /// Optional axis: named market outlooks overriding every job's outlook
+    /// for the point (`None` = not swept).
+    pub outlooks_axis: Option<Vec<(String, OutlookSpec)>>,
 }
 
 /// One expanded campaign point: axis tags plus one fully-seeded [`Workload`]
@@ -204,7 +215,7 @@ impl WorkloadSpec {
             &root,
             &[
                 "name", "seed", "trials", "workers", "admission", "scheduler", "arrival", "job",
-                "grid", "market",
+                "grid", "market", "outlook",
             ],
             "workload spec",
         )?;
@@ -219,6 +230,9 @@ impl WorkloadSpec {
 
         // --- named spot-market definitions ([[market]] tables) ---
         let market_defs = market::spec::named_markets(&root, base)?;
+
+        // --- named market-outlook definitions ([[outlook]] tables) ---
+        let outlook_defs = outlook::named_outlooks(&root)?;
 
         // --- job templates ([[job]] with optional count/name/market) ---
         let job_tables = root
@@ -244,9 +258,22 @@ impl WorkloadSpec {
                         .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?,
                 ),
             };
+            // Per-job outlook: a name resolved against the [[outlook]]
+            // defs (an inline [job.outlook] table goes through the shared
+            // JobSpec parse instead).
+            let job_outlook = match tbl.get("outlook").and_then(|v| v.as_str()) {
+                None => None,
+                Some(name) => Some(
+                    outlook::resolve_outlook(name, &outlook_defs)
+                        .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?,
+                ),
+            };
             let mut body = tbl.clone();
             if job_market.is_some() {
                 body.remove("market");
+            }
+            if job_outlook.is_some() {
+                body.remove("outlook");
             }
             // Workload-template attributes live on the [[job]] table, not in
             // the job config — strip them before the shared JobSpec parse,
@@ -258,6 +285,9 @@ impl WorkloadSpec {
                 .map_err(|e| anyhow::anyhow!("[[job]] #{ti}: {e}"))?;
             if let Some(m) = job_market {
                 spec.config.market = m;
+            }
+            if let Some(o) = job_outlook {
+                spec.config.outlook = o;
             }
             let count = match tbl.get("count").and_then(|v| v.as_int()) {
                 None => 1,
@@ -329,6 +359,7 @@ impl WorkloadSpec {
                     "deadline_round",
                     "priorities",
                     "markets",
+                    "outlooks",
                 ],
                 "workload [grid]",
             )?;
@@ -415,6 +446,21 @@ impl WorkloadSpec {
                     .collect::<anyhow::Result<Vec<_>>>()?,
             ),
         };
+        let outlooks_axis = match axis_values(grid, "outlooks") {
+            None => None,
+            Some(items) => Some(
+                items
+                    .into_iter()
+                    .map(|v| {
+                        let name = v
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("grid.outlooks entries are strings"))?;
+                        outlook::resolve_outlook(name, &outlook_defs)
+                            .map(|o| (name.to_string(), o))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+        };
 
         Ok(WorkloadSpec {
             name: root
@@ -436,6 +482,7 @@ impl WorkloadSpec {
             deadline_axis,
             priorities_axis,
             markets_axis,
+            outlooks_axis,
         })
     }
 
@@ -454,6 +501,7 @@ impl WorkloadSpec {
             * self.deadline_axis.as_ref().map_or(1, |v| v.len())
             * self.priorities_axis.as_ref().map_or(1, |v| v.len())
             * self.markets_axis.as_ref().map_or(1, |v| v.len())
+            * self.outlooks_axis.as_ref().map_or(1, |v| v.len())
     }
 
     /// Build one fully-seeded workload realization.
@@ -467,6 +515,7 @@ impl WorkloadSpec {
         deadline: Option<f64>,
         priority: Option<i64>,
         market: Option<&MarketSpec>,
+        outlook: Option<&OutlookSpec>,
         trial_seed: u64,
     ) -> Workload {
         let n = self.jobs.len();
@@ -500,6 +549,9 @@ impl WorkloadSpec {
                 }
                 if let Some(m) = market {
                     cfg.market = m.clone();
+                }
+                if let Some(o) = outlook {
+                    cfg.outlook = o.clone();
                 }
                 JobRequest {
                     name: tmpl.name.clone(),
@@ -540,6 +592,10 @@ impl WorkloadSpec {
             Some(v) => v.iter().map(Some).collect(),
             None => vec![None],
         };
+        let outlooks: Vec<Option<&(String, OutlookSpec)>> = match &self.outlooks_axis {
+            Some(v) => v.iter().map(Some).collect(),
+            None => vec![None],
+        };
         let mut points = Vec::with_capacity(self.n_points());
         let mut global_trial: u64 = 0;
         for &admission in &admissions {
@@ -549,55 +605,64 @@ impl WorkloadSpec {
                         for &deadline in &deadlines {
                             for &priority in &priorities {
                                 for &mkt in &markets {
-                                    let trials: Vec<Workload> = (0..self.trials)
-                                        .map(|_| {
-                                            let s = root.split_seed(global_trial);
-                                            global_trial += 1;
-                                            self.instantiate(
-                                                admission,
-                                                scheduler,
-                                                arrival,
-                                                budget,
-                                                deadline,
-                                                priority,
-                                                mkt.map(|(_, m)| m),
-                                                s,
-                                            )
-                                        })
-                                        .collect();
-                                    let mut tags = vec![
-                                        (
-                                            "admission".to_string(),
-                                            admission.key().to_string(),
-                                        ),
-                                        (
-                                            "scheduler".to_string(),
-                                            scheduler.key().to_string(),
-                                        ),
-                                        (
-                                            "arrival".to_string(),
-                                            arrival.kind_key().to_string(),
-                                        ),
-                                    ];
-                                    if let Some(b) = budget {
-                                        tags.push((
-                                            "budget_round".to_string(),
-                                            format!("{b}"),
-                                        ));
+                                    for &olk in &outlooks {
+                                        let trials: Vec<Workload> = (0..self.trials)
+                                            .map(|_| {
+                                                let s = root.split_seed(global_trial);
+                                                global_trial += 1;
+                                                self.instantiate(
+                                                    admission,
+                                                    scheduler,
+                                                    arrival,
+                                                    budget,
+                                                    deadline,
+                                                    priority,
+                                                    mkt.map(|(_, m)| m),
+                                                    olk.map(|(_, o)| o),
+                                                    s,
+                                                )
+                                            })
+                                            .collect();
+                                        let mut tags = vec![
+                                            (
+                                                "admission".to_string(),
+                                                admission.key().to_string(),
+                                            ),
+                                            (
+                                                "scheduler".to_string(),
+                                                scheduler.key().to_string(),
+                                            ),
+                                            (
+                                                "arrival".to_string(),
+                                                arrival.kind_key().to_string(),
+                                            ),
+                                        ];
+                                        if let Some(b) = budget {
+                                            tags.push((
+                                                "budget_round".to_string(),
+                                                format!("{b}"),
+                                            ));
+                                        }
+                                        if let Some(d) = deadline {
+                                            tags.push((
+                                                "deadline_round".to_string(),
+                                                format!("{d}"),
+                                            ));
+                                        }
+                                        if let Some(pr) = priority {
+                                            tags.push((
+                                                "priority".to_string(),
+                                                format!("{pr}"),
+                                            ));
+                                        }
+                                        if let Some((name, _)) = mkt {
+                                            tags.push(("market".to_string(), name.clone()));
+                                        }
+                                        if let Some((name, _)) = olk {
+                                            tags.push(("outlook".to_string(), name.clone()));
+                                        }
+                                        points.push(WorkloadPoint { tags, trials });
                                     }
-                                    if let Some(d) = deadline {
-                                        tags.push((
-                                            "deadline_round".to_string(),
-                                            format!("{d}"),
-                                        ));
-                                    }
-                                    if let Some(pr) = priority {
-                                        tags.push(("priority".to_string(), format!("{pr}")));
-                                    }
-                                    if let Some((name, _)) = mkt {
-                                        tags.push(("market".to_string(), name.clone()));
-                                    }
-                                    points.push(WorkloadPoint { tags, trials });
                                 }
                             }
                         }
@@ -672,7 +737,9 @@ pub fn render_json(spec: &WorkloadSpec, points: &[WorkloadPoint], aggs: &[Worklo
 /// Render campaign results as CSV (one row per point).
 pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     let mut out = String::new();
-    out.push_str("admission,scheduler,arrival,budget_round,deadline_round,priority,market,trials");
+    out.push_str(
+        "admission,scheduler,arrival,budget_round,deadline_round,priority,market,outlook,trials",
+    );
     for metric in [
         "makespan_secs",
         "mean_wait_secs",
@@ -689,7 +756,7 @@ pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
     out.push('\n');
     for (p, a) in points.iter().zip(aggs) {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{}",
             p.tag("admission"),
             p.tag("scheduler"),
             p.tag("arrival"),
@@ -697,6 +764,7 @@ pub fn render_csv(points: &[WorkloadPoint], aggs: &[WorkloadAgg]) -> String {
             p.tag("deadline_round"),
             p.tag("priority"),
             p.tag("market"),
+            p.tag("outlook"),
             a.trials
         ));
         for agg in [
@@ -896,6 +964,45 @@ rounds = 2
         }
         // Unknown market names are rejected at the job level.
         assert!(WorkloadSpec::from_toml("[[job]]\napp = \"til\"\nmarket = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn outlook_definitions_apply_per_job_and_per_point() {
+        let text = r#"
+[[outlook]]
+name = "aware"
+horizon = 14400.0
+defer = true
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+outlook = "aware"
+
+[[job]]
+app = "til-aws-gcp"
+rounds = 2
+"#;
+        let spec = WorkloadSpec::from_toml(text).unwrap();
+        assert!(spec.jobs[0].cfg.outlook.enabled);
+        assert_eq!(spec.jobs[0].cfg.outlook.horizon_secs, Some(14400.0));
+        assert!(spec.jobs[0].cfg.outlook.defer);
+        assert!(!spec.jobs[1].cfg.outlook.enabled, "outlook defaults to off");
+        // The grid axis overrides every job's outlook for the point.
+        let gridded = format!("{text}\n[grid]\noutlooks = [\"off\", \"aware\"]\n");
+        let spec = WorkloadSpec::from_toml(&gridded).unwrap();
+        assert_eq!(spec.n_points(), 2);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].tag("outlook"), "off");
+        assert_eq!(points[1].tag("outlook"), "aware");
+        for j in &points[0].trials[0].jobs {
+            assert!(!j.cfg.outlook.enabled);
+        }
+        for j in &points[1].trials[0].jobs {
+            assert!(j.cfg.outlook.enabled);
+        }
+        // Unknown outlook names are rejected at the job level.
+        assert!(WorkloadSpec::from_toml("[[job]]\napp = \"til\"\noutlook = \"nope\"\n").is_err());
     }
 
     #[test]

@@ -103,6 +103,7 @@ mod legacy {
             spot_price_factor: 1.0,
             budget_round: f64::INFINITY,
             deadline_round: f64::INFINITY,
+            outlook: None,
         };
         let sol = mapping::exact::solve(&problem)
             .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible"))?;
@@ -239,6 +240,7 @@ mod legacy {
                         revoked: old_type,
                         policy: cfg.dynsched_policy,
                         at: now,
+                        remaining_secs: 0.0,
                         market: multi_fedls::market::MarketView::new(&cfg.market),
                     });
                     *set = new_set;

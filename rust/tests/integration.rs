@@ -161,6 +161,7 @@ fn solvers_agree_on_reduced_cloudlab() {
             spot_price_factor: 1.0,
             budget_round: 1e9,
             deadline_round: 1e9,
+            outlook: None,
         };
         let exact = multi_fedls::mapping::exact::solve(&p).unwrap();
         let milp = multi_fedls::mapping::milp::solve(&p).unwrap();

@@ -21,6 +21,8 @@ fn hash_iter_fires_in_simulation_state_modules() {
     assert_eq!(rules_hit("presched/fake.rs", src), ["hash-iter"]);
     let set = "fn f() { let s = std::collections::HashSet::<u32>::new(); }\n";
     assert_eq!(rules_hit("sweep/fake.rs", set), ["hash-iter"]);
+    // The outlook subsystem feeds mapping costs and dynsched selections.
+    assert_eq!(rules_hit("outlook/fake.rs", src), ["hash-iter"]);
     // BTreeMap is the fix, and out-of-scope modules are untouched.
     assert!(rules_hit("cloudsim/fake.rs", "fn f() { let m = BTreeMap::new(); }\n").is_empty());
     assert!(rules_hit("data/fake.rs", src).is_empty());
@@ -51,6 +53,7 @@ fn wall_clock_fires_everywhere_but_the_exempt_files() {
         let src = format!("fn f() {{ let t = {tok}; }}\n");
         assert_eq!(rules_hit("workload/engine.rs", &src), ["wall-clock"], "{tok}");
         assert_eq!(rules_hit("fl/mod.rs", &src), ["wall-clock"], "{tok}");
+        assert_eq!(rules_hit("outlook/fake.rs", &src), ["wall-clock"], "{tok}");
         // The two sanctioned homes of real time / OS randomness.
         assert!(rules_hit("util/bench.rs", &src).is_empty(), "{tok}");
         assert!(rules_hit("coordinator/real.rs", &src).is_empty(), "{tok}");
@@ -146,6 +149,9 @@ fn unknown_key_requires_the_shared_helper() {
     assert_eq!((v[0].rule, v[0].line), ("unknown-key", 1));
     let with = "fn parse(t: &Tbl) -> Result<()> { reject_unknown_keys(t, &[\"a\"], \"x\") }\n";
     assert!(lint_source("sweep/spec.rs", with).is_empty());
+    // The outlook spec parser is held to the same helper requirement.
+    assert_eq!(rules_hit("outlook/spec.rs", without), ["unknown-key"]);
+    assert!(lint_source("outlook/spec.rs", with).is_empty());
     // A helper call that only exists in test code does not count.
     let test_only = "fn parse(t: &Tbl) -> Result<()> { Ok(()) }\n\
                      #[cfg(test)]\nmod tests {\n    fn t() { reject_unknown_keys; }\n}\n";

@@ -1,0 +1,181 @@
+//! Outlook parity and deferral invariants: (1) an enabled outlook on a
+//! constant-price market is bit-identical to outlook-off — the Constant
+//! expected factor is the literal 1.0, so every planner takes the
+//! historical untouched-rate branch; (2) a disabled `[outlook]` spec is
+//! inert whatever its parameters carry; (3) campaign statistics are
+//! identical across worker counts with the outlook on; (4) an admitted
+//! deferral never exceeds the deadline slack `(T_round − t_m) · n_rounds`
+//! on a seeded grid, and with ample slack it lands exactly on the price
+//! trough, which makes the outlook-aware run strictly cheaper.
+
+use multi_fedls::apps;
+use multi_fedls::cloud::{tables, Market};
+use multi_fedls::cloudsim::{MultiCloud, RevocationModel};
+use multi_fedls::coordinator::{simulate, Scenario, SimConfig, SimOutcome};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::mapping::problem::MappingProblem;
+use multi_fedls::market::{MarketSpec, PriceSpec};
+use multi_fedls::outlook::{MarketOutlook, OutlookSpec};
+use multi_fedls::presched::PreScheduler;
+use multi_fedls::sweep::{self, PointSpec};
+
+/// An enabled outlook whose horizon covers the whole volatile price cycle.
+fn aware(defer: bool) -> OutlookSpec {
+    OutlookSpec { enabled: true, horizon_secs: Some(14_400.0), bid_risk: 0.3, defer }
+}
+
+/// The step-price market of the outlook-ablation study: a 1.8× spike at
+/// 1 h, then a 0.6× trough from 3 h on.
+fn volatile() -> MarketSpec {
+    MarketSpec {
+        price: PriceSpec::Steps(vec![(0.0, 1.0), (3600.0, 1.8), (10_800.0, 0.6)]),
+        ..MarketSpec::default()
+    }
+}
+
+fn spot_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+    cfg.n_rounds = 12;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    cfg
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+    assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.vm_cost.to_bits(), b.vm_cost.to_bits());
+    assert_eq!(a.egress_cost.to_bits(), b.egress_cost.to_bits());
+    assert_eq!(a.n_revocations, b.n_revocations);
+    assert_eq!(a.rounds_completed, b.rounds_completed);
+    assert_eq!(a.initial_server, b.initial_server);
+    assert_eq!(a.initial_clients, b.initial_clients);
+    let ea: Vec<&str> = a.events.iter().map(|e| e.what.as_str()).collect();
+    let eb: Vec<&str> = b.events.iter().map(|e| e.what.as_str()).collect();
+    assert_eq!(ea, eb, "event traces must match");
+}
+
+#[test]
+fn constant_price_outlook_is_bit_identical_to_outlook_off() {
+    // On the default (constant-price) market the outlook's expected factor
+    // is the literal 1.0 and there is no price step to defer toward, so an
+    // enabled outlook must not move a single bit anywhere in the pipeline.
+    for seed in [1, 7, 42] {
+        let off = spot_cfg(seed);
+        let mut on = spot_cfg(seed);
+        on.outlook = aware(true);
+        let a = simulate(&off).expect("outlook-off run");
+        let b = simulate(&on).expect("outlook-on run");
+        assert_outcomes_identical(&a, &b);
+    }
+}
+
+#[test]
+fn disabled_outlook_spec_is_inert_whatever_its_parameters() {
+    // `enabled = false` is the gate: the other fields must be dead weight
+    // even on a market where an enabled outlook would change plans.
+    let mut base = spot_cfg(9);
+    base.market = volatile();
+    let mut weird = base.clone();
+    weird.outlook =
+        OutlookSpec { enabled: false, horizon_secs: Some(60.0), bid_risk: 0.9, defer: true };
+    let a = simulate(&base).expect("default-spec run");
+    let b = simulate(&weird).expect("disabled-spec run");
+    assert_outcomes_identical(&a, &b);
+}
+
+#[test]
+fn outlook_campaign_is_identical_across_worker_counts() {
+    let mut cfg = spot_cfg(5);
+    cfg.market = volatile();
+    cfg.outlook = aware(true);
+    let points = vec![PointSpec {
+        tags: vec![("outlook".to_string(), "aware".to_string())],
+        cfg,
+        seeds: vec![5, 6, 7, 8],
+    }];
+    let serial = sweep::run_campaign(&points, 1).expect("serial campaign");
+    let parallel = sweep::run_campaign(&points, 4).expect("parallel campaign");
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.cost.mean.to_bits(), b.cost.mean.to_bits());
+        assert_eq!(a.total_secs.mean.to_bits(), b.total_secs.mean.to_bits());
+        assert_eq!(a.exec_secs.mean.to_bits(), b.exec_secs.mean.to_bits());
+        assert_eq!(a.revocations.mean.to_bits(), b.revocations.mean.to_bits());
+    }
+}
+
+#[test]
+fn deferral_never_exceeds_deadline_slack_on_a_seeded_grid() {
+    let mc = MultiCloud::new(
+        tables::cloudlab(),
+        tables::cloudlab_ground_truth(),
+        RevocationModel::none(),
+        1,
+    );
+    let sl = PreScheduler::new(&mc).measure_defaults();
+    let job = apps::til().profile();
+    let market = volatile();
+    let o = MarketOutlook::new(&market, Some(7200.0), aware(true), 7200.0);
+    let mut p = MappingProblem {
+        catalog: &mc.catalog,
+        slowdowns: &sl,
+        job: &job,
+        alpha: 0.5,
+        market: Market::Spot,
+        spot_price_factor: 1.0,
+        budget_round: f64::INFINITY,
+        deadline_round: f64::INFINITY,
+        outlook: Some(&o),
+    };
+    let sol = multi_fedls::mapping::exact::solve(&p).expect("feasible mapping");
+    let m = sol.eval.makespan;
+    let n_rounds = f64::from(job.n_rounds);
+
+    // Ample slack: the whole run at the 0.6× trough beats any earlier
+    // start, so the deferral lands exactly on the 3 h step.
+    assert!(
+        (p.defer_secs(m) - 10_800.0).abs() < 1e-6,
+        "expected the trough step, got {}",
+        p.defer_secs(m)
+    );
+
+    // Seeded deadline grid: the admitted deferral never exceeds the slack
+    // `(T_round − t_m) · n_rounds`, nor the outlook horizon.
+    for mult in [0.9, 1.0, 1.001, 1.05, 1.2, 2.0, 10.0] {
+        p.deadline_round = m * mult;
+        let d = p.defer_secs(m);
+        let slack = ((p.deadline_round - m) * n_rounds).max(0.0);
+        assert!(d <= slack + 1e-6, "defer {d} > slack {slack} at deadline ×{mult}");
+        assert!(d <= 14_400.0 + 1e-6, "defer {d} beyond the outlook horizon");
+        assert!(d >= 0.0);
+    }
+}
+
+#[test]
+fn deferral_is_strictly_cheaper_on_a_step_price_market() {
+    // Deterministic (no revocations) so the comparison is exact: deferring
+    // to the 0.6× trough bills every spot VM-second at the cheapest factor,
+    // while outlook-off pays the 1.0×/1.8× prefix.
+    let mut off = spot_cfg(3);
+    off.revocation_mean_secs = None;
+    off.market = volatile();
+    let mut on = off.clone();
+    on.outlook = aware(true);
+    let a = simulate(&off).expect("outlook-off run");
+    let b = simulate(&on).expect("outlook-aware run");
+    assert!(
+        b.total_cost < a.total_cost - 1e-6,
+        "outlook-aware ${} must beat outlook-off ${}",
+        b.total_cost,
+        a.total_cost
+    );
+    assert!(
+        b.events.iter().any(|e| e.what.contains("provisioning deferred")),
+        "the deferred-start event must be recorded"
+    );
+    assert!(a.events.iter().all(|e| !e.what.contains("provisioning deferred")));
+    assert_eq!(a.rounds_completed, b.rounds_completed);
+}

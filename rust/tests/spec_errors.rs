@@ -45,6 +45,53 @@ fn market_unknown_key_lists_the_accepted_set_for_its_kind() {
     assert!(err.contains("accepted keys:"), "{err}");
 }
 
+// --- outlook [outlook] / [[outlook]] -------------------------------------
+
+#[test]
+fn outlook_unknown_key_is_rejected_by_name() {
+    let text = "app = \"til\"\n\n[outlook]\nhorizion = 7200.0\n";
+    let err = err_of(JobSpec::from_toml(text));
+    assert!(err.contains("unknown key `horizion`"), "{err}");
+    assert!(err.contains("[outlook]"), "{err}");
+    assert!(err.contains("horizon"), "accepted-keys list should offer the fix: {err}");
+}
+
+#[test]
+fn outlook_out_of_range_parameters_name_the_key_and_value() {
+    let err = err_of(JobSpec::from_toml("app = \"til\"\n\n[outlook]\nhorizon = 0.0\n"));
+    assert!(err.contains("[outlook] horizon must be positive, got 0"), "{err}");
+
+    let err = err_of(JobSpec::from_toml("app = \"til\"\n\n[outlook]\nbid_risk = 1.5\n"));
+    assert!(err.contains("[outlook] bid_risk must be in [0, 1], got 1.5"), "{err}");
+
+    let err = err_of(JobSpec::from_toml("app = \"til\"\n\n[outlook]\ndefer = 1.0\n"));
+    assert!(err.contains("[outlook] defer must be a boolean"), "{err}");
+}
+
+#[test]
+fn outlook_by_name_is_workload_only_and_unknown_names_are_listed() {
+    // A job spec can only inline an [outlook] table; names live in
+    // sweep/workload specs next to their [[outlook]] definitions.
+    let err = err_of(JobSpec::from_toml("app = \"til\"\noutlook = \"aware\"\n"));
+    assert!(err.contains("only valid inside workload [[job]] tables"), "{err}");
+
+    let err = err_of(WorkloadSpec::from_toml(
+        "[[job]]\napp = \"til\"\noutlook = \"aware\"\n",
+    ));
+    assert!(err.contains("unknown outlook aware"), "{err}");
+    assert!(err.contains("built-in: off"), "{err}");
+
+    let err = err_of(SweepSpec::from_toml(
+        "name = \"s\"\n\n[grid]\napps = [\"til\"]\noutlooks = [\"nope\"]\n",
+    ));
+    assert!(err.contains("unknown outlook nope"), "{err}");
+
+    let err = err_of(WorkloadSpec::from_toml(
+        "[[outlook]]\nname = \"off\"\n\n[[job]]\napp = \"til\"\n",
+    ));
+    assert!(err.contains("reserved for the built-in disabled default"), "{err}");
+}
+
 // --- job spec root -------------------------------------------------------
 
 #[test]
