@@ -1,0 +1,41 @@
+//! Telemetry overhead guard: the same 80-round Table 5 simulation with
+//! telemetry off, fully on, and events-only. The off/on gap is the cost of
+//! recording the extra typed events plus the single post-hoc span/metrics
+//! pass — it must stay in the noise floor of the simulation itself (the
+//! hot loop carries no span state; see `src/telemetry/span.rs`).
+use std::time::Duration;
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{simulate, Scenario, SimConfig};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::telemetry::TelemetrySpec;
+use multi_fedls::util::bench::{bench, black_box};
+
+fn table5_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+    cfg.n_rounds = 80;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    cfg
+}
+
+fn main() {
+    let off = table5_cfg(50);
+    bench("sim::til-80r telemetry=off", Duration::from_secs(3), 10, || {
+        black_box(simulate(&off).unwrap());
+    });
+
+    let mut on = table5_cfg(50);
+    on.telemetry = TelemetrySpec::on();
+    bench("sim::til-80r telemetry=on (spans+metrics)", Duration::from_secs(3), 10, || {
+        black_box(simulate(&on).unwrap());
+    });
+
+    let mut events_only = table5_cfg(50);
+    events_only.telemetry =
+        TelemetrySpec { enabled: true, spans: false, metrics: false };
+    bench("sim::til-80r telemetry=events-only", Duration::from_secs(3), 10, || {
+        black_box(simulate(&events_only).unwrap());
+    });
+}

@@ -74,8 +74,8 @@ fn main() -> anyhow::Result<()> {
         SimTime::from_secs(b.total_secs).hms(),
         b.total_cost
     );
-    if let Some(ev) = b.events.iter().find(|e| e.what.contains("deferred")) {
-        println!("deferred start: {} — {}", ev.at.hms(), ev.what);
+    if let Some(ev) = b.events.iter().find(|e| e.what().contains("deferred")) {
+        println!("deferred start: {} — {}", ev.at.hms(), ev.what());
     }
     println!(
         "outlook-aware saves ${:.2} ({:.1}%) on this market",

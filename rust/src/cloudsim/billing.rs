@@ -88,23 +88,25 @@ impl Ledger {
         self.egress_charges.push(EgressCharge { at, gb, cost, description: description.into() });
     }
 
+    /// Billed cost of one charge as of `now` (open charges accrue to `now`).
+    /// This is the single costing formula: `vm_cost` sums it in charge
+    /// order, and the telemetry span builder attributes per-VM cost through
+    /// the same call — which is what makes span totals equal the ledger
+    /// total bit for bit.
+    pub fn charge_cost(&self, c: &VmCharge, now: SimTime) -> f64 {
+        let end = c.end.unwrap_or(now);
+        match c.market {
+            // Spot: integrate the price series over [start, end) —
+            // for the constant series `weighted_secs` is exactly the
+            // clamped duration, so this is the historical formula.
+            Market::Spot => c.rate_per_sec * self.price.weighted_secs(c.start.secs(), end.secs()),
+            // On-demand is never repriced by the spot market.
+            Market::OnDemand => c.rate_per_sec * (end - c.start).max(0.0),
+        }
+    }
+
     pub fn vm_cost(&self, now: SimTime) -> f64 {
-        self.vm_charges
-            .iter()
-            .map(|c| {
-                let end = c.end.unwrap_or(now);
-                match c.market {
-                    // Spot: integrate the price series over [start, end) —
-                    // for the constant series `weighted_secs` is exactly the
-                    // clamped duration, so this is the historical formula.
-                    Market::Spot => {
-                        c.rate_per_sec * self.price.weighted_secs(c.start.secs(), end.secs())
-                    }
-                    // On-demand is never repriced by the spot market.
-                    Market::OnDemand => c.rate_per_sec * (end - c.start).max(0.0),
-                }
-            })
-            .sum()
+        self.vm_charges.iter().map(|c| self.charge_cost(c, now)).sum()
     }
 
     pub fn egress_cost(&self) -> f64 {

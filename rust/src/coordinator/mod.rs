@@ -105,6 +105,10 @@ pub fn run_trials_with_jobs(
 /// horizon = 14400.0             # the flat expected-factor path; see
 /// bid_risk = 0.1                # crate::outlook::spec for every key)
 /// defer = true
+///
+/// [telemetry]                   # optional structured telemetry (omit = off;
+/// spans = true                  # presence enables — see
+/// metrics = true                # crate::telemetry::spec for every key)
 /// ```
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -154,6 +158,7 @@ impl JobSpec {
                 "trials",
                 "market",
                 "outlook",
+                "telemetry",
             ],
             "job spec",
         )?;
@@ -241,6 +246,15 @@ impl JobSpec {
                  (use an [outlook] table here)"
             ),
             Some(_) => anyhow::bail!("[outlook] must be a table"),
+        }
+        // Telemetry: a `[telemetry]` table (presence enables unless
+        // `enabled = false` inside it).
+        match root.get("telemetry") {
+            None => {}
+            Some(crate::util::tomlmini::Value::Table(tbl)) => {
+                config.telemetry = crate::telemetry::TelemetrySpec::from_table(tbl)?;
+            }
+            Some(_) => anyhow::bail!("[telemetry] must be a table"),
         }
         let trials = get_nonneg("trials")?.unwrap_or(1) as usize;
         Ok(JobSpec { config, trials })
@@ -335,6 +349,18 @@ trials = 3
         // Non-positive constraints are configuration errors.
         assert!(JobSpec::from_toml("app = \"til\"\nbudget_round = 0.0\n").is_err());
         assert!(JobSpec::from_toml("app = \"til\"\ndeadline_round = -1.0\n").is_err());
+    }
+
+    #[test]
+    fn job_spec_parses_telemetry_table() {
+        // Presence enables; the default is off; non-table forms are errors.
+        let spec = JobSpec::from_toml("app = \"til\"\n\n[telemetry]\n").unwrap();
+        assert!(spec.config.telemetry.enabled && spec.config.telemetry.spans);
+        let spec = JobSpec::from_toml("app = \"til\"\n\n[telemetry]\nspans = false\n").unwrap();
+        assert!(spec.config.telemetry.enabled && !spec.config.telemetry.spans);
+        let spec = JobSpec::from_toml("app = \"til\"\n").unwrap();
+        assert!(!spec.config.telemetry.enabled);
+        assert!(JobSpec::from_toml("app = \"til\"\ntelemetry = true\n").is_err());
     }
 
     #[test]

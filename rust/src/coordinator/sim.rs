@@ -25,6 +25,7 @@ use crate::mapping::MapperKind;
 use crate::market::MarketSpec;
 use crate::outlook::OutlookSpec;
 use crate::simul::SimTime;
+use crate::telemetry::{EventKind, JobTelemetry, TelemetrySpec};
 
 /// Market scenario (§5.6): which tasks ride spot VMs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,6 +119,11 @@ pub struct SimConfig {
     pub budget_round: f64,
     /// `T_round` (Constraint 9): per-round deadline in seconds.
     pub deadline_round: f64,
+    /// Telemetry configuration (the `[telemetry]` job-spec table). Disabled
+    /// by default; the event log itself is always collected (it is part of
+    /// [`SimOutcome`]), but spans/metrics and the telemetry-only event kinds
+    /// are only produced when enabled.
+    pub telemetry: TelemetrySpec,
     pub seed: u64,
 }
 
@@ -139,6 +145,7 @@ impl SimConfig {
             max_revocations_per_task: None,
             budget_round: f64::INFINITY,
             deadline_round: f64::INFINITY,
+            telemetry: TelemetrySpec::default(),
             seed,
         }
     }
@@ -170,11 +177,19 @@ impl SimConfig {
     }
 }
 
-/// Timestamped trace entry.
+/// Timestamped trace entry: a typed [`EventKind`] on the simulated clock.
+/// [`SimEvent::what`] renders the historical human-readable line.
 #[derive(Debug, Clone)]
 pub struct SimEvent {
     pub at: SimTime,
-    pub what: String,
+    pub kind: EventKind,
+}
+
+impl SimEvent {
+    /// The human-readable trace line (the pre-telemetry `what` string).
+    pub fn what(&self) -> String {
+        self.kind.render(self.at)
+    }
 }
 
 /// End-to-end results of one simulated Multi-FedLS execution.
@@ -196,6 +211,8 @@ pub struct SimOutcome {
     /// Predicted (model) per-round makespan/cost from the Initial Mapping.
     pub predicted_round_makespan: f64,
     pub predicted_round_cost: f64,
+    /// Spans + metrics, present iff `cfg.telemetry.enabled`.
+    pub telemetry: Option<JobTelemetry>,
 }
 
 /// Run one simulated Multi-FedLS execution through the default module stack
@@ -290,14 +307,15 @@ mod tests {
         // Every replacement must differ from the revoked type.
         let mut last_revoked: Option<String> = None;
         for e in &out.events {
-            if let Some(rest) = e.what.strip_prefix("revocation: ") {
+            let w = e.what();
+            if let Some(rest) = w.strip_prefix("revocation: ") {
                 // "revocation: <task> on <vm> during round N"
                 let vm = rest.split(" on ").nth(1).unwrap().split(' ').next().unwrap();
                 last_revoked = Some(vm.to_string());
-            } else if e.what.starts_with("dynamic scheduler:") {
-                let chosen = e.what.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
+            } else if w.starts_with("dynamic scheduler:") {
+                let chosen = w.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
                 let revoked = last_revoked.take().expect("selection follows revocation");
-                assert_ne!(chosen, revoked, "reselected the revoked type: {}", e.what);
+                assert_ne!(chosen, revoked, "reselected the revoked type: {w}");
             }
         }
     }
@@ -322,11 +340,8 @@ mod tests {
         cfg.revocation_mean_secs = Some(3600.0);
         let out = simulate(&cfg).unwrap();
         for e in &out.events {
-            assert!(
-                !e.what.contains("revocation: server"),
-                "server revoked in on-demand scenario: {}",
-                e.what
-            );
+            let w = e.what();
+            assert!(!w.contains("revocation: server"), "server revoked in on-demand scenario: {w}");
         }
     }
 

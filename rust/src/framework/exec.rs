@@ -12,7 +12,7 @@
 //! is unchanged, so outputs are bit-identical to the pre-refactor
 //! simulator; `tests/framework_parity.rs` enforces that.
 
-use crate::cloud::VmTypeId;
+use crate::cloud::{Market, VmTypeId};
 use crate::cloudsim::{MultiCloud, VmId};
 use crate::coordinator::sim::{environment_for, SimConfig, SimEvent, SimOutcome};
 use crate::dynsched::{CurrentMap, FaultyTask, RevocationCtx};
@@ -20,6 +20,7 @@ use crate::mapping::problem::{JobProfile, Mapping, MappingProblem};
 use crate::market::MarketView;
 use crate::presched::SlowdownReport;
 use crate::simul::SimTime;
+use crate::telemetry::EventKind;
 
 use super::modules::FaultTolerance;
 use super::Framework;
@@ -29,6 +30,20 @@ struct TaskState {
     instance: VmId,
     /// Rounds completed on this instance (warm-up applies on its first).
     rounds_on_instance: u32,
+}
+
+/// Telemetry-only `Provision` event for a freshly requested instance
+/// (provider/region/market resolved from the catalog snapshot).
+fn provision_kind(mc: &MultiCloud, task: &str, vm_type: VmTypeId, inst: VmId, market: Market) -> EventKind {
+    let cat = &mc.catalog;
+    EventKind::Provision {
+        task: task.to_string(),
+        vm: cat.vm(vm_type).id.clone(),
+        provider: cat.provider(cat.provider_of(vm_type)).name.clone(),
+        region: cat.region(cat.region_of(vm_type)).name.clone(),
+        spot: matches!(market, Market::Spot),
+        boot_done: mc.instance(inst).ready_at,
+    }
 }
 
 /// Run one simulated Multi-FedLS execution through `fw`'s module stack.
@@ -108,13 +123,12 @@ pub(super) fn run_stop(
     let initial: Mapping = sol.mapping.clone();
     events.push(SimEvent {
         at: now,
-        what: format!(
-            "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
-            mc.catalog.vm(initial.server).id,
-            initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
-            sol.eval.makespan,
-            sol.eval.total_cost
-        ),
+        kind: EventKind::InitialMapping {
+            server: mc.catalog.vm(initial.server).id.clone(),
+            clients: initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect(),
+            predicted_makespan: sol.eval.makespan,
+            predicted_cost: sol.eval.total_cost,
+        },
     });
 
     // Deferred start (outlook `defer = true`): the mapper judged a later
@@ -123,13 +137,7 @@ pub(super) fn run_stop(
     // until the chosen start offset.
     if sol.defer_secs > 0.0 {
         now = SimTime::from_secs(sol.defer_secs);
-        events.push(SimEvent {
-            at: now,
-            what: format!(
-                "outlook: provisioning deferred {:.0}s past the price spike",
-                sol.defer_secs
-            ),
-        });
+        events.push(SimEvent { at: now, kind: EventKind::Deferral { defer_secs: sol.defer_secs } });
     }
 
     // --- provision all tasks (boot in parallel) ---
@@ -148,6 +156,14 @@ pub(super) fn run_stop(
             rounds_on_instance: 0,
         });
     }
+    if cfg.telemetry.enabled {
+        let k = provision_kind(&mc, "server", server.vm_type, server.instance, server_market);
+        events.push(SimEvent { at: now, kind: k });
+        for (i, c) in clients.iter().enumerate() {
+            let k = provision_kind(&mc, &format!("client-{i}"), c.vm_type, c.instance, client_market);
+            events.push(SimEvent { at: now, kind: k });
+        }
+    }
     let mut ready_at = mc.instance(server.instance).ready_at;
     for c in &clients {
         ready_at = ready_at.max(mc.instance(c.instance).ready_at);
@@ -157,7 +173,7 @@ pub(super) fn run_stop(
     for c in &clients {
         mc.mark_running(c.instance);
     }
-    events.push(SimEvent { at: now, what: "all VMs prepared; FL execution starts".into() });
+    events.push(SimEvent { at: now, kind: EventKind::FlStart });
     let fl_start = now;
 
     // Dynamic Scheduler candidate sets (I_t), per task (§4.4).
@@ -192,6 +208,12 @@ pub(super) fn run_stop(
         // Round duration with the current placement.
         let duration = round_duration(cfg, &mc, slowdowns, &job, fw.ft(), &server, &clients);
         let end = now + duration;
+        if cfg.telemetry.enabled {
+            events.push(SimEvent {
+                at: now,
+                kind: EventKind::RoundStart { round, predicted_secs: duration },
+            });
+        }
 
         // Earliest spot revocation strictly before the round completes —
         // collecting *every* task hit at that instant, so co-timed evictions
@@ -244,7 +266,8 @@ pub(super) fn run_stop(
                     c.rounds_on_instance += 1;
                 }
                 completed = round;
-                if fw.ft().checkpoint_after_round(cfg, round) {
+                let saved = fw.ft().checkpoint_after_round(cfg, round);
+                if saved {
                     server_ckpt_round = round;
                 }
                 // Message-exchange costs (Eq. 6) for this round.
@@ -252,6 +275,15 @@ pub(super) fn run_stop(
                     let m = &job.msg;
                     mc.charge_egress(now, server.vm_type, m.s_train_gb + m.s_aggreg_gb, "server msgs");
                     mc.charge_egress(now, c.vm_type, m.c_train_gb + m.c_test_gb, "client msgs");
+                }
+                if cfg.telemetry.enabled {
+                    let m = &job.msg;
+                    let egress_gb = clients.len() as f64
+                        * (m.s_train_gb + m.s_aggreg_gb + m.c_train_gb + m.c_test_gb);
+                    events.push(SimEvent { at: now, kind: EventKind::RoundEnd { round, egress_gb } });
+                    if saved {
+                        events.push(SimEvent { at: now, kind: EventKind::CheckpointSave { round } });
+                    }
                 }
             }
             Some((t_rev, faulty_tasks)) => {
@@ -265,10 +297,7 @@ pub(super) fn run_stop(
                 if faulty_tasks.len() > 1 {
                     events.push(SimEvent {
                         at: now,
-                        what: format!(
-                            "batched event: {} co-timed revocations",
-                            faulty_tasks.len()
-                        ),
+                        kind: EventKind::BatchedRevocation { count: faulty_tasks.len() },
                     });
                 }
                 let mut boot_max = now;
@@ -295,10 +324,17 @@ pub(super) fn run_stop(
                     mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
                     events.push(SimEvent {
                         at: now,
-                        what: format!(
-                            "revocation: {task_name} on {} during round {round}",
-                            mc.catalog.vm(old_type).id
-                        ),
+                        kind: EventKind::Revocation {
+                            task: task_name.clone(),
+                            vm: mc.catalog.vm(old_type).id.clone(),
+                            round,
+                            provider: mc
+                                .catalog
+                                .provider(mc.catalog.provider_of(old_type))
+                                .name
+                                .clone(),
+                            region: mc.catalog.region(mc.catalog.region_of(old_type)).name.clone(),
+                        },
                     });
 
                     // Dynamic Scheduler picks the replacement. With an
@@ -349,13 +385,21 @@ pub(super) fn run_stop(
                     boot_max = boot_max.max(boot_done);
                     events.push(SimEvent {
                         at: now,
-                        what: format!(
-                            "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
-                            mc.catalog.vm(sel.vm).id,
-                            sel.value,
-                            boot_done.hms()
-                        ),
+                        kind: EventKind::Replacement {
+                            task: task_name.clone(),
+                            vm: mc.catalog.vm(sel.vm).id.clone(),
+                            value: sel.value,
+                            boot_done,
+                        },
                     });
+                    if cfg.telemetry.enabled {
+                        let market = match faulty {
+                            FaultyTask::Server => server_market,
+                            FaultyTask::Client(_) => client_market,
+                        };
+                        let k = provision_kind(&mc, &task_name, sel.vm, new_inst, market);
+                        events.push(SimEvent { at: now, kind: k });
+                    }
                     match faulty {
                         FaultyTask::Server => {
                             server = TaskState {
@@ -370,10 +414,10 @@ pub(super) fn run_stop(
                             if restore < completed {
                                 events.push(SimEvent {
                                     at: now,
-                                    what: format!(
-                                        "server restore from round {restore} (lost {} rounds)",
-                                        completed - restore
-                                    ),
+                                    kind: EventKind::CheckpointRestore {
+                                        restore_round: restore,
+                                        lost: completed - restore,
+                                    },
                                 });
                                 completed = restore;
                             }
@@ -405,10 +449,7 @@ pub(super) fn run_stop(
         completed = restore;
         events.push(SimEvent {
             at: now,
-            what: format!(
-                "preempted at {} (checkpointed progress: round {completed}, {rounds_lost} lost)",
-                now.hms()
-            ),
+            kind: EventKind::Preemption { round: completed, lost: rounds_lost },
         });
     }
 
@@ -418,16 +459,21 @@ pub(super) fn run_stop(
     for id in live {
         mc.terminate(now, id);
     }
-    events.push(SimEvent {
-        at: now,
-        what: if preempted {
-            "preemption teardown; VMs terminated".into()
-        } else {
-            "all rounds complete; VMs terminated".into()
-        },
-    });
+    events.push(SimEvent { at: now, kind: EventKind::Teardown { preempted } });
 
     let fl_exec_secs = if preempted { (fl_end - fl_start).max(0.0) } else { fl_end - fl_start };
+    // Spans + metrics are reconstructed post-hoc from the event log and the
+    // ledger — the hot loop carries no telemetry state.
+    let telemetry = cfg.telemetry.enabled.then(|| {
+        crate::telemetry::build_job_telemetry(
+            &cfg.telemetry,
+            &mc.catalog,
+            &mc.ledger,
+            &events,
+            now,
+            fl_start,
+        )
+    });
     let outcome = SimOutcome {
         fl_exec_secs,
         total_secs: now.secs(),
@@ -445,6 +491,7 @@ pub(super) fn run_stop(
         events,
         predicted_round_makespan: sol.eval.makespan,
         predicted_round_cost: sol.eval.total_cost,
+        telemetry,
     };
     Ok((outcome, rounds_lost))
 }

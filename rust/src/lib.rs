@@ -76,6 +76,13 @@
 //! * [`sweep`] — the parallel experiment-campaign engine: declarative config
 //!   grids fanned out across an OS-thread worker pool, deterministically,
 //!   with persisted, resumable results ([`sweep::persist`]).
+//! * [`telemetry`] — structured observability: the typed event vocabulary
+//!   ([`telemetry::EventKind`]) behind every `SimEvent`, sim-clock spans
+//!   (`RoundSpan`/`VmLifetimeSpan`/`JobSpan`/`SolverSpan`) with exact
+//!   ledger-backed cost attribution, a deterministic
+//!   [`telemetry::MetricsRegistry`], and the JSONL (`--trace-out`) /
+//!   flamegraph / `multi-fedls report` sinks — gated per job by the
+//!   `[telemetry]` table, bit-identical to the bare simulator when off.
 //! * [`trace`] — experiment recording and table rendering.
 //! * [`lint`] — the dependency-free determinism & invariant linter behind
 //!   `multi-fedls lint` (hash-iter / wall-clock / float-eq / spec-unwrap /
@@ -101,5 +108,6 @@ pub mod runtime;
 pub mod trace;
 pub mod simul;
 pub mod sweep;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

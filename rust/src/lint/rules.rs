@@ -14,7 +14,7 @@ use super::Violation;
 
 /// Modules whose state reaches campaign output, fingerprints, or RNG
 /// consumption: map iteration order here must be deterministic.
-pub const HASH_ITER_MODULES: [&str; 9] = [
+pub const HASH_ITER_MODULES: [&str; 10] = [
     "cloudsim",
     "presched",
     "framework",
@@ -24,6 +24,7 @@ pub const HASH_ITER_MODULES: [&str; 9] = [
     "dynsched",
     "mapping",
     "outlook",
+    "telemetry",
 ];
 
 /// The only files allowed to read wall-clock time or OS randomness: the
@@ -43,13 +44,14 @@ pub const SPEC_PARSE_FILES: [&str; 4] =
 
 /// Files hosting a spec-table parser, each of which must call the shared
 /// `tomlmini::reject_unknown_keys` helper at least once.
-pub const UNKNOWN_KEY_FILES: [&str; 6] = [
+pub const UNKNOWN_KEY_FILES: [&str; 7] = [
     "market/spec.rs",
     "sweep/spec.rs",
     "workload/spec.rs",
     "cloud/catalog.rs",
     "coordinator/mod.rs",
     "outlook/spec.rs",
+    "telemetry/spec.rs",
 ];
 
 /// Run every rule over one scanned file. Allow-annotation filtering

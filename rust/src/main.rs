@@ -5,10 +5,12 @@
 //! multi-fedls preschedule [--env E] [--cache F] run Pre-Scheduling, print slowdowns
 //! multi-fedls map --app A [--alpha X] [...]    run the Initial Mapping solver
 //! multi-fedls simulate --spec FILE [--json]    simulate a job spec (TOML)
+//!                   [--trace-out F] [--flame-out F]
 //! multi-fedls sweep --spec FILE [--jobs N]     run a campaign grid in parallel
 //!                   [--results DIR] [--resume] [--no-persist]
 //! multi-fedls workload --spec FILE [--jobs N]  run a multi-job workload campaign
-//!                   [--results DIR] [--resume] [--no-persist]
+//!                   [--results DIR] [--resume] [--no-persist] [--trace-out F]
+//! multi-fedls report <dir|trace.jsonl>         summarize a telemetry trace
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
 //! multi-fedls lint [--json] [--src DIR]        determinism & invariant lint pass
@@ -81,10 +83,12 @@ USAGE:
                   [--market on-demand|spot] [--budget B] [--deadline T]
                   [--mapper exact|milp|cheapest|fastest|random|single-cloud]
   multi-fedls simulate --spec configs/<job>.toml [--json]
+                    [--trace-out FILE] [--flame-out FILE]
   multi-fedls sweep --spec configs/<grid>.toml [--jobs N] [--json|--csv]
                     [--results DIR] [--resume] [--no-persist]
   multi-fedls workload --spec configs/workload-<name>.toml [--jobs N] [--json|--csv]
-                    [--results DIR] [--resume] [--no-persist]
+                    [--results DIR] [--resume] [--no-persist] [--trace-out FILE]
+  multi-fedls report <results-dir | trace.jsonl>
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
   multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|outlook-ablation|all> [--json]
@@ -106,6 +110,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "workload" => cmd_workload(&args),
+        "report" => cmd_report(&args),
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "lint" => cmd_lint(&args),
@@ -264,6 +269,37 @@ fn cmd_map(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
     let spec = JobSpec::from_file(std::path::Path::new(spec_path))?;
+    // Telemetry sinks: one extra instrumented run of the base config (the
+    // aggregate trials below stay untouched — telemetry never perturbs
+    // numerics, this just avoids re-plumbing per-trial outcomes).
+    if args.get("trace-out").is_some() || args.get("flame-out").is_some() {
+        let mut cfg = spec.config.clone();
+        cfg.telemetry.enabled = true;
+        let out = multi_fedls::coordinator::simulate(&cfg)?;
+        if let Some(path) = args.get("trace-out") {
+            let trace: Vec<multi_fedls::telemetry::TraceEvent> = out
+                .events
+                .iter()
+                .map(|e| multi_fedls::telemetry::TraceEvent {
+                    at: e.at.secs(),
+                    job: Some(cfg.app.name.to_string()),
+                    tenant: None,
+                    kind: e.kind.clone(),
+                })
+                .collect();
+            let text = multi_fedls::telemetry::trace_jsonl(0, 0, &trace);
+            std::fs::write(path, &text)
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            eprintln!("trace written to {path} ({} events)", trace.len());
+        }
+        if let Some(path) = args.get("flame-out") {
+            let tel = out.telemetry.as_ref().expect("telemetry enabled");
+            let folded = multi_fedls::telemetry::flamegraph_folded(tel);
+            std::fs::write(path, &folded)
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            eprintln!("collapsed stacks written to {path} ({} spans)", folded.lines().count());
+        }
+    }
     let stats = multi_fedls::coordinator::run_trials(&spec.config, spec.trials, spec.config.seed)?;
     if args.flag("json") {
         let j = multi_fedls::util::Json::obj()
@@ -346,10 +382,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `multi-fedls workload --spec FILE [--jobs N] [--json|--csv]
-/// [--results DIR] [--resume] [--no-persist]`: expand a multi-job workload
-/// campaign (arrival processes × admission policies × budget/deadline axes)
-/// and run each point's trials across the worker pool. Output is
-/// byte-identical for any `--jobs` value.
+/// [--results DIR] [--resume] [--no-persist] [--trace-out FILE]`: expand a
+/// multi-job workload campaign (arrival processes × admission policies ×
+/// budget/deadline axes) and run each point's trials across the worker
+/// pool. Output — including the `--trace-out` telemetry JSONL — is
+/// byte-identical for any `--jobs` value. `--trace-out` force-enables
+/// `[telemetry]` on every job and runs in-memory (no results directory).
 fn cmd_workload(args: &Args) -> anyhow::Result<()> {
     let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
     let spec = multi_fedls::workload::WorkloadSpec::from_file(std::path::Path::new(spec_path))?;
@@ -357,7 +395,19 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
         Some(j) => j.parse::<usize>().map_err(|e| anyhow::anyhow!("--jobs {j}: {e}"))?,
         None => spec.workers.unwrap_or(0), // 0 = one worker per core
     };
-    let points = spec.expand()?;
+    let mut points = spec.expand()?;
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() {
+        // Force telemetry on uniformly so the trace covers every job (and
+        // the fingerprint-relevant configs stay consistent across runs).
+        for p in &mut points {
+            for w in &mut p.trials {
+                for j in &mut w.jobs {
+                    j.cfg.telemetry.enabled = true;
+                }
+            }
+        }
+    }
     eprintln!(
         "workload {}: {} jobs × {} points × {} trials on {} workers",
         spec.name,
@@ -373,8 +423,19 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
         !(resume && args.flag("no-persist")),
         "--resume reads and writes the results directory; drop --no-persist"
     );
-    let persist = resume || !args.flag("no-persist");
-    let aggs = if persist {
+    anyhow::ensure!(
+        !(resume && trace_out.is_some()),
+        "--trace-out runs in-memory; drop --resume"
+    );
+    let persist = trace_out.is_none() && (resume || !args.flag("no-persist"));
+    let aggs = if let Some(path) = trace_out {
+        let (aggs, traces) =
+            multi_fedls::workload::spec::run_points_traced(&points, jobs)?;
+        let text: String = traces.concat();
+        std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("telemetry trace written to {path} ({} lines)", text.lines().count());
+        aggs
+    } else if persist {
         let results_dir = std::path::Path::new(args.get("results").unwrap_or("results"));
         let (aggs, dir) = multi_fedls::sweep::persist::run_workload_campaign_persistent(
             &spec,
@@ -396,6 +457,96 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
     } else {
         multi_fedls::workload::spec::render_table(&spec, &points, &aggs).print();
     }
+    Ok(())
+}
+
+/// `multi-fedls report <results-dir | trace.jsonl>`: summarize a telemetry
+/// trace — every `.jsonl` under a results directory (the `trace-NNNN.jsonl`
+/// files a persisted workload campaign writes), or one `--trace-out` file.
+/// Renders a per-completed-job table plus event-kind counts.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    use multi_fedls::util::bench::Table;
+    use multi_fedls::util::Json;
+    let target = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("report needs a results directory or a .jsonl trace file\n{USAGE}")
+    })?;
+    let path = std::path::Path::new(target);
+    let files: Vec<std::path::PathBuf> = if path.is_dir() {
+        let mut fs: Vec<std::path::PathBuf> = std::fs::read_dir(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(".jsonl"))
+            })
+            .collect();
+        fs.sort();
+        fs
+    } else {
+        vec![path.to_path_buf()]
+    };
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no .jsonl trace files under {} (run a workload with --trace-out, or point at a \
+         persisted campaign directory)",
+        path.display()
+    );
+    let mut n_events = 0usize;
+    let mut by_kind: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+    let mut jobs_table = Table::new(
+        "Telemetry report — completed jobs",
+        &["Job", "Tenant", "Pt/Trial", "Rounds", "Revoc", "Preempt", "Wait", "FL time", "Cost ($)"],
+    );
+    let mut completed = 0usize;
+    let mut total_cost = 0.0f64;
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{}: bad trace line: {e}", f.display()))?;
+            n_events += 1;
+            let kind = j.get("kind").and_then(|k| k.as_str()).unwrap_or("?").to_string();
+            *by_kind.entry(kind.clone()).or_insert(0) += 1;
+            if kind == "job-complete" {
+                let s = |key: &str| {
+                    j.get(key).and_then(|v| v.as_str()).unwrap_or("").to_string()
+                };
+                let n = |key: &str| j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                completed += 1;
+                total_cost += n("cost");
+                jobs_table.row(&[
+                    s("job"),
+                    s("tenant"),
+                    format!("{}/{}", n("point") as i64, n("trial") as i64),
+                    format!("{}", n("rounds") as i64),
+                    format!("{}", n("revocations") as i64),
+                    format!("{}", n("preemptions") as i64),
+                    SimTime::from_secs(n("wait_secs")).hms(),
+                    SimTime::from_secs(n("fl_secs")).hms(),
+                    format!("{:.2}", n("cost")),
+                ]);
+            }
+        }
+    }
+    if completed > 0 {
+        jobs_table.print();
+        println!();
+    }
+    let mut kinds = Table::new(
+        format!("Event kinds ({n_events} events, {} file(s))", files.len()),
+        &["Kind", "Count"],
+    );
+    for (k, c) in &by_kind {
+        kinds.row(&[k.clone(), c.to_string()]);
+    }
+    kinds.print();
+    println!("{completed} completed job(s), total cost ${total_cost:.2}");
     Ok(())
 }
 
@@ -421,13 +572,20 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         cfg.checkpoint_dir = Some(d.into());
     }
     let out = real_run(std::path::Path::new(artifacts), &cfg)?;
-    println!("round  loss      accuracy  failures  secs");
+    let mut t = multi_fedls::util::bench::Table::new(
+        format!("Real FL run — {} ({} rounds)", app_name, out.history.len()),
+        &["Round", "Loss", "Accuracy", "Failures", "Secs"],
+    );
     for r in &out.history {
-        println!(
-            "{:>5}  {:<8.4}  {:<8.4}  {:<8}  {:.2}",
-            r.round, r.loss, r.accuracy, r.failures, r.wall_secs
-        );
+        t.row(&[
+            r.round.to_string(),
+            format!("{:.4}", r.loss),
+            format!("{:.4}", r.accuracy),
+            r.failures.to_string(),
+            format!("{:.2}", r.wall_secs),
+        ]);
     }
+    t.print();
     println!("total failures handled: {}", out.total_failures);
     Ok(())
 }

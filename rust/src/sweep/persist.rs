@@ -180,6 +180,12 @@ impl CampaignStore {
         self.dir.join(format!("point-{idx:04}.toml"))
     }
 
+    /// Where one workload point's telemetry trace lands (JSONL; written only
+    /// when some job has `[telemetry]` enabled).
+    pub fn trace_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(format!("trace-{idx:04}.jsonl"))
+    }
+
     /// Record one point's aggregates.
     pub fn save_point(
         &self,
@@ -442,9 +448,21 @@ pub fn run_workload_campaign_persistent(
         let mut idx = 0;
         for &i in &missing {
             let n = points[i].trials.len();
-            let agg = crate::workload::WorkloadAgg::from_outcomes(&outs[idx..idx + n]);
+            let point_outs = &outs[idx..idx + n];
             idx += n;
+            let agg = crate::workload::WorkloadAgg::from_outcomes(point_outs);
             store.save_workload_point(i, &points[i], &agg)?;
+            // Telemetry trace (jobs with `[telemetry]` enabled): one JSONL
+            // file per recomputed point, trials concatenated in trial order.
+            let mut text = String::new();
+            for (ti, out) in point_outs.iter().enumerate() {
+                text.push_str(&crate::telemetry::trace_jsonl(i, ti, &out.trace));
+            }
+            if !text.is_empty() {
+                let path = store.trace_path(i);
+                std::fs::write(&path, text)
+                    .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+            }
             aggs[i] = Some(agg);
         }
     }

@@ -1,0 +1,425 @@
+//! The typed event vocabulary.
+//!
+//! Every observable state change in the simulator is one [`EventKind`]
+//! variant carrying structured fields (task, VM type, provider/region,
+//! market, cost-relevant quantities). The free-text lines the simulator
+//! historically emitted are now a *rendering* of these events
+//! ([`EventKind::render`]) — `tests/framework_parity.rs` pins the rendered
+//! strings to the frozen pre-refactor simulator character for character.
+//!
+//! Kinds split into two groups:
+//!
+//! * **core** events that the executor always records (initial mapping,
+//!   deferral, revocations, replacements, restores, preemption, teardown) —
+//!   telemetry-off emits exactly these, bit-identical to the historical
+//!   event log;
+//! * **telemetry-only** events (`Provision`, `RoundStart`/`RoundEnd`,
+//!   `CheckpointSave`) plus the workload-level kinds (`Arrival`,
+//!   `Admission`, `QuotaWait`, `PriceStep`, `AdmissionRetry`, `Rejection`,
+//!   `JobComplete`) that only appear when `[telemetry]` is enabled.
+
+use crate::simul::SimTime;
+use crate::util::Json;
+
+/// One structured simulation event (see the module docs for the split
+/// between always-on core kinds and telemetry-only kinds).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Initial Mapping solved (§4.2): the chosen placement plus the solver's
+    /// predicted per-round makespan/cost.
+    InitialMapping {
+        server: String,
+        clients: Vec<String>,
+        predicted_makespan: f64,
+        predicted_cost: f64,
+    },
+    /// Outlook deferral: provisioning delayed past a price spike.
+    Deferral { defer_secs: f64 },
+    /// Every VM booted; synchronous FL rounds begin.
+    FlStart,
+    /// A VM instance was requested (telemetry-only).
+    Provision {
+        task: String,
+        vm: String,
+        provider: String,
+        region: String,
+        spot: bool,
+        boot_done: SimTime,
+    },
+    /// A round attempt began (telemetry-only). One round may start several
+    /// times: every revocation voids the in-flight attempt.
+    RoundStart { round: u32, predicted_secs: f64 },
+    /// A round completed (telemetry-only); `egress_gb` is the round's
+    /// message-exchange volume across all clients (Eq. 6).
+    RoundEnd { round: u32, egress_gb: f64 },
+    /// The FT module saved a server-side checkpoint (telemetry-only).
+    CheckpointSave { round: u32 },
+    /// Several co-timed revocations processed as one batched event.
+    BatchedRevocation { count: usize },
+    /// A spot VM was revoked mid-round.
+    Revocation { task: String, vm: String, round: u32, provider: String, region: String },
+    /// The Dynamic Scheduler picked a replacement (§4.4).
+    Replacement { task: String, vm: String, value: f64, boot_done: SimTime },
+    /// Server loss rolled progress back to the freshest checkpoint (§4.3).
+    CheckpointRestore { restore_round: u32, lost: u32 },
+    /// Workload-level checkpoint-preemption halted the job.
+    Preemption { round: u32, lost: u32 },
+    /// All live VMs terminated.
+    Teardown { preempted: bool },
+    /// A job entered the cluster (workload-level, telemetry-only).
+    Arrival { job: String, tenant: String },
+    /// A job was admitted after `wait_secs` in the queue.
+    Admission { job: String, wait_secs: f64 },
+    /// Admission failed on residual quota; the job stays queued.
+    QuotaWait { job: String },
+    /// The cluster clock crossed a spot-price step; `factor` is the new
+    /// price multiplier.
+    PriceStep { factor: f64 },
+    /// A price step triggered an admission retry for a queued job.
+    AdmissionRetry { job: String },
+    /// A job was rejected (infeasible or admission policy).
+    Rejection { job: String, reason: String },
+    /// A job finished; the closing cost/progress summary.
+    JobComplete {
+        job: String,
+        tenant: String,
+        cost: f64,
+        rounds: u32,
+        revocations: u32,
+        preemptions: u32,
+        wait_secs: f64,
+        fl_secs: f64,
+    },
+}
+
+impl EventKind {
+    /// Stable machine-readable tag (the JSONL `kind` field).
+    pub fn key(&self) -> &'static str {
+        match self {
+            EventKind::InitialMapping { .. } => "initial-mapping",
+            EventKind::Deferral { .. } => "deferral",
+            EventKind::FlStart => "fl-start",
+            EventKind::Provision { .. } => "provision",
+            EventKind::RoundStart { .. } => "round-start",
+            EventKind::RoundEnd { .. } => "round-end",
+            EventKind::CheckpointSave { .. } => "checkpoint-save",
+            EventKind::BatchedRevocation { .. } => "batched-revocation",
+            EventKind::Revocation { .. } => "revocation",
+            EventKind::Replacement { .. } => "replacement",
+            EventKind::CheckpointRestore { .. } => "checkpoint-restore",
+            EventKind::Preemption { .. } => "preemption",
+            EventKind::Teardown { .. } => "teardown",
+            EventKind::Arrival { .. } => "arrival",
+            EventKind::Admission { .. } => "admission",
+            EventKind::QuotaWait { .. } => "quota-wait",
+            EventKind::PriceStep { .. } => "price-step",
+            EventKind::AdmissionRetry { .. } => "admission-retry",
+            EventKind::Rejection { .. } => "rejection",
+            EventKind::JobComplete { .. } => "job-complete",
+        }
+    }
+
+    /// True for the kinds the executor only records when telemetry is on.
+    pub fn telemetry_only(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Provision { .. }
+                | EventKind::RoundStart { .. }
+                | EventKind::RoundEnd { .. }
+                | EventKind::CheckpointSave { .. }
+                | EventKind::Arrival { .. }
+                | EventKind::Admission { .. }
+                | EventKind::QuotaWait { .. }
+                | EventKind::PriceStep { .. }
+                | EventKind::AdmissionRetry { .. }
+                | EventKind::Rejection { .. }
+                | EventKind::JobComplete { .. }
+        )
+    }
+
+    /// Human-readable line for this event at instant `at`. For the core
+    /// kinds this reproduces the historical free-text `what` strings
+    /// character for character (parity-enforced).
+    pub fn render(&self, at: SimTime) -> String {
+        match self {
+            EventKind::InitialMapping { server, clients, predicted_makespan, predicted_cost } => {
+                format!(
+                    "initial mapping: server={server} clients={clients:?} \
+                     (predicted round {predicted_makespan:.1}s, ${predicted_cost:.4})"
+                )
+            }
+            EventKind::Deferral { defer_secs } => {
+                format!("outlook: provisioning deferred {defer_secs:.0}s past the price spike")
+            }
+            EventKind::FlStart => "all VMs prepared; FL execution starts".into(),
+            EventKind::Provision { task, vm, provider, region, spot, boot_done } => {
+                format!(
+                    "provision: {task} on {vm} ({provider}/{region}, {}); booting until {}",
+                    if *spot { "spot" } else { "on-demand" },
+                    boot_done.hms()
+                )
+            }
+            EventKind::RoundStart { round, predicted_secs } => {
+                format!("round {round} started (predicted {predicted_secs:.1}s)")
+            }
+            EventKind::RoundEnd { round, egress_gb } => {
+                format!("round {round} complete ({egress_gb:.3} GB exchanged)")
+            }
+            EventKind::CheckpointSave { round } => {
+                format!("server checkpoint saved at round {round}")
+            }
+            EventKind::BatchedRevocation { count } => {
+                format!("batched event: {count} co-timed revocations")
+            }
+            EventKind::Revocation { task, vm, round, .. } => {
+                format!("revocation: {task} on {vm} during round {round}")
+            }
+            EventKind::Replacement { task, vm, value, boot_done } => {
+                format!(
+                    "dynamic scheduler: {task} → {vm} (value {value:.5}); booting until {}",
+                    boot_done.hms()
+                )
+            }
+            EventKind::CheckpointRestore { restore_round, lost } => {
+                format!("server restore from round {restore_round} (lost {lost} rounds)")
+            }
+            EventKind::Preemption { round, lost } => {
+                format!(
+                    "preempted at {} (checkpointed progress: round {round}, {lost} lost)",
+                    at.hms()
+                )
+            }
+            EventKind::Teardown { preempted } => {
+                if *preempted {
+                    "preemption teardown; VMs terminated".into()
+                } else {
+                    "all rounds complete; VMs terminated".into()
+                }
+            }
+            EventKind::Arrival { job, tenant } => {
+                format!("arrival: {job} (tenant {tenant})")
+            }
+            EventKind::Admission { job, wait_secs } => {
+                format!("admission: {job} after {wait_secs:.0}s in queue")
+            }
+            EventKind::QuotaWait { job } => {
+                format!("quota wait: {job} blocked on residual quota")
+            }
+            EventKind::PriceStep { factor } => {
+                format!("price step: spot factor now {factor:.3}×")
+            }
+            EventKind::AdmissionRetry { job } => {
+                format!("admission retry: {job} re-solved on the price step")
+            }
+            EventKind::Rejection { job, reason } => {
+                format!("rejection: {job} ({reason})")
+            }
+            EventKind::JobComplete { job, cost, rounds, revocations, .. } => {
+                format!(
+                    "job complete: {job} (${cost:.4}, {rounds} rounds, {revocations} revocations)"
+                )
+            }
+        }
+    }
+
+    /// Structured-field JSON for the JSONL sink (kind tag included; the
+    /// caller adds `at`/`job`/`tenant` envelope keys).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.insert("kind", self.key());
+        match self {
+            EventKind::InitialMapping { server, clients, predicted_makespan, predicted_cost } => {
+                j.insert("server", server.as_str());
+                j.insert("clients", clients.clone());
+                j.insert("predicted_makespan_secs", *predicted_makespan);
+                j.insert("predicted_cost", *predicted_cost);
+            }
+            EventKind::Deferral { defer_secs } => {
+                j.insert("defer_secs", *defer_secs);
+            }
+            EventKind::FlStart => {}
+            EventKind::Provision { task, vm, provider, region, spot, boot_done } => {
+                j.insert("task", task.as_str());
+                j.insert("vm", vm.as_str());
+                j.insert("provider", provider.as_str());
+                j.insert("region", region.as_str());
+                j.insert("market", if *spot { "spot" } else { "on-demand" });
+                j.insert("boot_done_secs", boot_done.secs());
+            }
+            EventKind::RoundStart { round, predicted_secs } => {
+                j.insert("round", *round as i64);
+                j.insert("predicted_secs", *predicted_secs);
+            }
+            EventKind::RoundEnd { round, egress_gb } => {
+                j.insert("round", *round as i64);
+                j.insert("egress_gb", *egress_gb);
+            }
+            EventKind::CheckpointSave { round } => {
+                j.insert("round", *round as i64);
+            }
+            EventKind::BatchedRevocation { count } => {
+                j.insert("count", *count as i64);
+            }
+            EventKind::Revocation { task, vm, round, provider, region } => {
+                j.insert("task", task.as_str());
+                j.insert("vm", vm.as_str());
+                j.insert("round", *round as i64);
+                j.insert("provider", provider.as_str());
+                j.insert("region", region.as_str());
+            }
+            EventKind::Replacement { task, vm, value, boot_done } => {
+                j.insert("task", task.as_str());
+                j.insert("vm", vm.as_str());
+                j.insert("value", *value);
+                j.insert("boot_done_secs", boot_done.secs());
+            }
+            EventKind::CheckpointRestore { restore_round, lost } => {
+                j.insert("restore_round", *restore_round as i64);
+                j.insert("rounds_lost", *lost as i64);
+            }
+            EventKind::Preemption { round, lost } => {
+                j.insert("round", *round as i64);
+                j.insert("rounds_lost", *lost as i64);
+            }
+            EventKind::Teardown { preempted } => {
+                j.insert("preempted", *preempted);
+            }
+            EventKind::Arrival { job, tenant } => {
+                j.insert("job", job.as_str());
+                j.insert("tenant", tenant.as_str());
+            }
+            EventKind::Admission { job, wait_secs } => {
+                j.insert("job", job.as_str());
+                j.insert("wait_secs", *wait_secs);
+            }
+            EventKind::QuotaWait { job } => {
+                j.insert("job", job.as_str());
+            }
+            EventKind::PriceStep { factor } => {
+                j.insert("factor", *factor);
+            }
+            EventKind::AdmissionRetry { job } => {
+                j.insert("job", job.as_str());
+            }
+            EventKind::Rejection { job, reason } => {
+                j.insert("job", job.as_str());
+                j.insert("reason", reason.as_str());
+            }
+            EventKind::JobComplete {
+                job,
+                tenant,
+                cost,
+                rounds,
+                revocations,
+                preemptions,
+                wait_secs,
+                fl_secs,
+            } => {
+                j.insert("job", job.as_str());
+                j.insert("tenant", tenant.as_str());
+                j.insert("cost", *cost);
+                j.insert("rounds", *rounds as i64);
+                j.insert("revocations", *revocations as i64);
+                j.insert("preemptions", *preemptions as i64);
+                j.insert("wait_secs", *wait_secs);
+                j.insert("fl_secs", *fl_secs);
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_renderings_match_the_historical_lines() {
+        let at = SimTime::from_secs(3723.0);
+        assert_eq!(
+            EventKind::InitialMapping {
+                server: "vm126".into(),
+                clients: vec!["vm126".into(), "vm138".into()],
+                predicted_makespan: 123.456,
+                predicted_cost: 1.23456,
+            }
+            .render(at),
+            "initial mapping: server=vm126 clients=[\"vm126\", \"vm138\"] \
+             (predicted round 123.5s, $1.2346)"
+        );
+        assert_eq!(
+            EventKind::Deferral { defer_secs: 10_800.0 }.render(at),
+            "outlook: provisioning deferred 10800s past the price spike"
+        );
+        assert_eq!(EventKind::FlStart.render(at), "all VMs prepared; FL execution starts");
+        assert_eq!(
+            EventKind::BatchedRevocation { count: 3 }.render(at),
+            "batched event: 3 co-timed revocations"
+        );
+        assert_eq!(
+            EventKind::Revocation {
+                task: "client-2".into(),
+                vm: "vm121".into(),
+                round: 7,
+                provider: "Cloud A".into(),
+                region: "Utah".into(),
+            }
+            .render(at),
+            "revocation: client-2 on vm121 during round 7"
+        );
+        assert_eq!(
+            EventKind::Replacement {
+                task: "server".into(),
+                vm: "vm138".into(),
+                value: 0.123456,
+                boot_done: SimTime::from_secs(3900.0),
+            }
+            .render(at),
+            format!(
+                "dynamic scheduler: server → vm138 (value 0.12346); booting until {}",
+                SimTime::from_secs(3900.0).hms()
+            )
+        );
+        assert_eq!(
+            EventKind::CheckpointRestore { restore_round: 5, lost: 2 }.render(at),
+            "server restore from round 5 (lost 2 rounds)"
+        );
+        assert_eq!(
+            EventKind::Preemption { round: 4, lost: 1 }.render(at),
+            format!("preempted at {} (checkpointed progress: round 4, 1 lost)", at.hms())
+        );
+        assert_eq!(
+            EventKind::Teardown { preempted: false }.render(at),
+            "all rounds complete; VMs terminated"
+        );
+        assert_eq!(
+            EventKind::Teardown { preempted: true }.render(at),
+            "preemption teardown; VMs terminated"
+        );
+    }
+
+    #[test]
+    fn telemetry_only_split_matches_the_executor_gating() {
+        assert!(!EventKind::FlStart.telemetry_only());
+        assert!(!EventKind::Teardown { preempted: false }.telemetry_only());
+        assert!(EventKind::RoundStart { round: 1, predicted_secs: 1.0 }.telemetry_only());
+        assert!(EventKind::CheckpointSave { round: 1 }.telemetry_only());
+        assert!(EventKind::PriceStep { factor: 1.5 }.telemetry_only());
+    }
+
+    #[test]
+    fn json_carries_the_kind_tag_and_structured_fields() {
+        let j = EventKind::Revocation {
+            task: "server".into(),
+            vm: "vm126".into(),
+            round: 3,
+            provider: "Cloud A".into(),
+            region: "Utah".into(),
+        }
+        .to_json();
+        let s = j.to_string_compact();
+        assert!(s.contains("\"kind\":\"revocation\""), "{s}");
+        assert!(s.contains("\"provider\":\"Cloud A\""), "{s}");
+        assert!(s.contains("\"round\":3"), "{s}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Deterministic counters and histograms.
+//!
+//! A [`MetricsRegistry`] is a `BTreeMap`-backed bag of named counters and
+//! fixed-bucket histograms. Everything about it is deterministic: names
+//! iterate in sorted order, histogram buckets are a fixed compile-time
+//! schedule, and [`MetricsRegistry::merge`] is plain addition — so merging
+//! per-trial registries *in trial index order* (the order
+//! `sweep::run_indexed` already guarantees) produces identical bits for
+//! any `--jobs N`.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Histogram bucket upper bounds in seconds (the last bucket is +∞).
+/// Log-ish schedule covering boot waits through multi-day campaigns.
+pub const BUCKET_BOUNDS: [f64; 12] = [
+    1.0, 10.0, 60.0, 300.0, 600.0, 1800.0, 3600.0, 7200.0, 14_400.0, 43_200.0, 86_400.0,
+    604_800.0,
+];
+
+/// A fixed-bucket histogram (counts per [`BUCKET_BOUNDS`] bucket plus an
+/// overflow bucket, with sum/min/max for the mean and range).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub counts: [u64; BUCKET_BOUNDS.len() + 1],
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; BUCKET_BOUNDS.len() + 1],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        let idx = BUCKET_BOUNDS.iter().position(|&b| v <= b).unwrap_or(BUCKET_BOUNDS.len());
+        self.counts[idx] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Named counters + histograms with deterministic merge (see module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to the named counter (creating it at zero).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record one observation in the named histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Additive merge: counters and bucket counts add, ranges widen. Merging
+    /// registries in a fixed order is associative on the counters and bucket
+    /// counts; histogram sums are f64 adds, so the fixed trial-index order
+    /// is what makes cross-worker results bit-identical.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// JSON form: `{counters: {...}, histograms: {name: {n, mean, min, max,
+    /// buckets}}}` with sorted keys (the `Json` writer sorts by design).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.insert(k, *v as i64);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.histograms {
+            let mut hj = Json::obj();
+            hj.insert("n", h.n as i64);
+            hj.insert("mean", h.mean());
+            if h.n > 0 {
+                hj.insert("min", h.min);
+                hj.insert("max", h.max);
+            }
+            hj.insert("buckets", h.counts.iter().map(|&c| c as i64).collect::<Vec<i64>>());
+            hists.insert(k, hj);
+        }
+        let mut j = Json::obj();
+        j.insert("counters", counters);
+        j.insert("histograms", hists);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_read_back() {
+        let mut m = MetricsRegistry::new();
+        m.inc("revocations", 2);
+        m.inc("revocations", 3);
+        assert_eq!(m.counter("revocations"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_cover_the_schedule() {
+        let mut h = Histogram::default();
+        h.observe(0.5); // bucket 0 (≤ 1 s)
+        h.observe(90.0); // ≤ 300 s → bucket 3
+        h.observe(1e9); // overflow
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+        assert_eq!(h.counts[BUCKET_BOUNDS.len()], 1);
+        assert_eq!(h.n, 3);
+        assert!((h.min - 0.5).abs() < 1e-12 && (h.max - 1e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn merge_is_additive_and_order_deterministic() {
+        let mut a = MetricsRegistry::new();
+        a.inc("x", 1);
+        a.observe("t", 5.0);
+        let mut b = MetricsRegistry::new();
+        b.inc("x", 2);
+        b.inc("y", 7);
+        b.observe("t", 50.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.counter("x"), 3);
+        assert_eq!(ab.counter("y"), 7);
+        let h = ab.histogram("t").unwrap();
+        assert_eq!(h.n, 2);
+        assert!((h.sum - 55.0).abs() < 1e-12);
+        // Same operands in the same order → identical bits.
+        let mut ab2 = a.clone();
+        ab2.merge(&b);
+        assert_eq!(ab, ab2);
+    }
+
+    #[test]
+    fn json_renders_sorted_and_stable() {
+        let mut m = MetricsRegistry::new();
+        m.inc("b", 1);
+        m.inc("a", 2);
+        m.observe("boot", 120.0);
+        let s = m.to_json().to_string_compact();
+        assert!(s.find("\"a\":2").unwrap() < s.find("\"b\":1").unwrap(), "{s}");
+        assert!(s.contains("\"boot\""), "{s}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Structured telemetry: typed events, sim-clock spans, metrics, sinks.
+//!
+//! The observability layer of the stack. Four pieces:
+//!
+//! * [`EventKind`] — the typed event vocabulary. The executor's event log
+//!   ([`crate::coordinator::sim::SimEvent`]) carries these instead of
+//!   free-text strings; [`EventKind::render`] reproduces the historical
+//!   human-readable lines character for character (parity-enforced).
+//! * [`span`] — `RoundSpan` / `VmLifetimeSpan` / `JobSpan` / `SolverSpan`
+//!   reconstructed post-hoc from the event log + billing ledger; per-VM
+//!   billed cost attributes exactly (bitwise) to the `Ledger` total.
+//! * [`MetricsRegistry`] — deterministic counters/histograms that merge
+//!   additively in trial index order (bit-identical for any `--jobs N`).
+//! * [`sink`] — JSONL event-log export (`--trace-out`), collapsed-stack
+//!   flamegraphs, and the structures behind `multi-fedls report`.
+//!
+//! Everything is gated by the `[telemetry]` spec table ([`TelemetrySpec`],
+//! off by default): telemetry-off runs are bit-identical to the
+//! pre-telemetry simulator — same arithmetic, same event list — and the
+//! enabled path only appends events and does one post-hoc pass, so the
+//! overhead is near zero either way (`benches/telemetry_overhead.rs`).
+
+pub mod event;
+pub mod metrics;
+pub mod sink;
+pub mod span;
+pub mod spec;
+
+pub use event::EventKind;
+pub use metrics::{Histogram, MetricsRegistry};
+pub use sink::{flamegraph_folded, trace_jsonl, TraceEvent};
+pub use span::{
+    build_job_telemetry, JobSpan, JobTelemetry, RoundSpan, SolverSpan, VmLifetimeSpan,
+};
+pub use spec::TelemetrySpec;

@@ -1,0 +1,143 @@
+//! Telemetry sinks: the JSONL event log and the collapsed-stack flamegraph.
+//!
+//! * **JSONL** — one compact JSON object per line, keys sorted (the `Json`
+//!   writer sorts by construction), floats rendered by the deterministic
+//!   shortest-representation formatter. Because workload trials are
+//!   expanded with fixed seeds and executed index-ordered, the bytes are
+//!   identical for any `--jobs N` (CI diffs `--jobs 1` vs `--jobs 4`).
+//! * **Flamegraph** — `folded` collapsed-stack lines (`frame;frame weight`)
+//!   over the span tree, weights in integer sim-milliseconds; feed to any
+//!   `flamegraph.pl`-compatible renderer.
+
+use crate::util::Json;
+
+use super::{EventKind, JobTelemetry};
+
+/// One event on the workload's cluster clock, attributed to a job/tenant
+/// (`None` for cluster-level events like price steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Cluster time in seconds (job-local event times are re-anchored by
+    /// the admission instant when segments are spliced in).
+    pub at: f64,
+    pub job: Option<String>,
+    pub tenant: Option<String>,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// The JSONL line object: `at`/`job`/`tenant` envelope + the kind's
+    /// structured fields.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.kind.to_json();
+        j.insert("at", self.at);
+        if let Some(job) = &self.job {
+            j.insert("job", job.as_str());
+        }
+        if let Some(tenant) = &self.tenant {
+            j.insert("tenant", tenant.as_str());
+        }
+        j
+    }
+}
+
+/// Render one trial's trace as JSONL, tagging every line with the grid
+/// point and trial index so concatenated campaign traces stay attributable.
+pub fn trace_jsonl(point: usize, trial: usize, trace: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in trace {
+        let mut j = e.to_json();
+        j.insert("point", point as i64);
+        j.insert("trial", trial as i64);
+        out.push_str(&j.to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Collapsed-stack flamegraph of one job's span tree. Frames:
+///
+/// ```text
+/// job;setup                      (submission → FL start: boot/deferral)
+/// job;fl;round-N                 (completed round attempts)
+/// job;fl;round-N-voided          (attempts voided by revocation/preemption)
+/// vms;PROVIDER;VMTYPE#INSTANCE   (billed VM lifetimes)
+/// ```
+///
+/// Weights are integer sim-milliseconds (rounded), one line per frame,
+/// deterministic order (span order is event/ledger order).
+pub fn flamegraph_folded(tel: &JobTelemetry) -> String {
+    let ms = |secs: f64| -> u64 { (secs * 1000.0).round().max(0.0) as u64 };
+    let mut out = String::new();
+    let setup = tel.job.fl_start - tel.job.start;
+    if setup > 0.0 {
+        out.push_str(&format!("job;setup {}\n", ms(setup)));
+    }
+    for r in &tel.rounds {
+        let suffix = if r.completed { "" } else { "-voided" };
+        out.push_str(&format!("job;fl;round-{}{} {}\n", r.round, suffix, ms(r.end - r.start)));
+    }
+    for v in &tel.vms {
+        out.push_str(&format!(
+            "vms;{};{}#{} {}\n",
+            v.provider.replace([' ', ';'], "-"),
+            v.vm,
+            v.instance,
+            ms(v.end - v.start)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{JobSpan, MetricsRegistry, RoundSpan, VmLifetimeSpan};
+
+    #[test]
+    fn jsonl_lines_carry_envelope_and_kind_fields() {
+        let trace = vec![
+            TraceEvent {
+                at: 0.0,
+                job: Some("til-0".into()),
+                tenant: Some("acme".into()),
+                kind: EventKind::Arrival { job: "til-0".into(), tenant: "acme".into() },
+            },
+            TraceEvent { at: 3600.0, job: None, tenant: None, kind: EventKind::PriceStep { factor: 1.8 } },
+        ];
+        let text = trace_jsonl(2, 1, &trace);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"kind\":\"arrival\"") && lines[0].contains("\"point\":2"));
+        assert!(lines[1].contains("\"factor\":1.8") && lines[1].contains("\"trial\":1"));
+        assert!(lines[0].starts_with('{') && lines[0].ends_with('}'));
+    }
+
+    #[test]
+    fn flamegraph_folds_rounds_and_vms_with_ms_weights() {
+        let tel = JobTelemetry {
+            job: JobSpan { start: 0.0, end: 400.0, fl_start: 120.5, fl_end: 400.0 },
+            rounds: vec![
+                RoundSpan { round: 1, start: 120.5, end: 220.5, completed: true },
+                RoundSpan { round: 2, start: 220.5, end: 300.0, completed: false },
+            ],
+            vms: vec![VmLifetimeSpan {
+                vm: "vm126".into(),
+                instance: 1,
+                provider: "Cloud A".into(),
+                region: "Utah".into(),
+                spot: true,
+                start: 0.0,
+                end: 400.0,
+                billed_cost: 0.5,
+            }],
+            solver: Vec::new(),
+            metrics: MetricsRegistry::new(),
+        };
+        let folded = flamegraph_folded(&tel);
+        assert!(folded.contains("job;setup 120500\n"), "{folded}");
+        assert!(folded.contains("job;fl;round-1 100000\n"), "{folded}");
+        assert!(folded.contains("job;fl;round-2-voided 79500\n"), "{folded}");
+        assert!(folded.contains("vms;Cloud-A;vm126#1 400000\n"), "{folded}");
+    }
+}

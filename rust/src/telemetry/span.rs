@@ -1,0 +1,288 @@
+//! The span model: sim-clock intervals reconstructed from the typed event
+//! log plus the billing ledger.
+//!
+//! Spans are built *post-hoc* at the end of one executor run — the hot loop
+//! never maintains span state, which is what keeps the telemetry-off (and
+//! even telemetry-on) overhead near zero. Cost attribution is exact by
+//! construction: every [`VmLifetimeSpan::billed_cost`] is the ledger's own
+//! per-charge arithmetic ([`Ledger::charge_cost`]), summed in charge order,
+//! so the span total equals [`Ledger::vm_cost`] bit for bit
+//! (`tests/telemetry.rs` enforces this on the Table 5 configuration).
+
+use crate::cloud::{Catalog, Market};
+use crate::cloudsim::Ledger;
+use crate::coordinator::sim::SimEvent;
+use crate::simul::SimTime;
+
+use super::{EventKind, MetricsRegistry, TelemetrySpec};
+
+/// The root span: one job from submission (t = 0) to teardown, with the FL
+/// execution window inside it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpan {
+    pub start: f64,
+    pub end: f64,
+    pub fl_start: f64,
+    pub fl_end: f64,
+}
+
+/// One round *attempt*: opened at `RoundStart`, closed by `RoundEnd`
+/// (`completed = true`) or by the revocation/preemption that voided it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundSpan {
+    pub round: u32,
+    pub start: f64,
+    pub end: f64,
+    pub completed: bool,
+}
+
+/// One billed VM charge as a span: provision to termination (or `now` for
+/// a charge still open), with the ledger's exact billed cost attached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmLifetimeSpan {
+    pub vm: String,
+    pub instance: u64,
+    pub provider: String,
+    pub region: String,
+    pub spot: bool,
+    pub start: f64,
+    pub end: f64,
+    pub billed_cost: f64,
+}
+
+/// One solver invocation (instantaneous on the sim clock — solving takes
+/// zero simulated time; the span records *when* and *why* it ran).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverSpan {
+    pub what: String,
+    pub at: f64,
+}
+
+/// Everything telemetry collected for one executor run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTelemetry {
+    pub job: JobSpan,
+    pub rounds: Vec<RoundSpan>,
+    pub vms: Vec<VmLifetimeSpan>,
+    pub solver: Vec<SolverSpan>,
+    pub metrics: MetricsRegistry,
+}
+
+impl JobTelemetry {
+    /// Sum of per-VM billed costs, in charge order — must equal the
+    /// ledger's `vm_cost` bit for bit (same addends, same order).
+    pub fn vm_billed_total(&self) -> f64 {
+        self.vms.iter().map(|s| s.billed_cost).sum()
+    }
+}
+
+/// Reconstruct spans + metrics from one run's event log and ledger.
+/// `now` is the teardown instant, `fl_start` the instant FL rounds began.
+pub fn build_job_telemetry(
+    spec: &TelemetrySpec,
+    catalog: &Catalog,
+    ledger: &Ledger,
+    events: &[SimEvent],
+    now: SimTime,
+    fl_start: SimTime,
+) -> JobTelemetry {
+    let mut rounds = Vec::new();
+    let mut vms = Vec::new();
+    let mut solver = Vec::new();
+    if spec.spans {
+        // Round spans: pair each RoundStart with the event that ends the
+        // attempt (RoundEnd, or the revocation/preemption voiding it).
+        let mut open: Option<(u32, f64)> = None;
+        for e in events {
+            match &e.kind {
+                EventKind::RoundStart { round, .. } => open = Some((*round, e.at.secs())),
+                EventKind::RoundEnd { round, .. } => {
+                    if let Some((r, start)) = open.take() {
+                        debug_assert_eq!(r, *round);
+                        rounds.push(RoundSpan {
+                            round: r,
+                            start,
+                            end: e.at.secs(),
+                            completed: true,
+                        });
+                    }
+                }
+                EventKind::BatchedRevocation { .. }
+                | EventKind::Revocation { .. }
+                | EventKind::Preemption { .. } => {
+                    if let Some((r, start)) = open.take() {
+                        rounds.push(RoundSpan {
+                            round: r,
+                            start,
+                            end: e.at.secs(),
+                            completed: false,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        // A round still open at teardown (preempted mid-boot) closes there.
+        if let Some((r, start)) = open.take() {
+            rounds.push(RoundSpan { round: r, start, end: now.secs(), completed: false });
+        }
+
+        for c in &ledger.vm_charges {
+            let vm = catalog.vm(c.vm_type);
+            vms.push(VmLifetimeSpan {
+                vm: vm.id.clone(),
+                instance: c.vm.0,
+                provider: catalog.provider(catalog.provider_of(c.vm_type)).name.clone(),
+                region: catalog.region(catalog.region_of(c.vm_type)).name.clone(),
+                spot: c.market == Market::Spot,
+                start: c.start.secs(),
+                end: c.end.unwrap_or(now).secs(),
+                billed_cost: ledger.charge_cost(c, now),
+            });
+        }
+
+        for e in events {
+            match &e.kind {
+                EventKind::InitialMapping { .. } => {
+                    solver.push(SolverSpan { what: "initial-mapping".into(), at: e.at.secs() })
+                }
+                EventKind::Replacement { .. } => {
+                    solver.push(SolverSpan { what: "dynsched-replacement".into(), at: e.at.secs() })
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut metrics = MetricsRegistry::new();
+    if spec.metrics {
+        for e in events {
+            metrics.inc(&format!("events.{}", e.kind.key()), 1);
+            match &e.kind {
+                EventKind::Deferral { defer_secs } => {
+                    metrics.observe("deferral_secs", *defer_secs);
+                }
+                EventKind::Provision { boot_done, .. }
+                | EventKind::Replacement { boot_done, .. } => {
+                    metrics.observe("boot_secs", (*boot_done - e.at).max(0.0));
+                }
+                EventKind::CheckpointRestore { lost, .. } => {
+                    metrics.inc("rounds.lost", u64::from(*lost));
+                }
+                EventKind::Preemption { lost, .. } => {
+                    metrics.inc("rounds.lost", u64::from(*lost));
+                }
+                EventKind::RoundEnd { egress_gb, .. } => {
+                    metrics.inc("rounds.completed", 1);
+                    metrics.observe("round_egress_gb", *egress_gb);
+                }
+                _ => {}
+            }
+        }
+        metrics.inc(
+            "solver.invocations",
+            metrics.counter("events.initial-mapping") + metrics.counter("events.replacement"),
+        );
+        for span in &rounds {
+            if span.completed {
+                metrics.observe("round_secs", span.end - span.start);
+            }
+        }
+        for span in &vms {
+            metrics.observe("vm_billed_cost", span.billed_cost);
+            metrics.observe("vm_lifetime_secs", span.end - span.start);
+        }
+    }
+
+    JobTelemetry {
+        job: JobSpan {
+            start: 0.0,
+            end: now.secs(),
+            fl_start: fl_start.secs(),
+            fl_end: now.secs(),
+        },
+        rounds,
+        vms,
+        solver,
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, kind: EventKind) -> SimEvent {
+        SimEvent { at: SimTime::from_secs(at), kind }
+    }
+
+    #[test]
+    fn round_spans_pair_starts_with_their_closers() {
+        let cat = crate::cloud::tables::cloudlab();
+        let ledger = Ledger::new();
+        let events = vec![
+            ev(0.0, EventKind::RoundStart { round: 1, predicted_secs: 100.0 }),
+            ev(100.0, EventKind::RoundEnd { round: 1, egress_gb: 2.0 }),
+            ev(100.0, EventKind::RoundStart { round: 2, predicted_secs: 100.0 }),
+            ev(
+                150.0,
+                EventKind::Revocation {
+                    task: "server".into(),
+                    vm: "vm126".into(),
+                    round: 2,
+                    provider: "Cloud A".into(),
+                    region: "Utah".into(),
+                },
+            ),
+            ev(400.0, EventKind::RoundStart { round: 2, predicted_secs: 100.0 }),
+            ev(500.0, EventKind::RoundEnd { round: 2, egress_gb: 2.0 }),
+        ];
+        let tel = build_job_telemetry(
+            &TelemetrySpec::on(),
+            &cat,
+            &ledger,
+            &events,
+            SimTime::from_secs(500.0),
+            SimTime::ZERO,
+        );
+        assert_eq!(tel.rounds.len(), 3);
+        assert!(tel.rounds[0].completed);
+        assert!(!tel.rounds[1].completed);
+        assert!((tel.rounds[1].end - 150.0).abs() < 1e-12);
+        assert!(tel.rounds[2].completed);
+        assert_eq!(tel.metrics.counter("rounds.completed"), 2);
+        assert_eq!(tel.metrics.counter("events.revocation"), 1);
+        let h = tel.metrics.histogram("round_secs").unwrap();
+        assert_eq!(h.n, 2);
+    }
+
+    #[test]
+    fn vm_spans_bill_exactly_what_the_ledger_bills() {
+        use crate::cloudsim::VmId;
+        let cat = crate::cloud::tables::cloudlab();
+        let mut ledger = Ledger::new();
+        let vm126 = cat.vm_by_id("vm126").unwrap();
+        let vm121 = cat.vm_by_id("vm121").unwrap();
+        ledger.open_vm(&cat, VmId(1), vm126, Market::OnDemand, SimTime::ZERO);
+        ledger.open_vm(&cat, VmId(2), vm121, Market::Spot, SimTime::ZERO);
+        ledger.close_vm(VmId(2), SimTime::from_secs(1800.0));
+        let now = SimTime::from_secs(3600.0);
+        let tel = build_job_telemetry(&TelemetrySpec::on(), &cat, &ledger, &[], now, SimTime::ZERO);
+        assert_eq!(tel.vms.len(), 2);
+        assert_eq!(tel.vm_billed_total().to_bits(), ledger.vm_cost(now).to_bits());
+        assert!(tel.vms[1].spot);
+        assert_eq!(tel.vms[0].provider, "Cloud A");
+    }
+
+    #[test]
+    fn spans_flag_gates_the_span_model_but_not_metrics() {
+        let cat = crate::cloud::tables::cloudlab();
+        let ledger = Ledger::new();
+        let spec = TelemetrySpec { enabled: true, spans: false, metrics: true };
+        let events = vec![ev(0.0, EventKind::FlStart)];
+        let tel =
+            build_job_telemetry(&spec, &cat, &ledger, &events, SimTime::from_secs(1.0), SimTime::ZERO);
+        assert!(tel.rounds.is_empty() && tel.vms.is_empty() && tel.solver.is_empty());
+        assert_eq!(tel.metrics.counter("events.fl-start"), 1);
+    }
+}

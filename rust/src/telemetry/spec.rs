@@ -1,0 +1,98 @@
+//! The `[telemetry]` spec table.
+//!
+//! Presence enables: a job spec carrying a `[telemetry]` table (even an
+//! empty one) turns the telemetry layer on for that job; without the table
+//! the executor's arithmetic *and* its event log are bit-identical to the
+//! telemetry-less simulator (parity-enforced by `tests/telemetry.rs`).
+//!
+//! ```toml
+//! [telemetry]
+//! enabled = true   # default true when the table is present
+//! spans   = true   # build Round/VmLifetime/Job/Solver spans
+//! metrics = true   # build the counters/histogram registry
+//! ```
+
+use crate::util::tomlmini::{self, Value};
+use std::collections::BTreeMap;
+
+type Tbl = BTreeMap<String, Value>;
+
+/// Parsed `[telemetry]` table (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySpec {
+    /// Master gate: off means no extra events, no spans, no metrics.
+    pub enabled: bool,
+    /// Build the span model ([`super::JobTelemetry::vms`] etc.).
+    pub spans: bool,
+    /// Build the [`super::MetricsRegistry`].
+    pub metrics: bool,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec { enabled: false, spans: true, metrics: true }
+    }
+}
+
+impl TelemetrySpec {
+    /// A fully-enabled spec (what `--trace-out` forces per job).
+    pub fn on() -> TelemetrySpec {
+        TelemetrySpec { enabled: true, ..TelemetrySpec::default() }
+    }
+
+    /// Parse a `[telemetry]` table. Table presence enables telemetry unless
+    /// the table itself says `enabled = false`.
+    pub fn from_table(tbl: &Tbl) -> anyhow::Result<TelemetrySpec> {
+        let flag = |key: &str, default: bool| -> anyhow::Result<bool> {
+            match tbl.get(key) {
+                None => Ok(default),
+                Some(Value::Bool(b)) => Ok(*b),
+                Some(_) => anyhow::bail!("[telemetry] {key} must be a boolean"),
+            }
+        };
+        let enabled = flag("enabled", true)?;
+        let spans = flag("spans", true)?;
+        let metrics = flag("metrics", true)?;
+        tomlmini::reject_unknown_keys(tbl, &["enabled", "spans", "metrics"], "[telemetry]")?;
+        Ok(TelemetrySpec { enabled, spans, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> anyhow::Result<TelemetrySpec> {
+        let root = tomlmini::parse(text).unwrap();
+        let Some(Value::Table(tbl)) = root.get("telemetry") else {
+            panic!("fixture must contain a [telemetry] table");
+        };
+        TelemetrySpec::from_table(tbl)
+    }
+
+    #[test]
+    fn default_is_disabled_and_table_presence_enables() {
+        assert!(!TelemetrySpec::default().enabled);
+        let spec = parse("[telemetry]\n").unwrap();
+        assert!(spec.enabled && spec.spans && spec.metrics);
+    }
+
+    #[test]
+    fn parses_all_keys() {
+        let spec =
+            parse("[telemetry]\nenabled = true\nspans = false\nmetrics = true\n").unwrap();
+        assert!(spec.enabled);
+        assert!(!spec.spans);
+        assert!(spec.metrics);
+        let off = parse("[telemetry]\nenabled = false\n").unwrap();
+        assert!(!off.enabled);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_types() {
+        let err = parse("[telemetry]\nverbose = true\n").unwrap_err().to_string();
+        assert!(err.contains("verbose"), "{err}");
+        let err = parse("[telemetry]\nspans = 3\n").unwrap_err().to_string();
+        assert!(err.contains("spans"), "{err}");
+    }
+}

@@ -21,13 +21,59 @@ impl Json {
 
     /// Insert into an object; panics on non-objects (builder misuse).
     pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
-        match &mut self {
+        self.insert(key, value);
+        self
+    }
+
+    /// In-place insert into an object; panics on non-objects (builder
+    /// misuse). The by-reference sibling of [`Json::set`].
+    pub fn insert(&mut self, key: &str, value: impl Into<Json>) {
+        match self {
             Json::Obj(m) => {
                 m.insert(key.to_string(), value.into());
             }
-            _ => panic!("Json::set on non-object"),
+            _ => panic!("Json::insert on non-object"),
         }
-        self
+    }
+
+    /// Object field lookup (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (the reader side of this writer — accepts
+    /// standard JSON; numbers become `Num(f64)`).
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        anyhow::ensure!(pos == b.len(), "trailing characters at byte {pos}");
+        Ok(v)
     }
 
     pub fn to_string_pretty(&self) -> String {
@@ -120,6 +166,153 @@ impl Json {
                 out.push_str(&close_pad);
                 out.push('}');
             }
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> anyhow::Result<()> {
+    skip_ws(b, pos);
+    anyhow::ensure!(
+        *pos < b.len() && b[*pos] == c,
+        "expected `{}` at byte {pos}",
+        c as char
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    _ => anyhow::bail!("object key must be a string at byte {pos}"),
+                };
+                expect(b, pos, b':')?;
+                m.insert(key, parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    _ => anyhow::bail!("expected `,` or `}}` at byte {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Json::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(xs));
+                    }
+                    _ => anyhow::bail!("expected `,` or `]` at byte {pos}"),
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                anyhow::ensure!(*pos < b.len(), "unterminated string");
+                match b[*pos] {
+                    b'"' => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    b'\\' => {
+                        *pos += 1;
+                        anyhow::ensure!(*pos < b.len(), "unterminated escape");
+                        match b[*pos] {
+                            b'"' => s.push('"'),
+                            b'\\' => s.push('\\'),
+                            b'/' => s.push('/'),
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                anyhow::ensure!(*pos + 4 < b.len(), "truncated \\u escape");
+                                let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                                    .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+                                let cp = u32::from_str_radix(hex, 16)
+                                    .map_err(|_| anyhow::anyhow!("bad \\u escape `{hex}`"))?;
+                                s.push(
+                                    char::from_u32(cp)
+                                        .ok_or_else(|| anyhow::anyhow!("bad codepoint {cp}"))?,
+                                );
+                                *pos += 4;
+                            }
+                            c => anyhow::bail!("bad escape `\\{}`", c as char),
+                        }
+                        *pos += 1;
+                    }
+                    _ => {
+                        // Consume one UTF-8 scalar (the input is a &str, so
+                        // slicing at char boundaries is safe).
+                        let start = *pos;
+                        *pos += 1;
+                        while *pos < b.len() && (b[*pos] & 0xC0) == 0x80 {
+                            *pos += 1;
+                        }
+                        s.push_str(std::str::from_utf8(&b[start..*pos]).expect("utf8 input"));
+                    }
+                }
+            }
+        }
+        b't' if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        b'f' if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        b'n' if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let word = std::str::from_utf8(&b[start..*pos]).expect("ascii number");
+            word.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| anyhow::anyhow!("invalid JSON value `{word}` at byte {start}"))
         }
     }
 }
@@ -217,5 +410,34 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::Arr(vec![]).to_string_compact(), "[]");
         assert_eq!(Json::obj().to_string_compact(), "{}");
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = Json::obj()
+            .set("name", "til \"x\"\n")
+            .set("rounds", 10i64)
+            .set("cost", 15.44)
+            .set("spot", true)
+            .set("none", Json::Null)
+            .set("xs", vec![1i64, 2, 3])
+            .set("inner", Json::obj().set("a", -2.5));
+        for text in [j.to_string_compact(), j.to_string_pretty()] {
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back, j, "round trip failed for {text}");
+        }
+    }
+
+    #[test]
+    fn parse_accessors_and_errors() {
+        let j = Json::parse(r#"{"a": [1, {"b": "c"}], "n": 1e3}"#).unwrap();
+        assert_eq!(j.get("n").and_then(Json::as_f64), Some(1000.0));
+        let arr = j.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[1].get("b").and_then(Json::as_str), Some("c"));
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("nope").is_err());
+        assert_eq!(Json::parse("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
     }
 }

@@ -74,9 +74,12 @@ use crate::framework::{
 };
 use crate::mapping::problem::MappingProblem;
 use crate::mapping::MappingSolution;
+use crate::market::MarketView;
 use crate::outlook::MarketOutlook;
 use crate::presched::SlowdownReport;
+use crate::simul::SimTime;
 use crate::sweep::MetricAgg;
+use crate::telemetry::{EventKind, TraceEvent};
 
 /// The job's [`MarketOutlook`] on the shared cluster clock, when its
 /// `[outlook]` table is enabled. The workload layers consult it for
@@ -487,6 +490,11 @@ pub struct WorkloadOutcome {
     /// it proves no bound was exceeded at any simulated instant).
     pub reservations: Vec<Reservation>,
     pub stats: WorkloadStats,
+    /// Cluster-clock telemetry trace, time-ordered: per-job simulator events
+    /// re-anchored at their admission instants plus the workload-level kinds
+    /// (arrival/admission/quota-wait/price-step/retry/rejection/completion).
+    /// Empty unless some job has `[telemetry]` enabled.
+    pub trace: Vec<TraceEvent>,
 }
 
 impl Workload {
@@ -563,6 +571,9 @@ impl Workload {
                 .enumerate()
                 .map(|(i, j)| (j.arrival_secs, Ev::Arrival(i)))
                 .collect(),
+            tracing: self.jobs.iter().any(|j| j.cfg.telemetry.enabled),
+            in_trial: false,
+            trace: Vec::new(),
         };
         eng.run()?;
 
@@ -571,7 +582,11 @@ impl Workload {
         let reservations =
             eng.ledger.lock().expect("quota ledger poisoned").reservations.clone();
         let stats = WorkloadStats::from_records(&jobs);
-        Ok(WorkloadOutcome { jobs, reservations, stats })
+        // Splice order is deterministic, so the stable sort leaves same-
+        // instant events in a reproducible order for any worker count.
+        let mut trace = eng.trace;
+        trace.sort_by(|a, b| a.at.total_cmp(&b.at));
+        Ok(WorkloadOutcome { jobs, reservations, stats, trace })
     }
 }
 
@@ -621,6 +636,10 @@ struct RunningSeg {
     run_cfg: SimConfig,
     sol: MappingSolution,
     log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>>,
+    /// The optimistic full-run event log (job-local clock). Spliced onto the
+    /// cluster trace only when the segment actually retires at `completion`;
+    /// a preemption discards it and splices the truncated replay instead.
+    events: Vec<crate::coordinator::sim::SimEvent>,
 }
 
 /// One workload execution in flight (see module docs for semantics).
@@ -637,6 +656,13 @@ struct Engine<'e> {
     running: Vec<RunningSeg>,
     pending: Vec<usize>,
     events: Vec<(f64, Ev)>,
+    /// Any job has `[telemetry]` enabled (gates all trace work).
+    tracing: bool,
+    /// Inside a preemption-trial admission attempt: a failed trial is
+    /// hypothetical, so its quota-wait must not be traced (a successful one
+    /// is a real admission and traces normally).
+    in_trial: bool,
+    trace: Vec<TraceEvent>,
 }
 
 impl Engine<'_> {
@@ -645,11 +671,14 @@ impl Engine<'_> {
             let t = self.events.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
             // Drain every event at exactly `t`, then run one admission pass.
             let mut arrivals: Vec<usize> = Vec::new();
+            let mut price_step = false;
             let mut k = 0;
             while k < self.events.len() {
                 if self.events[k].0 == t {
-                    if let (_, Ev::Arrival(job)) = self.events.swap_remove(k) {
-                        arrivals.push(job);
+                    match self.events.swap_remove(k).1 {
+                        Ev::Arrival(job) => arrivals.push(job),
+                        Ev::PriceStep => price_step = true,
+                        Ev::Capacity(_) => {}
                     }
                 } else {
                     k += 1;
@@ -658,6 +687,9 @@ impl Engine<'_> {
             arrivals.sort_unstable();
             for j in arrivals {
                 self.arrive(j, t);
+            }
+            if price_step && self.tracing {
+                self.trace_price_step(t);
             }
             self.admission_pass(t)?;
             self.schedule_price_retry(t);
@@ -670,8 +702,45 @@ impl Engine<'_> {
         Ok(())
     }
 
+    /// Trace a price-step instant: the cluster-level step itself (the new
+    /// factor read off the first pending job's shared-clock market) plus an
+    /// admission-retry marker per still-queued job.
+    fn trace_price_step(&mut self, t: f64) {
+        let mut queued: Vec<usize> = self.pending.clone();
+        queued.sort_unstable();
+        if let Some(&j0) = queued.first() {
+            let factor = MarketView::new(&self.w.jobs[j0].cfg.market)
+                .price_factor_at(SimTime::from_secs(t));
+            self.trace.push(TraceEvent {
+                at: t,
+                job: None,
+                tenant: None,
+                kind: EventKind::PriceStep { factor },
+            });
+        }
+        for j in queued {
+            let jr = &self.w.jobs[j];
+            if jr.cfg.telemetry.enabled {
+                self.trace.push(TraceEvent {
+                    at: t,
+                    job: Some(jr.name.clone()),
+                    tenant: Some(jr.tenant.clone()),
+                    kind: EventKind::AdmissionRetry { job: jr.name.clone() },
+                });
+            }
+        }
+    }
+
     fn arrive(&mut self, j: usize, t: f64) {
         let jr = &self.w.jobs[j];
+        if jr.cfg.telemetry.enabled {
+            self.trace.push(TraceEvent {
+                at: t,
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                kind: EventKind::Arrival { job: jr.name.clone(), tenant: jr.tenant.clone() },
+            });
+        }
         let profile = jr.cfg.app.profile();
         let p = MappingProblem {
             catalog: &self.catalog,
@@ -706,6 +775,17 @@ impl Engine<'_> {
                 // Infeasible even on an idle environment, at a price level
                 // that will never change: reject.
                 self.records[j] = Some(rejected_record(jr));
+                if jr.cfg.telemetry.enabled {
+                    self.trace.push(TraceEvent {
+                        at: t,
+                        job: Some(jr.name.clone()),
+                        tenant: Some(jr.tenant.clone()),
+                        kind: EventKind::Rejection {
+                            job: jr.name.clone(),
+                            reason: "infeasible on an idle environment".into(),
+                        },
+                    });
+                }
             }
         }
     }
@@ -715,7 +795,19 @@ impl Engine<'_> {
     /// greedy like the static multijob planner); a blocked job may
     /// checkpoint-preempt victims the scheduler nominates.
     fn admission_pass(&mut self, t: f64) -> anyhow::Result<()> {
-        self.running.retain(|r| r.completion > t);
+        // Retire segments that completed at or before `t` (their completion
+        // event is what scheduled this pass), splicing their traces.
+        // (`Vec::remove`, not `swap_remove`: the survivors' order feeds the
+        // scheduler views, and the old `retain` preserved it.)
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].completion <= t {
+                let seg = self.running.remove(i);
+                self.retire_segment(seg);
+            } else {
+                i += 1;
+            }
+        }
         let order = {
             let (jobs_v, running_v, service) = self.sched_views(t);
             let ctx = SchedCtx {
@@ -762,7 +854,10 @@ impl Engine<'_> {
                 let snapshot =
                     self.ledger.lock().expect("quota ledger poisoned").reservations.clone();
                 self.truncate_reservations(victim, t);
-                if self.try_admit(j, t)? {
+                self.in_trial = true;
+                let admitted = self.try_admit(j, t);
+                self.in_trial = false;
+                if admitted? {
                     self.finalize_preemption(victim, t)?;
                     admitted_now.push(j);
                     break;
@@ -804,7 +899,7 @@ impl Engine<'_> {
         } else if self.events.is_empty() {
             let leftovers: Vec<usize> = self.pending.drain(..).collect();
             for j in leftovers {
-                self.reject(j);
+                self.reject(j, t);
             }
         }
     }
@@ -812,8 +907,19 @@ impl Engine<'_> {
     /// Final rejection of a queued job. A checkpoint-preempted job that
     /// lands here keeps its actual spend and checkpointed progress (it did
     /// run), just no completion.
-    fn reject(&mut self, j: usize) {
+    fn reject(&mut self, j: usize, t: f64) {
         let jr = &self.w.jobs[j];
+        if jr.cfg.telemetry.enabled {
+            self.trace.push(TraceEvent {
+                at: t,
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                kind: EventKind::Rejection {
+                    job: jr.name.clone(),
+                    reason: "priced out at every remaining price level".into(),
+                },
+            });
+        }
         let st = &self.state[j];
         self.records[j] = Some(match st.first_admitted_at {
             None => rejected_record(jr),
@@ -904,6 +1010,43 @@ impl Engine<'_> {
         (jobs, running, service)
     }
 
+    /// Retire a segment that ran to completion: splice its job-local event
+    /// log onto the cluster clock (offset by the admission instant) and
+    /// close the job's trace with a `JobComplete` summary. A preempted
+    /// segment never reaches here — `finalize_preemption` splices the
+    /// truncated replay instead — so `JobComplete` fires exactly once per
+    /// job that actually finished.
+    fn retire_segment(&mut self, seg: RunningSeg) {
+        let jr = &self.w.jobs[seg.job];
+        if !jr.cfg.telemetry.enabled {
+            return;
+        }
+        for e in &seg.events {
+            self.trace.push(TraceEvent {
+                at: seg.admitted_at + e.at.secs(),
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                kind: e.kind.clone(),
+            });
+        }
+        let r = self.records[seg.job].as_ref().expect("retired segment has a record");
+        self.trace.push(TraceEvent {
+            at: seg.completion,
+            job: Some(jr.name.clone()),
+            tenant: Some(jr.tenant.clone()),
+            kind: EventKind::JobComplete {
+                job: jr.name.clone(),
+                tenant: jr.tenant.clone(),
+                cost: r.cost,
+                rounds: r.rounds_completed,
+                revocations: r.revocations,
+                preemptions: r.preemptions,
+                wait_secs: r.wait_secs,
+                fl_secs: r.fl_exec_secs,
+            },
+        });
+    }
+
     /// Close the victim's reservation timeline at the preemption instant:
     /// future reservations vanish, live ones end at `t`.
     fn truncate_reservations(&self, victim: usize, t: f64) {
@@ -936,6 +1079,20 @@ impl Engine<'_> {
             .dynsched(ScriptedDynSched::new(script))
             .build();
         let (out, lost) = fw.run_until(&seg.run_cfg, t - seg.admitted_at)?;
+        // The optimistic full-run trace in `seg.events` never happened past
+        // `t`; splice the truncated replay's events instead (they end with
+        // the `Preemption`/`Teardown` pair at the preemption instant).
+        if seg.run_cfg.telemetry.enabled {
+            let jr = &self.w.jobs[victim];
+            for e in &out.events {
+                self.trace.push(TraceEvent {
+                    at: seg.admitted_at + e.at.secs(),
+                    job: Some(jr.name.clone()),
+                    tenant: Some(jr.tenant.clone()),
+                    kind: e.kind.clone(),
+                });
+            }
+        }
         let st = &mut self.state[victim];
         st.rounds_done += out.rounds_completed;
         st.acc_cost += out.total_cost;
@@ -1022,6 +1179,16 @@ impl Engine<'_> {
         {
             let mut lg = self.ledger.lock().expect("quota ledger poisoned");
             if !lg.fits(&vms, t) {
+                // Trial admissions (preemption what-ifs) are side-effect
+                // free: only a real pass records the quota wait.
+                if !self.in_trial && self.tracing && jr.cfg.telemetry.enabled {
+                    self.trace.push(TraceEvent {
+                        at: t,
+                        job: Some(jr.name.clone()),
+                        tenant: Some(jr.tenant.clone()),
+                        kind: EventKind::QuotaWait { job: jr.name.clone() },
+                    });
+                }
                 return Ok(false);
             }
             for &vm in &vms {
@@ -1097,7 +1264,23 @@ impl Engine<'_> {
             preemptions: st.preemptions,
             rounds_lost: st.rounds_lost,
         });
-        self.running.push(RunningSeg { job: j, admitted_at: t, completion, run_cfg, sol, log });
+        if jr.cfg.telemetry.enabled {
+            self.trace.push(TraceEvent {
+                at: t,
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                kind: EventKind::Admission { job: jr.name.clone(), wait_secs: t - jr.arrival_secs },
+            });
+        }
+        self.running.push(RunningSeg {
+            job: j,
+            admitted_at: t,
+            completion,
+            run_cfg,
+            sol,
+            log,
+            events: out.events,
+        });
         Ok(true)
     }
 }

@@ -680,18 +680,36 @@ impl WorkloadSpec {
 /// points' trials are flattened into one worker pool, so parallelism spans
 /// points (same rationale as `sweep::run_campaign_streaming`).
 pub fn run_points(points: &[WorkloadPoint], jobs: usize) -> anyhow::Result<Vec<WorkloadAgg>> {
+    Ok(run_points_traced(points, jobs)?.0)
+}
+
+/// [`run_points`] plus the per-point telemetry traces rendered as JSONL
+/// (one string per point, trials concatenated in trial order, every line
+/// tagged with its point/trial index). Empty strings unless some job has
+/// `[telemetry]` enabled. Trials execute index-ordered on the worker pool,
+/// so the bytes are identical for any `jobs` value.
+pub fn run_points_traced(
+    points: &[WorkloadPoint],
+    jobs: usize,
+) -> anyhow::Result<(Vec<WorkloadAgg>, Vec<String>)> {
     let cache = std::sync::Arc::new(crate::framework::EnvCache::new());
     let flat: Vec<Workload> =
         points.iter().flat_map(|p| p.trials.iter().cloned()).collect();
     let outs = super::run_trials(&flat, jobs, &cache)?;
     let mut aggs = Vec::with_capacity(points.len());
+    let mut traces = Vec::with_capacity(points.len());
     let mut idx = 0;
-    for p in points {
+    for (pi, p) in points.iter().enumerate() {
         let n = p.trials.len();
         aggs.push(WorkloadAgg::from_outcomes(&outs[idx..idx + n]));
+        let mut text = String::new();
+        for (ti, out) in outs[idx..idx + n].iter().enumerate() {
+            text.push_str(&crate::telemetry::trace_jsonl(pi, ti, &out.trace));
+        }
+        traces.push(text);
         idx += n;
     }
-    Ok(aggs)
+    Ok((aggs, traces))
 }
 
 fn job_json(j: &super::JobAgg) -> Json {

@@ -40,14 +40,14 @@ fn co_timed_trace_instant_revokes_every_task_in_one_batched_event() {
     let batched: Vec<_> = out
         .events
         .iter()
-        .filter(|e| e.what.contains("batched event: 3 co-timed revocations"))
+        .filter(|e| e.what().contains("batched event: 3 co-timed revocations"))
         .collect();
     assert_eq!(batched.len(), 1, "exactly one batched-revocation event");
     let at = batched[0].at;
     let rev_instants: Vec<_> = out
         .events
         .iter()
-        .filter(|e| e.what.starts_with("revocation:"))
+        .filter(|e| e.what().starts_with("revocation:"))
         .map(|e| e.at)
         .collect();
     assert_eq!(rev_instants.len(), 3);

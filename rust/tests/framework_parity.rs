@@ -34,7 +34,7 @@ fn table6_cfg(seed: u64) -> SimConfig {
     cfg
 }
 
-fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+fn assert_scalars_identical(a: &SimOutcome, b: &SimOutcome) {
     assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
     assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
     assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
@@ -46,8 +46,12 @@ fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
     assert_eq!(a.initial_clients, b.initial_clients);
     assert_eq!(a.predicted_round_makespan.to_bits(), b.predicted_round_makespan.to_bits());
     assert_eq!(a.predicted_round_cost.to_bits(), b.predicted_round_cost.to_bits());
-    let ea: Vec<&str> = a.events.iter().map(|e| e.what.as_str()).collect();
-    let eb: Vec<&str> = b.events.iter().map(|e| e.what.as_str()).collect();
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_scalars_identical(a, b);
+    let ea: Vec<String> = a.events.iter().map(|e| e.what()).collect();
+    let eb: Vec<String> = b.events.iter().map(|e| e.what()).collect();
     assert_eq!(ea, eb, "event traces must match");
 }
 
@@ -57,13 +61,14 @@ fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
 /// reference. If the refactor dropped or reordered any arithmetic, the
 /// bit-identity assertions against this copy fail. Uses public APIs only;
 /// hard-wires the default module stack (dummy-app Pre-Scheduling, exact
-/// mapper, paper FT, Algorithms 1–3).
+/// mapper, paper FT, Algorithms 1–3). Predates the typed telemetry events,
+/// so its trace is the raw `format!` strings of the era, returned alongside
+/// the outcome — the golden reference for `EventKind::render` as well.
 mod legacy {
     use multi_fedls::cloud::VmTypeId;
     use multi_fedls::cloudsim::{MultiCloud, RevocationModel, VmId};
     use multi_fedls::coordinator::sim::environment_for;
     use multi_fedls::coordinator::{SimConfig, SimOutcome};
-    use multi_fedls::coordinator::sim::SimEvent;
     use multi_fedls::dynsched::{self, CurrentMap, FaultyTask};
     use multi_fedls::mapping::problem::{JobProfile, MappingProblem};
     use multi_fedls::mapping::{self, Mapping};
@@ -76,7 +81,7 @@ mod legacy {
         rounds_on_instance: u32,
     }
 
-    pub fn simulate(cfg: &SimConfig) -> anyhow::Result<SimOutcome> {
+    pub fn simulate(cfg: &SimConfig) -> anyhow::Result<(SimOutcome, Vec<String>)> {
         let (catalog, ground_truth) = environment_for(&cfg.app);
         let mut mc = MultiCloud::new(
             catalog,
@@ -87,7 +92,7 @@ mod legacy {
             },
             cfg.seed,
         );
-        let mut events = Vec::new();
+        let mut lines: Vec<String> = Vec::new();
         let mut now = SimTime::ZERO;
 
         let slowdowns = PreScheduler::new(&mc).measure_defaults();
@@ -108,16 +113,13 @@ mod legacy {
         let sol = mapping::exact::solve(&problem)
             .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible"))?;
         let initial: Mapping = sol.mapping.clone();
-        events.push(SimEvent {
-            at: now,
-            what: format!(
-                "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
-                mc.catalog.vm(initial.server).id,
-                initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
-                sol.eval.makespan,
-                sol.eval.total_cost
-            ),
-        });
+        lines.push(format!(
+            "initial mapping: server={} clients={:?} (predicted round {:.1}s, ${:.4})",
+            mc.catalog.vm(initial.server).id,
+            initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect::<Vec<_>>(),
+            sol.eval.makespan,
+            sol.eval.total_cost
+        ));
 
         let server_market = cfg.scenario.server_market();
         let client_market = cfg.scenario.client_market();
@@ -143,7 +145,7 @@ mod legacy {
         for c in &clients {
             mc.mark_running(c.instance);
         }
-        events.push(SimEvent { at: now, what: "all VMs prepared; FL execution starts".into() });
+        lines.push("all VMs prepared; FL execution starts".to_string());
         let fl_start = now;
 
         let all_vms: Vec<VmTypeId> = mc.catalog.vm_ids().collect();
@@ -224,13 +226,10 @@ mod legacy {
                         FaultyTask::Client(i) => clients[i].instance,
                     };
                     mc.revoke(now, inst, cfg.dynsched_policy.remove_revoked);
-                    events.push(SimEvent {
-                        at: now,
-                        what: format!(
-                            "revocation: {task_name} on {} during round {round}",
-                            mc.catalog.vm(old_type).id
-                        ),
-                    });
+                    lines.push(format!(
+                        "revocation: {task_name} on {} during round {round}",
+                        mc.catalog.vm(old_type).id
+                    ));
 
                     let (selection, new_set) = dynsched::select_instance(&dynsched::RevocationCtx {
                         problem: &problem,
@@ -265,15 +264,12 @@ mod legacy {
                         allow_more,
                     )?;
                     let boot_done = mc.instance(new_inst).ready_at;
-                    events.push(SimEvent {
-                        at: now,
-                        what: format!(
-                            "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
-                            mc.catalog.vm(sel.vm).id,
-                            sel.value,
-                            boot_done.hms()
-                        ),
-                    });
+                    lines.push(format!(
+                        "dynamic scheduler: {task_name} → {} (value {:.5}); booting until {}",
+                        mc.catalog.vm(sel.vm).id,
+                        sel.value,
+                        boot_done.hms()
+                    ));
                     match faulty {
                         FaultyTask::Server => {
                             server = TaskState {
@@ -289,13 +285,10 @@ mod legacy {
                                 0
                             };
                             if restore < completed {
-                                events.push(SimEvent {
-                                    at: now,
-                                    what: format!(
-                                        "server restore from round {restore} (lost {} rounds)",
-                                        completed - restore
-                                    ),
-                                });
+                                lines.push(format!(
+                                    "server restore from round {restore} (lost {} rounds)",
+                                    completed - restore
+                                ));
                                 completed = restore;
                             }
                         }
@@ -318,26 +311,30 @@ mod legacy {
         for id in live {
             mc.terminate(now, id);
         }
-        events.push(SimEvent { at: now, what: "all rounds complete; VMs terminated".into() });
+        lines.push("all rounds complete; VMs terminated".to_string());
 
-        Ok(SimOutcome {
-            fl_exec_secs: fl_end - fl_start,
-            total_secs: now.secs(),
-            total_cost: mc.total_cost(now),
-            vm_cost: mc.ledger.vm_cost(now),
-            egress_cost: mc.ledger.egress_cost(),
-            n_revocations,
-            rounds_completed: completed,
-            initial_server: mc.catalog.vm(initial.server).id.clone(),
-            initial_clients: initial
-                .clients
-                .iter()
-                .map(|&v| mc.catalog.vm(v).id.clone())
-                .collect(),
-            events,
-            predicted_round_makespan: sol.eval.makespan,
-            predicted_round_cost: sol.eval.total_cost,
-        })
+        Ok((
+            SimOutcome {
+                fl_exec_secs: fl_end - fl_start,
+                total_secs: now.secs(),
+                total_cost: mc.total_cost(now),
+                vm_cost: mc.ledger.vm_cost(now),
+                egress_cost: mc.ledger.egress_cost(),
+                n_revocations,
+                rounds_completed: completed,
+                initial_server: mc.catalog.vm(initial.server).id.clone(),
+                initial_clients: initial
+                    .clients
+                    .iter()
+                    .map(|&v| mc.catalog.vm(v).id.clone())
+                    .collect(),
+                events: Vec::new(),
+                predicted_round_makespan: sol.eval.makespan,
+                predicted_round_cost: sol.eval.total_cost,
+                telemetry: None,
+            },
+            lines,
+        ))
     }
 
     fn round_duration(
@@ -391,11 +388,17 @@ fn default_stack_is_bit_identical_to_frozen_pre_refactor_simulator() {
         .dynsched(PaperDynSched)
         .build();
     for cfg in [table5_cfg(50), table5_cfg(51), table6_cfg(60), table6_cfg(61)] {
-        let golden = legacy::simulate(&cfg).unwrap();
+        let (golden, glines) = legacy::simulate(&cfg).unwrap();
         let a = simulate(&cfg).unwrap();
         let b = fw.run(&cfg).unwrap();
-        assert_outcomes_identical(&golden, &a);
-        assert_outcomes_identical(&golden, &b);
+        assert_scalars_identical(&golden, &a);
+        assert_scalars_identical(&golden, &b);
+        // The typed events, rendered, must reproduce the era's raw
+        // `format!` strings character for character.
+        let ra: Vec<String> = a.events.iter().map(|e| e.what()).collect();
+        let rb: Vec<String> = b.events.iter().map(|e| e.what()).collect();
+        assert_eq!(glines, ra, "rendered trace must match the frozen strings");
+        assert_eq!(glines, rb, "rendered trace must match the frozen strings");
     }
 }
 
@@ -431,7 +434,7 @@ fn campaign_measures_each_environment_exactly_once() {
     for &s in &seeds {
         let mut c = cfg.clone();
         c.seed = s;
-        cost_sum += legacy::simulate(&c).unwrap().total_cost;
+        cost_sum += legacy::simulate(&c).unwrap().0.total_cost;
     }
     let mean = cost_sum / seeds.len() as f64;
     assert_eq!(stats[0].cost.mean.to_bits(), mean.to_bits());
@@ -456,7 +459,7 @@ fn run_trials_matches_historical_serial_loop() {
         .map(|t| {
             let mut c = cfg.clone();
             c.seed = 500 + t;
-            legacy::simulate(&c).unwrap()
+            legacy::simulate(&c).unwrap().0
         })
         .collect();
     let mean = |f: fn(&SimOutcome) -> f64| outs.iter().map(f).sum::<f64>() / 3.0;
@@ -492,11 +495,12 @@ fn swapped_dynscheduler_changes_outcomes_deterministically() {
     let mut last_revoked: Option<String> = None;
     let mut replacements = 0;
     for e in &a1.events {
-        if let Some(rest) = e.what.strip_prefix("revocation: ") {
+        let w = e.what();
+        if let Some(rest) = w.strip_prefix("revocation: ") {
             let vm = rest.split(" on ").nth(1).unwrap().split(' ').next().unwrap();
             last_revoked = Some(vm.to_string());
-        } else if e.what.starts_with("dynamic scheduler:") {
-            let chosen = e.what.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
+        } else if w.starts_with("dynamic scheduler:") {
+            let chosen = w.split("→ ").nth(1).unwrap().split(' ').next().unwrap();
             let revoked = last_revoked.take().expect("selection follows revocation");
             assert_eq!(chosen, revoked, "baseline must restart on the same type");
             replacements += 1;
@@ -504,8 +508,8 @@ fn swapped_dynscheduler_changes_outcomes_deterministically() {
     }
     assert!(replacements > 0);
     // ...so the two stacks' traces cannot coincide.
-    let ea: Vec<&str> = a1.events.iter().map(|e| e.what.as_str()).collect();
-    let eb: Vec<&str> = paper.events.iter().map(|e| e.what.as_str()).collect();
+    let ea: Vec<String> = a1.events.iter().map(|e| e.what()).collect();
+    let eb: Vec<String> = paper.events.iter().map(|e| e.what()).collect();
     assert_ne!(ea, eb, "swapping the DynScheduler must change the trace");
 }
 

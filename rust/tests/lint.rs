@@ -23,6 +23,8 @@ fn hash_iter_fires_in_simulation_state_modules() {
     assert_eq!(rules_hit("sweep/fake.rs", set), ["hash-iter"]);
     // The outlook subsystem feeds mapping costs and dynsched selections.
     assert_eq!(rules_hit("outlook/fake.rs", src), ["hash-iter"]);
+    // Telemetry traces/metrics must serialize in deterministic order.
+    assert_eq!(rules_hit("telemetry/fake.rs", src), ["hash-iter"]);
     // BTreeMap is the fix, and out-of-scope modules are untouched.
     assert!(rules_hit("cloudsim/fake.rs", "fn f() { let m = BTreeMap::new(); }\n").is_empty());
     assert!(rules_hit("data/fake.rs", src).is_empty());
@@ -149,9 +151,12 @@ fn unknown_key_requires_the_shared_helper() {
     assert_eq!((v[0].rule, v[0].line), ("unknown-key", 1));
     let with = "fn parse(t: &Tbl) -> Result<()> { reject_unknown_keys(t, &[\"a\"], \"x\") }\n";
     assert!(lint_source("sweep/spec.rs", with).is_empty());
-    // The outlook spec parser is held to the same helper requirement.
+    // The outlook and telemetry spec parsers are held to the same helper
+    // requirement.
     assert_eq!(rules_hit("outlook/spec.rs", without), ["unknown-key"]);
     assert!(lint_source("outlook/spec.rs", with).is_empty());
+    assert_eq!(rules_hit("telemetry/spec.rs", without), ["unknown-key"]);
+    assert!(lint_source("telemetry/spec.rs", with).is_empty());
     // A helper call that only exists in test code does not count.
     let test_only = "fn parse(t: &Tbl) -> Result<()> { Ok(()) }\n\
                      #[cfg(test)]\nmod tests {\n    fn t() { reject_unknown_keys; }\n}\n";

@@ -136,7 +136,7 @@ fn bid_priced_spot_vms_are_revoked_at_the_price_crossing() {
     assert!(out.n_revocations >= 1, "the crossing must revoke someone");
     assert!(
         out.events.iter().any(|e| (e.at.secs() - 4000.0).abs() < 1e-9
-            && e.what.starts_with("revocation:")),
+            && e.what().starts_with("revocation:")),
         "a revocation lands exactly on the crossing instant"
     );
     assert_eq!(out.rounds_completed, 20, "the dynamic scheduler recovers");

@@ -52,8 +52,8 @@ fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome) {
     assert_eq!(a.rounds_completed, b.rounds_completed);
     assert_eq!(a.initial_server, b.initial_server);
     assert_eq!(a.initial_clients, b.initial_clients);
-    let ea: Vec<&str> = a.events.iter().map(|e| e.what.as_str()).collect();
-    let eb: Vec<&str> = b.events.iter().map(|e| e.what.as_str()).collect();
+    let ea: Vec<String> = a.events.iter().map(|e| e.what()).collect();
+    let eb: Vec<String> = b.events.iter().map(|e| e.what()).collect();
     assert_eq!(ea, eb, "event traces must match");
 }
 
@@ -173,9 +173,9 @@ fn deferral_is_strictly_cheaper_on_a_step_price_market() {
         a.total_cost
     );
     assert!(
-        b.events.iter().any(|e| e.what.contains("provisioning deferred")),
+        b.events.iter().any(|e| e.what().contains("provisioning deferred")),
         "the deferred-start event must be recorded"
     );
-    assert!(a.events.iter().all(|e| !e.what.contains("provisioning deferred")));
+    assert!(a.events.iter().all(|e| !e.what().contains("provisioning deferred")));
     assert_eq!(a.rounds_completed, b.rounds_completed);
 }

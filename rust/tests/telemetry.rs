@@ -1,0 +1,178 @@
+//! Telemetry acceptance tests: telemetry-off runs are bit-identical to the
+//! pre-telemetry simulator, span cost attribution reconciles exactly with
+//! the billing ledger, and the workload JSONL export is byte-identical for
+//! any worker count.
+
+use multi_fedls::apps;
+use multi_fedls::coordinator::{simulate, Scenario, SimConfig, SimOutcome};
+use multi_fedls::dynsched::DynSchedPolicy;
+use multi_fedls::telemetry::TelemetrySpec;
+use multi_fedls::util::Json;
+use multi_fedls::workload::spec::run_points_traced;
+use multi_fedls::workload::WorkloadSpec;
+
+/// Table 5's grid base (the paper's headline failure experiment).
+fn table5_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(apps::til(), Scenario::AllSpot, seed);
+    cfg.n_rounds = 80;
+    cfg.revocation_mean_secs = Some(7200.0);
+    cfg.dynsched_policy = DynSchedPolicy::different_vm();
+    cfg.max_revocations_per_task = Some(1);
+    cfg
+}
+
+fn assert_scalars_identical(a: &SimOutcome, b: &SimOutcome) {
+    assert_eq!(a.fl_exec_secs.to_bits(), b.fl_exec_secs.to_bits());
+    assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.vm_cost.to_bits(), b.vm_cost.to_bits());
+    assert_eq!(a.egress_cost.to_bits(), b.egress_cost.to_bits());
+    assert_eq!(a.n_revocations, b.n_revocations);
+    assert_eq!(a.rounds_completed, b.rounds_completed);
+    assert_eq!(a.initial_server, b.initial_server);
+    assert_eq!(a.initial_clients, b.initial_clients);
+}
+
+#[test]
+fn telemetry_on_changes_no_arithmetic_and_off_carries_nothing() {
+    // Enabling telemetry may only *append* events and attach the post-hoc
+    // span/metrics pass: every scalar stays bit-identical, and the core
+    // event sequence (rendered) is exactly the telemetry-off one.
+    for seed in [50, 51, 60] {
+        let off_cfg = table5_cfg(seed);
+        let mut on_cfg = off_cfg.clone();
+        on_cfg.telemetry = TelemetrySpec::on();
+        let off = simulate(&off_cfg).unwrap();
+        let on = simulate(&on_cfg).unwrap();
+        assert_scalars_identical(&off, &on);
+        assert!(off.telemetry.is_none(), "telemetry-off must not collect");
+        assert!(on.telemetry.is_some(), "telemetry-on must collect");
+        assert!(off.events.iter().all(|e| !e.kind.telemetry_only()));
+        let base: Vec<String> = off.events.iter().map(|e| e.what()).collect();
+        let core: Vec<String> = on
+            .events
+            .iter()
+            .filter(|e| !e.kind.telemetry_only())
+            .map(|e| e.what())
+            .collect();
+        assert_eq!(base, core, "core events must be unchanged");
+        assert!(
+            on.events.len() > off.events.len(),
+            "telemetry adds provision/round events"
+        );
+    }
+}
+
+#[test]
+fn span_billed_costs_attribute_exactly_to_the_ledger() {
+    // The acceptance bound: summing per-VM billed-cost spans in charge
+    // order reproduces the ledger's vm_cost bit for bit on the Table 5
+    // configuration — no drift, no double counting, revocations included.
+    let mut total_revocations = 0;
+    for seed in [50, 51, 52, 53] {
+        let mut cfg = table5_cfg(seed);
+        cfg.telemetry = TelemetrySpec::on();
+        let out = simulate(&cfg).unwrap();
+        let tel = out.telemetry.as_ref().expect("telemetry enabled");
+        total_revocations += out.n_revocations;
+        assert_eq!(
+            tel.vm_billed_total().to_bits(),
+            out.vm_cost.to_bits(),
+            "span cost total must equal the ledger's vm_cost exactly"
+        );
+        // Every revocation + the initial fleet shows up as a VM span, and
+        // round spans account for every completed round.
+        assert!(tel.vms.len() >= 1 + out.initial_clients.len());
+        let completed = tel.rounds.iter().filter(|r| r.completed).count();
+        assert!(completed >= out.rounds_completed as usize);
+        assert_eq!(
+            tel.metrics.counter("rounds.completed") as usize,
+            completed,
+            "metrics and spans must agree on completed rounds"
+        );
+        assert!(!tel.solver.is_empty(), "initial mapping is a solver span");
+    }
+    assert!(total_revocations > 0, "the attribution must cover revocations");
+}
+
+/// The CI preemption smoke workload, shrunk to one grid point: four
+/// deadline-constrained low-priority jobs saturate the GPUs at t = 0 and a
+/// high-priority job arrives mid-execution, forcing a checkpoint-preemption
+/// under priority-preempt.
+const PREEMPT_SPEC: &str = r#"
+name = "tele-preempt"
+seed = 7
+trials = 2
+admission = "fifo"
+scheduler = "priority-preempt"
+
+[arrival]
+kind = "trace"
+times = [0.0, 0.0, 0.0, 0.0, 3000.0]
+
+[[job]]
+app = "til-aws-gcp"
+name = "low"
+count = 4
+rounds = 6
+scenario = "all-on-demand"
+deadline_round = 4000.0
+tenant = "zeta"
+
+[[job]]
+app = "til-aws-gcp"
+name = "high"
+rounds = 6
+scenario = "all-on-demand"
+deadline_round = 4000.0
+priority = 10
+tenant = "acme"
+"#;
+
+#[test]
+fn workload_trace_jsonl_is_byte_identical_across_worker_counts() {
+    let spec = WorkloadSpec::from_toml(PREEMPT_SPEC).unwrap();
+    let mut points = spec.expand().unwrap();
+    for p in &mut points {
+        for w in &mut p.trials {
+            for j in &mut w.jobs {
+                j.cfg.telemetry = TelemetrySpec::on();
+            }
+        }
+    }
+    let (agg1, traces1) = run_points_traced(&points, 1).unwrap();
+    let (agg4, traces4) = run_points_traced(&points, 4).unwrap();
+    assert_eq!(traces1, traces4, "JSONL must not depend on --jobs");
+    assert_eq!(agg1.len(), agg4.len());
+    for (a, b) in agg1.iter().zip(&agg4) {
+        assert_eq!(a.total_cost.mean.to_bits(), b.total_cost.mean.to_bits());
+        assert_eq!(a.makespan.mean.to_bits(), b.makespan.mean.to_bits());
+    }
+
+    let text = traces1.concat();
+    assert!(!text.is_empty(), "telemetry-enabled jobs must trace");
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut completions = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every line is valid JSON");
+        assert!(j.get("at").and_then(|v| v.as_f64()).is_some(), "{line}");
+        let kind = j.get("kind").and_then(|v| v.as_str()).expect("kind").to_string();
+        if kind == "job-complete" {
+            completions += 1;
+        }
+        kinds.insert(kind);
+    }
+    // The workload lifecycle and the preemption machinery both traced.
+    for expected in ["arrival", "admission", "quota-wait", "preemption", "job-complete"] {
+        assert!(kinds.contains(expected), "missing kind {expected}: {kinds:?}");
+    }
+    assert_eq!(completions, 2 * 5, "2 trials × 5 jobs all complete");
+}
+
+#[test]
+fn workload_without_telemetry_produces_no_trace() {
+    let spec = WorkloadSpec::from_toml(PREEMPT_SPEC).unwrap();
+    let points = spec.expand().unwrap();
+    let (_aggs, traces) = run_points_traced(&points, 2).unwrap();
+    assert!(traces.iter().all(|t| t.is_empty()), "off by default");
+}
