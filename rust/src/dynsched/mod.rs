@@ -24,6 +24,7 @@ use crate::mapping::problem::MappingProblem;
 use crate::mapping::rank;
 use crate::market::MarketView;
 use crate::simul::SimTime;
+use crate::telemetry::{Candidate, Elimination};
 
 /// Which task failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -215,6 +216,50 @@ pub fn select_instance(ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTyp
         candidates_considered: set.len(),
     });
     (best, set)
+}
+
+/// Decision provenance for one Algorithm-3 selection: the ranked candidate
+/// table over the *incoming* candidate set `I_t`, with the revoked type
+/// flagged `policy-banned` when the policy removes it and every other loser
+/// `dominated`.
+///
+/// Replays the same windowed pricing and makespan/cost re-calculations as
+/// [`select_instance`] post-hoc, so recording provenance cannot perturb the
+/// selection itself.
+pub fn explain_candidates(ctx: &RevocationCtx<'_>, chosen: Option<VmTypeId>) -> Vec<Candidate> {
+    let (map, t) = (ctx.map, ctx.faulty);
+    let p = &ctx.problem.windowed(ctx.at.secs(), ctx.remaining_secs);
+    let cat = p.catalog;
+    let mut rows: Vec<Candidate> = ctx
+        .candidates
+        .iter()
+        .map(|&vm| {
+            let makespan = recompute_makespan(p, map, t, vm);
+            let cost = recompute_cost(p, map, t, vm, makespan);
+            // Chosen wins over the policy ban: the quota-fallback restart
+            // legitimately re-picks the revoked type.
+            let eliminated = if chosen == Some(vm) {
+                None
+            } else if ctx.policy.remove_revoked && vm == ctx.revoked {
+                Some(Elimination::PolicyBanned)
+            } else {
+                Some(Elimination::Dominated)
+            };
+            Candidate {
+                label: format!(
+                    "{}/{} {}",
+                    cat.provider(cat.provider_of(vm)).name,
+                    cat.region(cat.region_of(vm)).name,
+                    cat.vm(vm).id
+                ),
+                objective: p.objective_value(cost, makespan),
+                price_factor: p.spot_price_factor,
+                eliminated,
+            }
+        })
+        .collect();
+    rank::sort_by_key_f64(&mut rows, |c| c.objective);
+    rows
 }
 
 #[cfg(test)]
@@ -429,6 +474,42 @@ mod tests {
         });
         assert!(sel.is_none());
         assert!(set.is_empty());
+    }
+
+    #[test]
+    fn explain_matches_the_selection_and_types_the_losses() {
+        let (mc, sl, job) = setup();
+        let p = problem(&mc, &sl, &job);
+        let map = til_map(&mc);
+        let all: Vec<_> = mc.catalog.vm_ids().collect();
+        let market = default_market();
+        let vm126 = mc.catalog.vm_by_id("vm126").unwrap();
+        let ctx = RevocationCtx {
+            problem: &p,
+            map: &map,
+            faulty: FaultyTask::Client(0),
+            candidates: &all,
+            revoked: vm126,
+            policy: DynSchedPolicy::different_vm(),
+            at: SimTime::ZERO,
+            remaining_secs: 0.0,
+            market: MarketView::new(&market),
+        };
+        let (sel, _) = select_instance(&ctx);
+        let sel = sel.unwrap();
+        let rows = explain_candidates(&ctx, Some(sel.vm));
+        assert_eq!(rows.len(), all.len(), "one row per incoming candidate");
+        let chosen: Vec<_> = rows.iter().filter(|r| r.eliminated.is_none()).collect();
+        assert_eq!(chosen.len(), 1);
+        assert!(chosen[0].label.ends_with(&mc.catalog.vm(sel.vm).id));
+        assert!((chosen[0].objective - sel.value).abs() < 1e-12, "objective = Algorithm 3's value");
+        let banned: Vec<_> =
+            rows.iter().filter(|r| r.eliminated == Some(Elimination::PolicyBanned)).collect();
+        assert_eq!(banned.len(), 1, "exactly the revoked type is policy-banned");
+        assert!(banned[0].label.ends_with("vm126"));
+        for w in rows.windows(2) {
+            assert!(w[0].objective <= w[1].objective, "rows are ranked");
+        }
     }
 
     #[test]

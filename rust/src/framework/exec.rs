@@ -20,7 +20,7 @@ use crate::mapping::problem::{JobProfile, Mapping, MappingProblem};
 use crate::market::MarketView;
 use crate::presched::SlowdownReport;
 use crate::simul::SimTime;
-use crate::telemetry::EventKind;
+use crate::telemetry::{Candidate, DecisionKind, DecisionRecord, Elimination, EventKind};
 
 use super::modules::FaultTolerance;
 use super::Framework;
@@ -33,8 +33,16 @@ struct TaskState {
 }
 
 /// Telemetry-only `Provision` event for a freshly requested instance
-/// (provider/region/market resolved from the catalog snapshot).
-fn provision_kind(mc: &MultiCloud, task: &str, vm_type: VmTypeId, inst: VmId, market: Market) -> EventKind {
+/// (provider/region/market resolved from the catalog snapshot), carrying
+/// the decision that caused the request.
+fn provision_kind(
+    mc: &MultiCloud,
+    task: &str,
+    vm_type: VmTypeId,
+    inst: VmId,
+    market: Market,
+    decision: Option<u64>,
+) -> EventKind {
     let cat = &mc.catalog;
     EventKind::Provision {
         task: task.to_string(),
@@ -43,6 +51,7 @@ fn provision_kind(mc: &MultiCloud, task: &str, vm_type: VmTypeId, inst: VmId, ma
         region: cat.region(cat.region_of(vm_type)).name.clone(),
         spot: matches!(market, Market::Spot),
         boot_done: mc.instance(inst).ready_at,
+        decision,
     }
 }
 
@@ -121,6 +130,47 @@ pub(super) fn run_stop(
         .map(&problem)
         .ok_or_else(|| anyhow::anyhow!("initial mapping infeasible ({})", mapper.name()))?;
     let initial: Mapping = sol.mapping.clone();
+
+    // Decision provenance (gated on `[telemetry]` with `decisions = true`):
+    // one DecisionRecord per decision point, IDs job-local and dense from 0.
+    // The off path allocates nothing and stamps every event `decision: None`,
+    // keeping it bit-identical to the pre-provenance executor.
+    let record_decisions = cfg.telemetry.record_decisions();
+    let mut decisions: Vec<DecisionRecord> = Vec::new();
+    let vm_label = |vm: VmTypeId| {
+        format!(
+            "{}/{} {}",
+            catalog.provider(catalog.provider_of(vm)).name,
+            catalog.region(catalog.region_of(vm)).name,
+            catalog.vm(vm).id
+        )
+    };
+    let map_decision = if record_decisions {
+        let id = decisions.len() as u64;
+        decisions.push(DecisionRecord {
+            id,
+            at: now.secs(),
+            kind: DecisionKind::InitialMapping,
+            job: None,
+            tenant: None,
+            chosen: Some(vm_label(initial.server)),
+            reason: format!(
+                "{} mapper: objective {:.5} (α = {}) within budget ${:.4}/round and \
+                 deadline {:.0}s",
+                mapper.name(),
+                sol.eval.objective,
+                cfg.alpha,
+                cfg.budget_round,
+                cfg.deadline_round
+            ),
+            candidates: crate::mapping::explain_candidates(&problem, Some(&initial)),
+            instances: Vec::new(),
+            attributed_cost: None,
+        });
+        Some(id)
+    } else {
+        None
+    };
     events.push(SimEvent {
         at: now,
         kind: EventKind::InitialMapping {
@@ -128,6 +178,7 @@ pub(super) fn run_stop(
             clients: initial.clients.iter().map(|&v| mc.catalog.vm(v).id.clone()).collect(),
             predicted_makespan: sol.eval.makespan,
             predicted_cost: sol.eval.total_cost,
+            decision: map_decision,
         },
     });
 
@@ -136,8 +187,58 @@ pub(super) fn run_stop(
     // allows it, so the job idles (unbilled — nothing is provisioned yet)
     // until the chosen start offset.
     if sol.defer_secs > 0.0 {
+        let defer_decision = if record_decisions {
+            let id = decisions.len() as u64;
+            let window = cfg.n_rounds as f64 * sol.eval.makespan;
+            // Both start instants the outlook weighed, priced over the
+            // job's expected execution window; bid advice is advisory-only.
+            let (now_factor, deferred_factor) = outlook
+                .as_ref()
+                .map(|o| {
+                    (o.expected_price_factor(0.0, window),
+                     o.expected_price_factor(sol.defer_secs, window))
+                })
+                .unwrap_or((spot_price_factor, spot_price_factor));
+            let bid = outlook.as_ref().and_then(|o| o.advise_bid(sol.defer_secs, window));
+            decisions.push(DecisionRecord {
+                id,
+                at: now.secs(),
+                kind: DecisionKind::Deferral,
+                job: None,
+                tenant: None,
+                chosen: Some(format!("start at t={:.0}s", sol.defer_secs)),
+                reason: match bid {
+                    Some(b) => format!(
+                        "outlook priced the deferred window cheaper; advised bid factor {b:.3}"
+                    ),
+                    None => "outlook priced the deferred window cheaper".to_string(),
+                },
+                candidates: vec![
+                    Candidate {
+                        label: format!("start at t={:.0}s", sol.defer_secs),
+                        objective: deferred_factor,
+                        price_factor: deferred_factor,
+                        eliminated: None,
+                    },
+                    Candidate {
+                        label: "start at t=0s".to_string(),
+                        objective: now_factor,
+                        price_factor: now_factor,
+                        eliminated: Some(Elimination::Dominated),
+                    },
+                ],
+                instances: Vec::new(),
+                attributed_cost: None,
+            });
+            Some(id)
+        } else {
+            None
+        };
         now = SimTime::from_secs(sol.defer_secs);
-        events.push(SimEvent { at: now, kind: EventKind::Deferral { defer_secs: sol.defer_secs } });
+        events.push(SimEvent {
+            at: now,
+            kind: EventKind::Deferral { defer_secs: sol.defer_secs, decision: defer_decision },
+        });
     }
 
     // --- provision all tasks (boot in parallel) ---
@@ -156,11 +257,32 @@ pub(super) fn run_stop(
             rounds_on_instance: 0,
         });
     }
+    // The whole initial fleet is downstream of the mapping decision: its
+    // billed cost attributes there.
+    if let Some(id) = map_decision {
+        let rec = &mut decisions[id as usize];
+        rec.instances.push(server.instance.0);
+        rec.instances.extend(clients.iter().map(|c| c.instance.0));
+    }
     if cfg.telemetry.enabled {
-        let k = provision_kind(&mc, "server", server.vm_type, server.instance, server_market);
+        let k = provision_kind(
+            &mc,
+            "server",
+            server.vm_type,
+            server.instance,
+            server_market,
+            map_decision,
+        );
         events.push(SimEvent { at: now, kind: k });
         for (i, c) in clients.iter().enumerate() {
-            let k = provision_kind(&mc, &format!("client-{i}"), c.vm_type, c.instance, client_market);
+            let k = provision_kind(
+                &mc,
+                &format!("client-{i}"),
+                c.vm_type,
+                c.instance,
+                client_market,
+                map_decision,
+            );
             events.push(SimEvent { at: now, kind: k });
         }
     }
@@ -343,7 +465,7 @@ pub(super) fn run_stop(
                     // expected factor.
                     let remaining_secs =
                         (cfg.n_rounds - completed) as f64 * sol.eval.makespan;
-                    let (selection, new_set) = fw.dynsched().select(&RevocationCtx {
+                    let ctx = RevocationCtx {
                         problem: &problem,
                         map: &current_map,
                         faulty,
@@ -353,7 +475,42 @@ pub(super) fn run_stop(
                         at: now,
                         remaining_secs,
                         market: MarketView::with_outlook(&cfg.market, outlook.as_ref()),
-                    });
+                    };
+                    let (selection, new_set) = fw.dynsched().select(&ctx);
+                    // Provenance must replay the selection over the *incoming*
+                    // candidate set, before the revoked type is removed.
+                    let replace_decision = if record_decisions {
+                        let id = decisions.len() as u64;
+                        let chosen_vm = selection.as_ref().map(|s| s.vm);
+                        decisions.push(DecisionRecord {
+                            id,
+                            at: now.secs(),
+                            kind: DecisionKind::Replacement,
+                            job: None,
+                            tenant: None,
+                            chosen: chosen_vm.map(vm_label),
+                            reason: match &selection {
+                                Some(s) => format!(
+                                    "{} replaced {} after revocation: best weighted objective \
+                                     {:.5} among {} candidate(s)",
+                                    fw.dynsched().name(),
+                                    task_name,
+                                    s.value,
+                                    s.candidates_considered
+                                ),
+                                None => format!(
+                                    "candidate set for {task_name} exhausted after repeated \
+                                     revocations"
+                                ),
+                            },
+                            candidates: fw.dynsched().explain(&ctx, chosen_vm),
+                            instances: Vec::new(),
+                            attributed_cost: None,
+                        });
+                        Some(id)
+                    } else {
+                        None
+                    };
                     *set = new_set;
                     let sel = selection
                         .ok_or_else(|| anyhow::anyhow!("dynamic scheduler exhausted candidates"))?;
@@ -381,6 +538,9 @@ pub(super) fn run_stop(
                         },
                         allow_more,
                     )?;
+                    if let Some(id) = replace_decision {
+                        decisions[id as usize].instances.push(new_inst.0);
+                    }
                     let boot_done = mc.instance(new_inst).ready_at;
                     boot_max = boot_max.max(boot_done);
                     events.push(SimEvent {
@@ -390,6 +550,7 @@ pub(super) fn run_stop(
                             vm: mc.catalog.vm(sel.vm).id.clone(),
                             value: sel.value,
                             boot_done,
+                            decision: replace_decision,
                         },
                     });
                     if cfg.telemetry.enabled {
@@ -397,7 +558,8 @@ pub(super) fn run_stop(
                             FaultyTask::Server => server_market,
                             FaultyTask::Client(_) => client_market,
                         };
-                        let k = provision_kind(&mc, &task_name, sel.vm, new_inst, market);
+                        let k =
+                            provision_kind(&mc, &task_name, sel.vm, new_inst, market, replace_decision);
                         events.push(SimEvent { at: now, kind: k });
                     }
                     match faulty {
@@ -449,7 +611,9 @@ pub(super) fn run_stop(
         completed = restore;
         events.push(SimEvent {
             at: now,
-            kind: EventKind::Preemption { round: completed, lost: rounds_lost },
+            // The victim-selection decision lives in the workload engine's
+            // ID space; it stamps this event when splicing the trace.
+            kind: EventKind::Preemption { round: completed, lost: rounds_lost, decision: None },
         });
     }
 
@@ -464,7 +628,7 @@ pub(super) fn run_stop(
     let fl_exec_secs = if preempted { (fl_end - fl_start).max(0.0) } else { fl_end - fl_start };
     // Spans + metrics are reconstructed post-hoc from the event log and the
     // ledger — the hot loop carries no telemetry state.
-    let telemetry = cfg.telemetry.enabled.then(|| {
+    let mut telemetry = cfg.telemetry.enabled.then(|| {
         crate::telemetry::build_job_telemetry(
             &cfg.telemetry,
             &mc.catalog,
@@ -474,6 +638,26 @@ pub(super) fn run_stop(
             fl_start,
         )
     });
+    if let Some(tel) = telemetry.as_mut() {
+        if record_decisions {
+            // Cost attribution: a decision is charged the billed cost of
+            // every VM lifetime it provisioned (needs span reconstruction).
+            if cfg.telemetry.spans {
+                for r in &mut decisions {
+                    if !r.instances.is_empty() {
+                        r.attributed_cost = Some(
+                            tel.vms
+                                .iter()
+                                .filter(|v| r.instances.contains(&v.instance))
+                                .map(|v| v.billed_cost)
+                                .sum(),
+                        );
+                    }
+                }
+            }
+            tel.decisions = std::mem::take(&mut decisions);
+        }
+    }
     let outcome = SimOutcome {
         fl_exec_secs,
         total_secs: now.secs(),

@@ -24,6 +24,7 @@ use crate::dynsched::{self, RevocationCtx, Selection};
 use crate::mapping::problem::{Mapping, MappingProblem};
 use crate::mapping::{self, MapperKind, MappingSolution};
 use crate::presched::{PreScheduler, SlowdownReport};
+use crate::telemetry::{Candidate, Elimination};
 
 use super::EnvCache;
 
@@ -334,6 +335,17 @@ impl FaultTolerance for NoFt {
 pub trait DynScheduler: Send + Sync {
     fn name(&self) -> &'static str;
     fn select(&self, ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>);
+
+    /// Decision provenance for a selection this scheduler made over `ctx`:
+    /// the ranked candidate table with a typed elimination reason per
+    /// loser. Called post-hoc by the executor only when `[telemetry]`
+    /// records decisions, so it must not mutate scheduler state. The
+    /// default replays Algorithm 3's scoring; implementations whose
+    /// selection logic differs override it so the table reflects their
+    /// real reasons.
+    fn explain(&self, ctx: &RevocationCtx<'_>, chosen: Option<VmTypeId>) -> Vec<Candidate> {
+        dynsched::explain_candidates(ctx, chosen)
+    }
 }
 
 /// Algorithms 1–3 (the paper's Dynamic Scheduler): re-compute makespan and
@@ -370,5 +382,28 @@ impl DynScheduler for RestartSameType {
             candidates_considered: 1,
         };
         (Some(selection), ctx.candidates.to_vec())
+    }
+
+    fn explain(&self, ctx: &RevocationCtx<'_>, chosen: Option<VmTypeId>) -> Vec<Candidate> {
+        // This baseline never ranks the candidate set: the one candidate it
+        // considers is the revoked type itself, so that's the whole table.
+        let (p, cat) = (ctx.problem, ctx.problem.catalog);
+        let makespan = dynsched::recompute_makespan(p, ctx.map, ctx.faulty, ctx.revoked);
+        let cost = dynsched::recompute_cost(p, ctx.map, ctx.faulty, ctx.revoked, makespan);
+        vec![Candidate {
+            label: format!(
+                "{}/{} {}",
+                cat.provider(cat.provider_of(ctx.revoked)).name,
+                cat.region(cat.region_of(ctx.revoked)).name,
+                cat.vm(ctx.revoked).id
+            ),
+            objective: p.objective_value(cost, makespan),
+            price_factor: p.spot_price_factor,
+            eliminated: if chosen == Some(ctx.revoked) {
+                None
+            } else {
+                Some(Elimination::Dominated)
+            },
+        }]
     }
 }

@@ -9,8 +9,11 @@
 //! multi-fedls sweep --spec FILE [--jobs N]     run a campaign grid in parallel
 //!                   [--results DIR] [--resume] [--no-persist]
 //! multi-fedls workload --spec FILE [--jobs N]  run a multi-job workload campaign
-//!                   [--results DIR] [--resume] [--no-persist] [--trace-out F]
+//!                   [--results DIR] [--resume] [--no-persist]
+//!                   [--trace-out F] [--flame-out F]
 //! multi-fedls report <dir|trace.jsonl>         summarize a telemetry trace
+//! multi-fedls report --diff A B                compare two traces/campaigns
+//! multi-fedls explain <trace.jsonl> [...]      why each scheduling decision
 //! multi-fedls run --app A [--rounds N] [...]   real-compute FL run (needs artifacts)
 //! multi-fedls experiment <name> [--json]       regenerate a paper table/figure
 //! multi-fedls lint [--json] [--src DIR]        determinism & invariant lint pass
@@ -87,8 +90,11 @@ USAGE:
   multi-fedls sweep --spec configs/<grid>.toml [--jobs N] [--json|--csv]
                     [--results DIR] [--resume] [--no-persist]
   multi-fedls workload --spec configs/workload-<name>.toml [--jobs N] [--json|--csv]
-                    [--results DIR] [--resume] [--no-persist] [--trace-out FILE]
+                    [--results DIR] [--resume] [--no-persist]
+                    [--trace-out FILE] [--flame-out FILE]
   multi-fedls report <results-dir | trace.jsonl>
+  multi-fedls report --diff <A> <B>
+  multi-fedls explain <trace.jsonl | results-dir> [--job JOB] [--decision N] [--vm TYPE]
   multi-fedls run --app <name> [--rounds N] [--epochs E] [--scale S]
                   [--artifacts DIR] [--ckpt-every X] [--ckpt-dir DIR]
   multi-fedls experiment <table3|table4|validation|fig2|table5..8|poc|mapping|alpha-sweep|multijob|dynsched-ablation|mapper-ablation|preempt-ablation|market-sensitivity|outlook-ablation|all> [--json]
@@ -111,6 +117,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "workload" => cmd_workload(&args),
         "report" => cmd_report(&args),
+        "explain" => cmd_explain(&args),
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "lint" => cmd_lint(&args),
@@ -287,10 +294,44 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     kind: e.kind.clone(),
                 })
                 .collect();
-            let text = multi_fedls::telemetry::trace_jsonl(0, 0, &trace);
+            let mut text = multi_fedls::telemetry::trace_jsonl(0, 0, &trace);
+            // Decision provenance + billed VM lifetimes ride in the same
+            // stream (`explain` reads all three line kinds).
+            if let Some(tel) = out.telemetry.as_ref() {
+                for d in &tel.decisions {
+                    let mut d = d.clone();
+                    if d.job.is_none() {
+                        d.job = Some(cfg.app.name.to_string());
+                    }
+                    let mut j = d.to_json();
+                    j.insert("point", 0i64);
+                    j.insert("trial", 0i64);
+                    text.push_str(&j.to_string_compact());
+                    text.push('\n');
+                }
+                for v in &tel.vms {
+                    let span = multi_fedls::telemetry::VmSpanRecord {
+                        job: Some(cfg.app.name.to_string()),
+                        tenant: None,
+                        vm: v.vm.clone(),
+                        instance: v.instance,
+                        provider: v.provider.clone(),
+                        region: v.region.clone(),
+                        spot: v.spot,
+                        start: v.start,
+                        end: v.end,
+                        billed_cost: v.billed_cost,
+                    };
+                    let mut j = span.to_json();
+                    j.insert("point", 0i64);
+                    j.insert("trial", 0i64);
+                    text.push_str(&j.to_string_compact());
+                    text.push('\n');
+                }
+            }
             std::fs::write(path, &text)
                 .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
-            eprintln!("trace written to {path} ({} events)", trace.len());
+            eprintln!("trace written to {path} ({} lines)", text.lines().count());
         }
         if let Some(path) = args.get("flame-out") {
             let tel = out.telemetry.as_ref().expect("telemetry enabled");
@@ -382,11 +423,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `multi-fedls workload --spec FILE [--jobs N] [--json|--csv]
-/// [--results DIR] [--resume] [--no-persist] [--trace-out FILE]`: expand a
-/// multi-job workload campaign (arrival processes × admission policies ×
-/// budget/deadline axes) and run each point's trials across the worker
-/// pool. Output — including the `--trace-out` telemetry JSONL — is
-/// byte-identical for any `--jobs` value. `--trace-out` force-enables
+/// [--results DIR] [--resume] [--no-persist] [--trace-out FILE]
+/// [--flame-out FILE]`: expand a multi-job workload campaign (arrival
+/// processes × admission policies × budget/deadline axes) and run each
+/// point's trials across the worker pool. Output — including the
+/// `--trace-out` telemetry JSONL and `--flame-out` collapsed stacks — is
+/// byte-identical for any `--jobs` value. Either sink force-enables
 /// `[telemetry]` on every job and runs in-memory (no results directory).
 fn cmd_workload(args: &Args) -> anyhow::Result<()> {
     let spec_path = args.get("spec").ok_or_else(|| anyhow::anyhow!("--spec required"))?;
@@ -397,7 +439,8 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
     };
     let mut points = spec.expand()?;
     let trace_out = args.get("trace-out");
-    if trace_out.is_some() {
+    let flame_out = args.get("flame-out");
+    if trace_out.is_some() || flame_out.is_some() {
         // Force telemetry on uniformly so the trace covers every job (and
         // the fingerprint-relevant configs stay consistent across runs).
         for p in &mut points {
@@ -424,16 +467,25 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
         "--resume reads and writes the results directory; drop --no-persist"
     );
     anyhow::ensure!(
-        !(resume && trace_out.is_some()),
-        "--trace-out runs in-memory; drop --resume"
+        !(resume && (trace_out.is_some() || flame_out.is_some())),
+        "--trace-out/--flame-out run in-memory; drop --resume"
     );
-    let persist = trace_out.is_none() && (resume || !args.flag("no-persist"));
-    let aggs = if let Some(path) = trace_out {
-        let (aggs, traces) =
-            multi_fedls::workload::spec::run_points_traced(&points, jobs)?;
-        let text: String = traces.concat();
-        std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
-        eprintln!("telemetry trace written to {path} ({} lines)", text.lines().count());
+    let persist = trace_out.is_none()
+        && flame_out.is_none()
+        && (resume || !args.flag("no-persist"));
+    let aggs = if trace_out.is_some() || flame_out.is_some() {
+        let (aggs, traces, flames) =
+            multi_fedls::workload::spec::run_points_traced_full(&points, jobs)?;
+        if let Some(path) = trace_out {
+            let text: String = traces.concat();
+            std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            eprintln!("telemetry trace written to {path} ({} lines)", text.lines().count());
+        }
+        if let Some(path) = flame_out {
+            let text: String = flames.concat();
+            std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            eprintln!("collapsed stacks written to {path} ({} frames)", text.lines().count());
+        }
         aggs
     } else if persist {
         let results_dir = std::path::Path::new(args.get("results").unwrap_or("results"));
@@ -460,17 +512,11 @@ fn cmd_workload(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `multi-fedls report <results-dir | trace.jsonl>`: summarize a telemetry
-/// trace — every `.jsonl` under a results directory (the `trace-NNNN.jsonl`
-/// files a persisted workload campaign writes), or one `--trace-out` file.
-/// Renders a per-completed-job table plus event-kind counts.
-fn cmd_report(args: &Args) -> anyhow::Result<()> {
-    use multi_fedls::util::bench::Table;
-    use multi_fedls::util::Json;
-    let target = args.positional.first().ok_or_else(|| {
-        anyhow::anyhow!("report needs a results directory or a .jsonl trace file\n{USAGE}")
-    })?;
-    let path = std::path::Path::new(target);
+/// Discover the trace files a report/explain target names: every `.jsonl`
+/// under a results directory (the `trace-NNNN.jsonl` files a persisted
+/// workload campaign writes), or the one file given. Errors when the
+/// directory holds no traces (metadata-only campaign dirs included).
+fn trace_files(path: &std::path::Path) -> anyhow::Result<Vec<std::path::PathBuf>> {
     let files: Vec<std::path::PathBuf> = if path.is_dir() {
         let mut fs: Vec<std::path::PathBuf> = std::fs::read_dir(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?
@@ -493,14 +539,45 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
          persisted campaign directory)",
         path.display()
     );
-    let mut n_events = 0usize;
+    Ok(files)
+}
+
+/// One `job-complete` trace line's scalar fields (report/diff rows).
+struct JobDone {
+    job: String,
+    tenant: String,
+    point: i64,
+    trial: i64,
+    rounds: i64,
+    revocations: i64,
+    preemptions: i64,
+    wait_secs: f64,
+    fl_secs: f64,
+    cost: f64,
+}
+
+impl JobDone {
+    /// Stable identity for cross-trace matching (`--diff`).
+    fn key(&self) -> String {
+        format!("{}@{}/{}", self.job, self.point, self.trial)
+    }
+}
+
+/// Everything `report` aggregates from one trace target: per-kind line
+/// counts plus every completed job's scalars, in trace order.
+struct TraceSummary {
+    n_files: usize,
+    n_lines: usize,
+    by_kind: std::collections::BTreeMap<String, u64>,
+    jobs: Vec<JobDone>,
+}
+
+fn load_trace_summary(path: &std::path::Path) -> anyhow::Result<TraceSummary> {
+    use multi_fedls::util::Json;
+    let files = trace_files(path)?;
+    let mut n_lines = 0usize;
     let mut by_kind: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
-    let mut jobs_table = Table::new(
-        "Telemetry report — completed jobs",
-        &["Job", "Tenant", "Pt/Trial", "Rounds", "Revoc", "Preempt", "Wait", "FL time", "Cost ($)"],
-    );
-    let mut completed = 0usize;
-    let mut total_cost = 0.0f64;
+    let mut jobs = Vec::new();
     for f in &files {
         let text = std::fs::read_to_string(f)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
@@ -510,7 +587,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
             }
             let j = Json::parse(line)
                 .map_err(|e| anyhow::anyhow!("{}: bad trace line: {e}", f.display()))?;
-            n_events += 1;
+            n_lines += 1;
             let kind = j.get("kind").and_then(|k| k.as_str()).unwrap_or("?").to_string();
             *by_kind.entry(kind.clone()).or_insert(0) += 1;
             if kind == "job-complete" {
@@ -518,35 +595,281 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
                     j.get(key).and_then(|v| v.as_str()).unwrap_or("").to_string()
                 };
                 let n = |key: &str| j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
-                completed += 1;
-                total_cost += n("cost");
-                jobs_table.row(&[
-                    s("job"),
-                    s("tenant"),
-                    format!("{}/{}", n("point") as i64, n("trial") as i64),
-                    format!("{}", n("rounds") as i64),
-                    format!("{}", n("revocations") as i64),
-                    format!("{}", n("preemptions") as i64),
-                    SimTime::from_secs(n("wait_secs")).hms(),
-                    SimTime::from_secs(n("fl_secs")).hms(),
-                    format!("{:.2}", n("cost")),
-                ]);
+                jobs.push(JobDone {
+                    job: s("job"),
+                    tenant: s("tenant"),
+                    point: n("point") as i64,
+                    trial: n("trial") as i64,
+                    rounds: n("rounds") as i64,
+                    revocations: n("revocations") as i64,
+                    preemptions: n("preemptions") as i64,
+                    wait_secs: n("wait_secs"),
+                    fl_secs: n("fl_secs"),
+                    cost: n("cost"),
+                });
             }
         }
     }
-    if completed > 0 {
+    anyhow::ensure!(
+        n_lines > 0,
+        "{}: trace file(s) are empty — expected telemetry JSONL lines; re-run the \
+         campaign with [telemetry] enabled, or use --trace-out",
+        path.display()
+    );
+    Ok(TraceSummary { n_files: files.len(), n_lines, by_kind, jobs })
+}
+
+/// `multi-fedls report <results-dir | trace.jsonl>`: summarize a telemetry
+/// trace. Renders a per-completed-job table plus event-kind counts.
+/// `--diff A B` compares two traces/campaign directories instead.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    use multi_fedls::util::bench::Table;
+    if let Some(a) = args.get("diff") {
+        let b = args.positional.first().ok_or_else(|| {
+            anyhow::anyhow!("report --diff needs two traces or campaign dirs: --diff A B\n{USAGE}")
+        })?;
+        return report_diff(std::path::Path::new(a), std::path::Path::new(b));
+    }
+    let target = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("report needs a results directory or a .jsonl trace file\n{USAGE}")
+    })?;
+    let sum = load_trace_summary(std::path::Path::new(target))?;
+    let mut jobs_table = Table::new(
+        "Telemetry report — completed jobs",
+        &["Job", "Tenant", "Pt/Trial", "Rounds", "Revoc", "Preempt", "Wait", "FL time", "Cost ($)"],
+    );
+    let mut total_cost = 0.0f64;
+    for d in &sum.jobs {
+        total_cost += d.cost;
+        jobs_table.row(&[
+            d.job.clone(),
+            d.tenant.clone(),
+            format!("{}/{}", d.point, d.trial),
+            d.rounds.to_string(),
+            d.revocations.to_string(),
+            d.preemptions.to_string(),
+            SimTime::from_secs(d.wait_secs).hms(),
+            SimTime::from_secs(d.fl_secs).hms(),
+            format!("{:.2}", d.cost),
+        ]);
+    }
+    if !sum.jobs.is_empty() {
         jobs_table.print();
         println!();
     }
     let mut kinds = Table::new(
-        format!("Event kinds ({n_events} events, {} file(s))", files.len()),
+        format!("Event kinds ({} events, {} file(s))", sum.n_lines, sum.n_files),
         &["Kind", "Count"],
     );
-    for (k, c) in &by_kind {
+    for (k, c) in &sum.by_kind {
         kinds.row(&[k.clone(), c.to_string()]);
     }
     kinds.print();
-    println!("{completed} completed job(s), total cost ${total_cost:.2}");
+    println!("{} completed job(s), total cost ${total_cost:.2}", sum.jobs.len());
+    Ok(())
+}
+
+/// `multi-fedls report --diff A B`: regression-triage comparison of two
+/// traces or campaign directories — event-kind count deltas, per-job
+/// FL-time/wait/cost deltas for jobs present in both, and jobs that are
+/// new in B or disappeared from it.
+fn report_diff(a: &std::path::Path, b: &std::path::Path) -> anyhow::Result<()> {
+    use multi_fedls::util::bench::Table;
+    let sa = load_trace_summary(a)?;
+    let sb = load_trace_summary(b)?;
+    let mut kind_names: std::collections::BTreeSet<String> = sa.by_kind.keys().cloned().collect();
+    kind_names.extend(sb.by_kind.keys().cloned());
+    let mut kinds = Table::new(
+        format!("Event-kind deltas — A={} B={}", a.display(), b.display()),
+        &["Kind", "A", "B", "B-A"],
+    );
+    let mut changed = 0usize;
+    for k in &kind_names {
+        let ca = *sa.by_kind.get(k).unwrap_or(&0) as i64;
+        let cb = *sb.by_kind.get(k).unwrap_or(&0) as i64;
+        if ca != cb {
+            changed += 1;
+        }
+        kinds.row(&[k.clone(), ca.to_string(), cb.to_string(), format!("{:+}", cb - ca)]);
+    }
+    kinds.print();
+    println!();
+    let map_a: std::collections::BTreeMap<String, &JobDone> =
+        sa.jobs.iter().map(|d| (d.key(), d)).collect();
+    let map_b: std::collections::BTreeMap<String, &JobDone> =
+        sb.jobs.iter().map(|d| (d.key(), d)).collect();
+    let mut jobs = Table::new(
+        "Per-job deltas (B - A)",
+        &["Job@Pt/Trial", "FL secs", "Wait secs", "Cost ($)", "Revoc", "Preempt"],
+    );
+    let mut common = 0usize;
+    for (k, da) in &map_a {
+        if let Some(db) = map_b.get(k) {
+            common += 1;
+            jobs.row(&[
+                k.clone(),
+                format!("{:+.1}", db.fl_secs - da.fl_secs),
+                format!("{:+.1}", db.wait_secs - da.wait_secs),
+                format!("{:+.4}", db.cost - da.cost),
+                format!("{:+}", db.revocations - da.revocations),
+                format!("{:+}", db.preemptions - da.preemptions),
+            ]);
+        }
+    }
+    if common > 0 {
+        jobs.print();
+    }
+    let gone: Vec<String> = map_a.keys().filter(|k| !map_b.contains_key(*k)).cloned().collect();
+    let newly: Vec<String> = map_b.keys().filter(|k| !map_a.contains_key(*k)).cloned().collect();
+    if !gone.is_empty() {
+        println!("disappeared in B: {}", gone.join(", "));
+    }
+    if !newly.is_empty() {
+        println!("new in B: {}", newly.join(", "));
+    }
+    println!(
+        "{changed} kind(s) changed, {common} common job(s), {} new, {} disappeared",
+        newly.len(),
+        gone.len()
+    );
+    Ok(())
+}
+
+/// `multi-fedls explain <trace.jsonl> [--job J] [--decision N] [--vm TYPE]`:
+/// answer *why* the scheduler decided what it did, from the decision
+/// provenance a `--trace-out` trace carries. The default lists every
+/// decision one line each; `--decision N` expands one record with its
+/// ranked candidate table and the events it caused; `--job J` scopes any
+/// query to one job; `--vm TYPE` shows every decision that chose or
+/// considered a VM type plus its total billed downstream cost.
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    use multi_fedls::telemetry::{DecisionRecord, VmSpanRecord};
+    use multi_fedls::util::Json;
+    let target = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("explain needs a .jsonl trace file or a results directory\n{USAGE}")
+    })?;
+    let path = std::path::Path::new(target);
+    let files = trace_files(path)?;
+    // (point, trial) envelope keys ride alongside every parsed line so
+    // decision IDs — unique only within one trial — resolve correctly.
+    let pt_of = |j: &Json| -> (i64, i64) {
+        (
+            j.get("point").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
+            j.get("trial").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
+        )
+    };
+    let mut decisions: Vec<(i64, i64, DecisionRecord)> = Vec::new();
+    let mut spans: Vec<(i64, i64, VmSpanRecord)> = Vec::new();
+    let mut events: Vec<Json> = Vec::new();
+    let mut n_lines = 0usize;
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{}: bad trace line: {e}", f.display()))?;
+            n_lines += 1;
+            match j.get("kind").and_then(|k| k.as_str()) {
+                Some("decision") => {
+                    let (pt, tr) = pt_of(&j);
+                    if let Some(d) = DecisionRecord::from_json(&j) {
+                        decisions.push((pt, tr, d));
+                    }
+                }
+                Some("vm-span") => {
+                    let (pt, tr) = pt_of(&j);
+                    if let Some(v) = VmSpanRecord::from_json(&j) {
+                        spans.push((pt, tr, v));
+                    }
+                }
+                _ => events.push(j),
+            }
+        }
+    }
+    anyhow::ensure!(
+        !decisions.is_empty(),
+        "{}: no decision provenance in {n_lines} trace line(s) — record it by re-running \
+         with [telemetry] enabled and `decisions = true` (the default)",
+        path.display()
+    );
+    let job_filter = args.get("job");
+    let keep = |d: &DecisionRecord| job_filter.map_or(true, |j| d.job.as_deref() == Some(j));
+    // Prefix rows with the (point, trial) envelope only when it varies.
+    let multi = decisions.iter().any(|&(pt, tr, _)| (pt, tr) != (0, 0));
+    let tag = |pt: i64, tr: i64| if multi { format!("[{pt}/{tr}] ") } else { String::new() };
+
+    if let Some(n) = args.get("decision") {
+        let id: u64 = n.parse().map_err(|e| anyhow::anyhow!("--decision {n}: {e}"))?;
+        let hits: Vec<&(i64, i64, DecisionRecord)> =
+            decisions.iter().filter(|(_, _, d)| d.id == id && keep(d)).collect();
+        anyhow::ensure!(
+            !hits.is_empty(),
+            "no decision #{id} in the trace (run `explain` without --decision to list IDs)"
+        );
+        for (pt, tr, d) in hits {
+            print!("{}{}", tag(*pt, *tr), d.render_full());
+            let caused = events.iter().filter(|e| {
+                e.get("decision").and_then(|v| v.as_f64()) == Some(id as f64)
+                    && pt_of(e) == (*pt, *tr)
+            });
+            for e in caused {
+                println!("  -> {}", e.to_string_compact());
+            }
+        }
+        return Ok(());
+    }
+
+    if let Some(vm) = args.get("vm") {
+        // Candidate labels read "provider/region vmid"; substring match
+        // accepts either the bare type or the full label.
+        let mut shown = 0usize;
+        for (pt, tr, d) in &decisions {
+            if !keep(d) {
+                continue;
+            }
+            let chose = d.chosen.as_deref().is_some_and(|c| c.contains(vm));
+            let considered = d.candidates.iter().any(|c| c.label.contains(vm));
+            if !chose && !considered {
+                continue;
+            }
+            shown += 1;
+            let role = if chose { "" } else { "  (considered, not chosen)" };
+            println!("{}{}{role}", tag(*pt, *tr), d.render());
+        }
+        let billed: Vec<&(i64, i64, VmSpanRecord)> = spans
+            .iter()
+            .filter(|(_, _, v)| {
+                v.vm.contains(vm) && job_filter.map_or(true, |j| v.job.as_deref() == Some(j))
+            })
+            .collect();
+        let total: f64 = billed.iter().map(|(_, _, v)| v.billed_cost).sum();
+        println!(
+            "{shown} decision(s) involved {vm}; {} VM lifetime(s) billed ${total:.4} total",
+            billed.len()
+        );
+        return Ok(());
+    }
+
+    let mut shown = 0usize;
+    for (pt, tr, d) in &decisions {
+        if !keep(d) {
+            continue;
+        }
+        shown += 1;
+        println!("{}{}", tag(*pt, *tr), d.render());
+    }
+    if let Some(j) = job_filter {
+        anyhow::ensure!(shown > 0, "no decisions for job {j}; drop --job to list all");
+    }
+    println!(
+        "{shown} decision(s), {} vm span(s), {} event(s) in {} file(s)",
+        spans.len(),
+        events.len(),
+        files.len()
+    );
     Ok(())
 }
 

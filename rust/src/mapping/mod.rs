@@ -19,6 +19,120 @@ pub mod rank;
 pub use exact::{solve as solve_exact, MappingSolution};
 pub use problem::{Evaluation, JobProfile, Mapping, MappingProblem, MessageSizes};
 
+use crate::cloud::quota::QuotaTracker;
+use crate::cloud::VmTypeId;
+use crate::telemetry::{Candidate, Elimination};
+
+/// Decision provenance for one Initial Mapping solve: the ranked
+/// server-candidate table with a typed elimination reason per loser.
+///
+/// Runs *post-hoc* and touches none of the solver state, so recording
+/// provenance cannot perturb the solve. Granularity is the server VM type —
+/// the outer loop of [`exact::solve`] — with each row's objective the same
+/// optimistic lower bound the solver prunes on (server cost at the best
+/// feasible makespan plus every client's cheapest deadline-meeting option,
+/// quota-unaware). The chosen row instead carries the placement's exact
+/// evaluated objective and no elimination reason. Works uniformly for the
+/// exact/MILP solvers, the baselines, and pinned mappings, since all of
+/// them ultimately commit to one server type.
+pub fn explain_candidates(p: &MappingProblem, chosen: Option<&Mapping>) -> Vec<Candidate> {
+    let vms: Vec<VmTypeId> = p.catalog.vm_ids().collect();
+    let n_clients = p.job.n_clients();
+    let t_max = p.t_max();
+    let cost_max = p.cost_max();
+    let chosen_objective = chosen.map(|m| p.evaluate(m).objective);
+    let cat = p.catalog;
+    let mut rows = Vec::with_capacity(vms.len());
+    for &server in &vms {
+        let label = format!(
+            "{}/{} {}",
+            cat.provider(cat.provider_of(server)).name,
+            cat.region(cat.region_of(server)).name,
+            cat.vm(server).id
+        );
+        let mut row = Candidate {
+            label,
+            objective: f64::INFINITY,
+            price_factor: p.spot_price_factor,
+            eliminated: Some(Elimination::Dominated),
+        };
+        let mut quota = QuotaTracker::new();
+        if quota.allocate(cat, server).is_err() {
+            row.eliminated = Some(Elimination::QuotaExhausted);
+            rows.push(row);
+            continue;
+        }
+        // Same per-client round times and candidate-makespan grid as the
+        // solver's inner loops (exact::solve).
+        let t_agg = p.t_aggreg(server);
+        let mut time = vec![vec![0.0; vms.len()]; n_clients];
+        let mut ccost = vec![vec![0.0; vms.len()]; n_clients];
+        for i in 0..n_clients {
+            for (vi, &v) in vms.iter().enumerate() {
+                time[i][vi] = p.t_exec(i, v) + p.t_comm(v, server) + t_agg;
+                ccost[i][vi] = p.comm_cost(v, server);
+            }
+        }
+        let mut grid: Vec<f64> = time
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|&t| t <= p.deadline_round + 1e-9)
+            .collect();
+        rank::sort_f64(&mut grid);
+        grid.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+
+        let server_rate = p.rate_per_sec(server);
+        let mut any_in_time = false;
+        let mut any_in_budget = false;
+        let mut best_lb = f64::INFINITY;
+        for &t_m in &grid {
+            let mut lb_clients = 0.0;
+            let mut ok = true;
+            for i in 0..n_clients {
+                let min_cost = rank::argmin_by_f64(
+                    (0..vms.len()).filter(|&vi| time[i][vi] <= t_m + 1e-9),
+                    |&vi| p.rate_per_sec(vms[vi]) * t_m + ccost[i][vi],
+                );
+                match min_cost {
+                    Some((_, c)) => lb_clients += c,
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            any_in_time = true;
+            let lb_cost = server_rate * t_m + lb_clients;
+            if lb_cost > p.budget_round + 1e-9 {
+                continue;
+            }
+            any_in_budget = true;
+            let lb_objective = p.alpha * lb_cost / cost_max + (1.0 - p.alpha) * t_m / t_max;
+            best_lb = best_lb.min(lb_objective);
+        }
+        if !any_in_time {
+            row.eliminated = Some(Elimination::PastDeadline);
+        } else if !any_in_budget {
+            row.eliminated = Some(Elimination::OverBudget);
+        } else {
+            row.objective = best_lb;
+        }
+        if chosen.map(|m| m.server) == Some(server) {
+            row.eliminated = None;
+            if let Some(obj) = chosen_objective {
+                row.objective = obj;
+            }
+        }
+        rows.push(row);
+    }
+    rank::sort_by_key_f64(&mut rows, |c| c.objective);
+    rows
+}
+
 /// Which Initial Mapping implementation to run (module selection for the
 /// pluggable `Framework` pipeline). `Exact` is the paper's MILP solved by
 /// the structured exact solver; the others are the cross-check solver and
@@ -89,5 +203,65 @@ mod tests {
         }
         assert_eq!(MapperKind::from_key("nope"), None);
         assert_eq!(MapperKind::default(), MapperKind::Exact);
+    }
+
+    #[test]
+    fn explain_ranks_every_server_type_and_marks_the_chosen_row() {
+        use crate::cloud::Market;
+        use crate::mapping::problem::testutil::*;
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::Spot,
+            spot_price_factor: 1.0,
+            budget_round: 1e9,
+            deadline_round: 1e9,
+            outlook: None,
+        };
+        let sol = solve_exact(&p).expect("unconstrained TIL solves");
+        let rows = explain_candidates(&p, Some(&sol.mapping));
+        assert_eq!(rows.len(), mc.catalog.vm_ids().count(), "one row per server type");
+        let chosen: Vec<_> = rows.iter().filter(|r| r.eliminated.is_none()).collect();
+        assert_eq!(chosen.len(), 1, "exactly one chosen row");
+        assert!(chosen[0].label.ends_with(&mc.catalog.vm(sol.mapping.server).id));
+        assert!((chosen[0].objective - sol.eval.objective).abs() < 1e-12);
+        assert!(rows.iter().any(|r| r.eliminated == Some(Elimination::Dominated)));
+        for w in rows.windows(2) {
+            assert!(w[0].objective <= w[1].objective, "rows are ranked by objective");
+        }
+    }
+
+    #[test]
+    fn explain_reports_deadline_and_budget_eliminations() {
+        use crate::cloud::Market;
+        use crate::mapping::problem::testutil::*;
+        let mc = cloudlab_sim();
+        let sl = slowdowns(&mc);
+        let job = til_profile();
+        let mut p = MappingProblem {
+            catalog: &mc.catalog,
+            slowdowns: &sl,
+            job: &job,
+            alpha: 0.5,
+            market: Market::Spot,
+            spot_price_factor: 1.0,
+            budget_round: 1e9,
+            deadline_round: 1e-6,
+            outlook: None,
+        };
+        // An impossible deadline eliminates every server type on time.
+        let rows = explain_candidates(&p, None);
+        assert!(rows.iter().all(|r| r.eliminated == Some(Elimination::PastDeadline)));
+        assert!(rows.iter().all(|r| r.objective.is_infinite()));
+        // An impossible budget (with a sane deadline) eliminates on cost.
+        p.deadline_round = 1e9;
+        p.budget_round = 1e-9;
+        let rows = explain_candidates(&p, None);
+        assert!(rows.iter().all(|r| r.eliminated == Some(Elimination::OverBudget)));
     }
 }

@@ -32,9 +32,11 @@ pub enum EventKind {
         clients: Vec<String>,
         predicted_makespan: f64,
         predicted_cost: f64,
+        /// Provenance: the [`super::DecisionRecord`] this solve produced.
+        decision: Option<u64>,
     },
     /// Outlook deferral: provisioning delayed past a price spike.
-    Deferral { defer_secs: f64 },
+    Deferral { defer_secs: f64, decision: Option<u64> },
     /// Every VM booted; synchronous FL rounds begin.
     FlStart,
     /// A VM instance was requested (telemetry-only).
@@ -45,6 +47,8 @@ pub enum EventKind {
         region: String,
         spot: bool,
         boot_done: SimTime,
+        /// Provenance: the mapping/replacement decision that caused it.
+        decision: Option<u64>,
     },
     /// A round attempt began (telemetry-only). One round may start several
     /// times: every revocation voids the in-flight attempt.
@@ -59,26 +63,32 @@ pub enum EventKind {
     /// A spot VM was revoked mid-round.
     Revocation { task: String, vm: String, round: u32, provider: String, region: String },
     /// The Dynamic Scheduler picked a replacement (§4.4).
-    Replacement { task: String, vm: String, value: f64, boot_done: SimTime },
+    Replacement {
+        task: String,
+        vm: String,
+        value: f64,
+        boot_done: SimTime,
+        decision: Option<u64>,
+    },
     /// Server loss rolled progress back to the freshest checkpoint (§4.3).
     CheckpointRestore { restore_round: u32, lost: u32 },
     /// Workload-level checkpoint-preemption halted the job.
-    Preemption { round: u32, lost: u32 },
+    Preemption { round: u32, lost: u32, decision: Option<u64> },
     /// All live VMs terminated.
     Teardown { preempted: bool },
     /// A job entered the cluster (workload-level, telemetry-only).
     Arrival { job: String, tenant: String },
     /// A job was admitted after `wait_secs` in the queue.
-    Admission { job: String, wait_secs: f64 },
+    Admission { job: String, wait_secs: f64, decision: Option<u64> },
     /// Admission failed on residual quota; the job stays queued.
     QuotaWait { job: String },
     /// The cluster clock crossed a spot-price step; `factor` is the new
     /// price multiplier.
     PriceStep { factor: f64 },
     /// A price step triggered an admission retry for a queued job.
-    AdmissionRetry { job: String },
+    AdmissionRetry { job: String, decision: Option<u64> },
     /// A job was rejected (infeasible or admission policy).
-    Rejection { job: String, reason: String },
+    Rejection { job: String, reason: String, decision: Option<u64> },
     /// A job finished; the closing cost/progress summary.
     JobComplete {
         job: String,
@@ -119,6 +129,44 @@ impl EventKind {
         }
     }
 
+    /// The provenance decision that caused this event, for the kinds that
+    /// result from one (mapping, deferral, provision, replacement,
+    /// preemption, admission, retry, rejection). Always `None` when
+    /// telemetry is off or `decisions = false`.
+    pub fn decision_id(&self) -> Option<u64> {
+        match self {
+            EventKind::InitialMapping { decision, .. }
+            | EventKind::Deferral { decision, .. }
+            | EventKind::Provision { decision, .. }
+            | EventKind::Replacement { decision, .. }
+            | EventKind::Preemption { decision, .. }
+            | EventKind::Admission { decision, .. }
+            | EventKind::AdmissionRetry { decision, .. }
+            | EventKind::Rejection { decision, .. } => *decision,
+            _ => None,
+        }
+    }
+
+    /// Shift a carried decision ID by `offset` (re-anchoring job-local IDs
+    /// onto the workload trace's cluster-wide ID space).
+    pub fn shift_decision_id(&mut self, offset: u64) {
+        match self {
+            EventKind::InitialMapping { decision, .. }
+            | EventKind::Deferral { decision, .. }
+            | EventKind::Provision { decision, .. }
+            | EventKind::Replacement { decision, .. }
+            | EventKind::Preemption { decision, .. }
+            | EventKind::Admission { decision, .. }
+            | EventKind::AdmissionRetry { decision, .. }
+            | EventKind::Rejection { decision, .. } => {
+                if let Some(id) = decision {
+                    *id += offset;
+                }
+            }
+            _ => {}
+        }
+    }
+
     /// True for the kinds the executor only records when telemetry is on.
     pub fn telemetry_only(&self) -> bool {
         matches!(
@@ -142,17 +190,19 @@ impl EventKind {
     /// character for character (parity-enforced).
     pub fn render(&self, at: SimTime) -> String {
         match self {
-            EventKind::InitialMapping { server, clients, predicted_makespan, predicted_cost } => {
+            EventKind::InitialMapping {
+                server, clients, predicted_makespan, predicted_cost, ..
+            } => {
                 format!(
                     "initial mapping: server={server} clients={clients:?} \
                      (predicted round {predicted_makespan:.1}s, ${predicted_cost:.4})"
                 )
             }
-            EventKind::Deferral { defer_secs } => {
+            EventKind::Deferral { defer_secs, .. } => {
                 format!("outlook: provisioning deferred {defer_secs:.0}s past the price spike")
             }
             EventKind::FlStart => "all VMs prepared; FL execution starts".into(),
-            EventKind::Provision { task, vm, provider, region, spot, boot_done } => {
+            EventKind::Provision { task, vm, provider, region, spot, boot_done, .. } => {
                 format!(
                     "provision: {task} on {vm} ({provider}/{region}, {}); booting until {}",
                     if *spot { "spot" } else { "on-demand" },
@@ -174,7 +224,7 @@ impl EventKind {
             EventKind::Revocation { task, vm, round, .. } => {
                 format!("revocation: {task} on {vm} during round {round}")
             }
-            EventKind::Replacement { task, vm, value, boot_done } => {
+            EventKind::Replacement { task, vm, value, boot_done, .. } => {
                 format!(
                     "dynamic scheduler: {task} → {vm} (value {value:.5}); booting until {}",
                     boot_done.hms()
@@ -183,7 +233,7 @@ impl EventKind {
             EventKind::CheckpointRestore { restore_round, lost } => {
                 format!("server restore from round {restore_round} (lost {lost} rounds)")
             }
-            EventKind::Preemption { round, lost } => {
+            EventKind::Preemption { round, lost, .. } => {
                 format!(
                     "preempted at {} (checkpointed progress: round {round}, {lost} lost)",
                     at.hms()
@@ -199,7 +249,7 @@ impl EventKind {
             EventKind::Arrival { job, tenant } => {
                 format!("arrival: {job} (tenant {tenant})")
             }
-            EventKind::Admission { job, wait_secs } => {
+            EventKind::Admission { job, wait_secs, .. } => {
                 format!("admission: {job} after {wait_secs:.0}s in queue")
             }
             EventKind::QuotaWait { job } => {
@@ -208,10 +258,10 @@ impl EventKind {
             EventKind::PriceStep { factor } => {
                 format!("price step: spot factor now {factor:.3}×")
             }
-            EventKind::AdmissionRetry { job } => {
+            EventKind::AdmissionRetry { job, .. } => {
                 format!("admission retry: {job} re-solved on the price step")
             }
-            EventKind::Rejection { job, reason } => {
+            EventKind::Rejection { job, reason, .. } => {
                 format!("rejection: {job} ({reason})")
             }
             EventKind::JobComplete { job, cost, rounds, revocations, .. } => {
@@ -227,18 +277,25 @@ impl EventKind {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.insert("kind", self.key());
+        // Decision provenance rides on every decision-caused kind; absent
+        // when telemetry is off, so the off-path JSONL shape is unchanged.
+        if let Some(id) = self.decision_id() {
+            j.insert("decision", id as i64);
+        }
         match self {
-            EventKind::InitialMapping { server, clients, predicted_makespan, predicted_cost } => {
+            EventKind::InitialMapping {
+                server, clients, predicted_makespan, predicted_cost, ..
+            } => {
                 j.insert("server", server.as_str());
                 j.insert("clients", clients.clone());
                 j.insert("predicted_makespan_secs", *predicted_makespan);
                 j.insert("predicted_cost", *predicted_cost);
             }
-            EventKind::Deferral { defer_secs } => {
+            EventKind::Deferral { defer_secs, .. } => {
                 j.insert("defer_secs", *defer_secs);
             }
             EventKind::FlStart => {}
-            EventKind::Provision { task, vm, provider, region, spot, boot_done } => {
+            EventKind::Provision { task, vm, provider, region, spot, boot_done, .. } => {
                 j.insert("task", task.as_str());
                 j.insert("vm", vm.as_str());
                 j.insert("provider", provider.as_str());
@@ -267,7 +324,7 @@ impl EventKind {
                 j.insert("provider", provider.as_str());
                 j.insert("region", region.as_str());
             }
-            EventKind::Replacement { task, vm, value, boot_done } => {
+            EventKind::Replacement { task, vm, value, boot_done, .. } => {
                 j.insert("task", task.as_str());
                 j.insert("vm", vm.as_str());
                 j.insert("value", *value);
@@ -277,7 +334,7 @@ impl EventKind {
                 j.insert("restore_round", *restore_round as i64);
                 j.insert("rounds_lost", *lost as i64);
             }
-            EventKind::Preemption { round, lost } => {
+            EventKind::Preemption { round, lost, .. } => {
                 j.insert("round", *round as i64);
                 j.insert("rounds_lost", *lost as i64);
             }
@@ -288,7 +345,7 @@ impl EventKind {
                 j.insert("job", job.as_str());
                 j.insert("tenant", tenant.as_str());
             }
-            EventKind::Admission { job, wait_secs } => {
+            EventKind::Admission { job, wait_secs, .. } => {
                 j.insert("job", job.as_str());
                 j.insert("wait_secs", *wait_secs);
             }
@@ -298,10 +355,10 @@ impl EventKind {
             EventKind::PriceStep { factor } => {
                 j.insert("factor", *factor);
             }
-            EventKind::AdmissionRetry { job } => {
+            EventKind::AdmissionRetry { job, .. } => {
                 j.insert("job", job.as_str());
             }
-            EventKind::Rejection { job, reason } => {
+            EventKind::Rejection { job, reason, .. } => {
                 j.insert("job", job.as_str());
                 j.insert("reason", reason.as_str());
             }
@@ -342,13 +399,14 @@ mod tests {
                 clients: vec!["vm126".into(), "vm138".into()],
                 predicted_makespan: 123.456,
                 predicted_cost: 1.23456,
+                decision: None,
             }
             .render(at),
             "initial mapping: server=vm126 clients=[\"vm126\", \"vm138\"] \
              (predicted round 123.5s, $1.2346)"
         );
         assert_eq!(
-            EventKind::Deferral { defer_secs: 10_800.0 }.render(at),
+            EventKind::Deferral { defer_secs: 10_800.0, decision: None }.render(at),
             "outlook: provisioning deferred 10800s past the price spike"
         );
         assert_eq!(EventKind::FlStart.render(at), "all VMs prepared; FL execution starts");
@@ -373,6 +431,7 @@ mod tests {
                 vm: "vm138".into(),
                 value: 0.123456,
                 boot_done: SimTime::from_secs(3900.0),
+                decision: None,
             }
             .render(at),
             format!(
@@ -385,7 +444,7 @@ mod tests {
             "server restore from round 5 (lost 2 rounds)"
         );
         assert_eq!(
-            EventKind::Preemption { round: 4, lost: 1 }.render(at),
+            EventKind::Preemption { round: 4, lost: 1, decision: None }.render(at),
             format!("preempted at {} (checkpointed progress: round 4, 1 lost)", at.hms())
         );
         assert_eq!(
@@ -405,6 +464,142 @@ mod tests {
         assert!(EventKind::RoundStart { round: 1, predicted_secs: 1.0 }.telemetry_only());
         assert!(EventKind::CheckpointSave { round: 1 }.telemetry_only());
         assert!(EventKind::PriceStep { factor: 1.5 }.telemetry_only());
+    }
+
+    /// One literal per variant. The inner match is the compile-time guard:
+    /// adding an `EventKind` variant breaks it until the sample list (and
+    /// therefore every sink assertion below) is extended.
+    fn exhaustive_samples() -> Vec<EventKind> {
+        fn _covered(k: &EventKind) {
+            match k {
+                EventKind::InitialMapping { .. }
+                | EventKind::Deferral { .. }
+                | EventKind::FlStart
+                | EventKind::Provision { .. }
+                | EventKind::RoundStart { .. }
+                | EventKind::RoundEnd { .. }
+                | EventKind::CheckpointSave { .. }
+                | EventKind::BatchedRevocation { .. }
+                | EventKind::Revocation { .. }
+                | EventKind::Replacement { .. }
+                | EventKind::CheckpointRestore { .. }
+                | EventKind::Preemption { .. }
+                | EventKind::Teardown { .. }
+                | EventKind::Arrival { .. }
+                | EventKind::Admission { .. }
+                | EventKind::QuotaWait { .. }
+                | EventKind::PriceStep { .. }
+                | EventKind::AdmissionRetry { .. }
+                | EventKind::Rejection { .. }
+                | EventKind::JobComplete { .. } => {}
+            }
+        }
+        vec![
+            EventKind::InitialMapping {
+                server: "vm126".into(),
+                clients: vec!["vm138".into()],
+                predicted_makespan: 120.0,
+                predicted_cost: 1.5,
+                decision: Some(0),
+            },
+            EventKind::Deferral { defer_secs: 3600.0, decision: Some(1) },
+            EventKind::FlStart,
+            EventKind::Provision {
+                task: "server".into(),
+                vm: "vm126".into(),
+                provider: "Cloud A".into(),
+                region: "Utah".into(),
+                spot: true,
+                boot_done: SimTime::from_secs(300.0),
+                decision: Some(0),
+            },
+            EventKind::RoundStart { round: 1, predicted_secs: 120.0 },
+            EventKind::RoundEnd { round: 1, egress_gb: 0.5 },
+            EventKind::CheckpointSave { round: 1 },
+            EventKind::BatchedRevocation { count: 2 },
+            EventKind::Revocation {
+                task: "client-1".into(),
+                vm: "vm121".into(),
+                round: 2,
+                provider: "Cloud B".into(),
+                region: "SP".into(),
+            },
+            EventKind::Replacement {
+                task: "client-1".into(),
+                vm: "vm138".into(),
+                value: 0.5,
+                boot_done: SimTime::from_secs(900.0),
+                decision: Some(2),
+            },
+            EventKind::CheckpointRestore { restore_round: 1, lost: 1 },
+            EventKind::Preemption { round: 3, lost: 1, decision: Some(3) },
+            EventKind::Teardown { preempted: false },
+            EventKind::Arrival { job: "low-0".into(), tenant: "zeta".into() },
+            EventKind::Admission { job: "low-0".into(), wait_secs: 0.0, decision: Some(4) },
+            EventKind::QuotaWait { job: "low-1".into() },
+            EventKind::PriceStep { factor: 1.4 },
+            EventKind::AdmissionRetry { job: "low-1".into(), decision: Some(5) },
+            EventKind::Rejection {
+                job: "low-2".into(),
+                reason: "infeasible".into(),
+                decision: Some(6),
+            },
+            EventKind::JobComplete {
+                job: "low-0".into(),
+                tenant: "zeta".into(),
+                cost: 2.0,
+                rounds: 6,
+                revocations: 1,
+                preemptions: 1,
+                wait_secs: 10.0,
+                fl_secs: 500.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_renders_and_round_trips_jsonl() {
+        use crate::coordinator::sim::SimEvent;
+        let at = SimTime::from_secs(100.0);
+        let samples = exhaustive_samples();
+        let mut keys = std::collections::BTreeSet::new();
+        for kind in samples {
+            let what = SimEvent { at, kind: kind.clone() }.what();
+            assert!(!what.is_empty(), "{:?} must render", kind.key());
+            let s = kind.to_json().to_string_compact();
+            let parsed = Json::parse(&s).expect("sink line is valid JSON");
+            assert_eq!(
+                parsed.get("kind").and_then(|v| v.as_str()),
+                Some(kind.key()),
+                "kind tag survives the round trip"
+            );
+            assert_eq!(parsed.to_string_compact(), s, "round-trip is lossless: {s}");
+            assert_eq!(
+                parsed.get("decision").and_then(|v| v.as_f64()).map(|f| f as u64),
+                kind.decision_id(),
+                "decision provenance survives the round trip: {s}"
+            );
+            keys.insert(kind.key());
+        }
+        assert_eq!(keys.len(), 20, "every variant has a distinct key");
+    }
+
+    #[test]
+    fn decision_ids_shift_and_stay_absent_on_causeless_kinds() {
+        let mut ev = EventKind::Admission { job: "j".into(), wait_secs: 0.0, decision: Some(3) };
+        ev.shift_decision_id(100);
+        assert_eq!(ev.decision_id(), Some(103));
+        let mut none = EventKind::Revocation {
+            task: "t".into(),
+            vm: "v".into(),
+            round: 1,
+            provider: "p".into(),
+            region: "r".into(),
+        };
+        none.shift_decision_id(100);
+        assert_eq!(none.decision_id(), None);
+        let off = EventKind::Admission { job: "j".into(), wait_secs: 0.0, decision: None };
+        assert!(!off.to_json().to_string_compact().contains("decision"));
     }
 
     #[test]

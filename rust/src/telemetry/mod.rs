@@ -13,6 +13,9 @@
 //!   additively in trial index order (bit-identical for any `--jobs N`).
 //! * [`sink`] — JSONL event-log export (`--trace-out`), collapsed-stack
 //!   flamegraphs, and the structures behind `multi-fedls report`.
+//! * [`provenance`] — [`DecisionRecord`]s explaining *why* every scheduling
+//!   decision went the way it did (ranked candidates with typed elimination
+//!   reasons), queried by `multi-fedls explain`.
 //!
 //! Everything is gated by the `[telemetry]` spec table ([`TelemetrySpec`],
 //! off by default): telemetry-off runs are bit-identical to the
@@ -22,12 +25,14 @@
 
 pub mod event;
 pub mod metrics;
+pub mod provenance;
 pub mod sink;
 pub mod span;
 pub mod spec;
 
 pub use event::EventKind;
 pub use metrics::{Histogram, MetricsRegistry};
+pub use provenance::{Candidate, DecisionKind, DecisionRecord, Elimination, VmSpanRecord};
 pub use sink::{flamegraph_folded, trace_jsonl, TraceEvent};
 pub use span::{
     build_job_telemetry, JobSpan, JobTelemetry, RoundSpan, SolverSpan, VmLifetimeSpan,

@@ -1,0 +1,504 @@
+//! Decision provenance: *why* every scheduling decision was made.
+//!
+//! Every decision point in the stack — Initial Mapping solves, Dynamic
+//! Scheduler replacements, outlook deferrals, and the workload engine's
+//! admission / retry / rejection / preemption-victim choices — emits one
+//! [`DecisionRecord`]: a monotonic decision ID, the sim-time instant, the
+//! chosen option, and a ranked candidate table where every losing candidate
+//! carries a typed [`Elimination`] reason. Records are collected only when
+//! `[telemetry]` is enabled (with `decisions = true`, the default), so the
+//! telemetry-off path stays bit-identical to the pre-provenance simulator.
+//!
+//! Records serialize into the `--trace-out` JSONL alongside events (as
+//! `"kind":"decision"` lines, with `"kind":"vm-span"` lines for billed VM
+//! lifetimes) and are queried by `multi-fedls explain`. Event kinds that
+//! *result from* a decision carry the decision ID
+//! ([`super::EventKind::decision_id`]), so a trace forms causal chains:
+//! revocation → selection decision → provision → billed cost.
+
+use crate::util::Json;
+
+/// Why a candidate lost. One typed reason per eliminated candidate; the
+/// chosen candidate carries none.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Elimination {
+    /// Its cheapest completion exceeds `B_round`.
+    OverBudget,
+    /// It cannot finish a round within `T_round`.
+    PastDeadline,
+    /// The provider's GPU/vCPU quota cannot host it.
+    QuotaExhausted,
+    /// The Dynamic Scheduler policy bans it (revoked type removed).
+    PolicyBanned,
+    /// The per-task revocation cap forbids another spot replacement.
+    RevocationCapped,
+    /// Feasible, but another candidate scores a better objective.
+    Dominated,
+}
+
+impl Elimination {
+    /// Stable machine-readable tag (the JSONL `eliminated` field).
+    pub fn key(self) -> &'static str {
+        match self {
+            Elimination::OverBudget => "over-budget",
+            Elimination::PastDeadline => "past-deadline",
+            Elimination::QuotaExhausted => "quota-exhausted",
+            Elimination::PolicyBanned => "policy-banned",
+            Elimination::RevocationCapped => "revocation-capped",
+            Elimination::Dominated => "dominated",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<Elimination> {
+        match key {
+            "over-budget" => Some(Elimination::OverBudget),
+            "past-deadline" => Some(Elimination::PastDeadline),
+            "quota-exhausted" => Some(Elimination::QuotaExhausted),
+            "policy-banned" => Some(Elimination::PolicyBanned),
+            "revocation-capped" => Some(Elimination::RevocationCapped),
+            "dominated" => Some(Elimination::Dominated),
+            _ => None,
+        }
+    }
+
+    /// Every reason (exhaustiveness tests).
+    pub fn all() -> [Elimination; 6] {
+        [
+            Elimination::OverBudget,
+            Elimination::PastDeadline,
+            Elimination::QuotaExhausted,
+            Elimination::PolicyBanned,
+            Elimination::RevocationCapped,
+            Elimination::Dominated,
+        ]
+    }
+}
+
+/// Which decision point produced a record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// An Initial Mapping solve (exact/MILP/baseline/pinned).
+    InitialMapping,
+    /// An outlook deferral: provisioning delayed past a price spike.
+    Deferral,
+    /// A Dynamic Scheduler replacement (Algorithms 1–3).
+    Replacement,
+    /// Workload admission: the job entered the cluster.
+    Admission,
+    /// Workload admission retry on a price step.
+    AdmissionRetry,
+    /// Workload rejection: no feasible placement at any price level.
+    Rejection,
+    /// Workload preemption-victim selection.
+    PreemptionVictim,
+}
+
+impl DecisionKind {
+    /// Stable machine-readable tag (the JSONL `decision_kind` field).
+    pub fn key(self) -> &'static str {
+        match self {
+            DecisionKind::InitialMapping => "initial-mapping",
+            DecisionKind::Deferral => "deferral",
+            DecisionKind::Replacement => "replacement",
+            DecisionKind::Admission => "admission",
+            DecisionKind::AdmissionRetry => "admission-retry",
+            DecisionKind::Rejection => "rejection",
+            DecisionKind::PreemptionVictim => "preemption-victim",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<DecisionKind> {
+        match key {
+            "initial-mapping" => Some(DecisionKind::InitialMapping),
+            "deferral" => Some(DecisionKind::Deferral),
+            "replacement" => Some(DecisionKind::Replacement),
+            "admission" => Some(DecisionKind::Admission),
+            "admission-retry" => Some(DecisionKind::AdmissionRetry),
+            "rejection" => Some(DecisionKind::Rejection),
+            "preemption-victim" => Some(DecisionKind::PreemptionVictim),
+            _ => None,
+        }
+    }
+
+    /// Every kind (exhaustiveness tests).
+    pub fn all() -> [DecisionKind; 7] {
+        [
+            DecisionKind::InitialMapping,
+            DecisionKind::Deferral,
+            DecisionKind::Replacement,
+            DecisionKind::Admission,
+            DecisionKind::AdmissionRetry,
+            DecisionKind::Rejection,
+            DecisionKind::PreemptionVictim,
+        ]
+    }
+}
+
+/// One row of a decision's ranked candidate table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Human-stable identity: `"{provider}/{region} {vm}"` for placements,
+    /// the job name for preemption victims.
+    pub label: String,
+    /// Objective value the decision scored this candidate at
+    /// (`f64::INFINITY` when infeasibility made scoring moot).
+    pub objective: f64,
+    /// Spot-price multiplier the scoring used.
+    pub price_factor: f64,
+    /// `None` for the chosen candidate; the typed loss reason otherwise.
+    pub eliminated: Option<Elimination>,
+}
+
+impl Candidate {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.insert("label", self.label.as_str());
+        // Non-finite objectives (infeasible candidates) are omitted — the
+        // compact writer only emits valid JSON numbers.
+        if self.objective.is_finite() {
+            j.insert("objective", self.objective);
+        }
+        j.insert("price_factor", self.price_factor);
+        if let Some(e) = self.eliminated {
+            j.insert("eliminated", e.key());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<Candidate> {
+        Some(Candidate {
+            label: j.get("label")?.as_str()?.to_string(),
+            objective: j.get("objective").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY),
+            price_factor: j.get("price_factor").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            eliminated: j
+                .get("eliminated")
+                .and_then(|v| v.as_str())
+                .and_then(Elimination::from_key),
+        })
+    }
+}
+
+/// One scheduling decision: what was chosen, over which ranked candidates,
+/// and why each loser lost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    /// Monotonic per-trace ID (trace order; gaps allowed after preemption
+    /// replays). Events caused by this decision carry the same ID.
+    pub id: u64,
+    /// Sim-time instant (cluster clock in workload traces).
+    pub at: f64,
+    pub kind: DecisionKind,
+    /// Owning job/tenant (workload traces; `None` in single-job runs).
+    pub job: Option<String>,
+    pub tenant: Option<String>,
+    /// Label of the chosen candidate; `None` when the decision chose
+    /// nothing (rejections, zero-deferral advice).
+    pub chosen: Option<String>,
+    /// One human sentence: why the decision went this way.
+    pub reason: String,
+    /// Ranked candidate table, best objective first.
+    pub candidates: Vec<Candidate>,
+    /// VM instance numbers provisioned as a result of this decision
+    /// (the initial fleet, or a single replacement).
+    pub instances: Vec<u64>,
+    /// Σ downstream `VmLifetimeSpan.billed_cost` over `instances`, filled
+    /// post-hoc when the run's billing is known.
+    pub attributed_cost: Option<f64>,
+}
+
+impl DecisionRecord {
+    /// Re-anchor a job-local record onto the cluster clock/ID space.
+    pub fn rebase(&mut self, id_offset: u64, at_offset: f64) {
+        self.id += id_offset;
+        self.at += at_offset;
+    }
+
+    /// The JSONL line object (`"kind":"decision"` lines; the caller adds
+    /// `point`/`trial` envelope keys).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.insert("kind", "decision");
+        j.insert("at", self.at);
+        j.insert("decision", self.id as i64);
+        j.insert("decision_kind", self.kind.key());
+        if let Some(job) = &self.job {
+            j.insert("job", job.as_str());
+        }
+        if let Some(tenant) = &self.tenant {
+            j.insert("tenant", tenant.as_str());
+        }
+        if let Some(chosen) = &self.chosen {
+            j.insert("chosen", chosen.as_str());
+        }
+        j.insert("reason", self.reason.as_str());
+        j.insert("candidates", Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()));
+        j.insert(
+            "instances",
+            Json::Arr(self.instances.iter().map(|&i| Json::from(i)).collect()),
+        );
+        if let Some(cost) = self.attributed_cost {
+            j.insert("attributed_cost", cost);
+        }
+        j
+    }
+
+    /// Parse one `"kind":"decision"` JSONL object (the `explain` reader).
+    pub fn from_json(j: &Json) -> Option<DecisionRecord> {
+        if j.get("kind")?.as_str()? != "decision" {
+            return None;
+        }
+        let kind = DecisionKind::from_key(j.get("decision_kind")?.as_str()?)?;
+        let candidates = match j.get("candidates") {
+            Some(Json::Arr(items)) => items.iter().filter_map(Candidate::from_json).collect(),
+            _ => Vec::new(),
+        };
+        let instances = match j.get("instances") {
+            Some(Json::Arr(items)) => {
+                items.iter().filter_map(|v| v.as_f64()).map(|f| f as u64).collect()
+            }
+            _ => Vec::new(),
+        };
+        Some(DecisionRecord {
+            id: j.get("decision")?.as_f64()? as u64,
+            at: j.get("at")?.as_f64()?,
+            kind,
+            job: j.get("job").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            tenant: j.get("tenant").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            chosen: j.get("chosen").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            reason: j.get("reason").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            candidates,
+            instances,
+            attributed_cost: j.get("attributed_cost").and_then(|v| v.as_f64()),
+        })
+    }
+
+    /// One-line human summary (the `explain` listing row).
+    pub fn render(&self) -> String {
+        let who = match (&self.job, &self.tenant) {
+            (Some(j), Some(t)) if !t.is_empty() => format!(" [{j}/{t}]"),
+            (Some(j), _) => format!(" [{j}]"),
+            _ => String::new(),
+        };
+        let chose = match &self.chosen {
+            Some(c) => format!("chose {c}"),
+            None => "chose nothing".to_string(),
+        };
+        let cost = match self.attributed_cost {
+            Some(c) => format!(", ${c:.4} billed downstream"),
+            None => String::new(),
+        };
+        format!(
+            "decision #{} at t={:.0}s{} — {}: {} over {} candidate(s) ({}{})",
+            self.id,
+            self.at,
+            who,
+            self.kind.key(),
+            chose,
+            self.candidates.len(),
+            self.reason,
+            cost
+        )
+    }
+
+    /// Multi-line human rendering with the full ranked candidate table.
+    pub fn render_full(&self) -> String {
+        let mut out = self.render();
+        out.push('\n');
+        for c in &self.candidates {
+            let obj = if c.objective.is_finite() {
+                format!("{:.5}", c.objective)
+            } else {
+                "inf".to_string()
+            };
+            let verdict = match c.eliminated {
+                None => "chosen".to_string(),
+                Some(e) => e.key().to_string(),
+            };
+            out.push_str(&format!(
+                "  {:<30} objective {:<10} price {:.3}x  {}\n",
+                c.label, obj, c.price_factor, verdict
+            ));
+        }
+        out
+    }
+}
+
+/// One billed VM lifetime as a trace line (`"kind":"vm-span"`), carrying
+/// the job attribution the `explain --vm` query sums over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmSpanRecord {
+    pub job: Option<String>,
+    pub tenant: Option<String>,
+    pub vm: String,
+    pub instance: u64,
+    pub provider: String,
+    pub region: String,
+    pub spot: bool,
+    pub start: f64,
+    pub end: f64,
+    pub billed_cost: f64,
+}
+
+impl VmSpanRecord {
+    /// Re-anchor a job-local span onto the cluster clock.
+    pub fn rebase(&mut self, at_offset: f64) {
+        self.start += at_offset;
+        self.end += at_offset;
+    }
+
+    /// The JSONL line object (the caller adds `point`/`trial` keys).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.insert("kind", "vm-span");
+        j.insert("at", self.start);
+        if let Some(job) = &self.job {
+            j.insert("job", job.as_str());
+        }
+        if let Some(tenant) = &self.tenant {
+            j.insert("tenant", tenant.as_str());
+        }
+        j.insert("vm", self.vm.as_str());
+        j.insert("instance", self.instance as i64);
+        j.insert("provider", self.provider.as_str());
+        j.insert("region", self.region.as_str());
+        j.insert("market", if self.spot { "spot" } else { "on-demand" });
+        j.insert("end", self.end);
+        j.insert("billed_cost", self.billed_cost);
+        j
+    }
+
+    /// Parse one `"kind":"vm-span"` JSONL object.
+    pub fn from_json(j: &Json) -> Option<VmSpanRecord> {
+        if j.get("kind")?.as_str()? != "vm-span" {
+            return None;
+        }
+        Some(VmSpanRecord {
+            job: j.get("job").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            tenant: j.get("tenant").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            vm: j.get("vm")?.as_str()?.to_string(),
+            instance: j.get("instance").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            provider: j.get("provider").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            region: j.get("region").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            spot: j.get("market").and_then(|v| v.as_str()) == Some("spot"),
+            start: j.get("at")?.as_f64()?,
+            end: j.get("end").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            billed_cost: j.get("billed_cost").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> DecisionRecord {
+        DecisionRecord {
+            id: 7,
+            at: 3600.0,
+            kind: DecisionKind::Replacement,
+            job: Some("high".into()),
+            tenant: Some("acme".into()),
+            chosen: Some("Cloud A/Utah vm138".into()),
+            reason: "minimizes the weighted objective".into(),
+            candidates: vec![
+                Candidate {
+                    label: "Cloud A/Utah vm138".into(),
+                    objective: 0.123,
+                    price_factor: 1.0,
+                    eliminated: None,
+                },
+                Candidate {
+                    label: "Cloud A/Utah vm126".into(),
+                    objective: f64::INFINITY,
+                    price_factor: 1.0,
+                    eliminated: Some(Elimination::PolicyBanned),
+                },
+            ],
+            instances: vec![6],
+            attributed_cost: Some(1.25),
+        }
+    }
+
+    #[test]
+    fn keys_round_trip() {
+        for k in DecisionKind::all() {
+            assert_eq!(DecisionKind::from_key(k.key()), Some(k));
+        }
+        for e in Elimination::all() {
+            assert_eq!(Elimination::from_key(e.key()), Some(e));
+        }
+        assert_eq!(DecisionKind::from_key("nope"), None);
+        assert_eq!(Elimination::from_key("nope"), None);
+    }
+
+    #[test]
+    fn decision_json_round_trips() {
+        let r = record();
+        let j = r.to_json();
+        let s = j.to_string_compact();
+        assert!(s.contains("\"kind\":\"decision\""), "{s}");
+        assert!(s.contains("\"decision\":7"), "{s}");
+        assert!(!s.contains("inf"), "non-finite objectives must be omitted: {s}");
+        let parsed = Json::parse(&s).unwrap();
+        let back = DecisionRecord::from_json(&parsed).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn vm_span_json_round_trips() {
+        let span = VmSpanRecord {
+            job: Some("low-0".into()),
+            tenant: Some("zeta".into()),
+            vm: "vm311".into(),
+            instance: 3,
+            provider: "AWS".into(),
+            region: "us-east-1".into(),
+            spot: true,
+            start: 120.0,
+            end: 4000.0,
+            billed_cost: 0.75,
+        };
+        let s = span.to_json().to_string_compact();
+        assert!(s.contains("\"kind\":\"vm-span\""), "{s}");
+        assert!(s.contains("\"at\":120"), "at = span start: {s}");
+        let back = VmSpanRecord::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, span);
+    }
+
+    #[test]
+    fn rebase_shifts_ids_and_times() {
+        let mut r = record();
+        r.rebase(100, 500.0);
+        assert_eq!(r.id, 107);
+        assert!((r.at - 4100.0).abs() < 1e-12);
+        let mut v = VmSpanRecord::from_json(
+            &Json::parse(
+                "{\"kind\":\"vm-span\",\"at\":10,\"vm\":\"vm1\",\"end\":20,\"instance\":1}",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        v.rebase(5.0);
+        assert!((v.start - 15.0).abs() < 1e-12 && (v.end - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renderings_carry_the_essentials() {
+        let r = record();
+        let line = r.render();
+        assert!(line.contains("decision #7"), "{line}");
+        assert!(line.contains("replacement"), "{line}");
+        assert!(line.contains("Cloud A/Utah vm138"), "{line}");
+        assert!(line.contains("$1.2500 billed downstream"), "{line}");
+        let full = r.render_full();
+        assert!(full.contains("policy-banned"), "{full}");
+        assert!(full.contains("chosen"), "{full}");
+    }
+
+    #[test]
+    fn parsers_reject_other_kinds() {
+        let ev = Json::parse("{\"kind\":\"revocation\",\"at\":1}").unwrap();
+        assert!(DecisionRecord::from_json(&ev).is_none());
+        assert!(VmSpanRecord::from_json(&ev).is_none());
+    }
+}

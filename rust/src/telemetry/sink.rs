@@ -133,6 +133,7 @@ mod tests {
             }],
             solver: Vec::new(),
             metrics: MetricsRegistry::new(),
+            decisions: Vec::new(),
         };
         let folded = flamegraph_folded(&tel);
         assert!(folded.contains("job;setup 120500\n"), "{folded}");

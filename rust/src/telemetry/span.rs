@@ -14,7 +14,7 @@ use crate::cloudsim::Ledger;
 use crate::coordinator::sim::SimEvent;
 use crate::simul::SimTime;
 
-use super::{EventKind, MetricsRegistry, TelemetrySpec};
+use super::{DecisionRecord, EventKind, MetricsRegistry, TelemetrySpec};
 
 /// The root span: one job from submission (t = 0) to teardown, with the FL
 /// execution window inside it.
@@ -66,6 +66,10 @@ pub struct JobTelemetry {
     pub vms: Vec<VmLifetimeSpan>,
     pub solver: Vec<SolverSpan>,
     pub metrics: MetricsRegistry,
+    /// Decision provenance, filled by the executor after the run (the
+    /// span pass reconstructs intervals; decisions are recorded live at
+    /// each decision point and attributed against `vms` afterwards).
+    pub decisions: Vec<DecisionRecord>,
 }
 
 impl JobTelemetry {
@@ -159,7 +163,7 @@ pub fn build_job_telemetry(
         for e in events {
             metrics.inc(&format!("events.{}", e.kind.key()), 1);
             match &e.kind {
-                EventKind::Deferral { defer_secs } => {
+                EventKind::Deferral { defer_secs, .. } => {
                     metrics.observe("deferral_secs", *defer_secs);
                 }
                 EventKind::Provision { boot_done, .. }
@@ -205,6 +209,7 @@ pub fn build_job_telemetry(
         vms,
         solver,
         metrics,
+        decisions: Vec::new(),
     }
 }
 
@@ -278,7 +283,7 @@ mod tests {
     fn spans_flag_gates_the_span_model_but_not_metrics() {
         let cat = crate::cloud::tables::cloudlab();
         let ledger = Ledger::new();
-        let spec = TelemetrySpec { enabled: true, spans: false, metrics: true };
+        let spec = TelemetrySpec { enabled: true, spans: false, metrics: true, decisions: true };
         let events = vec![ev(0.0, EventKind::FlStart)];
         let tel =
             build_job_telemetry(&spec, &cat, &ledger, &events, SimTime::from_secs(1.0), SimTime::ZERO);

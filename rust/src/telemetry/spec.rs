@@ -7,9 +7,10 @@
 //!
 //! ```toml
 //! [telemetry]
-//! enabled = true   # default true when the table is present
-//! spans   = true   # build Round/VmLifetime/Job/Solver spans
-//! metrics = true   # build the counters/histogram registry
+//! enabled   = true   # default true when the table is present
+//! spans     = true   # build Round/VmLifetime/Job/Solver spans
+//! metrics   = true   # build the counters/histogram registry
+//! decisions = true   # record DecisionRecord provenance (multi-fedls explain)
 //! ```
 
 use crate::util::tomlmini::{self, Value};
@@ -26,11 +27,13 @@ pub struct TelemetrySpec {
     pub spans: bool,
     /// Build the [`super::MetricsRegistry`].
     pub metrics: bool,
+    /// Record decision provenance ([`super::DecisionRecord`]).
+    pub decisions: bool,
 }
 
 impl Default for TelemetrySpec {
     fn default() -> Self {
-        TelemetrySpec { enabled: false, spans: true, metrics: true }
+        TelemetrySpec { enabled: false, spans: true, metrics: true, decisions: true }
     }
 }
 
@@ -53,8 +56,18 @@ impl TelemetrySpec {
         let enabled = flag("enabled", true)?;
         let spans = flag("spans", true)?;
         let metrics = flag("metrics", true)?;
-        tomlmini::reject_unknown_keys(tbl, &["enabled", "spans", "metrics"], "[telemetry]")?;
-        Ok(TelemetrySpec { enabled, spans, metrics })
+        let decisions = flag("decisions", true)?;
+        tomlmini::reject_unknown_keys(
+            tbl,
+            &["enabled", "spans", "metrics", "decisions"],
+            "[telemetry]",
+        )?;
+        Ok(TelemetrySpec { enabled, spans, metrics, decisions })
+    }
+
+    /// True when the run should collect [`super::DecisionRecord`]s.
+    pub fn record_decisions(&self) -> bool {
+        self.enabled && self.decisions
     }
 }
 
@@ -73,19 +86,26 @@ mod tests {
     #[test]
     fn default_is_disabled_and_table_presence_enables() {
         assert!(!TelemetrySpec::default().enabled);
+        assert!(!TelemetrySpec::default().record_decisions());
         let spec = parse("[telemetry]\n").unwrap();
-        assert!(spec.enabled && spec.spans && spec.metrics);
+        assert!(spec.enabled && spec.spans && spec.metrics && spec.decisions);
+        assert!(spec.record_decisions());
     }
 
     #[test]
     fn parses_all_keys() {
-        let spec =
-            parse("[telemetry]\nenabled = true\nspans = false\nmetrics = true\n").unwrap();
+        let spec = parse(
+            "[telemetry]\nenabled = true\nspans = false\nmetrics = true\ndecisions = false\n",
+        )
+        .unwrap();
         assert!(spec.enabled);
         assert!(!spec.spans);
         assert!(spec.metrics);
+        assert!(!spec.decisions);
+        assert!(!spec.record_decisions(), "decisions = false mutes provenance");
         let off = parse("[telemetry]\nenabled = false\n").unwrap();
         assert!(!off.enabled);
+        assert!(!off.record_decisions(), "master gate wins over the default");
     }
 
     #[test]
@@ -94,5 +114,7 @@ mod tests {
         assert!(err.contains("verbose"), "{err}");
         let err = parse("[telemetry]\nspans = 3\n").unwrap_err().to_string();
         assert!(err.contains("spans"), "{err}");
+        let err = parse("[telemetry]\ndecisions = \"yes\"\n").unwrap_err().to_string();
+        assert!(err.contains("decisions"), "{err}");
     }
 }

@@ -58,6 +58,31 @@ fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Append one machine-readable JSON line per finished bench to the file
+/// named by the `MULTI_FEDLS_BENCH_JSON` env var (no-op when unset), so a
+/// `cargo bench` run leaves a perf-trajectory artifact CI can archive.
+/// Failures are swallowed: a perf log must never fail the bench run.
+fn write_json_line(name: &str, stats: &Stats) {
+    let Ok(path) = std::env::var("MULTI_FEDLS_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let mut j = crate::util::Json::obj();
+    j.insert("name", name);
+    j.insert("iters", stats.iters as i64);
+    j.insert("mean_ns", stats.mean.as_nanos() as i64);
+    j.insert("median_ns", stats.median.as_nanos() as i64);
+    j.insert("min_ns", stats.min.as_nanos() as i64);
+    j.insert("max_ns", stats.max.as_nanos() as i64);
+    j.insert("stddev_ns", stats.stddev.as_nanos() as i64);
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{}", j.to_string_compact());
+    }
+}
+
 /// Time `f` repeatedly: a warm-up pass, then enough iterations to cover
 /// ~`budget` of wall time (at least `min_iters`). Returns statistics.
 pub fn bench<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: F) -> Stats {
@@ -84,6 +109,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: 
         fmt_duration(stats.max),
         fmt_duration(stats.stddev),
     );
+    write_json_line(name, &stats);
     stats
 }
 
@@ -191,6 +217,27 @@ mod tests {
         assert!(stats.iters >= 5);
         // warm-up + measured iterations
         assert_eq!(count, stats.iters + 1);
+    }
+
+    #[test]
+    fn bench_json_writer_appends_parseable_lines() {
+        let path =
+            std::env::temp_dir().join(format!("multi-fedls-bench-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("MULTI_FEDLS_BENCH_JSON", &path);
+        bench("json-probe", Duration::from_millis(1), 3, || {});
+        std::env::remove_var("MULTI_FEDLS_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // Another test's bench may interleave (the env var is process-wide);
+        // only our probe line matters.
+        let line = text.lines().find(|l| l.contains("\"json-probe\"")).expect("probe line");
+        let j = crate::util::Json::parse(line).unwrap();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("json-probe"));
+        assert!(j.get("iters").and_then(|v| v.as_f64()).unwrap() >= 3.0);
+        for key in ["mean_ns", "median_ns", "min_ns", "max_ns", "stddev_ns"] {
+            assert!(j.get(key).and_then(|v| v.as_f64()).is_some(), "{key} missing");
+        }
     }
 
     #[test]

@@ -79,7 +79,10 @@ use crate::outlook::MarketOutlook;
 use crate::presched::SlowdownReport;
 use crate::simul::SimTime;
 use crate::sweep::MetricAgg;
-use crate::telemetry::{EventKind, TraceEvent};
+use crate::telemetry::{
+    Candidate, DecisionKind, DecisionRecord, Elimination, EventKind, JobTelemetry, TraceEvent,
+    VmSpanRecord,
+};
 
 /// The job's [`MarketOutlook`] on the shared cluster clock, when its
 /// `[outlook]` table is enabled. The workload layers consult it for
@@ -122,6 +125,7 @@ fn rejected_record(jr: &JobRequest) -> JobRecord {
         completed_at: None,
         wait_secs: 0.0,
         cost: 0.0,
+        vm_cost: 0.0,
         revocations: 0,
         rounds_completed: 0,
         fl_exec_secs: 0.0,
@@ -288,6 +292,18 @@ impl QuotaLedger {
     }
 }
 
+/// One logged Dynamic Scheduler turn of a [`QuotaAwareDynSched`]: the
+/// selection, the candidate set handed back, and — when the job records
+/// decision provenance — the explained candidate table (computed at
+/// selection time, against the pre-commit ledger view, so a scripted replay
+/// can reproduce it without consulting the by-then-different ledger).
+#[derive(Clone)]
+struct LoggedSelection {
+    selection: Option<Selection>,
+    set: Vec<VmTypeId>,
+    explained: Vec<Candidate>,
+}
+
 /// Wraps a job's Dynamic Scheduler so replacement choices compete for the
 /// workload's residual shared quota: the revoked VM's capacity returns to
 /// the pool at the revocation instant, candidates that do not fit the
@@ -309,7 +325,10 @@ struct QuotaAwareDynSched {
     job: usize,
     /// Cluster-clock offset of this job's simulation (its admission time).
     offset: f64,
-    log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>>,
+    /// The job records decision provenance (`[telemetry]` `decisions`):
+    /// every logged turn also carries its explained candidate table.
+    record: bool,
+    log: Arc<Mutex<Vec<LoggedSelection>>>,
 }
 
 impl DynScheduler for QuotaAwareDynSched {
@@ -369,8 +388,54 @@ impl DynScheduler for QuotaAwareDynSched {
                 (None, inner_set)
             }
         };
-        self.log.lock().expect("selection log poisoned").push(result.clone());
+        // Provenance: the inner scheduler's ranking over the quota-narrowed
+        // set, plus one quota-exhausted row per type the shared ledger
+        // filtered out. Computed here (not in `explain`) because the ledger
+        // state that justified the filter is already mutated by the commit
+        // above.
+        let explained = if self.record {
+            let chosen = result.0.as_ref().map(|s| s.vm);
+            let cat = p.catalog;
+            let mut rows: Vec<Candidate> = quota_blocked
+                .iter()
+                .map(|&vm| Candidate {
+                    label: format!(
+                        "{}/{} {}",
+                        cat.provider(cat.provider_of(vm)).name,
+                        cat.region(cat.region_of(vm)).name,
+                        cat.vm(vm).id
+                    ),
+                    objective: f64::INFINITY,
+                    price_factor: p.spot_price_factor,
+                    eliminated: Some(Elimination::QuotaExhausted),
+                })
+                .collect();
+            rows.extend(
+                self.inner.explain(&RevocationCtx { candidates: &filtered, ..*ctx }, chosen),
+            );
+            crate::mapping::rank::sort_by_key_f64(&mut rows, |c| c.objective);
+            rows
+        } else {
+            Vec::new()
+        };
+        let entry = LoggedSelection {
+            selection: result.0.clone(),
+            set: result.1.clone(),
+            explained,
+        };
+        self.log.lock().expect("selection log poisoned").push(entry);
         result
+    }
+
+    fn explain(&self, _ctx: &RevocationCtx<'_>, _chosen: Option<VmTypeId>) -> Vec<Candidate> {
+        // The executor asks immediately after `select`; the table was
+        // computed there, against the pre-commit ledger view.
+        self.log
+            .lock()
+            .expect("selection log poisoned")
+            .last()
+            .map(|e| e.explained.clone())
+            .unwrap_or_default()
     }
 }
 
@@ -380,12 +445,12 @@ impl DynScheduler for QuotaAwareDynSched {
 /// stream and the ledger state *at that time*; replaying them (instead of
 /// re-deciding against today's ledger) reproduces the prefix exactly.
 struct ScriptedDynSched {
-    script: Vec<(Option<Selection>, Vec<VmTypeId>)>,
+    script: Vec<LoggedSelection>,
     next: Mutex<usize>,
 }
 
 impl ScriptedDynSched {
-    fn new(script: Vec<(Option<Selection>, Vec<VmTypeId>)>) -> ScriptedDynSched {
+    fn new(script: Vec<LoggedSelection>) -> ScriptedDynSched {
         ScriptedDynSched { script, next: Mutex::new(0) }
     }
 }
@@ -397,9 +462,23 @@ impl DynScheduler for ScriptedDynSched {
 
     fn select(&self, _ctx: &RevocationCtx<'_>) -> (Option<Selection>, Vec<VmTypeId>) {
         let mut next = self.next.lock().expect("script cursor poisoned");
-        let entry = self.script.get(*next).cloned().unwrap_or((None, Vec::new()));
+        let entry = self
+            .script
+            .get(*next)
+            .map(|e| (e.selection.clone(), e.set.clone()))
+            .unwrap_or((None, Vec::new()));
         *next += 1;
         entry
+    }
+
+    fn explain(&self, _ctx: &RevocationCtx<'_>, _chosen: Option<VmTypeId>) -> Vec<Candidate> {
+        // Replay the table the original run logged for the turn `select`
+        // just consumed — re-deciding against today's ledger would lie.
+        let next = *self.next.lock().expect("script cursor poisoned");
+        next.checked_sub(1)
+            .and_then(|i| self.script.get(i))
+            .map(|e| e.explained.clone())
+            .unwrap_or_default()
     }
 }
 
@@ -413,6 +492,9 @@ pub struct JobRecord {
     pub completed_at: Option<f64>,
     pub wait_secs: f64,
     pub cost: f64,
+    /// VM billing only (`cost` minus egress) — the quantity the job's
+    /// [`crate::telemetry::VmSpanRecord`]s reconcile against.
+    pub vm_cost: f64,
     pub revocations: u32,
     pub rounds_completed: u32,
     pub fl_exec_secs: f64,
@@ -495,6 +577,17 @@ pub struct WorkloadOutcome {
     /// (arrival/admission/quota-wait/price-step/retry/rejection/completion).
     /// Empty unless some job has `[telemetry]` enabled.
     pub trace: Vec<TraceEvent>,
+    /// Decision provenance on the cluster clock, ID-ordered: engine-level
+    /// records (admission/retry/rejection/preemption-victim) interleaved
+    /// with each segment's job-local records rebased into its reserved ID
+    /// block. Empty unless some job records decisions.
+    pub decisions: Vec<DecisionRecord>,
+    /// Billed VM lifetimes on the cluster clock (`explain --vm` attribution).
+    /// Empty unless some job has spans enabled.
+    pub vm_spans: Vec<VmSpanRecord>,
+    /// Collapsed-stack flamegraph over every retired segment, each frame
+    /// prefixed by the owning job's name. Empty unless spans are enabled.
+    pub flame: String,
 }
 
 impl Workload {
@@ -574,6 +667,10 @@ impl Workload {
             tracing: self.jobs.iter().any(|j| j.cfg.telemetry.enabled),
             in_trial: false,
             trace: Vec::new(),
+            next_decision: 0,
+            decisions: Vec::new(),
+            vm_spans: Vec::new(),
+            flame: String::new(),
         };
         eng.run()?;
 
@@ -586,7 +683,19 @@ impl Workload {
         // instant events in a reproducible order for any worker count.
         let mut trace = eng.trace;
         trace.sort_by(|a, b| a.at.total_cmp(&b.at));
-        Ok(WorkloadOutcome { jobs, reservations, stats, trace })
+        // Decisions are pushed in splice order (retirement), not allocation
+        // order; ID order is the causal order queries expect.
+        let mut decisions = eng.decisions;
+        decisions.sort_by_key(|d| d.id);
+        Ok(WorkloadOutcome {
+            jobs,
+            reservations,
+            stats,
+            trace,
+            decisions,
+            vm_spans: eng.vm_spans,
+            flame: eng.flame,
+        })
     }
 }
 
@@ -609,6 +718,7 @@ enum Ev {
 struct JobState {
     rounds_done: u32,
     acc_cost: f64,
+    acc_vm_cost: f64,
     acc_revocations: u32,
     acc_fl_secs: f64,
     preemptions: u32,
@@ -635,11 +745,19 @@ struct RunningSeg {
     completion: f64,
     run_cfg: SimConfig,
     sol: MappingSolution,
-    log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>>,
+    log: Arc<Mutex<Vec<LoggedSelection>>>,
+    /// First engine decision ID reserved for this segment's job-local
+    /// decision records (splice-time rebase). A truncated replay emits
+    /// fewer records than were reserved, leaving ID gaps — IDs stay
+    /// monotonic, not dense.
+    decision_offset: u64,
     /// The optimistic full-run event log (job-local clock). Spliced onto the
     /// cluster trace only when the segment actually retires at `completion`;
     /// a preemption discards it and splices the truncated replay instead.
     events: Vec<crate::coordinator::sim::SimEvent>,
+    /// The optimistic run's reconstructed telemetry (decision records, VM
+    /// lifetime spans), spliced with the events; discarded the same way.
+    telemetry: Option<JobTelemetry>,
 }
 
 /// One workload execution in flight (see module docs for semantics).
@@ -663,6 +781,14 @@ struct Engine<'e> {
     /// is a real admission and traces normally).
     in_trial: bool,
     trace: Vec<TraceEvent>,
+    /// Next cluster-level decision ID: engine decisions claim single IDs,
+    /// admitted segments reserve one block per job-local record.
+    next_decision: u64,
+    decisions: Vec<DecisionRecord>,
+    vm_spans: Vec<VmSpanRecord>,
+    /// Collapsed-stack flamegraph over retired segments, frames prefixed by
+    /// the owning job's name.
+    flame: String,
 }
 
 impl Engine<'_> {
@@ -721,11 +847,31 @@ impl Engine<'_> {
         for j in queued {
             let jr = &self.w.jobs[j];
             if jr.cfg.telemetry.enabled {
+                let decision = if jr.cfg.telemetry.record_decisions() {
+                    let id = self.next_decision;
+                    self.next_decision += 1;
+                    self.decisions.push(DecisionRecord {
+                        id,
+                        at: t,
+                        kind: DecisionKind::AdmissionRetry,
+                        job: Some(jr.name.clone()),
+                        tenant: Some(jr.tenant.clone()),
+                        chosen: None,
+                        reason: "price step: queued admission re-solves at the new level"
+                            .into(),
+                        candidates: Vec::new(),
+                        instances: Vec::new(),
+                        attributed_cost: None,
+                    });
+                    Some(id)
+                } else {
+                    None
+                };
                 self.trace.push(TraceEvent {
                     at: t,
                     job: Some(jr.name.clone()),
                     tenant: Some(jr.tenant.clone()),
-                    kind: EventKind::AdmissionRetry { job: jr.name.clone() },
+                    kind: EventKind::AdmissionRetry { job: jr.name.clone(), decision },
                 });
             }
         }
@@ -774,6 +920,25 @@ impl Engine<'_> {
             None => {
                 // Infeasible even on an idle environment, at a price level
                 // that will never change: reject.
+                let decision = if jr.cfg.telemetry.record_decisions() {
+                    let id = self.next_decision;
+                    self.next_decision += 1;
+                    self.decisions.push(DecisionRecord {
+                        id,
+                        at: t,
+                        kind: DecisionKind::Rejection,
+                        job: Some(jr.name.clone()),
+                        tenant: Some(jr.tenant.clone()),
+                        chosen: None,
+                        reason: "infeasible on an idle environment".into(),
+                        candidates: crate::mapping::explain_candidates(&p, None),
+                        instances: Vec::new(),
+                        attributed_cost: None,
+                    });
+                    Some(id)
+                } else {
+                    None
+                };
                 self.records[j] = Some(rejected_record(jr));
                 if jr.cfg.telemetry.enabled {
                     self.trace.push(TraceEvent {
@@ -783,6 +948,7 @@ impl Engine<'_> {
                         kind: EventKind::Rejection {
                             job: jr.name.clone(),
                             reason: "infeasible on an idle environment".into(),
+                            decision,
                         },
                     });
                 }
@@ -858,7 +1024,8 @@ impl Engine<'_> {
                 let admitted = self.try_admit(j, t);
                 self.in_trial = false;
                 if admitted? {
-                    self.finalize_preemption(victim, t)?;
+                    let victim_decision = self.record_victim_decision(j, victim, &excluded, t);
+                    self.finalize_preemption(victim, t, victim_decision)?;
                     admitted_now.push(j);
                     break;
                 }
@@ -909,6 +1076,40 @@ impl Engine<'_> {
     /// run), just no completion.
     fn reject(&mut self, j: usize, t: f64) {
         let jr = &self.w.jobs[j];
+        let decision = if jr.cfg.telemetry.record_decisions() {
+            // The final candidate table: the idle environment at the last
+            // price level reached — every row's typed elimination is the
+            // reason this job could never start.
+            let profile = jr.cfg.app.profile();
+            let p = MappingProblem {
+                catalog: &self.catalog,
+                slowdowns: self.slowdowns.as_ref(),
+                job: &profile,
+                alpha: jr.cfg.alpha,
+                market: jr.cfg.scenario.client_market(),
+                spot_price_factor: planning_price_factor_at(&jr.cfg, t),
+                budget_round: jr.cfg.budget_round,
+                deadline_round: jr.cfg.deadline_round,
+                outlook: None,
+            };
+            let id = self.next_decision;
+            self.next_decision += 1;
+            self.decisions.push(DecisionRecord {
+                id,
+                at: t,
+                kind: DecisionKind::Rejection,
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                chosen: None,
+                reason: "priced out at every remaining price level".into(),
+                candidates: crate::mapping::explain_candidates(&p, None),
+                instances: Vec::new(),
+                attributed_cost: None,
+            });
+            Some(id)
+        } else {
+            None
+        };
         if jr.cfg.telemetry.enabled {
             self.trace.push(TraceEvent {
                 at: t,
@@ -917,6 +1118,7 @@ impl Engine<'_> {
                 kind: EventKind::Rejection {
                     job: jr.name.clone(),
                     reason: "priced out at every remaining price level".into(),
+                    decision,
                 },
             });
         }
@@ -933,6 +1135,7 @@ impl Engine<'_> {
                     completed_at: None,
                     wait_secs: first_t - jr.arrival_secs,
                     cost: st.acc_cost,
+                    vm_cost: st.acc_vm_cost,
                     revocations: st.acc_revocations,
                     rounds_completed: st.rounds_done,
                     fl_exec_secs: st.acc_fl_secs,
@@ -1022,11 +1225,13 @@ impl Engine<'_> {
             return;
         }
         for e in &seg.events {
+            let mut kind = e.kind.clone();
+            kind.shift_decision_id(seg.decision_offset);
             self.trace.push(TraceEvent {
                 at: seg.admitted_at + e.at.secs(),
                 job: Some(jr.name.clone()),
                 tenant: Some(jr.tenant.clone()),
-                kind: e.kind.clone(),
+                kind,
             });
         }
         let r = self.records[seg.job].as_ref().expect("retired segment has a record");
@@ -1045,6 +1250,123 @@ impl Engine<'_> {
                 fl_secs: r.fl_exec_secs,
             },
         });
+        let (name, tenant) = (jr.name.clone(), jr.tenant.clone());
+        self.splice_segment_telemetry(
+            &name,
+            &tenant,
+            seg.admitted_at,
+            seg.decision_offset,
+            seg.telemetry,
+        );
+    }
+
+    /// Splice one segment's job-local telemetry into the cluster-level
+    /// streams: decision records rebase into the segment's reserved ID
+    /// block and onto the cluster clock, VM lifetimes become `vm-span`
+    /// records, and the flamegraph gains the job's frames under its name.
+    fn splice_segment_telemetry(
+        &mut self,
+        job: &str,
+        tenant: &str,
+        admitted_at: f64,
+        id_offset: u64,
+        telemetry: Option<JobTelemetry>,
+    ) {
+        let Some(mut tel) = telemetry else { return };
+        for mut r in std::mem::take(&mut tel.decisions) {
+            r.rebase(id_offset, admitted_at);
+            r.job = Some(job.to_string());
+            r.tenant = Some(tenant.to_string());
+            self.decisions.push(r);
+        }
+        for v in &tel.vms {
+            self.vm_spans.push(VmSpanRecord {
+                job: Some(job.to_string()),
+                tenant: Some(tenant.to_string()),
+                vm: v.vm.clone(),
+                instance: v.instance,
+                provider: v.provider.clone(),
+                region: v.region.clone(),
+                spot: v.spot,
+                start: admitted_at + v.start,
+                end: admitted_at + v.end,
+                billed_cost: v.billed_cost,
+            });
+        }
+        for line in crate::telemetry::flamegraph_folded(&tel).lines() {
+            self.flame.push_str(job);
+            self.flame.push(';');
+            self.flame.push_str(line);
+            self.flame.push('\n');
+        }
+    }
+
+    /// `"{provider}/{region} {vm}"` — the shared candidate-label idiom.
+    fn vm_label(&self, vm: VmTypeId) -> String {
+        format!(
+            "{}/{} {}",
+            self.catalog.provider(self.catalog.provider_of(vm)).name,
+            self.catalog.region(self.catalog.region_of(vm)).name,
+            self.catalog.vm(vm).id
+        )
+    }
+
+    /// Decision provenance for a successful checkpoint-preemption: which
+    /// running segment was evicted to admit `j`, over the full running set
+    /// — victims the trial pass already rejected freed too little quota
+    /// (`quota-exhausted`), the rest were never nominated by the scheduler
+    /// (`dominated`). Rows score by owner priority (lower = preferred
+    /// victim). The ID is stamped onto the replayed `Preemption` event.
+    fn record_victim_decision(
+        &mut self,
+        j: usize,
+        victim: usize,
+        excluded: &[usize],
+        t: f64,
+    ) -> Option<u64> {
+        let vjr = &self.w.jobs[victim];
+        if !vjr.cfg.telemetry.record_decisions() {
+            return None;
+        }
+        let mut rows: Vec<Candidate> = self
+            .running
+            .iter()
+            .filter(|r| r.completion > t)
+            .map(|r| {
+                let owner = &self.w.jobs[r.job];
+                Candidate {
+                    label: owner.name.clone(),
+                    objective: owner.priority as f64,
+                    price_factor: 1.0,
+                    eliminated: if r.job == victim {
+                        None
+                    } else if excluded.contains(&r.job) {
+                        Some(Elimination::QuotaExhausted)
+                    } else {
+                        Some(Elimination::Dominated)
+                    },
+                }
+            })
+            .collect();
+        crate::mapping::rank::sort_by_key_f64(&mut rows, |c| c.objective);
+        let id = self.next_decision;
+        self.next_decision += 1;
+        self.decisions.push(DecisionRecord {
+            id,
+            at: t,
+            kind: DecisionKind::PreemptionVictim,
+            job: Some(vjr.name.clone()),
+            tenant: Some(vjr.tenant.clone()),
+            chosen: Some(vjr.name.clone()),
+            reason: format!(
+                "checkpoint-preempted so {} could be admitted",
+                self.w.jobs[j].name
+            ),
+            candidates: rows,
+            instances: Vec::new(),
+            attributed_cost: None,
+        });
+        Some(id)
     }
 
     /// Close the victim's reservation timeline at the preemption instant:
@@ -1065,7 +1387,12 @@ impl Engine<'_> {
     /// Tolerance module plans the resume round from the freshest
     /// checkpoint), bank the partial outcome, and re-queue the victim with
     /// only its remaining rounds.
-    fn finalize_preemption(&mut self, victim: usize, t: f64) -> anyhow::Result<()> {
+    fn finalize_preemption(
+        &mut self,
+        victim: usize,
+        t: f64,
+        victim_decision: Option<u64>,
+    ) -> anyhow::Result<()> {
         let pos = self
             .running
             .iter()
@@ -1078,24 +1405,41 @@ impl Engine<'_> {
             .mapper(FixedMapper::new(seg.sol))
             .dynsched(ScriptedDynSched::new(script))
             .build();
-        let (out, lost) = fw.run_until(&seg.run_cfg, t - seg.admitted_at)?;
+        let (mut out, lost) = fw.run_until(&seg.run_cfg, t - seg.admitted_at)?;
         // The optimistic full-run trace in `seg.events` never happened past
         // `t`; splice the truncated replay's events instead (they end with
-        // the `Preemption`/`Teardown` pair at the preemption instant).
+        // the `Preemption`/`Teardown` pair at the preemption instant). The
+        // replay's decision records rebase into the block reserved at
+        // admission — a shorter replay leaves ID gaps, never collisions —
+        // and the victim-selection decision stamps the `Preemption` event.
         if seg.run_cfg.telemetry.enabled {
             let jr = &self.w.jobs[victim];
             for e in &out.events {
+                let mut kind = e.kind.clone();
+                kind.shift_decision_id(seg.decision_offset);
+                if let EventKind::Preemption { decision, .. } = &mut kind {
+                    *decision = victim_decision;
+                }
                 self.trace.push(TraceEvent {
                     at: seg.admitted_at + e.at.secs(),
                     job: Some(jr.name.clone()),
                     tenant: Some(jr.tenant.clone()),
-                    kind: e.kind.clone(),
+                    kind,
                 });
             }
+            let (name, tenant) = (jr.name.clone(), jr.tenant.clone());
+            self.splice_segment_telemetry(
+                &name,
+                &tenant,
+                seg.admitted_at,
+                seg.decision_offset,
+                out.telemetry.take(),
+            );
         }
         let st = &mut self.state[victim];
         st.rounds_done += out.rounds_completed;
         st.acc_cost += out.total_cost;
+        st.acc_vm_cost += out.vm_cost;
         st.acc_revocations += out.n_revocations;
         st.acc_fl_secs += out.fl_exec_secs;
         st.preemptions += 1;
@@ -1195,8 +1539,46 @@ impl Engine<'_> {
                 lg.commit(j, vm, t);
             }
         }
-        let log: Arc<Mutex<Vec<(Option<Selection>, Vec<VmTypeId>)>>> =
-            Arc::new(Mutex::new(Vec::new()));
+        // Decision provenance for the admission itself (engine ID space):
+        // the ranked server table on the idle catalog at the admission-time
+        // price level. The job's own records (mapping, replacements) rebase
+        // into a reserved block below.
+        let admit_decision = if jr.cfg.telemetry.record_decisions() {
+            let profile = jr.cfg.app.profile();
+            let p = MappingProblem {
+                catalog: &self.catalog,
+                slowdowns: self.slowdowns.as_ref(),
+                job: &profile,
+                alpha: jr.cfg.alpha,
+                market: jr.cfg.scenario.client_market(),
+                spot_price_factor: planning_price_factor_at(&jr.cfg, t),
+                budget_round: jr.cfg.budget_round,
+                deadline_round: jr.cfg.deadline_round,
+                outlook: None,
+            };
+            let chosen = self.vm_label(sol.mapping.server);
+            let id = self.next_decision;
+            self.next_decision += 1;
+            self.decisions.push(DecisionRecord {
+                id,
+                at: t,
+                kind: DecisionKind::Admission,
+                job: Some(jr.name.clone()),
+                tenant: Some(jr.tenant.clone()),
+                chosen: Some(chosen),
+                reason: format!(
+                    "placement fits the residual shared quota after a {:.0}s wait",
+                    t - jr.arrival_secs
+                ),
+                candidates: crate::mapping::explain_candidates(&p, Some(&sol.mapping)),
+                instances: Vec::new(),
+                attributed_cost: None,
+            });
+            Some(id)
+        } else {
+            None
+        };
+        let log: Arc<Mutex<Vec<LoggedSelection>>> = Arc::new(Mutex::new(Vec::new()));
         let fw = Framework::builder()
             .pre_sched(CachedPreSched::new(self.cache.clone()))
             .mapper(FixedMapper::new(sol.clone()))
@@ -1205,6 +1587,7 @@ impl Engine<'_> {
                 ledger: self.ledger.clone(),
                 job: j,
                 offset: t,
+                record: jr.cfg.telemetry.record_decisions(),
                 log: log.clone(),
             })
             .build();
@@ -1216,6 +1599,14 @@ impl Engine<'_> {
         let mut run_cfg = eff_cfg;
         run_cfg.market = jr.cfg.market.shifted(t);
         let out = fw.run(&run_cfg)?;
+        // Reserve one engine-ID per job-local decision record; both the
+        // optimistic telemetry and a preemption replay's rebase into this
+        // block (the replay emits at most as many records, so IDs never
+        // collide across segments).
+        let decision_offset = self.next_decision;
+        if let Some(tel) = out.telemetry.as_ref() {
+            self.next_decision += tel.decisions.len() as u64;
+        }
         let completion = t + out.total_secs;
         let mut releases: Vec<f64> = Vec::new();
         {
@@ -1254,6 +1645,7 @@ impl Engine<'_> {
             completed_at: Some(completion),
             wait_secs: first_t - jr.arrival_secs,
             cost: st.acc_cost + out.total_cost,
+            vm_cost: st.acc_vm_cost + out.vm_cost,
             revocations: st.acc_revocations + out.n_revocations,
             rounds_completed: st.rounds_done + out.rounds_completed,
             fl_exec_secs: st.acc_fl_secs + out.fl_exec_secs,
@@ -1269,7 +1661,11 @@ impl Engine<'_> {
                 at: t,
                 job: Some(jr.name.clone()),
                 tenant: Some(jr.tenant.clone()),
-                kind: EventKind::Admission { job: jr.name.clone(), wait_secs: t - jr.arrival_secs },
+                kind: EventKind::Admission {
+                    job: jr.name.clone(),
+                    wait_secs: t - jr.arrival_secs,
+                    decision: admit_decision,
+                },
             });
         }
         self.running.push(RunningSeg {
@@ -1279,7 +1675,9 @@ impl Engine<'_> {
             run_cfg,
             sol,
             log,
+            decision_offset,
             events: out.events,
+            telemetry: out.telemetry,
         });
         Ok(true)
     }

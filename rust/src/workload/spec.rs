@@ -692,24 +692,57 @@ pub fn run_points_traced(
     points: &[WorkloadPoint],
     jobs: usize,
 ) -> anyhow::Result<(Vec<WorkloadAgg>, Vec<String>)> {
+    let (aggs, traces, _) = run_points_traced_full(points, jobs)?;
+    Ok((aggs, traces))
+}
+
+/// [`run_points_traced`] plus per-point collapsed-stack flamegraphs (each
+/// trial's frames prefixed `trial-N;`, then the owning job's name). Every
+/// trace is a three-section JSONL stream per trial: event lines, then
+/// `"kind":"decision"` provenance lines (ID order), then `"kind":"vm-span"`
+/// billed-lifetime lines. All byte-identical for any `jobs` value.
+pub fn run_points_traced_full(
+    points: &[WorkloadPoint],
+    jobs: usize,
+) -> anyhow::Result<(Vec<WorkloadAgg>, Vec<String>, Vec<String>)> {
     let cache = std::sync::Arc::new(crate::framework::EnvCache::new());
     let flat: Vec<Workload> =
         points.iter().flat_map(|p| p.trials.iter().cloned()).collect();
     let outs = super::run_trials(&flat, jobs, &cache)?;
     let mut aggs = Vec::with_capacity(points.len());
     let mut traces = Vec::with_capacity(points.len());
+    let mut flames = Vec::with_capacity(points.len());
     let mut idx = 0;
     for (pi, p) in points.iter().enumerate() {
         let n = p.trials.len();
         aggs.push(WorkloadAgg::from_outcomes(&outs[idx..idx + n]));
         let mut text = String::new();
+        let mut flame = String::new();
         for (ti, out) in outs[idx..idx + n].iter().enumerate() {
             text.push_str(&crate::telemetry::trace_jsonl(pi, ti, &out.trace));
+            for d in &out.decisions {
+                let mut j = d.to_json();
+                j.insert("point", pi as i64);
+                j.insert("trial", ti as i64);
+                text.push_str(&j.to_string_compact());
+                text.push('\n');
+            }
+            for v in &out.vm_spans {
+                let mut j = v.to_json();
+                j.insert("point", pi as i64);
+                j.insert("trial", ti as i64);
+                text.push_str(&j.to_string_compact());
+                text.push('\n');
+            }
+            for line in out.flame.lines() {
+                flame.push_str(&format!("trial-{ti};{line}\n"));
+            }
         }
         traces.push(text);
+        flames.push(flame);
         idx += n;
     }
-    Ok((aggs, traces))
+    Ok((aggs, traces, flames))
 }
 
 fn job_json(j: &super::JobAgg) -> Json {

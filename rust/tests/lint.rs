@@ -23,8 +23,10 @@ fn hash_iter_fires_in_simulation_state_modules() {
     assert_eq!(rules_hit("sweep/fake.rs", set), ["hash-iter"]);
     // The outlook subsystem feeds mapping costs and dynsched selections.
     assert_eq!(rules_hit("outlook/fake.rs", src), ["hash-iter"]);
-    // Telemetry traces/metrics must serialize in deterministic order.
+    // Telemetry traces/metrics must serialize in deterministic order —
+    // decision provenance included (candidate tables are ranked output).
     assert_eq!(rules_hit("telemetry/fake.rs", src), ["hash-iter"]);
+    assert_eq!(rules_hit("telemetry/provenance.rs", src), ["hash-iter"]);
     // BTreeMap is the fix, and out-of-scope modules are untouched.
     assert!(rules_hit("cloudsim/fake.rs", "fn f() { let m = BTreeMap::new(); }\n").is_empty());
     assert!(rules_hit("data/fake.rs", src).is_empty());

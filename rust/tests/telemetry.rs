@@ -6,10 +6,10 @@
 use multi_fedls::apps;
 use multi_fedls::coordinator::{simulate, Scenario, SimConfig, SimOutcome};
 use multi_fedls::dynsched::DynSchedPolicy;
-use multi_fedls::telemetry::TelemetrySpec;
+use multi_fedls::telemetry::{DecisionKind, EventKind, TelemetrySpec};
 use multi_fedls::util::Json;
-use multi_fedls::workload::spec::run_points_traced;
-use multi_fedls::workload::WorkloadSpec;
+use multi_fedls::workload::spec::{run_points_traced, run_points_traced_full};
+use multi_fedls::workload::{Workload, WorkloadSpec};
 
 /// Table 5's grid base (the paper's headline failure experiment).
 fn table5_cfg(seed: u64) -> SimConfig {
@@ -95,6 +95,122 @@ fn span_billed_costs_attribute_exactly_to_the_ledger() {
     assert!(total_revocations > 0, "the attribution must cover revocations");
 }
 
+#[test]
+fn table5_decisions_cover_every_decision_point_and_attribute_costs_exactly() {
+    // Tentpole acceptance on the single-job Table 5 runs: every decision
+    // point yields a DecisionRecord whose chosen option matches the event
+    // log, IDs are dense in trace order, losers carry typed eliminations,
+    // and per-decision attributed_cost reproduces the downstream VM-span
+    // billing bit for bit.
+    let mut total_replacements = 0usize;
+    for seed in [50, 51, 52, 53] {
+        let mut cfg = table5_cfg(seed);
+        cfg.telemetry = TelemetrySpec::on();
+        let out = simulate(&cfg).unwrap();
+        let tel = out.telemetry.as_ref().expect("telemetry enabled");
+        assert!(!tel.decisions.is_empty(), "seed {seed}: no decisions recorded");
+        for (i, d) in tel.decisions.iter().enumerate() {
+            assert_eq!(d.id, i as u64, "IDs are dense in trace order");
+            assert!(!d.reason.is_empty(), "every decision explains itself");
+            // Only the chosen candidate may lack an elimination reason.
+            for c in &d.candidates {
+                if c.eliminated.is_none() {
+                    assert_eq!(Some(&c.label), d.chosen.as_ref(), "loser without a reason");
+                }
+            }
+        }
+        assert_eq!(tel.decisions[0].kind, DecisionKind::InitialMapping);
+        // Every event that cites a decision resolves to a record whose
+        // chosen label names the same VM the event log says was picked.
+        for e in &out.events {
+            let Some(id) = e.kind.decision_id() else { continue };
+            let d = tel
+                .decisions
+                .iter()
+                .find(|d| d.id == id)
+                .unwrap_or_else(|| panic!("event cites unknown decision #{id}"));
+            let chosen = d.chosen.as_deref().unwrap_or("");
+            match &e.kind {
+                EventKind::InitialMapping { server, .. } => {
+                    assert_eq!(d.kind, DecisionKind::InitialMapping);
+                    assert!(
+                        chosen.ends_with(&format!(" {server}")),
+                        "decision #{id} chose {chosen:?}, event says server {server}"
+                    );
+                }
+                EventKind::Replacement { vm, .. } => {
+                    assert_eq!(d.kind, DecisionKind::Replacement);
+                    assert!(
+                        chosen.ends_with(&format!(" {vm}")),
+                        "decision #{id} chose {chosen:?}, event says {vm}"
+                    );
+                    total_replacements += 1;
+                }
+                EventKind::Deferral { .. } => assert_eq!(d.kind, DecisionKind::Deferral),
+                // Provisions cite the mapping/replacement that caused them.
+                EventKind::Provision { .. } => assert!(
+                    matches!(d.kind, DecisionKind::InitialMapping | DecisionKind::Replacement),
+                    "provision cites decision #{id} of kind {:?}",
+                    d.kind
+                ),
+                other => panic!("unexpected decision-citing event {other:?}"),
+            }
+        }
+        // Exact cost attribution: recompute each decision's downstream
+        // billing from the VM spans (in charge order), and require that
+        // every billed span belongs to exactly one decision.
+        let mut attributed_instances = 0usize;
+        for d in &tel.decisions {
+            if d.instances.is_empty() {
+                continue;
+            }
+            attributed_instances += d.instances.len();
+            let sum: f64 = tel
+                .vms
+                .iter()
+                .filter(|v| d.instances.contains(&v.instance))
+                .map(|v| v.billed_cost)
+                .sum();
+            assert_eq!(
+                d.attributed_cost.expect("provisioning decisions carry a cost").to_bits(),
+                sum.to_bits(),
+                "decision #{} attribution drifted from its spans",
+                d.id
+            );
+        }
+        assert_eq!(
+            attributed_instances,
+            tel.vms.len(),
+            "every billed VM span traces back to exactly one decision"
+        );
+    }
+    assert!(total_replacements > 0, "Table 5 must exercise replacement decisions");
+}
+
+#[test]
+fn decisions_gate_mutes_provenance_without_touching_anything_else() {
+    // `[telemetry] decisions = false` keeps spans/metrics and all
+    // arithmetic bit-identical while recording no provenance.
+    let mut on_cfg = table5_cfg(52);
+    on_cfg.telemetry = TelemetrySpec::on();
+    let mut muted_cfg = on_cfg.clone();
+    muted_cfg.telemetry.decisions = false;
+    let on = simulate(&on_cfg).unwrap();
+    let muted = simulate(&muted_cfg).unwrap();
+    assert_scalars_identical(&on, &muted);
+    let tel_on = on.telemetry.as_ref().unwrap();
+    let tel_muted = muted.telemetry.as_ref().unwrap();
+    assert!(!tel_on.decisions.is_empty(), "control run records decisions");
+    assert!(tel_muted.decisions.is_empty(), "decisions = false must mute");
+    assert_eq!(tel_on.vms, tel_muted.vms, "the span model ignores the gate");
+    assert_eq!(on.events.len(), muted.events.len());
+    assert!(on.events.iter().any(|e| e.kind.decision_id().is_some()));
+    assert!(
+        muted.events.iter().all(|e| e.kind.decision_id().is_none()),
+        "muted runs must not cite decision IDs"
+    );
+}
+
 /// The CI preemption smoke workload, shrunk to one grid point: four
 /// deadline-constrained low-priority jobs saturate the GPUs at t = 0 and a
 /// high-priority job arrives mid-execution, forcing a checkpoint-preemption
@@ -140,9 +256,10 @@ fn workload_trace_jsonl_is_byte_identical_across_worker_counts() {
             }
         }
     }
-    let (agg1, traces1) = run_points_traced(&points, 1).unwrap();
-    let (agg4, traces4) = run_points_traced(&points, 4).unwrap();
+    let (agg1, traces1, flames1) = run_points_traced_full(&points, 1).unwrap();
+    let (agg4, traces4, flames4) = run_points_traced_full(&points, 4).unwrap();
     assert_eq!(traces1, traces4, "JSONL must not depend on --jobs");
+    assert_eq!(flames1, flames4, "collapsed stacks must not depend on --jobs");
     assert_eq!(agg1.len(), agg4.len());
     for (a, b) in agg1.iter().zip(&agg4) {
         assert_eq!(a.total_cost.mean.to_bits(), b.total_cost.mean.to_bits());
@@ -151,8 +268,20 @@ fn workload_trace_jsonl_is_byte_identical_across_worker_counts() {
 
     let text = traces1.concat();
     assert!(!text.is_empty(), "telemetry-enabled jobs must trace");
+    assert!(!flames1.concat().is_empty(), "flamegraph frames must trace too");
     let mut kinds = std::collections::BTreeSet::new();
+    let mut decision_kinds = std::collections::BTreeSet::new();
+    // (point, trial, id) → the decision line; events cite IDs within their
+    // own trial, so the envelope keys scope the causal chain.
+    let mut decision_keys = std::collections::BTreeSet::new();
+    let mut cited = Vec::new();
     let mut completions = 0usize;
+    let envelope = |j: &Json| -> (i64, i64) {
+        (
+            j.get("point").and_then(|v| v.as_f64()).unwrap_or(-1.0) as i64,
+            j.get("trial").and_then(|v| v.as_f64()).unwrap_or(-1.0) as i64,
+        )
+    };
     for line in text.lines() {
         let j = Json::parse(line).expect("every line is valid JSON");
         assert!(j.get("at").and_then(|v| v.as_f64()).is_some(), "{line}");
@@ -160,13 +289,93 @@ fn workload_trace_jsonl_is_byte_identical_across_worker_counts() {
         if kind == "job-complete" {
             completions += 1;
         }
+        if kind == "decision" {
+            let id = j.get("decision").and_then(|v| v.as_f64()).expect("decision id") as u64;
+            let (p, t) = envelope(&j);
+            assert!(decision_keys.insert((p, t, id)), "duplicate decision ID: {line}");
+            decision_kinds
+                .insert(j.get("decision_kind").and_then(|v| v.as_str()).expect("kind").to_string());
+            let reason = j.get("reason").and_then(|v| v.as_str()).unwrap_or("");
+            assert!(!reason.is_empty(), "decision without a reason: {line}");
+        } else if let Some(id) = j.get("decision").and_then(|v| v.as_f64()) {
+            let (p, t) = envelope(&j);
+            cited.push((p, t, id as u64));
+        }
         kinds.insert(kind);
     }
-    // The workload lifecycle and the preemption machinery both traced.
-    for expected in ["arrival", "admission", "quota-wait", "preemption", "job-complete"] {
+    // The workload lifecycle and the preemption machinery both traced,
+    // and both provenance line kinds made it into the stream.
+    for expected in
+        ["arrival", "admission", "quota-wait", "preemption", "job-complete", "decision", "vm-span"]
+    {
         assert!(kinds.contains(expected), "missing kind {expected}: {kinds:?}");
     }
+    // Admission, the mapping solves it wraps, and victim selection all
+    // left provenance.
+    for expected in ["initial-mapping", "admission", "preemption-victim"] {
+        assert!(decision_kinds.contains(expected), "missing decision kind {expected}");
+    }
+    // Causal chain: every decision ID an event cites resolves to a
+    // decision line in the same (point, trial).
+    assert!(!cited.is_empty(), "events must cite their decisions");
+    for key in &cited {
+        assert!(decision_keys.contains(key), "event cites unresolvable decision {key:?}");
+    }
     assert_eq!(completions, 2 * 5, "2 trials × 5 jobs all complete");
+}
+
+#[test]
+fn preempted_job_vm_spans_sum_to_its_recorded_vm_cost() {
+    // Satellite 4 acceptance: span reconstruction survives preemption.
+    // Each job's billed VM spans — accumulated across its checkpointed
+    // segments — sum to the job record's VM-only cost. Association order
+    // differs between the per-segment accumulator and the flat span sum,
+    // so the bound is an epsilon, not bit equality.
+    let spec = WorkloadSpec::from_toml(PREEMPT_SPEC).unwrap();
+    let mut points = spec.expand().unwrap();
+    for p in &mut points {
+        for w in &mut p.trials {
+            for j in &mut w.jobs {
+                j.cfg.telemetry = TelemetrySpec::on();
+            }
+        }
+    }
+    let w: &Workload = &points[0].trials[0];
+    let out = w.run().unwrap();
+    let preempted: Vec<&str> = out
+        .jobs
+        .iter()
+        .filter(|r| r.preemptions > 0)
+        .map(|r| r.name.as_str())
+        .collect();
+    assert!(!preempted.is_empty(), "the spec must force at least one preemption");
+    assert!(!out.vm_spans.is_empty(), "telemetry-on workload must export spans");
+    for rec in &out.jobs {
+        let sum: f64 = out
+            .vm_spans
+            .iter()
+            .filter(|v| v.job.as_deref() == Some(rec.name.as_str()))
+            .map(|v| v.billed_cost)
+            .sum();
+        assert!(
+            (sum - rec.vm_cost).abs() < 1e-9,
+            "{}: span sum ${sum} != recorded vm_cost ${}",
+            rec.name,
+            rec.vm_cost
+        );
+        assert!(rec.vm_cost <= rec.cost + 1e-9, "vm_cost excludes egress");
+    }
+    // The victim-selection provenance names a job that really was preempted.
+    let victims: Vec<&str> = out
+        .decisions
+        .iter()
+        .filter(|d| d.kind == DecisionKind::PreemptionVictim)
+        .filter_map(|d| d.chosen.as_deref())
+        .collect();
+    assert!(!victims.is_empty(), "preemption must record victim decisions");
+    for v in &victims {
+        assert!(preempted.contains(v), "victim {v} never actually preempted");
+    }
 }
 
 #[test]
